@@ -1,0 +1,85 @@
+//! Layout laboratory: apply the paper's layout primitives by hand and
+//! watch shapes, access expressions and simulated cache behaviour
+//! change — the §4.1 walkthrough as runnable code.
+//!
+//! ```bash
+//! cargo run --release --example layout_lab
+//! ```
+
+use alt::codegen::{lower_complex, LayoutAssignment};
+use alt::expr::Var;
+use alt::graph::models;
+use alt::layout::{DimAccess, LayoutSeq, LayoutTransform, Primitive};
+use alt::loops::LoopSchedule;
+use alt::sim::{simulate_program, HwProfile};
+
+fn main() {
+    // --- §4.1.1 paper example: NHWO -> N (O/4) (HW) 4 ---
+    let (h, w, o) = (3i64, 5i64, 8i64);
+    let mut seq = LayoutSeq::new();
+    seq.push(Primitive::fuse(1, 3))
+        .push(Primitive::split(1, &[o / 4, 4, h * w]))
+        .push(Primitive::reorder(&[0, 1, 3, 2]));
+    let tf = LayoutTransform::new(vec![2, h, w, o], &seq);
+    println!("NHWO {:?} -> {:?}", [2, h, w, o], tf.final_shape());
+
+    let acc: Vec<DimAccess> = (0..4).map(|i| DimAccess::Simple(Var(i))).collect();
+    let rewritten = tf.rewrite_access(&acc);
+    println!("access T[n][h][w][o] becomes:");
+    for (d, a) in rewritten.iter().enumerate() {
+        println!("  dim {d}: {}", a.to_expr());
+    }
+
+    // --- §4.1.2: unfold {1..5} with B=3, S=2 ---
+    let useq = {
+        let mut s = LayoutSeq::new();
+        s.push(Primitive::unfold(0, 3, 2));
+        s
+    };
+    let ut = LayoutTransform::new(vec![5], &useq);
+    let packed = ut.repack(&[1.0, 2.0, 3.0, 4.0, 5.0], &[5], 0.0);
+    println!("\nunfold([1,2,3,4,5], B=3, S=2) = {packed:?}");
+
+    // --- layouts under the simulator: the Fig. 1 experiment in steps ---
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let out = g.node(conv).output;
+    println!("\ncase-study conv under hand-picked layouts ({}):", hw.name);
+    let candidates: Vec<(&str, LayoutSeq)> = vec![
+        ("NHWO (default)", LayoutSeq::new()),
+        ("NOHW", {
+            let mut s = LayoutSeq::new();
+            s.push(Primitive::reorder(&[0, 3, 1, 2]));
+            s
+        }),
+        ("N(O/16)HW16", {
+            let mut s = LayoutSeq::new();
+            s.push(Primitive::split(3, &[4, 16]));
+            s.push(Primitive::reorder(&[0, 3, 1, 2, 4]));
+            s
+        }),
+        ("N(H/4)(W/16)(O/16)·4·16·16", {
+            let mut s = LayoutSeq::new();
+            s.push(Primitive::split(1, &[28, 4]));
+            s.push(Primitive::split(3, &[7, 16]));
+            s.push(Primitive::split(5, &[4, 16]));
+            s.push(Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]));
+            s
+        }),
+    ];
+    for (name, seq) in candidates {
+        let mut layouts = LayoutAssignment::identity(&g);
+        let storage = seq.apply_shape(&g.tensor(out).shape);
+        layouts.set(out, seq);
+        let mut sched = LoopSchedule::identity(&storage, &[3, 7, 7]);
+        sched.vectorize = true;
+        sched.parallel = 2;
+        let p = lower_complex(&g, conv, &layouts, &sched, &[], hw.simd_lanes);
+        let r = simulate_program(&p, &hw);
+        println!(
+            "  {name:32} lat {:8.4} ms  L1mis {:10.0}  inst {:12.0}",
+            r.latency_ms, r.l1_misses, r.instructions
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Quickstart: tune one convolution jointly (layouts + loops) and
+//! compare against the untuned default and a loop-only baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use alt::autotune::tuner::{tune_op, TuneOptions};
+use alt::codegen::{lower_complex, LayoutAssignment};
+use alt::graph::models;
+use alt::loops::LoopSchedule;
+use alt::propagate::PropMode;
+use alt::sim::{simulate_program, HwProfile};
+
+fn main() {
+    // The paper's case-study workload: ResNet-18's first layer
+    // (pad -> C2D(O=64, k=7, s=2) -> bias -> ReLU on a 224x224 image).
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+
+    // Untuned: default NHWO layout, no tiling, scalar loops.
+    let layouts = LayoutAssignment::identity(&g);
+    let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+    let p = lower_complex(&g, conv, &layouts, &sched, &[], hw.simd_lanes);
+    let base = simulate_program(&p, &hw);
+    println!("untuned:          {:.4} ms", base.latency_ms);
+
+    // Loop-only tuning (what Ansor-style systems do).
+    let mut lo = TuneOptions { budget: 120, ..Default::default() };
+    lo.mode = PropMode::LoopOnly;
+    let loop_only = tune_op(&g, conv, &hw, &lo);
+    println!("loop-only tuned:  {:.4} ms", loop_only.best_ms);
+
+    // Joint layout + loop tuning (ALT).
+    let opts = TuneOptions { budget: 120, ..Default::default() };
+    let joint = tune_op(&g, conv, &hw, &opts);
+    println!("ALT joint tuned:  {:.4} ms", joint.best_ms);
+    println!(
+        "speedup vs untuned {:.1}x, vs loop-only {:.2}x",
+        base.latency_ms / joint.best_ms,
+        loop_only.best_ms / joint.best_ms
+    );
+    println!("\nsearched output layout primitives:");
+    for prim in &joint.decision.out_seq.prims {
+        println!("  {prim:?}");
+    }
+    println!("searched loop schedule: {:?}", joint.sched);
+}

@@ -1,0 +1,78 @@
+//! Serving-style driver: a minimal request loop over the compiled
+//! artifacts. The L3 coordinator owns a registry of executables (one
+//! per layout variant), routes a stream of synthetic requests to the
+//! variant the tuner ranked best, and reports latency percentiles +
+//! throughput — demonstrating the runtime as a long-lived service
+//! component rather than a one-shot benchmark.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_variants -- 40
+//! ```
+
+use std::time::Instant;
+
+use alt::bench::harness::Table;
+use alt::runtime::{random_input, Runtime};
+
+fn percentiles(times: &mut [f64]) -> (f64, f64, f64) {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    (times[n / 2], times[n * 9 / 10], times[n - 1])
+}
+
+fn main() {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}", rt.platform());
+
+    // registry: the three GMM/case variants the build produced
+    let variant_names = ["gmm_store_at", "gmm_tiled", "case_nhwo"];
+    let mut table = Table::new(
+        &format!("serve {n_requests} requests per variant"),
+        &["variant", "p50 ms", "p90 ms", "max ms", "req/s"],
+    );
+    for name in variant_names {
+        let Some(_) = rt.spec(name) else {
+            println!("skipping {name} (not in manifest)");
+            continue;
+        };
+        let exe = rt.load(name).expect("load");
+        let inputs: Vec<Vec<f32>> = exe
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| random_input(s, 1 + i as u64))
+            .collect();
+        let _ = exe.run(&inputs).expect("warmup");
+        let mut times = Vec::with_capacity(n_requests);
+        let t0 = Instant::now();
+        for req in 0..n_requests {
+            // vary the first input per request (fresh activation)
+            let mut ins = inputs.clone();
+            ins[0] = random_input(&exe.spec.inputs[0], 1000 + req as u64);
+            let stats = exe.run(&ins).expect("run");
+            times.push(stats.latency_ms);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (p50, p90, max) = percentiles(&mut times);
+        table.row(&[
+            name.into(),
+            format!("{p50:.3}"),
+            format!("{p90:.3}"),
+            format!("{max:.3}"),
+            format!("{:.1}", n_requests as f64 / wall),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,71 @@
+"""AOT pass: lower every L2 entry to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser on the rust side reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Run once by ``make artifacts``; python is never on the rust request path.
+Also writes ``artifacts/manifest.txt`` (name, arg arity + shapes/dtypes,
+output shape) so the rust runtime can register executables generically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_spec(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the quickstart artifact; siblings are "
+                         "written next to it")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry names (default: all)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    names = (args.only.split(",") if args.only else list(model.ENTRIES))
+
+    manifest_lines = []
+    for name in names:
+        fn, specs = model.ENTRIES[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = (os.path.abspath(args.out) if name == "model"
+                else os.path.join(out_dir, f"{name}.hlo.txt"))
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        outs = ";".join(_fmt_spec(s) for s in out_specs)
+        ins = ";".join(_fmt_spec(s) for s in specs)
+        manifest_lines.append(f"{name}\t{os.path.basename(path)}\t{ins}\t{outs}")
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] manifest: {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: layout-tiled 2-D convolution.
+
+This is the compute hot-spot of the paper's case study (§2, §7.3.3): a C2D
+whose *output is produced directly in the ALT tiled layout*
+``N (H/ht) (W/wt) (O/ot) ht wt ot`` so that no conversion operator is ever
+needed downstream — the kernel is the codegen'd form of the layout
+primitive sequence ``split(H,ht) . split(W,wt) . split(O,ot) . reorder``
+applied to the output tensor, with the matching ``unfold`` on the input
+tensor (overlapped input tiles, Fig. 2 of the paper).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's layout tiling
+targets CPU cache lines / GPU shared memory; on TPU the same insight maps
+to VMEM tiling — each grid step owns one (ht, wt, ot) output tile in VMEM,
+weights are blocked over O so only an ``[KH, KW, I, ot]`` slab is resident,
+and the MXU consumes ``[spatial, I] x [I, ot]`` contractions. BlockSpecs
+express the HBM<->VMEM schedule that the paper expressed with loop tiling.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_tile_kernel(inp_ref, ker_ref, bias_ref, out_ref, *, stride: int,
+                      ht: int, wt: int, fuse_bias_relu: bool):
+    """One grid step: produce output tile [N, 1, 1, 1, ht, wt, ot].
+
+    inp_ref holds the full [N, H, W, I] input (overlapped tiles cannot be
+    expressed as disjoint BlockSpec blocks — this is exactly the paper's
+    ``unfold`` data expansion, which we realise by slicing in-kernel).
+    ker_ref holds the O-blocked weight slab [KH, KW, I, ot].
+    """
+    i = pl.program_id(0)  # H-tile index
+    j = pl.program_id(1)  # W-tile index
+    kh, kw, ci, ot = ker_ref.shape
+    n = inp_ref.shape[0]
+
+    x = inp_ref[...]
+    w = ker_ref[...]
+    acc = jnp.zeros((n, ht, wt, ot), dtype=jnp.float32)
+    # Static python loops over the window: KH*KW MXU contractions of
+    # [n*ht*wt, I] x [I, ot] each — the systolic-array-friendly shape.
+    span_h = (ht - 1) * stride + 1
+    span_w = (wt - 1) * stride + 1
+    for rh in range(kh):
+        for rw in range(kw):
+            xs = jax.lax.dynamic_slice(
+                x,
+                (0, i * ht * stride + rh, j * wt * stride + rw, 0),
+                (n, span_h, span_w, ci),
+            )[:, ::stride, ::stride, :]
+            acc += jnp.dot(
+                xs.reshape(n * ht * wt, ci).astype(jnp.float32),
+                w[rh, rw].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ).reshape(n, ht, wt, ot)
+    if fuse_bias_relu:
+        # Layout propagation in action: bias-add + ReLU consume the tiled
+        # layout in-register, so the elementwise tail is fused (Fig. 7).
+        acc = jnp.maximum(acc + bias_ref[...][None, None, None, :], 0.0)
+    out_ref[...] = acc.astype(out_ref.dtype)[:, None, None, None]
+
+
+def conv2d_tiled(inp: jax.Array, ker: jax.Array, bias: jax.Array | None,
+                 *, stride: int = 1, ht: int, wt: int, ot: int,
+                 fuse_bias_relu: bool = False,
+                 out_dtype=None) -> jax.Array:
+    """Tiled-layout C2D.
+
+    inp:  [N, H, W, I]   (NHWI; already padded by the graph-level pad op)
+    ker:  [KH, KW, I, O] (HWIO)
+    bias: [O] or None (required if fuse_bias_relu)
+    returns [N, HO/ht, WO/wt, O/ot, ht, wt, ot] — the ALT tiled layout.
+    """
+    n, h, w, ci = inp.shape
+    kh, kw, ci2, o = ker.shape
+    assert ci == ci2, (ci, ci2)
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    assert ho % ht == 0 and wo % wt == 0 and o % ot == 0, (
+        f"tile sizes must divide output dims: {ho}%{ht}, {wo}%{wt}, {o}%{ot}")
+    out_dtype = out_dtype or inp.dtype
+    if bias is None:
+        bias = jnp.zeros((o,), dtype=inp.dtype)
+
+    grid = (ho // ht, wo // wt, o // ot)
+    kernel = functools.partial(
+        _conv_tile_kernel, stride=stride, ht=ht, wt=wt,
+        fuse_bias_relu=fuse_bias_relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Full input resident (unfold/overlap — see module docstring).
+            pl.BlockSpec((n, h, w, ci), lambda i, j, k: (0, 0, 0, 0)),
+            # Weight slab blocked over O: only [KH,KW,I,ot] in VMEM.
+            pl.BlockSpec((kh, kw, ci, ot), lambda i, j, k: (0, 0, 0, k)),
+            pl.BlockSpec((ot,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (n, 1, 1, 1, ht, wt, ot), lambda i, j, k: (0, i, j, k, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, ho // ht, wo // wt, o // ot, ht, wt, ot), out_dtype),
+        interpret=True,
+    )(inp, ker, bias)
+
+
+def conv2d_nhwo(inp: jax.Array, ker: jax.Array, *, stride: int = 1,
+                ht: int, wt: int, ot: int) -> jax.Array:
+    """Convenience wrapper: tiled kernel + fold back to plain NHWO.
+
+    Used by tests to compare against the oracle and by L2 graphs that need
+    an NHWO tensor at a graph boundary (the inverse-primitive path).
+    """
+    tiled = conv2d_tiled(inp, ker, None, stride=stride, ht=ht, wt=wt, ot=ot)
+    n, hb, wb, ob, ht_, wt_, ot_ = tiled.shape
+    return tiled.transpose(0, 1, 4, 2, 5, 3, 6).reshape(
+        n, hb * ht_, wb * wt_, ob * ot_)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: layout-tiled depthwise 2-D convolution (DEP).
+
+The paper's Fig. 9 shows its largest single-op wins on depthwise and
+dilated convolutions — the memory-bound families where layout tuning
+pays most. This kernel is the depthwise counterpart of
+:mod:`compile.kernels.conv2d`: each channel convolves with its own
+filter (groups == channels), output produced directly in the ALT tiled
+layout ``N (H/ht) (W/wt) (C/ct) ht wt ct``.
+
+TPU note: depthwise convs cannot feed the MXU (no contraction over
+channels); the kernel is VPU-element-wise over the window, which is why
+the layout (VMEM residency + contiguous channel vectors) dominates its
+performance — exactly the paper's memory-bound argument.
+
+interpret=True as everywhere (see conv2d.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_tile_kernel(inp_ref, ker_ref, out_ref, *, stride: int,
+                    ht: int, wt: int):
+    """One grid step: output tile [N, 1, 1, 1, ht, wt, ct]."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kh, kw, ct = ker_ref.shape
+    n = inp_ref.shape[0]
+
+    x = inp_ref[...]  # [N, H, W, ct] (C-blocked by BlockSpec)
+    w = ker_ref[...]
+    acc = jnp.zeros((n, ht, wt, ct), dtype=jnp.float32)
+    span_h = (ht - 1) * stride + 1
+    span_w = (wt - 1) * stride + 1
+    for rh in range(kh):
+        for rw in range(kw):
+            xs = jax.lax.dynamic_slice(
+                x,
+                (0, i * ht * stride + rh, j * wt * stride + rw, 0),
+                (n, span_h, span_w, ct),
+            )[:, ::stride, ::stride, :]
+            # per-channel multiply-accumulate (VPU, not MXU)
+            acc += xs.astype(jnp.float32) * w[rh, rw].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)[:, None, None, None]
+
+
+def depthwise2d_tiled(inp: jax.Array, ker: jax.Array, *, stride: int = 1,
+                      ht: int, wt: int, ct: int,
+                      out_dtype=None) -> jax.Array:
+    """Tiled-layout depthwise C2D.
+
+    inp: [N, H, W, C] (pre-padded); ker: [KH, KW, C];
+    returns [N, HO/ht, WO/wt, C/ct, ht, wt, ct].
+    """
+    n, h, w, c = inp.shape
+    kh, kw, c2 = ker.shape
+    assert c == c2, (c, c2)
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    assert ho % ht == 0 and wo % wt == 0 and c % ct == 0, (
+        f"tiles must divide: {ho}%{ht}, {wo}%{wt}, {c}%{ct}")
+    out_dtype = out_dtype or inp.dtype
+
+    kernel = functools.partial(_dw_tile_kernel, stride=stride, ht=ht, wt=wt)
+    return pl.pallas_call(
+        kernel,
+        grid=(ho // ht, wo // wt, c // ct),
+        in_specs=[
+            # channel-blocked input slab: only [N, H, W, ct] resident
+            pl.BlockSpec((n, h, w, ct), lambda i, j, k: (0, 0, 0, k)),
+            pl.BlockSpec((kh, kw, ct), lambda i, j, k: (0, 0, k)),
+        ],
+        out_specs=pl.BlockSpec(
+            (n, 1, 1, 1, ht, wt, ct), lambda i, j, k: (0, i, j, k, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, ho // ht, wo // wt, c // ct, ht, wt, ct), out_dtype),
+        interpret=True,
+    )(inp, ker)
+
+
+def depthwise2d_nhwc(inp: jax.Array, ker: jax.Array, *, stride: int = 1,
+                     ht: int, wt: int, ct: int) -> jax.Array:
+    """Tiled kernel + fold back to NHWC (for oracle comparison)."""
+    t = depthwise2d_tiled(inp, ker, stride=stride, ht=ht, wt=wt, ct=ct)
+    n, hb, wb, cb, ht_, wt_, ct_ = t.shape
+    return t.transpose(0, 1, 4, 2, 5, 3, 6).reshape(
+        n, hb * ht_, wb * wt_, cb * ct_)
+
+
+def ref_depthwise2d(inp: jax.Array, ker: jax.Array, stride: int = 1) -> jax.Array:
+    """Pure-lax oracle: depthwise conv via feature_group_count."""
+    c = inp.shape[-1]
+    # lax expects [KH, KW, 1, C] for depthwise with groups == C
+    w4 = ker[:, :, None, :]
+    return jax.lax.conv_general_dilated(
+        inp,
+        w4,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )

@@ -1,0 +1,120 @@
+"""L1 Pallas kernels: layout-tiled GMM and the ``store_at`` fused GMM+bias.
+
+The GMM layout template of the paper (§5.1) tiles all three matrices:
+``C: (M/mt)(N/nt) mt nt``, ``A: (M/mt)(K/kt) mt kt``, ``B: (K/kt)(N/nt) kt nt``
+with the tiled dims innermost.  The kernel below produces C directly in
+the tiled layout; A and B arrive pre-packed in their tiled layouts (the
+rust layout pass emits the packing as offline weight transforms).
+
+``gmm_store_at`` realises the paper's ``store_at`` advanced primitive:
+each element of the bias vector is attached to its column of the weight
+matrix, so the inner product and the bias-add hit the same cache line /
+VMEM slab.  The packed operand is ``[K+1, N]`` with the bias as row K.
+
+interpret=True everywhere — see conv2d.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(a_ref, b_ref, out_ref):
+    """One grid step: C tile [1, 1, mt, nt] from A row-slab and B col-slab."""
+    a = a_ref[...]  # [1, KB, mt, kt]
+    b = b_ref[...]  # [KB, 1, kt, nt]
+    kb, mt, kt = a.shape[1], a.shape[2], a.shape[3]
+    nt = b.shape[3]
+    # Un-tile the K axis in-register and run one MXU contraction.
+    a2 = a[0].transpose(1, 0, 2).reshape(mt, kb * kt)
+    b2 = b[:, 0].reshape(kb * kt, nt)
+    acc = jnp.dot(a2.astype(jnp.float32), b2.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)[None, None]
+
+
+def gmm_tiled(a_t: jax.Array, b_t: jax.Array, *, out_dtype=None) -> jax.Array:
+    """Tiled GMM.
+
+    a_t: [M/mt, K/kt, mt, kt] (A in tiled layout)
+    b_t: [K/kt, N/nt, kt, nt] (B in tiled layout)
+    returns C in tiled layout [M/mt, N/nt, mt, nt].
+    """
+    mb, kb, mt, kt = a_t.shape
+    kb2, nb, kt2, nt = b_t.shape
+    assert kb == kb2 and kt == kt2, (a_t.shape, b_t.shape)
+    out_dtype = out_dtype or a_t.dtype
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=(mb, nb),
+        in_specs=[
+            pl.BlockSpec((1, kb, mt, kt), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kb, 1, kt, nt), lambda i, j: (0, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, mt, nt), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mb, nb, mt, nt), out_dtype),
+        interpret=True,
+    )(a_t, b_t)
+
+
+def pack_a(a: jax.Array, mt: int, kt: int) -> jax.Array:
+    """[M, K] -> [M/mt, K/kt, mt, kt] (offline layout transform for A)."""
+    m, k = a.shape
+    assert m % mt == 0 and k % kt == 0
+    return a.reshape(m // mt, mt, k // kt, kt).transpose(0, 2, 1, 3)
+
+
+def pack_b(b: jax.Array, kt: int, nt: int) -> jax.Array:
+    """[K, N] -> [K/kt, N/nt, kt, nt] (offline layout transform for B)."""
+    k, n = b.shape
+    assert k % kt == 0 and n % nt == 0
+    return b.reshape(k // kt, kt, n // nt, nt).transpose(0, 2, 1, 3)
+
+
+def untile_c(c_t: jax.Array) -> jax.Array:
+    """[M/mt, N/nt, mt, nt] -> [M, N] (inverse primitive sequence)."""
+    mb, nb, mt, nt = c_t.shape
+    return c_t.transpose(0, 2, 1, 3).reshape(mb * mt, nb * nt)
+
+
+def _gmm_store_at_kernel(a_ref, bp_ref, out_ref):
+    """GMM + bias with the bias stored at row K of the packed B operand."""
+    a = a_ref[...]      # [mt, K]
+    bp = bp_ref[...]    # [K+1, nt]
+    acc = jnp.dot(a.astype(jnp.float32), bp[:-1].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    acc = acc + bp[-1].astype(jnp.float32)[None, :]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def gmm_store_at(a: jax.Array, b_packed: jax.Array, *, mt: int, nt: int,
+                 out_dtype=None) -> jax.Array:
+    """Fused GMM+bias over a ``store_at``-packed weight.
+
+    a: [M, K]; b_packed: [K+1, N] (row K is the bias); returns [M, N].
+    """
+    m, k = a.shape
+    kp1, n = b_packed.shape
+    assert kp1 == k + 1, (a.shape, b_packed.shape)
+    assert m % mt == 0 and n % nt == 0
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        _gmm_store_at_kernel,
+        grid=(m // mt, n // nt),
+        in_specs=[
+            pl.BlockSpec((mt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp1, nt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(a, b_packed)
+
+
+def pack_store_at(b: jax.Array, bias: jax.Array) -> jax.Array:
+    """Offline ``store_at`` packing: attach bias as the last row of B."""
+    return jnp.concatenate([b, bias[None, :]], axis=0)

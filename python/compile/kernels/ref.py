@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match the corresponding function here (pytest + hypothesis sweep in
+``python/tests/test_kernel.py``). Keep them boring and obviously correct —
+``jax.lax`` reference ops only, no tiling, no layout tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_nhwi(inp: jax.Array, ker: jax.Array, stride: int = 1) -> jax.Array:
+    """2-D convolution, NHWI input, HWIO weight, NHWO output.
+
+    inp: [N, H, W, I]; ker: [KH, KW, I, O]; returns [N, HO, WO, O] with
+    HO = (H - KH)//stride + 1 (VALID padding — padding is an explicit
+    graph-level op in ALT, never folded into the conv).
+    """
+    return jax.lax.conv_general_dilated(
+        inp,
+        ker,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_bias_relu(inp: jax.Array, ker: jax.Array, bias: jax.Array,
+                     stride: int = 1) -> jax.Array:
+    """The case-study subgraph body: C2D -> bias add -> ReLU (NHWO out)."""
+    out = conv2d_nhwi(inp, ker, stride)
+    return jnp.maximum(out + bias[None, None, None, :], 0.0)
+
+
+def gmm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """General matrix multiply: [M, K] x [K, N] -> [M, N]."""
+    return jnp.matmul(a, b)
+
+
+def gmm_bias(a: jax.Array, b: jax.Array, bias: jax.Array) -> jax.Array:
+    """GMM + bias (the ``store_at`` motivating op): [M,K]x[K,N]+[N]."""
+    return jnp.matmul(a, b) + bias[None, :]
+
+
+def tile_nhwo(out_nhwo: jax.Array, ht: int, wt: int, ot: int) -> jax.Array:
+    """Repack NHWO -> N (H/ht) (W/wt) (O/ot) ht wt ot (ALT tiled layout).
+
+    This is the pure data-movement semantics of the layout primitive
+    sequence  split(H) . split(W) . split(O) . reorder  from the paper's
+    C2D template (§5.1); used to check the tiled-layout kernels.
+    """
+    n, h, w, o = out_nhwo.shape
+    assert h % ht == 0 and w % wt == 0 and o % ot == 0
+    x = out_nhwo.reshape(n, h // ht, ht, w // wt, wt, o // ot, ot)
+    return x.transpose(0, 1, 3, 5, 2, 4, 6)
+
+
+def untile_nhwo(tiled: jax.Array) -> jax.Array:
+    """Inverse of :func:`tile_nhwo` (the fold/inverse primitive sequence)."""
+    n, hb, wb, ob, ht, wt, ot = tiled.shape
+    x = tiled.transpose(0, 1, 4, 2, 5, 3, 6)
+    return x.reshape(n, hb * ht, wb * wt, ob * ot)
+
+
+def unfold(x: jax.Array, axis: int, size: int, stride: int) -> jax.Array:
+    """Overlapped tiling of one dimension (the ``unfold`` primitive).
+
+    A dimension of extent D becomes two dims [ceil((D-size)/stride)+1, size]
+    (paper §4.1.2); e.g. [1,2,3,4,5] with size=3 stride=2 -> [[1,2,3],[3,4,5]].
+    The last tile is right-clamped so it never reads out of bounds.
+    """
+    d = x.shape[axis]
+    ntiles = -(-(d - size) // stride) + 1
+    starts = jnp.minimum(jnp.arange(ntiles) * stride, d - size)
+    idx = starts[:, None] + jnp.arange(size)[None, :]
+    taken = jnp.take(x, idx.reshape(-1), axis=axis)
+    new_shape = x.shape[:axis] + (ntiles, size) + x.shape[axis + 1:]
+    return taken.reshape(new_shape)

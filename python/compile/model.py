@@ -1,0 +1,146 @@
+"""L2: JAX compute graphs for the ALT reproduction, in concrete layouts.
+
+The paper's case-study subgraph (§7.3.3 — the first layer of ResNet-18:
+pad -> C2D(O=64, k=7, s=2) -> bias add -> ReLU) is expressed here in three
+data layouts.  Each variant is a *whole-graph* function that the AOT pass
+(`aot.py`) lowers once to HLO text; the rust runtime then measures them as
+"the same graph under different layout decisions", which is exactly the
+experiment ALT's tuner runs on the simulated device.
+
+  * NHWO   — TensorFlow CPU default; the elementwise tail fuses trivially.
+  * NOHW   — GPU/vendor default (Torch); channels-first.
+  * TILED  — the ALT searched layout N (H/ht)(W/wt)(O/ot) ht wt ot with
+             ht=4, wt=16, ot=16 (the §7.3.3 searched point), produced
+             directly by the L1 Pallas kernel with bias+ReLU *fused into
+             the tiled loop nest* — the layout-propagation win of Fig. 7.
+
+Padding is an explicit graph op (the paper propagates layouts onto it so
+it performs padding + conversion in one pass — Fig. 5b); here each variant
+pads in its own layout, mirroring that behaviour.
+
+Python in this package runs at *build time only*; the rust coordinator
+never imports it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as k_conv
+from compile.kernels import gmm as k_gmm
+from compile.kernels import ref
+
+# Case-study configuration (R18 layer 1, paper §7.3.3).
+CASE = dict(n=1, i=3, h=224, w=224, o=64, kh=7, kw=7, stride=2, pad=3)
+TILE = dict(ht=4, wt=16, ot=16)
+# GMM block configuration (BERT-tiny FFN-ish).
+GMM = dict(m=128, k=128, n=512, mt=32, kt=32, nt=64)
+
+
+def case_study_nhwo(inp, ker, bias):
+    """pad -> C2D -> bias -> ReLU, everything NHWO/NHWI."""
+    p = CASE["pad"]
+    x = jnp.pad(inp, ((0, 0), (p, p), (p, p), (0, 0)))
+    return (ref.conv2d_bias_relu(x, ker, bias, stride=CASE["stride"]),)
+
+
+def case_study_nohw(inp_nohw, ker, bias):
+    """Same graph, channels-first storage at every edge.
+
+    The convolution itself consumes/produces channels-first tensors, as a
+    vendor-library (Torch/cuDNN) build of the graph would.
+    """
+    p = CASE["pad"]
+    x = jnp.pad(inp_nohw, ((0, 0), (0, 0), (p, p), (p, p)))
+    out = jax.lax.conv_general_dilated(
+        x, ker,
+        window_strides=(CASE["stride"], CASE["stride"]),
+        padding="VALID",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+    return (jnp.maximum(out + bias[None, :, None, None], 0.0),)
+
+
+def case_study_tiled(inp, ker, bias):
+    """ALT layout: pad propagates the layout; the Pallas kernel emits the
+    tiled output with the elementwise tail fused (Figs. 5b + 7)."""
+    p = CASE["pad"]
+    x = jnp.pad(inp, ((0, 0), (p, p), (p, p), (0, 0)))
+    out = k_conv.conv2d_tiled(
+        x, ker, bias, stride=CASE["stride"],
+        ht=TILE["ht"], wt=TILE["wt"], ot=TILE["ot"], fuse_bias_relu=True)
+    return (out,)
+
+
+def case_study_tiled_untile(inp, ker, bias):
+    """Tiled compute + fold back to NHWO at the graph boundary — the
+    inverse-primitive path used when a consumer insists on NHWO."""
+    (t,) = case_study_tiled(inp, ker, bias)
+    return (ref.untile_nhwo(t),)
+
+
+def gmm_block(a, b, bias):
+    """GMM + bias via the store_at-packed Pallas kernel (offline packing
+    of the constant operand happens inside the traced graph; XLA folds
+    it into the weight at compile time)."""
+    bp = k_gmm.pack_store_at(b, bias)
+    out = k_gmm.gmm_store_at(a, bp, mt=GMM["mt"], nt=GMM["nt"])
+    return (out,)
+
+
+def gmm_tiled_block(a, b):
+    """Fully tiled GMM: pack A and B, run the tiled kernel, un-tile C."""
+    a_t = k_gmm.pack_a(a, GMM["mt"], GMM["kt"])
+    b_t = k_gmm.pack_b(b, GMM["kt"], GMM["nt"])
+    c_t = k_gmm.gmm_tiled(a_t, b_t)
+    return (k_gmm.untile_c(c_t),)
+
+
+def dep_block(inp, ker):
+    """Depthwise conv in the ALT tiled layout, folded back to NHWC —
+    the paper's memory-bound DEP family (Fig. 9) as an AOT artifact."""
+    from compile.kernels import depthwise as k_dep
+
+    out = k_dep.depthwise2d_nhwc(inp, ker, stride=1, ht=4, wt=8, ct=8)
+    return (out,)
+
+
+def _case_specs(channels_first: bool):
+    n, i, h, w = CASE["n"], CASE["i"], CASE["h"], CASE["w"]
+    o, kh, kw = CASE["o"], CASE["kh"], CASE["kw"]
+    f32 = jnp.float32
+    inp = jax.ShapeDtypeStruct((n, i, h, w) if channels_first
+                               else (n, h, w, i), f32)
+    ker = jax.ShapeDtypeStruct((kh, kw, i, o), f32)
+    bias = jax.ShapeDtypeStruct((o,), f32)
+    return (inp, ker, bias)
+
+
+def _gmm_specs(with_bias: bool):
+    f32 = jnp.float32
+    a = jax.ShapeDtypeStruct((GMM["m"], GMM["k"]), f32)
+    b = jax.ShapeDtypeStruct((GMM["k"], GMM["n"]), f32)
+    if with_bias:
+        return (a, b, jax.ShapeDtypeStruct((GMM["n"],), f32))
+    return (a, b)
+
+
+# name -> (fn, example_args). `aot.py` lowers every entry; `model` is the
+# quickstart alias the Makefile keys on.
+ENTRIES = {
+    "model": (case_study_nhwo, _case_specs(False)),
+    "case_nhwo": (case_study_nhwo, _case_specs(False)),
+    "case_nohw": (case_study_nohw, _case_specs(True)),
+    "case_tiled": (case_study_tiled, _case_specs(False)),
+    "case_tiled_untile": (case_study_tiled_untile, _case_specs(False)),
+    "gmm_store_at": (gmm_block, _gmm_specs(True)),
+    "gmm_tiled": (gmm_tiled_block, _gmm_specs(False)),
+    "dep_tiled": (
+        dep_block,
+        (
+            jax.ShapeDtypeStruct((1, 34, 34, 32), jnp.float32),
+            jax.ShapeDtypeStruct((3, 3, 32), jnp.float32),
+        ),
+    ),
+}

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/tile sizes; assert_allclose against ref.
+This is the CORE correctness signal for the compute layer — everything the
+rust coordinator executes was lowered from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kc
+from compile.kernels import gmm as kg
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=1e-4, rtol=1e-4)
+
+
+@st.composite
+def conv_cases(draw):
+    n = draw(st.sampled_from([1, 2]))
+    ci = draw(st.sampled_from([1, 3, 8]))
+    kh = draw(st.sampled_from([1, 3, 5]))
+    kw = draw(st.sampled_from([1, 3]))
+    stride = draw(st.sampled_from([1, 2]))
+    ht = draw(st.sampled_from([1, 2, 4]))
+    wt = draw(st.sampled_from([1, 2, 4]))
+    hb = draw(st.integers(1, 3))
+    wb = draw(st.integers(1, 3))
+    ot = draw(st.sampled_from([2, 4, 8]))
+    ob = draw(st.integers(1, 2))
+    ho, wo, o = ht * hb, wt * wb, ot * ob
+    h = (ho - 1) * stride + kh
+    w = (wo - 1) * stride + kw
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    return dict(n=n, ci=ci, kh=kh, kw=kw, stride=stride,
+                ht=ht, wt=wt, ot=ot, h=h, w=w, o=o, dtype=dtype)
+
+
+@given(conv_cases())
+@settings(**SETTINGS)
+def test_conv2d_tiled_matches_ref(c):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    inp = _rand(k1, (c["n"], c["h"], c["w"], c["ci"]), c["dtype"])
+    ker = _rand(k2, (c["kh"], c["kw"], c["ci"], c["o"]), c["dtype"])
+    got = kc.conv2d_nhwo(inp, ker, stride=c["stride"],
+                         ht=c["ht"], wt=c["wt"], ot=c["ot"])
+    want = ref.conv2d_nhwi(inp.astype(jnp.float32),
+                           ker.astype(jnp.float32), stride=c["stride"])
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(c["dtype"]))
+
+
+@given(conv_cases())
+@settings(**SETTINGS)
+def test_conv2d_tiled_layout_is_tile_of_nhwo(c):
+    """The tiled output must equal tile_nhwo(ref) — i.e. the kernel really
+    produces the layout the primitive sequence specifies, not merely the
+    right values in some order."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    inp = _rand(k1, (c["n"], c["h"], c["w"], c["ci"]), jnp.float32)
+    ker = _rand(k2, (c["kh"], c["kw"], c["ci"], c["o"]), jnp.float32)
+    tiled = kc.conv2d_tiled(inp, ker, None, stride=c["stride"],
+                            ht=c["ht"], wt=c["wt"], ot=c["ot"])
+    want = ref.tile_nhwo(ref.conv2d_nhwi(inp, ker, stride=c["stride"]),
+                         c["ht"], c["wt"], c["ot"])
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(conv_cases())
+@settings(max_examples=15, deadline=None)
+def test_conv2d_fused_bias_relu(c):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    inp = _rand(k1, (c["n"], c["h"], c["w"], c["ci"]), jnp.float32)
+    ker = _rand(k2, (c["kh"], c["kw"], c["ci"], c["o"]), jnp.float32)
+    bias = _rand(k3, (c["o"],), jnp.float32)
+    tiled = kc.conv2d_tiled(inp, ker, bias, stride=c["stride"],
+                            ht=c["ht"], wt=c["wt"], ot=c["ot"],
+                            fuse_bias_relu=True)
+    want = ref.conv2d_bias_relu(inp, ker, bias, stride=c["stride"])
+    np.testing.assert_allclose(np.asarray(ref.untile_nhwo(tiled)),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@st.composite
+def gmm_cases(draw):
+    mt = draw(st.sampled_from([1, 4, 8]))
+    kt = draw(st.sampled_from([1, 4, 8]))
+    nt = draw(st.sampled_from([2, 8, 16]))
+    mb = draw(st.integers(1, 3))
+    kb = draw(st.integers(1, 3))
+    nb = draw(st.integers(1, 2))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    return dict(m=mt * mb, k=kt * kb, n=nt * nb,
+                mt=mt, kt=kt, nt=nt, dtype=dtype)
+
+
+@given(gmm_cases())
+@settings(**SETTINGS)
+def test_gmm_tiled_matches_ref(c):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    a = _rand(k1, (c["m"], c["k"]), c["dtype"])
+    b = _rand(k2, (c["k"], c["n"]), c["dtype"])
+    c_t = kg.gmm_tiled(kg.pack_a(a, c["mt"], c["kt"]),
+                       kg.pack_b(b, c["kt"], c["nt"]))
+    got = kg.untile_c(c_t)
+    want = ref.gmm(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(c["dtype"]))
+
+
+@given(gmm_cases())
+@settings(**SETTINGS)
+def test_gmm_store_at_matches_ref(c):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(13), 3)
+    a = _rand(k1, (c["m"], c["k"]), jnp.float32)
+    b = _rand(k2, (c["k"], c["n"]), jnp.float32)
+    bias = _rand(k3, (c["n"],), jnp.float32)
+    got = kg.gmm_store_at(a, kg.pack_store_at(b, bias),
+                          mt=c["mt"], nt=c["nt"])
+    want = ref.gmm_bias(a, b, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pack_roundtrips():
+    a = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    assert np.array_equal(
+        np.asarray(kg.untile_c(kg.gmm_tiled(
+            kg.pack_a(a, 4, 4), kg.pack_b(jnp.eye(8), 4, 4)))),
+        np.asarray(a))
+
+
+def test_tile_untile_roundtrip():
+    x = jnp.arange(2 * 8 * 8 * 16, dtype=jnp.float32).reshape(2, 8, 8, 16)
+    t = ref.tile_nhwo(x, 4, 2, 8)
+    assert t.shape == (2, 2, 4, 2, 4, 2, 8)
+    np.testing.assert_array_equal(np.asarray(ref.untile_nhwo(t)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("size,stride,want", [
+    (3, 2, [[1, 2, 3], [3, 4, 5]]),
+    (2, 1, [[1, 2], [2, 3], [3, 4], [4, 5]]),
+    (5, 5, [[1, 2, 3, 4, 5]]),
+])
+def test_unfold_paper_example(size, stride, want):
+    x = jnp.array([1, 2, 3, 4, 5], dtype=jnp.float32)
+    got = ref.unfold(x, 0, size, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.array(want, np.float32))
+
+
+def test_unfold_shape_formula():
+    # paper: new dims = (ceil((D - B)/S) + 1, B)
+    x = jnp.zeros((17,))
+    got = ref.unfold(x, 0, 6, 4)
+    assert got.shape == (-(-(17 - 6) // 4) + 1, 6)

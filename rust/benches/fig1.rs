@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 1 — C2D latency under NOHW / NHWO / HWON
+//! fixed layouts, loop-tuned, on every hardware profile.
+//! Acceptance shape (DESIGN.md): best layout beats worst by >30% on
+//! average; no layout wins everywhere.
+
+use alt::bench::figures::{fig1, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(
+        || {
+            for t in fig1(&scale) {
+                t.print();
+                println!();
+            }
+        },
+        1,
+    );
+    println!("[bench fig1] wall time {ms:.0} ms");
+}

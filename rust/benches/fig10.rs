@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 10 — end-to-end network latency for
+//! vendor / Ansor-like / ALT-OL / ALT-WP / ALT.
+//! Acceptance shape: ALT > ALT-WP > ALT-OL ≈ Ansor-like geomean;
+//! smallest margin on compute-bound R3D, largest on MV2.
+
+use alt::bench::figures::{fig10, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(
+        || {
+            for t in fig10(&scale, true) {
+                t.print();
+                println!();
+            }
+        },
+        1,
+    );
+    println!("[bench fig10] wall time {ms:.0} ms");
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig. 11 — layout-propagation overhead ablation
+//! (Ansor / ALT-FP / ALT-BP / ALT on the two §7.3.1 subgraphs).
+//! Acceptance shape: ALT beats both forced-sharing variants; the
+//! standalone conversion cost stays small relative to the gains.
+
+use alt::bench::figures::{fig11, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(|| fig11(&scale).print(), 1);
+    println!("[bench fig11] wall time {ms:.0} ms");
+}

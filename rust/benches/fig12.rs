@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 12 — parameter sensitivity of template
+//! tiling levels vs budget.
+//! Acceptance shape: 1-level@B >= 2-level@B; 2-level@1.5B >= 1-level@B.
+
+use alt::bench::figures::{fig12, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(|| fig12(&scale).print(), 1);
+    println!("[bench fig12] wall time {ms:.0} ms");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 9 — single-operator comparison of
+//! vendor/AutoTVM-like/FlexTensor-like/Ansor-like/ALT over the nine
+//! operator families on the three hardware profiles.
+//! Acceptance shape: ALT >= Ansor-like >= {AutoTVM, FlexTensor} >=
+//! vendor on geomean; largest ALT margins on DEP/DIL.
+
+use alt::bench::figures::{fig9, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(
+        || {
+            for t in fig9(&scale) {
+                t.print();
+                println!();
+            }
+        },
+        1,
+    );
+    println!("[bench fig9] wall time {ms:.0} ms");
+}

@@ -1,0 +1,84 @@
+//! Bench: tuner hot-path microbenchmarks (the §Perf targets).
+//!
+//! Measures the three dominant costs of one "measurement" unit:
+//! program lowering (codegen), simulation (device model), and
+//! cost-model feature extraction + prediction — plus the end-to-end
+//! measurements/second the tuner achieves. EXPERIMENTS.md §Perf
+//! tracks these numbers before/after optimization.
+
+use alt::bench::harness::time_fn;
+use alt::codegen::{lower_complex, LayoutAssignment};
+use alt::cost::CostModel;
+use alt::graph::models;
+use alt::loops::LoopSchedule;
+use alt::sim::{simulate_program, HwProfile};
+
+fn main() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let layouts = LayoutAssignment::identity(&g);
+    let mut sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+    sched.spatial_tiles = vec![1, 4, 16, 16];
+    sched.vectorize = true;
+    sched.parallel = 2;
+
+    const N: usize = 200;
+    let lower_ms = time_fn(
+        || {
+            for _ in 0..N {
+                std::hint::black_box(lower_complex(
+                    &g, conv, &layouts, &sched, &[], hw.simd_lanes,
+                ));
+            }
+        },
+        5,
+    ) / N as f64;
+
+    let p = lower_complex(&g, conv, &layouts, &sched, &[], hw.simd_lanes);
+    let sim_ms = time_fn(
+        || {
+            for _ in 0..N {
+                std::hint::black_box(simulate_program(&p, &hw));
+            }
+        },
+        5,
+    ) / N as f64;
+
+    let mut cm = CostModel::new();
+    for i in 0..64 {
+        cm.observe(&p, 1.0 + (i % 7) as f64 * 0.1);
+    }
+    cm.retrain();
+    let predict_ms = time_fn(
+        || {
+            for _ in 0..N {
+                std::hint::black_box(cm.predict(&p));
+            }
+        },
+        5,
+    ) / N as f64;
+
+    let per_meas = lower_ms + sim_ms + predict_ms;
+    println!("== hotpath (per-unit costs) ==");
+    println!("lower_complex:   {:.3} ms", lower_ms);
+    println!("simulate:        {:.3} ms", sim_ms);
+    println!("cost predict:    {:.3} ms", predict_ms);
+    println!("per-measurement: {:.3} ms  ({:.0} measurements/s)",
+        per_meas, 1000.0 / per_meas);
+
+    // end-to-end: one tuning round of the real tuner
+    let t0 = std::time::Instant::now();
+    let opts = alt::autotune::TuneOptions {
+        budget: 48,
+        ..Default::default()
+    };
+    let r = alt::autotune::tuner::tune_op(&g, conv, &hw, &opts);
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "tune_op(48 measurements): {:.2} s  ({:.0} meas/s), best {:.4} ms",
+        el,
+        r.measurements as f64 / el,
+        r.best_ms
+    );
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Table 2 — exact cache-simulator L1 miss counts of
+//! layout tiling vs loop tiling under a Cortex-A76-like prefetcher.
+//! Acceptance shape: layout-tiled misses ≈ size/(line·prefetch) and
+//! never exceed the loop-tiled misses.
+
+use alt::bench::figures::table2;
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let ms = time_fn(|| table2().print(), 3);
+    println!("[bench table2] wall time {ms:.2} ms");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Table 3 — simulated hardware counters (#inst,
+//! L1 loads/misses/stores, latency) of the §7.3.3 case study under
+//! NHWO / NOHW / N(O/ot)HWot / searched-tiled layouts.
+//! Acceptance shape: tiled layout has the fewest misses + lowest
+//! latency; NOHW has the most instructions.
+
+use alt::bench::figures::{table3, Scale};
+use alt::bench::harness::time_fn;
+
+fn main() {
+    let scale = Scale::quick();
+    let ms = time_fn(|| table3(&scale).print(), 1);
+    println!("[bench table3] wall time {ms:.0} ms");
+}

@@ -1,0 +1,10 @@
+//! The auto-tuning module (paper §5): layout templates, PPO agents, the
+//! loop space, and the two-stage cross-exploration tuner.
+
+pub mod ppo;
+pub mod space;
+pub mod template;
+pub mod tuner;
+
+pub use space::LoopSpace;
+pub use tuner::{tune_graph, tune_op, GraphTuneResult, OpTuneResult, TuneOptions};

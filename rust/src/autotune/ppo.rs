@@ -1,0 +1,459 @@
+//! PPO (proximal policy optimization) from scratch (paper §5.2).
+//!
+//! Two network heads as in the paper: *actors* propose primitive
+//! parameters (a generic continuous split actor mapping actions into
+//! `(0,1)`, and categorical direction actors for the loop random walk);
+//! a single **global shared critic** fits the rewards of every agent to
+//! model interference among sub-spaces (§5.2.2).
+
+use crate::util::Rng;
+
+/// A small dense MLP with tanh hidden activations.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    // per layer: weights [out][in], biases [out]
+    ws: Vec<Vec<Vec<f64>>>,
+    bs: Vec<Vec<f64>>,
+    // Adam state
+    mw: Vec<Vec<Vec<f64>>>,
+    vw: Vec<Vec<Vec<f64>>>,
+    mb: Vec<Vec<f64>>,
+    vb: Vec<Vec<f64>>,
+    t: i32,
+}
+
+impl Mlp {
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Self {
+        let mut ws: Vec<Vec<Vec<f64>>> = Vec::new();
+        let mut bs: Vec<Vec<f64>> = Vec::new();
+        for w in sizes.windows(2) {
+            let (nin, nout) = (w[0], w[1]);
+            let scale = (2.0 / (nin + nout) as f64).sqrt();
+            ws.push(
+                (0..nout)
+                    .map(|_| (0..nin).map(|_| rng.normal() * scale).collect())
+                    .collect(),
+            );
+            bs.push(vec![0.0; nout]);
+        }
+        let mw = ws
+            .iter()
+            .map(|l| l.iter().map(|r| vec![0.0; r.len()]).collect())
+            .collect();
+        let vw = ws
+            .iter()
+            .map(|l: &Vec<Vec<f64>>| {
+                l.iter().map(|r| vec![0.0; r.len()]).collect()
+            })
+            .collect();
+        let mb = bs.iter().map(|b| vec![0.0; b.len()]).collect();
+        let vb = bs.iter().map(|b| vec![0.0; b.len()]).collect();
+        Self { ws, bs, mw, vw, mb, vb, t: 0 }
+    }
+
+    /// Forward pass; returns activations of every layer (input first).
+    fn forward_full(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        let mut acts = vec![x.to_vec()];
+        let last = self.ws.len() - 1;
+        for (li, (w, b)) in self.ws.iter().zip(&self.bs).enumerate() {
+            let prev = acts.last().unwrap().clone();
+            let mut out = vec![0.0; b.len()];
+            for (o, row) in w.iter().enumerate() {
+                let mut s = b[o];
+                for (i, wi) in row.iter().enumerate() {
+                    s += wi * prev[i];
+                }
+                out[o] = if li == last { s } else { s.tanh() };
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_full(x).pop().unwrap()
+    }
+
+    /// Shift the output-layer biases (used to start a squashed policy
+    /// off-center, e.g. toward small tile factors).
+    pub fn add_output_bias(&mut self, b: f64) {
+        if let Some(last) = self.bs.last_mut() {
+            for v in last.iter_mut() {
+                *v += b;
+            }
+        }
+    }
+
+    /// Backprop `dout` (gradient at the linear output) and apply one
+    /// Adam step with learning rate `lr`.
+    pub fn backward_step(&mut self, x: &[f64], dout: &[f64], lr: f64) {
+        let acts = self.forward_full(x);
+        let n_layers = self.ws.len();
+        let mut grad = dout.to_vec();
+        // accumulate gradients layer by layer, updating in place
+        let mut gws: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_layers);
+        let mut gbs: Vec<Vec<f64>> = Vec::with_capacity(n_layers);
+        for li in (0..n_layers).rev() {
+            let a_in = &acts[li];
+            let gw: Vec<Vec<f64>> = (0..self.bs[li].len())
+                .map(|o| a_in.iter().map(|ai| grad[o] * ai).collect())
+                .collect();
+            let gb = grad.clone();
+            if li > 0 {
+                // propagate through weights then tanh'
+                let mut gin = vec![0.0; a_in.len()];
+                for (o, row) in self.ws[li].iter().enumerate() {
+                    for (i, wi) in row.iter().enumerate() {
+                        gin[i] += grad[o] * wi;
+                    }
+                }
+                for (i, g) in gin.iter_mut().enumerate() {
+                    let a = acts[li][i];
+                    *g *= 1.0 - a * a; // tanh'
+                }
+                grad = gin;
+            }
+            gws.push(gw);
+            gbs.push(gb);
+        }
+        gws.reverse();
+        gbs.reverse();
+        // Adam
+        self.t += 1;
+        let (b1, b2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        for li in 0..n_layers {
+            for o in 0..self.bs[li].len() {
+                for i in 0..self.ws[li][o].len() {
+                    let g = gws[li][o][i];
+                    let m = &mut self.mw[li][o][i];
+                    *m = b1 * *m + (1.0 - b1) * g;
+                    let v = &mut self.vw[li][o][i];
+                    *v = b2 * *v + (1.0 - b2) * g * g;
+                    self.ws[li][o][i] -=
+                        lr * (self.mw[li][o][i] / bc1)
+                            / ((self.vw[li][o][i] / bc2).sqrt() + eps);
+                }
+                let g = gbs[li][o];
+                self.mb[li][o] = b1 * self.mb[li][o] + (1.0 - b1) * g;
+                self.vb[li][o] = b2 * self.vb[li][o] + (1.0 - b2) * g * g;
+                self.bs[li][o] -= lr * (self.mb[li][o] / bc1)
+                    / ((self.vb[li][o] / bc2).sqrt() + eps);
+            }
+        }
+    }
+}
+
+/// One transition in a PPO rollout.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    /// For the Gaussian actor: raw (pre-squash) action vector.
+    /// For categorical: one-hot-ish (index stored in `action_idx`).
+    pub action: Vec<f64>,
+    pub action_idx: usize,
+    pub logp: f64,
+    pub reward: f64,
+    pub value: f64,
+}
+
+/// Shared critic: fits state -> expected reward (the global critic of
+/// §5.2.2 shared by all actors).
+pub struct Critic {
+    net: Mlp,
+    lr: f64,
+}
+
+impl Critic {
+    pub fn new(state_dim: usize, rng: &mut Rng) -> Self {
+        Self { net: Mlp::new(&[state_dim, 32, 1], rng), lr: 3e-3 }
+    }
+
+    pub fn value(&self, state: &[f64]) -> f64 {
+        self.net.forward(state)[0]
+    }
+
+    pub fn update(&mut self, batch: &[(Vec<f64>, f64)]) {
+        for (s, target) in batch {
+            let v = self.value(s);
+            // d/dv of 0.5*(v - target)^2
+            self.net.backward_step(s, &[v - target], self.lr);
+        }
+    }
+}
+
+/// Continuous actor: diagonal Gaussian over `dim` raw actions, squashed
+/// through a sigmoid to `(0,1)` (the paper's split-actor mapping, Eq. 2).
+pub struct GaussianActor {
+    net: Mlp,
+    log_std: f64,
+    dim: usize,
+    lr: f64,
+    clip: f64,
+}
+
+impl GaussianActor {
+    pub fn new(state_dim: usize, dim: usize, rng: &mut Rng) -> Self {
+        let mut net = Mlp::new(&[state_dim, 32, dim], rng);
+        // start the squashed mean near 0.18: good tile factors live in
+        // the small-fraction region (paper §7.3.4: ot ≈ 2x SIMD lanes,
+        // a small fraction of the channel extent)
+        net.add_output_bias(-1.5);
+        Self { net, log_std: -0.7, dim, lr: 3e-3, clip: 0.2 }
+    }
+
+    /// Sample raw actions + log-prob; squashed values in (0,1).
+    pub fn sample(&self, state: &[f64], rng: &mut Rng) -> (Vec<f64>, Vec<f64>, f64) {
+        let mean = self.net.forward(state);
+        let std = self.log_std.exp();
+        let raw: Vec<f64> =
+            mean.iter().map(|m| m + std * rng.normal()).collect();
+        let logp = self.log_prob(&mean, &raw);
+        let squashed: Vec<f64> =
+            raw.iter().map(|r| 1.0 / (1.0 + (-r).exp())).collect();
+        (raw, squashed, logp)
+    }
+
+    fn log_prob(&self, mean: &[f64], raw: &[f64]) -> f64 {
+        let std = self.log_std.exp();
+        raw.iter()
+            .zip(mean)
+            .map(|(a, m)| {
+                let z = (a - m) / std;
+                -0.5 * z * z
+                    - self.log_std
+                    - 0.5 * (2.0 * std::f64::consts::PI).ln()
+            })
+            .sum()
+    }
+
+    /// Clipped-surrogate PPO update over a rollout (advantages already
+    /// computed by the caller via the shared critic).
+    pub fn update(&mut self, batch: &[Transition], advantages: &[f64]) {
+        for (tr, &adv) in batch.iter().zip(advantages) {
+            let mean = self.net.forward(&tr.state);
+            let logp = self.log_prob(&mean, &tr.action);
+            let ratio = (logp - tr.logp).exp();
+            let clipped = ratio.clamp(1.0 - self.clip, 1.0 + self.clip);
+            // d surrogate / d mean: only when the unclipped branch is
+            // active does the gradient flow
+            let use_grad = if adv >= 0.0 {
+                ratio <= 1.0 + self.clip
+            } else {
+                ratio >= 1.0 - self.clip
+            };
+            let _ = clipped;
+            if !use_grad {
+                continue;
+            }
+            let std = self.log_std.exp();
+            // d logp / d mean_i = (a_i - m_i)/std^2 ; surrogate = ratio*adv
+            let dmean: Vec<f64> = mean
+                .iter()
+                .zip(&tr.action)
+                .map(|(m, a)| {
+                    // gradient ASCENT on ratio*adv -> descent on -that
+                    -(adv * ratio) * ((a - m) / (std * std))
+                })
+                .collect();
+            self.net.backward_step(&tr.state, &dmean, self.lr);
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Categorical actor over `n_actions` discrete choices (loop random-walk
+/// directions, §5.2.2).
+pub struct CategoricalActor {
+    net: Mlp,
+    n_actions: usize,
+    lr: f64,
+    clip: f64,
+}
+
+impl CategoricalActor {
+    pub fn new(state_dim: usize, n_actions: usize, rng: &mut Rng) -> Self {
+        Self {
+            net: Mlp::new(&[state_dim, 32, n_actions], rng),
+            n_actions,
+            lr: 3e-3,
+            clip: 0.2,
+        }
+    }
+
+    fn probs(&self, state: &[f64]) -> Vec<f64> {
+        let logits = self.net.forward(state);
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.into_iter().map(|e| e / z).collect()
+    }
+
+    pub fn sample(&self, state: &[f64], rng: &mut Rng) -> (usize, f64) {
+        let p = self.probs(state);
+        let mut u = rng.uniform();
+        for (i, pi) in p.iter().enumerate() {
+            if u < *pi {
+                return (i, pi.max(1e-12).ln());
+            }
+            u -= pi;
+        }
+        (self.n_actions - 1, p[self.n_actions - 1].max(1e-12).ln())
+    }
+
+    pub fn update(&mut self, batch: &[Transition], advantages: &[f64]) {
+        for (tr, &adv) in batch.iter().zip(advantages) {
+            let p = self.probs(&tr.state);
+            let logp = p[tr.action_idx].max(1e-12).ln();
+            let ratio = (logp - tr.logp).exp();
+            let use_grad = if adv >= 0.0 {
+                ratio <= 1.0 + self.clip
+            } else {
+                ratio >= 1.0 - self.clip
+            };
+            if !use_grad {
+                continue;
+            }
+            // d/d logits of -(ratio*adv*logp): softmax cross-entropy form
+            let mut dlogits: Vec<f64> = p.clone();
+            for (i, d) in dlogits.iter_mut().enumerate() {
+                let ind = if i == tr.action_idx { 1.0 } else { 0.0 };
+                *d = -(adv * ratio) * (ind - *d);
+            }
+            self.net.backward_step(&tr.state, &dlogits, self.lr);
+        }
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+}
+
+/// Generalized advantage estimation over a rollout of rewards/values
+/// (episodic, no bootstrapping past the end).
+pub fn gae(rewards: &[f64], values: &[f64], gamma: f64, lambda: f64) -> Vec<f64> {
+    let n = rewards.len();
+    let mut adv = vec![0.0; n];
+    let mut acc = 0.0;
+    for t in (0..n).rev() {
+        let next_v = if t + 1 < n { values[t + 1] } else { 0.0 };
+        let delta = rewards[t] + gamma * next_v - values[t];
+        acc = delta + gamma * lambda * acc;
+        adv[t] = acc;
+    }
+    // normalize (standard PPO practice; keeps the toy nets stable)
+    let mean = adv.iter().sum::<f64>() / n as f64;
+    let var = adv.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / n as f64;
+    let sd = var.sqrt().max(1e-8);
+    adv.iter().map(|a| (a - mean) / sd).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_fits_xor_ish() {
+        let mut rng = Rng::new(3);
+        let mut net = Mlp::new(&[2, 16, 1], &mut rng);
+        let data = [
+            ([0.0, 0.0], 0.0),
+            ([0.0, 1.0], 1.0),
+            ([1.0, 0.0], 1.0),
+            ([1.0, 1.0], 0.0),
+        ];
+        for _ in 0..3000 {
+            for (x, y) in &data {
+                let out = net.forward(x)[0];
+                net.backward_step(x, &[out - y], 0.01);
+            }
+        }
+        for (x, y) in &data {
+            let out = net.forward(x)[0];
+            assert!((out - y).abs() < 0.25, "xor({x:?}) = {out}, want {y}");
+        }
+    }
+
+    #[test]
+    fn gaussian_actor_learns_target() {
+        // reward = -(a - 0.8)^2 on the squashed action; the actor should
+        // move its mean toward 0.8
+        let mut rng = Rng::new(5);
+        let mut actor = GaussianActor::new(2, 1, &mut rng);
+        let mut critic = Critic::new(2, &mut rng);
+        let state = vec![0.5, -0.5];
+        let mut last_mean = 0.0;
+        for _ in 0..60 {
+            let mut batch = Vec::new();
+            for _ in 0..16 {
+                let (raw, squashed, logp) = actor.sample(&state, &mut rng);
+                let reward = -(squashed[0] - 0.8).powi(2);
+                batch.push(Transition {
+                    state: state.clone(),
+                    action: raw,
+                    action_idx: 0,
+                    logp,
+                    reward,
+                    value: critic.value(&state),
+                });
+            }
+            let rewards: Vec<f64> = batch.iter().map(|t| t.reward).collect();
+            let values: Vec<f64> = batch.iter().map(|t| t.value).collect();
+            let adv = gae(&rewards, &values, 0.99, 0.95);
+            actor.update(&batch, &adv);
+            critic.update(
+                &batch
+                    .iter()
+                    .map(|t| (t.state.clone(), t.reward))
+                    .collect::<Vec<_>>(),
+            );
+            last_mean = 1.0 / (1.0 + (-actor.net.forward(&state)[0]).exp());
+        }
+        assert!(
+            (last_mean - 0.8).abs() < 0.2,
+            "actor mean {last_mean}, want ~0.8"
+        );
+    }
+
+    #[test]
+    fn categorical_actor_prefers_best_arm() {
+        let mut rng = Rng::new(7);
+        let mut actor = CategoricalActor::new(1, 3, &mut rng);
+        let state = vec![1.0];
+        let arm_reward = [0.1, 0.9, 0.3];
+        for _ in 0..80 {
+            let mut batch = Vec::new();
+            for _ in 0..16 {
+                let (a, logp) = actor.sample(&state, &mut rng);
+                batch.push(Transition {
+                    state: state.clone(),
+                    action: vec![],
+                    action_idx: a,
+                    logp,
+                    reward: arm_reward[a],
+                    value: 0.0,
+                });
+            }
+            let rewards: Vec<f64> = batch.iter().map(|t| t.reward).collect();
+            let values = vec![0.4; batch.len()];
+            let adv = gae(&rewards, &values, 0.99, 0.95);
+            actor.update(&batch, &adv);
+        }
+        let p = actor.probs(&state);
+        assert!(
+            p[1] > 0.5,
+            "best arm probability {p:?} did not dominate"
+        );
+    }
+
+    #[test]
+    fn gae_normalized() {
+        let adv = gae(&[1.0, 2.0, 3.0, 4.0], &[0.0; 4], 0.99, 0.95);
+        let mean: f64 = adv.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! Loop-tuning space: the per-operator option grid the loop agents walk
+//! (random-walk exploration as in FlexTensor/§5.2.2).
+//!
+//! A point indexes into per-dimension option lists: tile factors
+//! (divisors) per spatial/reduction storage dim, vectorize, parallel
+//! depth, unroll limit, and which spatial dim rotates innermost. The
+//! space is rebuilt whenever the output layout changes (the loop-nest
+//! reconstruction of §5.2 that motivates the two-stage design).
+
+use crate::loops::LoopSchedule;
+use crate::util::{divisors, Rng};
+
+/// A point in loop space: one option index per dimension.
+pub type Point = Vec<usize>;
+
+/// The loop space for one operator under a fixed output layout.
+#[derive(Clone, Debug)]
+pub struct LoopSpace {
+    pub spatial: Vec<i64>,
+    pub reduction: Vec<i64>,
+    /// Option lists per point dimension (values are opaque codes).
+    options: Vec<Vec<i64>>,
+}
+
+impl LoopSpace {
+    pub fn new(spatial: &[i64], reduction: &[i64]) -> Self {
+        let mut options: Vec<Vec<i64>> = Vec::new();
+        for &e in spatial {
+            options.push(divisors(e));
+        }
+        for &e in reduction {
+            options.push(divisors(e));
+        }
+        options.push(vec![0, 1]); // vectorize
+        options.push(vec![0, 1, 2, 3]); // parallel depth
+        options.push(vec![0, 4, 16]); // unroll
+        // innermost rotation: which spatial dim moves innermost
+        options.push((0..spatial.len() as i64).collect());
+        Self { spatial: spatial.to_vec(), reduction: reduction.to_vec(), options }
+    }
+
+    /// Number of point dimensions.
+    pub fn n_dims(&self) -> usize {
+        self.options.len()
+    }
+
+    /// Total number of points (the paper's `O(10^7)` for C2D).
+    pub fn size(&self) -> f64 {
+        self.options.iter().map(|o| o.len() as f64).product()
+    }
+
+    pub fn random_point(&self, rng: &mut Rng) -> Point {
+        self.options.iter().map(|o| rng.below(o.len())).collect()
+    }
+
+    /// The identity/default point (no tiling, no annotations).
+    pub fn default_point(&self) -> Point {
+        let mut p: Vec<usize> = Vec::with_capacity(self.n_dims());
+        for (d, o) in self.options.iter().enumerate() {
+            if d < self.spatial.len() + self.reduction.len() {
+                p.push(o.len() - 1); // full extent (single tile)
+            } else {
+                p.push(0);
+            }
+        }
+        p
+    }
+
+    /// A structured starting point (Ansor-sketch-style): tile spatial
+    /// dims to ~4 (last dim to the SIMD width), tile reductions fully,
+    /// vectorize, parallelize two outer loops, light unroll.
+    pub fn heuristic_point(&self, simd_lanes: i64) -> Point {
+        let ns = self.spatial.len();
+        let nr = self.reduction.len();
+        let mut p = Vec::with_capacity(self.n_dims());
+        for (d, o) in self.options.iter().enumerate().take(ns) {
+            let want = if d + 1 == ns { simd_lanes } else { 4 };
+            p.push(nearest_idx(o, want));
+        }
+        for o in self.options.iter().skip(ns).take(nr) {
+            p.push(nearest_idx(o, 4));
+        }
+        p.push(1); // vectorize on
+        p.push(2); // parallel depth 2
+        p.push(1); // unroll 4
+        p.push((ns - 1).min(self.options[ns + nr + 3].len() - 1)); // rotate last dim innermost
+        p
+    }
+
+    /// A random *sketch* point (Ansor-style structured candidate):
+    /// canonical tile shapes — spatial tiles from {1, ~4, ~lanes,
+    /// full}, the channel-most dim biased to {lanes, 2·lanes, full},
+    /// reductions from {1, full}, vectorized, parallel 2–3. These
+    /// include the archetypal good schedules, cutting the variance of
+    /// pure random-walk exploration.
+    pub fn sketch_point(&self, simd_lanes: i64, rng: &mut Rng) -> Point {
+        let ns = self.spatial.len();
+        let nr = self.reduction.len();
+        let mut p = Vec::with_capacity(self.n_dims());
+        for (d, o) in self.options.iter().enumerate().take(ns) {
+            let choices: [i64; 4] = if d + 1 == ns {
+                [simd_lanes, 2 * simd_lanes, self.spatial[d], 1]
+            } else {
+                [1, 4, simd_lanes, self.spatial[d]]
+            };
+            p.push(nearest_idx(o, choices[rng.below(choices.len())]));
+        }
+        for (r, o) in self.options.iter().skip(ns).take(nr).enumerate() {
+            let full = self.reduction[r];
+            p.push(nearest_idx(o, if rng.uniform() < 0.5 { 1 } else { full }));
+        }
+        p.push(1); // vectorize
+        p.push(2 + rng.below(2)); // parallel 2..=3
+        p.push(rng.below(2)); // unroll 0 or 4
+        p.push((ns - 1).min(self.options[ns + nr + 3].len() - 1));
+        p
+    }
+
+    /// Walk one step along `dim` in direction `dir` (±1), clamped.
+    pub fn neighbor(&self, p: &Point, dim: usize, dir: i64) -> Point {
+        let mut q = p.clone();
+        let len = self.options[dim].len() as i64;
+        let cur = q[dim] as i64;
+        q[dim] = (cur + dir).clamp(0, len - 1) as usize;
+        q
+    }
+
+    /// Decode a point into a concrete schedule.
+    pub fn decode(&self, p: &Point) -> LoopSchedule {
+        let ns = self.spatial.len();
+        let nr = self.reduction.len();
+        assert_eq!(p.len(), self.n_dims(), "point arity");
+        let spatial_tiles: Vec<i64> =
+            (0..ns).map(|d| self.options[d][p[d]]).collect();
+        let reduction_tiles: Vec<i64> =
+            (0..nr).map(|d| self.options[ns + d][p[ns + d]]).collect();
+        let vectorize = self.options[ns + nr][p[ns + nr]] == 1;
+        let parallel = self.options[ns + nr + 1][p[ns + nr + 1]] as usize;
+        let unroll = self.options[ns + nr + 2][p[ns + nr + 2]];
+        let rot = self.options[ns + nr + 3][p[ns + nr + 3]] as usize;
+        // inner perm: rotate `rot` to the last position
+        let mut perm: Vec<usize> = (0..ns).filter(|&d| d != rot).collect();
+        perm.push(rot);
+        let mut s = LoopSchedule {
+            spatial_tiles,
+            reduction_tiles,
+            inner_perm: perm,
+            vectorize,
+            parallel,
+            unroll,
+            fuse_eltwise: true,
+        };
+        s.repair(&self.spatial, &self.reduction);
+        s
+    }
+
+    /// Total option count for a point dimension.
+    pub fn n_options(&self, dim: usize) -> usize {
+        self.options[dim].len()
+    }
+
+    /// State vector for the PPO agents: normalized option indices.
+    pub fn state(&self, p: &Point) -> Vec<f64> {
+        p.iter()
+            .zip(&self.options)
+            .map(|(&i, o)| (i as f64 + 0.5) / o.len() as f64)
+            .collect()
+    }
+}
+
+fn nearest_idx(options: &[i64], want: i64) -> usize {
+    options
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &v)| (v - want).abs())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_point_is_vectorized() {
+        let s = LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+        let p = s.heuristic_point(16);
+        let d = s.decode(&p);
+        assert!(d.vectorize);
+        assert_eq!(d.parallel, 2);
+        assert_eq!(*d.spatial_tiles.last().unwrap(), 16);
+    }
+
+    #[test]
+    fn c2d_space_is_big() {
+        // 7 storage dims (tiled layout) + 3 reductions
+        let s = LoopSpace::new(&[1, 28, 7, 4, 4, 16, 16], &[3, 7, 7]);
+        assert!(s.size() > 1e5, "space {}", s.size());
+    }
+
+    #[test]
+    fn decode_default_is_identity_tiles() {
+        let s = LoopSpace::new(&[8, 16], &[4]);
+        let d = s.decode(&s.default_point());
+        assert_eq!(d.spatial_tiles, vec![8, 16]);
+        assert_eq!(d.reduction_tiles, vec![4]);
+        assert!(!d.vectorize);
+    }
+
+    #[test]
+    fn neighbor_clamps() {
+        let s = LoopSpace::new(&[8], &[]);
+        let p = s.default_point();
+        let up = s.neighbor(&p, 0, 1);
+        assert_eq!(up[0], p[0], "already at max");
+        let down = s.neighbor(&p, 0, -1);
+        assert_eq!(down[0], p[0] - 1);
+    }
+
+    #[test]
+    fn decode_random_points_are_feasible() {
+        let mut rng = Rng::new(3);
+        let s = LoopSpace::new(&[1, 28, 7, 4, 4, 16, 16], &[3, 7, 7]);
+        for _ in 0..50 {
+            let p = s.random_point(&mut rng);
+            let d = s.decode(&p);
+            for (t, e) in d.spatial_tiles.iter().zip(&s.spatial) {
+                assert_eq!(e % t, 0);
+            }
+            for (t, e) in d.reduction_tiles.iter().zip(&s.reduction) {
+                assert_eq!(e % t, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn state_normalized() {
+        let s = LoopSpace::new(&[8, 16], &[4]);
+        let p = s.default_point();
+        for v in s.state(&p) {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

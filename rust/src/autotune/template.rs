@@ -1,0 +1,352 @@
+//! Layout tuning templates (paper §5.1).
+//!
+//! Each tensor accessed by a complex operator gets a tiling template
+//! exposing a small set of tunable split/unfold parameters; the reorder
+//! is fixed by the template (tiled channel innermost, for data reuse +
+//! SIMD — observation 1 of §5.1). Continuous actions `a ∈ (0,1)` map to
+//! factors via `F = R(D·a)` rounded to a feasible divisor (Eq. 2).
+//!
+//! * C2D (and C1D/C3D/GRP/DEP/DIL/T2D/T3D): output
+//!   `N (S1/s1)..(Sp/sp) (O/ot) s1..sp ot`, input unfolded per spatial
+//!   dim (`B = V(s−1)+Keff`, `S = V·s`) with `I` tiled by `it`, weight
+//!   `(O/o't)(I/i't) K1..Kp i't o't` — 6 tunables for C2D.
+//! * GMM: `C (M/mt)(N/nt) mt nt`, `A (M/mt)(K/kt) mt kt`,
+//!   `B (K/kt)(N/nt) kt nt` — 3 tunables.
+//! * `levels = 2` expands the *output* template to two-level tiling
+//!   (`N (H/h't·ht) .. h't w't o't ht wt ot`), doubling its parameters
+//!   (§5.1 scalability knob; evaluated in Fig. 12).
+
+use crate::codegen::conv_input_logical_shape;
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::layout::{LayoutSeq, Primitive};
+use crate::propagate::ComplexDecision;
+use crate::util::round_to_divisor;
+
+/// Number of continuous parameters the template of `node` exposes.
+pub fn n_params(graph: &Graph, node: NodeId, levels: usize) -> usize {
+    let n = graph.node(node);
+    match &n.kind {
+        OpKind::Conv { spatial, .. } => {
+            // output: (spatial + 1 channel) * levels; input: it;
+            // weight: i't, o't
+            (spatial + 1) * levels + 3
+        }
+        OpKind::Matmul | OpKind::Dense => 3,
+        _ => 0,
+    }
+}
+
+/// Map a continuous action to a divisor-feasible factor.
+fn factor(d: i64, a: f64) -> i64 {
+    round_to_divisor(d, (d as f64 * a.clamp(0.001, 0.999)).max(1.0)).max(1)
+}
+
+/// Instantiate the layout decision of `node` from continuous params
+/// (`params.len() == n_params(..)`, each in (0,1)).
+pub fn instantiate(
+    graph: &Graph,
+    node_id: NodeId,
+    params: &[f64],
+    levels: usize,
+) -> ComplexDecision {
+    let node = graph.node(node_id);
+    match &node.kind {
+        OpKind::Conv { .. } => conv_decision(graph, node_id, params, levels),
+        OpKind::Matmul | OpKind::Dense => gmm_decision(graph, node_id, params),
+        _ => ComplexDecision { node: node_id, ..Default::default() },
+    }
+}
+
+/// The default (untuned) decision: identity layouts everywhere.
+pub fn identity_decision(node: NodeId) -> ComplexDecision {
+    ComplexDecision { node, ..Default::default() }
+}
+
+fn conv_decision(
+    graph: &Graph,
+    node_id: NodeId,
+    params: &[f64],
+    levels: usize,
+) -> ComplexDecision {
+    let node = graph.node(node_id);
+    let (sp, stride, dilation, kernel, transposed, groups) = match &node.kind {
+        OpKind::Conv { spatial, stride, dilation, kernel, transposed, groups } => {
+            (*spatial, stride.clone(), dilation.clone(), kernel.clone(), *transposed, *groups)
+        }
+        _ => unreachable!(),
+    };
+    assert_eq!(params.len(), (sp + 1) * levels + 3, "conv param arity");
+    let out_shape = graph.tensor(node.output).shape.clone();
+    let o = *out_shape.last().unwrap();
+
+    // ---- output sequence ----
+    let mut out_seq = LayoutSeq::new();
+    // per-dim tile factors (levels==2: product of two sub-factors)
+    let mut tiles = Vec::with_capacity(sp + 1);
+    for d in 0..=sp {
+        let extent = if d < sp { out_shape[1 + d] } else { o };
+        if levels == 1 {
+            tiles.push(vec![factor(extent, params[d])]);
+        } else {
+            let f_outer = factor(extent, params[2 * d]);
+            let f_inner = factor(f_outer, params[2 * d + 1]);
+            tiles.push(vec![f_outer / f_inner.max(1), f_inner]);
+        }
+    }
+    // splits: walk dims left to right; each dim d (starting at storage
+    // position 1 + d * (levels+1) after earlier splits) splits into
+    // levels+1 parts.
+    for d in 0..=sp {
+        let extent = if d < sp { out_shape[1 + d] } else { o };
+        let pos = 1 + d * (levels + 1);
+        let fs = &tiles[d];
+        let prod: i64 = fs.iter().product();
+        let mut factors = vec![extent / prod.max(1)];
+        factors.extend(fs.iter().copied());
+        // guard: make split exact
+        if factors.iter().product::<i64>() != extent {
+            factors = vec![extent];
+            while factors.len() < levels + 1 {
+                factors.push(1);
+            }
+        }
+        out_seq.push(Primitive::split(pos, &factors));
+    }
+    // reorder: N, outer dims.., then level-by-level inner dims
+    let mut perm = vec![0usize];
+    for lv in 0..=levels {
+        for d in 0..=sp {
+            perm.push(1 + d * (levels + 1) + lv);
+        }
+    }
+    out_seq.push(Primitive::reorder(&perm));
+
+    // ---- input sequence: unfold each spatial dim + split I ----
+    let in_shape = conv_input_logical_shape(graph, node);
+    let it_param = params[(sp + 1) * levels];
+    let i_g = *in_shape.last().unwrap() / groups;
+    let it = factor(i_g, it_param);
+    let mut in_seq = LayoutSeq::new();
+    let mut ok = true;
+    for d in 0..sp {
+        // innermost-level tile of the output drives the unfold
+        let s_t = *tiles[d].last().unwrap();
+        let (v, keff) = if transposed {
+            (1, kernel[d])
+        } else {
+            (stride[d], dilation[d] * (kernel[d] - 1) + 1)
+        };
+        let b = v * (s_t - 1) + keff;
+        let s = v * s_t;
+        let pos = 1 + d * 2;
+        if b > in_shape[1 + d] || s < 1 {
+            ok = false;
+            break;
+        }
+        in_seq.push(Primitive::unfold(pos, b, s));
+    }
+    if ok {
+        // split I (now at dim 1 + 2*sp) and reorder tiles/channels
+        let ipos = 1 + 2 * sp;
+        if i_g % it == 0 && *in_shape.last().unwrap() % (i_g / it.max(1)).max(1) == 0 {
+            // tile the full channel dim by it (grouped convs reuse the
+            // same factor; it divides I_g hence I)
+            let i_full = *in_shape.last().unwrap();
+            let it_full = if i_full % it == 0 { it } else { 1 };
+            in_seq.push(Primitive::split(ipos, &[i_full / it_full, it_full]));
+            // reorder: N, tiles.., I_outer, windows.., it
+            let mut perm = vec![0usize];
+            for d in 0..sp {
+                perm.push(1 + 2 * d); // tile dims
+            }
+            perm.push(ipos); // I outer
+            for d in 0..sp {
+                perm.push(2 + 2 * d); // window dims
+            }
+            perm.push(ipos + 1); // it
+            in_seq.push(Primitive::reorder(&perm));
+        }
+    } else {
+        in_seq = LayoutSeq::new();
+    }
+
+    // ---- weight sequence ----
+    let w_shape = graph.tensor(node.inputs[1]).shape.clone();
+    let (wi, wo) = (w_shape[sp], w_shape[sp + 1]);
+    let it_w = factor(wi, params[(sp + 1) * levels + 1]);
+    let ot_w = factor(wo, params[(sp + 1) * levels + 2]);
+    let mut w_seq = LayoutSeq::new();
+    // [K1..Kp, I, O] -> split I(dim sp), split O(dim sp+2)
+    w_seq.push(Primitive::split(sp, &[wi / it_w, it_w]));
+    w_seq.push(Primitive::split(sp + 2, &[wo / ot_w, ot_w]));
+    // reorder: O_o, I_o, K1..Kp, i't, o't
+    let mut perm = vec![sp + 2, sp];
+    perm.extend(0..sp);
+    perm.push(sp + 1);
+    perm.push(sp + 3);
+    w_seq.push(Primitive::reorder(&perm));
+
+    ComplexDecision { node: node_id, out_seq, in_seq, w_seq }
+}
+
+fn gmm_decision(graph: &Graph, node_id: NodeId, params: &[f64]) -> ComplexDecision {
+    let node = graph.node(node_id);
+    assert_eq!(params.len(), 3, "gmm param arity");
+    let out_shape = graph.tensor(node.output).shape.clone();
+    let rank = out_shape.len();
+    let (m, n) = (out_shape[rank - 2], out_shape[rank - 1]);
+    let k = *graph.tensor(node.inputs[0]).shape.last().unwrap();
+    let mt = factor(m, params[0]);
+    let kt = factor(k, params[1]);
+    let nt = factor(n, params[2]);
+
+    // C: [.., M, N] -> [.., M/mt, N/nt, mt, nt]
+    let mut out_seq = LayoutSeq::new();
+    out_seq.push(Primitive::split(rank - 2, &[m / mt, mt]));
+    out_seq.push(Primitive::split(rank, &[n / nt, nt]));
+    let mut perm: Vec<usize> = (0..rank - 2).collect();
+    perm.extend([rank - 2, rank, rank - 1, rank + 1]);
+    out_seq.push(Primitive::reorder(&perm));
+
+    // A: [.., M, K] -> [.., M/mt, K/kt, mt, kt]
+    let mut in_seq = LayoutSeq::new();
+    in_seq.push(Primitive::split(rank - 2, &[m / mt, mt]));
+    in_seq.push(Primitive::split(rank, &[k / kt, kt]));
+    let mut perm: Vec<usize> = (0..rank - 2).collect();
+    perm.extend([rank - 2, rank, rank - 1, rank + 1]);
+    in_seq.push(Primitive::reorder(&perm));
+
+    // B: [K, N] -> [K/kt, N/nt, kt, nt]
+    let mut w_seq = LayoutSeq::new();
+    w_seq.push(Primitive::split(0, &[k / kt, kt]));
+    w_seq.push(Primitive::split(2, &[n / nt, nt]));
+    w_seq.push(Primitive::reorder(&[0, 2, 1, 3]));
+
+    ComplexDecision { node: node_id, out_seq, in_seq, w_seq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{lower_complex, LayoutAssignment};
+    use crate::graph::models;
+    use crate::layout::LayoutTransform;
+    use crate::loops::LoopSchedule;
+    use crate::propagate::{propagate, PropMode};
+    use crate::sim::HwProfile;
+    use crate::util::Rng;
+
+    #[test]
+    fn c2d_template_shapes() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        // ht=4/112 -> a≈0.036, wt=16/112 -> ≈0.143, ot=16/64 -> 0.25
+        let params = [4.0 / 112.0, 16.0 / 112.0, 16.0 / 64.0, 0.9, 0.2, 0.25];
+        let dec = instantiate(&g, conv, &params, 1);
+        let out_shape =
+            dec.out_seq.apply_shape(&g.tensor(g.node(conv).output).shape);
+        assert_eq!(out_shape, vec![1, 28, 7, 4, 4, 16, 16]);
+        // input: padded 230^2x3, unfolded by B=2*(4-1)+7=13 S=8 (h),
+        // B=2*15+7=37 S=32 (w). 230 rows carry one unused trailing row
+        // (224 + 2*3 vs the 229 the conv touches), so the tile counts
+        // are one above the used 28/7 — Eq. (1)'s min-clamp never
+        // addresses the spare tile.
+        let in_t = g.node(conv).inputs[0];
+        let in_shape = dec.in_seq.apply_shape(&g.tensor(in_t).shape);
+        assert_eq!(in_shape.len(), 7);
+        assert_eq!(in_shape[0], 1);
+        assert_eq!(in_shape[1], 29); // h tiles (28 used + 1 spare)
+        assert_eq!(in_shape[2], 8); // w tiles (7 used + 1 spare)
+        // weight 7x7x3x64 with i't from 0.2*3≈1, o't=0.25*64=16
+        let w_t = g.node(conv).inputs[1];
+        let w_shape = dec.w_seq.apply_shape(&g.tensor(w_t).shape);
+        assert_eq!(w_shape.len(), 6);
+    }
+
+    #[test]
+    fn gmm_template_shapes() {
+        let mut rng = Rng::new(2);
+        let cfg = models::random_op_config("GMM", &mut rng);
+        let gmm = cfg.graph.complex_nodes()[0];
+        let dec = instantiate(&cfg.graph, gmm, &[0.25, 0.25, 0.25], 1);
+        let out = cfg.graph.tensor(cfg.graph.node(gmm).output);
+        let s = dec.out_seq.apply_shape(&out.shape);
+        assert_eq!(s.len(), out.shape.len() + 2);
+    }
+
+    /// Every family × random params must produce layouts that lower to
+    /// in-bounds programs — the feasibility invariant of the tuner.
+    #[test]
+    fn random_template_points_lower_in_bounds() {
+        let mut rng = Rng::new(9);
+        let hw = HwProfile::intel();
+        for fam in models::OP_FAMILIES {
+            for trial in 0..4 {
+                let cfg = models::random_op_config(fam, &mut rng);
+                let node = cfg.graph.complex_nodes()[0];
+                let np = n_params(&cfg.graph, node, 1);
+                let params: Vec<f64> =
+                    (0..np).map(|_| rng.uniform()).collect();
+                let dec = instantiate(&cfg.graph, node, &params, 1);
+                let prop =
+                    propagate(&cfg.graph, &[dec], PropMode::Alt);
+                let out_storage = prop
+                    .layouts
+                    .get(cfg.graph.node(node).output)
+                    .apply_shape(&cfg.graph.tensor(cfg.graph.node(node).output).shape);
+                let sched = LoopSchedule::identity(&out_storage, &[1]);
+                let tail = prop
+                    .fused_tails
+                    .get(&node)
+                    .cloned()
+                    .unwrap_or_default();
+                let p = lower_complex(
+                    &cfg.graph,
+                    node,
+                    &prop.layouts,
+                    &sched,
+                    &tail,
+                    hw.simd_lanes,
+                );
+                // bounds-check on a pseudo-random iteration sample
+                let extents: Vec<i64> =
+                    p.loops.iter().map(|l| l.extent).collect();
+                for _ in 0..100 {
+                    let env: Vec<i64> = extents
+                        .iter()
+                        .map(|&e| rng.below(e as usize) as i64)
+                        .collect();
+                    for a in &p.accesses {
+                        let total: i64 = a.storage_shape.iter().product();
+                        let f = a.flat().eval(&env);
+                        assert!(
+                            f >= 0 && f < total,
+                            "{fam} trial {trial}: OOB {f}/{total} t{}",
+                            a.tensor
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_template_expands_params() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        assert_eq!(n_params(&g, conv, 1), 6);
+        assert_eq!(n_params(&g, conv, 2), 9);
+        let params: Vec<f64> = vec![0.3; 9];
+        let dec = instantiate(&g, conv, &params, 2);
+        let out_shape =
+            dec.out_seq.apply_shape(&g.tensor(g.node(conv).output).shape);
+        // N + 3 levels x 3 dims = 10 dims
+        assert_eq!(out_shape.len(), 10);
+        // round-trips through the transform engine
+        let t = LayoutTransform::new(
+            g.tensor(g.node(conv).output).shape.clone(),
+            &dec.out_seq,
+        );
+        assert_eq!(t.final_shape().iter().product::<i64>(), 112 * 112 * 64);
+    }
+}

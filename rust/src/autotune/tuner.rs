@@ -1,0 +1,636 @@
+//! The joint auto-tuner: two-stage cross-exploration (paper §5, Fig. 8).
+//!
+//! **Joint stage** — a layout PPO actor proposes template parameters;
+//! for each proposed layout the loop space is *reconstructed* and a few
+//! rounds of loop tuning run inside it; the best latency found becomes
+//! the layout actor's reward (`r = U − l`, Eq. 3). This realizes the
+//! bidirectional flow: layouts are scored by feedback from loop
+//! optimization.
+//!
+//! **Loop-only stage** — layouts freeze at the joint-stage winner and
+//! the remaining budget refines loops, avoiding further space
+//! reconstruction.
+//!
+//! Budget accounting follows the paper: one unit = one "on-device"
+//! measurement (here: one simulator evaluation of a lowered program);
+//! candidates are pre-ranked by the cost model and only the top-k of
+//! each batch are measured (§5.2.3).
+
+use std::collections::HashMap;
+
+use crate::autotune::ppo::{gae, CategoricalActor, Critic, GaussianActor, Transition};
+use crate::autotune::space::LoopSpace;
+use crate::autotune::template;
+use crate::codegen::lower_complex;
+use crate::graph::{Graph, NodeId};
+use crate::loops::LoopSchedule;
+use crate::propagate::{propagate, ComplexDecision, PropMode, PropagationResult};
+use crate::sim::netsim::{simulate_graph, GraphReport};
+use crate::sim::{simulate_program, HwProfile};
+use crate::cost::CostModel;
+use crate::util::Rng;
+
+/// Fixed state-vector width fed to all agents (padded/truncated).
+const STATE_DIM: usize = 32;
+
+fn pad_state(mut v: Vec<f64>) -> Vec<f64> {
+    v.truncate(STATE_DIM);
+    v.resize(STATE_DIM, 0.0);
+    v
+}
+
+/// Tuning configuration. The paper's full-scale settings (budget 1,000
+/// single-op / 20,000 end-to-end, batch 128, top-8) are scaled down by
+/// default so benches finish on one core; ratios are preserved.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Total simulated-measurement budget for this op/graph.
+    pub budget: usize,
+    /// Fraction of the budget spent in the joint stage (paper: 300/1000
+    /// single-op, 8k/20k end-to-end).
+    pub joint_frac: f64,
+    /// Candidates sampled per round (paper: 128).
+    pub batch: usize,
+    /// Top-k measured per round (paper: 8).
+    pub top_k: usize,
+    /// Loop-tuning rounds evaluated per layout candidate (cross
+    /// exploration depth).
+    pub rounds_per_layout: usize,
+    /// Layout-template tiling levels (1 or 2; Fig. 12).
+    pub levels: usize,
+    pub seed: u64,
+    pub mode: PropMode,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        Self {
+            budget: 120,
+            joint_frac: 0.3,
+            batch: 16,
+            top_k: 4,
+            rounds_per_layout: 2,
+            levels: 1,
+            seed: 0,
+            mode: PropMode::Alt,
+        }
+    }
+}
+
+/// Result of tuning one complex operator.
+#[derive(Clone, Debug)]
+pub struct OpTuneResult {
+    pub node: NodeId,
+    pub decision: ComplexDecision,
+    pub sched: LoopSchedule,
+    pub best_ms: f64,
+    pub measurements: usize,
+    /// best-so-far trace (one entry per measurement) for tuning curves
+    pub history: Vec<f64>,
+    /// best latency of the identity-layout track (diagnostics)
+    pub id_ms: f64,
+    /// best latency of the joint-stage winning layout track, if any
+    pub alt_ms: f64,
+}
+
+/// Evaluate one (decision, schedule) candidate on the simulator.
+fn measure(
+    graph: &Graph,
+    node: NodeId,
+    prop: &PropagationResult,
+    sched: &LoopSchedule,
+    hw: &HwProfile,
+    cost: &mut CostModel,
+) -> f64 {
+    let tail = prop.fused_tails.get(&node).cloned().unwrap_or_default();
+    let p = lower_complex(graph, node, &prop.layouts, sched, &tail, hw.simd_lanes);
+    let r = simulate_program(&p, hw);
+    let mut ms = r.latency_ms;
+    // Charge the conversions this op's layout decisions force, so the
+    // tuner internalizes exactly what the graph simulator will charge:
+    // * un-absorbed (Fig. 5a): a standalone strided repack op;
+    // * absorbed (Fig. 5b): the *delta* of the producer writing the
+    //   transformed (possibly expanded) layout with strided stores
+    //   instead of its plain contiguous output.
+    for c in &prop.conversions {
+        let t = graph.tensor(c.tensor);
+        let plain = t.bytes() as f64;
+        let expanded = {
+            let base = crate::codegen::layout_base_shape(graph, c.tensor);
+            let tf = crate::layout::LayoutTransform::new(base, &c.to);
+            tf.final_shape().iter().product::<i64>() as f64
+                * t.dtype.bytes() as f64
+        };
+        // Repacks copy long contiguous runs on at least one side
+        // (tiles are large blocks), so they are bandwidth-bound like a
+        // memcpy — the paper measures single-digit microseconds.
+        if c.absorbed_by.is_none() {
+            let conv = crate::sim::simulate_streaming(plain, expanded, true, hw);
+            ms += conv.latency_ms;
+        } else {
+            let with = crate::sim::simulate_streaming(plain, expanded, true, hw);
+            let without = crate::sim::simulate_streaming(plain, plain, true, hw);
+            ms += (with.latency_ms - without.latency_ms).max(0.0);
+        }
+    }
+    cost.observe(&p, r.latency_ms);
+    ms
+}
+
+/// A loop-tuning context for one fixed layout: space + PPO walk state
+/// + its own cost model (per-task, like Ansor — mixing training data
+/// across differently-shaped loop spaces degrades the ranking).
+struct LoopTuning {
+    space: LoopSpace,
+    actor: CategoricalActor,
+    cost: CostModel,
+    best_point: Vec<usize>,
+    best_ms: f64,
+}
+
+impl LoopTuning {
+    fn new(spatial: &[i64], reduction: &[i64], simd_lanes: i64, rng: &mut Rng) -> Self {
+        let space = LoopSpace::new(spatial, reduction);
+        let n = space.n_dims();
+        Self {
+            actor: CategoricalActor::new(STATE_DIM, 2 * n, rng),
+            cost: CostModel::new(),
+            // structured (Ansor-sketch-style) starting point; measured
+            // in the first round as the incumbent candidate
+            best_point: space.heuristic_point(simd_lanes),
+            best_ms: f64::INFINITY,
+            space,
+        }
+    }
+
+    /// One round: sample a batch of candidates (PPO-guided walk from the
+    /// incumbent + random restarts), rank by cost model, measure top-k.
+    #[allow(clippy::too_many_arguments)]
+    fn round(
+        &mut self,
+        graph: &Graph,
+        node: NodeId,
+        prop: &PropagationResult,
+        hw: &HwProfile,
+        critic: &mut Critic,
+        opts: &TuneOptions,
+        rng: &mut Rng,
+        used: &mut usize,
+        history: &mut Vec<f64>,
+    ) {
+        let mut cands: Vec<(Vec<usize>, Option<(usize, f64, Vec<f64>)>)> = Vec::new();
+        // candidate 0: the incumbent itself (guarantees the heuristic
+        // start is measured in round one)
+        cands.push((self.best_point.clone(), None));
+        for b in 1..opts.batch {
+            if b % 8 == 7 {
+                // random restart (global exploration)
+                cands.push((self.space.random_point(rng), None));
+            } else if b % 8 == 5 || !self.best_ms.is_finite() {
+                // structured sketch candidate (canonical tilings)
+                cands.push((self.space.sketch_point(hw.simd_lanes, rng), None));
+            } else if b % 4 == 3 {
+                // single-dimension mutation of the incumbent: jump one
+                // option to a uniformly random value (coarse move the
+                // ±1 walk cannot make in big divisor spaces)
+                let mut p = self.best_point.clone();
+                let dim = rng.below(self.space.n_dims());
+                p[dim] = rng.below(self.space.n_options(dim));
+                cands.push((p, None));
+            } else {
+                // PPO-guided walk: 1-3 steps from the incumbent
+                let mut p = self.best_point.clone();
+                let steps = 1 + rng.below(3);
+                let mut last = None;
+                for _ in 0..steps {
+                    let st = pad_state(self.space.state(&p));
+                    let (a, logp) = self.actor.sample(&st, rng);
+                    let dim = a / 2;
+                    let dir = if a % 2 == 0 { 1 } else { -1 };
+                    p = self.space.neighbor(&p, dim, dir);
+                    last = Some((a, logp, st));
+                }
+                cands.push((p, last));
+            }
+        }
+        // rank by predicted latency
+        let mut scored: Vec<(usize, f64)> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, (p, _))| {
+                let sched = self.space.decode(p);
+                let tail =
+                    prop.fused_tails.get(&node).cloned().unwrap_or_default();
+                let prog = lower_complex(
+                    graph,
+                    node,
+                    &prop.layouts,
+                    &sched,
+                    &tail,
+                    hw.simd_lanes,
+                );
+                (i, self.cost.predict(&prog))
+            })
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+        // measure: incumbent (round one only) + top-(k-1) by predicted
+        // latency + one reserved exploration pick uniform over the rest
+        // (prevents cost-model blind spots from trapping the walk)
+        let mut to_measure: Vec<usize> = Vec::new();
+        if !self.best_ms.is_finite() {
+            to_measure.push(0); // the incumbent candidate
+        }
+        let model_slots = if opts.top_k > 2 {
+            opts.top_k - 2
+        } else {
+            opts.top_k.saturating_sub(1).max(1)
+        };
+        for &(i, _) in scored.iter() {
+            if to_measure.len() >= model_slots {
+                break;
+            }
+            if !to_measure.contains(&i) {
+                to_measure.push(i);
+            }
+        }
+        if opts.top_k > 1 {
+            let rest: Vec<usize> = scored
+                .iter()
+                .map(|&(i, _)| i)
+                .filter(|i| !to_measure.contains(i))
+                .collect();
+            if !rest.is_empty() {
+                to_measure.push(rest[rng.below(rest.len())]);
+            }
+        }
+        if opts.top_k > 2 {
+            // dedicated sketch slot: measure one canonical tiling per
+            // round regardless of the cost model's opinion (GBTs
+            // extrapolate poorly into unseen tile regimes)
+            cands.push((self.space.sketch_point(hw.simd_lanes, rng), None));
+            to_measure.push(cands.len() - 1);
+        }
+        let u = if self.best_ms.is_finite() { self.best_ms * 1.5 } else { 1.0 };
+        let mut batch_tr: Vec<Transition> = Vec::new();
+        for &i in to_measure.iter() {
+            let (p, meta) = &cands[i];
+            let sched = self.space.decode(p);
+            let ms = measure(graph, node, prop, &sched, hw, &mut self.cost);
+            *used += 1;
+            if ms < self.best_ms {
+                self.best_ms = ms;
+                self.best_point = p.clone();
+            }
+            history.push(self.best_ms);
+            if let Some((a, logp, st)) = meta {
+                batch_tr.push(Transition {
+                    state: st.clone(),
+                    action: vec![],
+                    action_idx: *a,
+                    logp: *logp,
+                    reward: u - ms,
+                    value: critic.value(st),
+                });
+            }
+        }
+        if batch_tr.len() >= 2 {
+            let rewards: Vec<f64> = batch_tr.iter().map(|t| t.reward).collect();
+            let values: Vec<f64> = batch_tr.iter().map(|t| t.value).collect();
+            let adv = gae(&rewards, &values, 0.99, 0.95);
+            self.actor.update(&batch_tr, &adv);
+            critic.update(
+                &batch_tr
+                    .iter()
+                    .map(|t| (t.state.clone(), t.reward))
+                    .collect::<Vec<_>>(),
+            );
+        }
+    }
+}
+
+/// Storage spatial dims + reduction dims for a node under a propagation
+/// result (the loop space depends on the *output layout*, §5.2).
+fn nest_dims(
+    graph: &Graph,
+    node: NodeId,
+    prop: &PropagationResult,
+) -> (Vec<i64>, Vec<i64>) {
+    let n = graph.node(node);
+    let out = graph.tensor(n.output);
+    let storage = prop.layouts.get(n.output).apply_shape(&out.shape);
+    let reduction = match &n.kind {
+        crate::graph::OpKind::Conv { kernel, groups, .. } => {
+            let ci = *graph.tensor(n.inputs[0]).shape.last().unwrap();
+            let mut r = vec![ci / groups];
+            r.extend(kernel.iter().copied());
+            r
+        }
+        crate::graph::OpKind::Matmul | crate::graph::OpKind::Dense => {
+            vec![*graph.tensor(n.inputs[0]).shape.last().unwrap()]
+        }
+        _ => vec![1],
+    };
+    (storage, reduction)
+}
+
+/// Tune one complex operator with the two-stage cross-exploration.
+pub fn tune_op(
+    graph: &Graph,
+    node: NodeId,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> OpTuneResult {
+    let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x9E37));
+    let mut critic = Critic::new(STATE_DIM, &mut rng);
+    let np = template::n_params(graph, node, opts.levels);
+    let mut layout_actor = GaussianActor::new(STATE_DIM, np.max(1), &mut rng);
+
+    let mut used = 0usize;
+    let mut history = Vec::new();
+    // The joint stage needs a handful of layout trials to pay for its
+    // space reconstructions; at starvation budgets it degrades to pure
+    // loop tuning (ALT then gracefully equals ALT-OL).
+    let joint_budget = if opts.budget < 96 {
+        0
+    } else {
+        ((opts.budget as f64) * opts.joint_frac).round() as usize
+    };
+
+    // ---- baseline: identity layout ----
+    let id_dec = template::identity_decision(node);
+    let id_prop = propagate(graph, std::slice::from_ref(&id_dec), opts.mode);
+    let (sp0, rd0) = nest_dims(graph, node, &id_prop);
+    let mut id_lt = LoopTuning::new(&sp0, &rd0, hw.simd_lanes, &mut rng);
+    id_lt.round(
+        graph, node, &id_prop, hw, &mut critic, opts, &mut rng,
+        &mut used, &mut history,
+    );
+
+    // best non-identity layout found by the joint stage
+    let mut alt_lt: Option<(LoopTuning, ComplexDecision, PropagationResult)> =
+        None;
+
+    // ---- joint stage (skipped entirely in LoopOnly mode) ----
+    if opts.mode != PropMode::LoopOnly && np > 0 {
+        let mut episode: Vec<Transition> = Vec::new();
+        while used < joint_budget {
+            let incumbent_seq = alt_lt
+                .as_ref()
+                .map(|(_, d, _)| d.out_seq.clone())
+                .unwrap_or_default();
+            let st = pad_state(incumbent_seq.state_vector());
+            let (raw, params, logp) = layout_actor.sample(&st, &mut rng);
+            let dec = template::instantiate(graph, node, &params, opts.levels);
+            let prop = propagate(graph, std::slice::from_ref(&dec), opts.mode);
+            let (sp, rd) = nest_dims(graph, node, &prop);
+            // reconstruct the loop space for this layout
+            let mut lt = LoopTuning::new(&sp, &rd, hw.simd_lanes, &mut rng);
+            for _ in 0..opts.rounds_per_layout {
+                if used >= joint_budget {
+                    break;
+                }
+                lt.round(
+                    graph, node, &prop, hw, &mut critic, opts,
+                    &mut rng, &mut used, &mut history,
+                );
+            }
+            let best_known = alt_lt
+                .as_ref()
+                .map(|(l, _, _)| l.best_ms)
+                .unwrap_or(f64::INFINITY)
+                .min(id_lt.best_ms);
+            let u = best_known.max(lt.best_ms) * 1.2;
+            episode.push(Transition {
+                state: st.clone(),
+                action: raw,
+                action_idx: 0,
+                logp,
+                reward: u - lt.best_ms,
+                value: critic.value(&st),
+            });
+            let alt_best = alt_lt
+                .as_ref()
+                .map(|(l, _, _)| l.best_ms)
+                .unwrap_or(f64::INFINITY);
+            if lt.best_ms < alt_best {
+                alt_lt = Some((lt, dec, prop));
+            }
+            if episode.len() >= 4 {
+                let rewards: Vec<f64> =
+                    episode.iter().map(|t| t.reward).collect();
+                let values: Vec<f64> = episode.iter().map(|t| t.value).collect();
+                let adv = gae(&rewards, &values, 0.99, 0.95);
+                layout_actor.update(&episode, &adv);
+                critic.update(
+                    &episode
+                        .iter()
+                        .map(|t| (t.state.clone(), t.reward))
+                        .collect::<Vec<_>>(),
+                );
+                episode.clear();
+            }
+        }
+    }
+
+    // ---- loop-only stage: layouts frozen, no space reconstruction.
+    // Rounds alternate between the joint-stage winner and the identity
+    // baseline, so a mis-chosen layout can never make joint tuning lose
+    // to plain loop tuning by more than the 2x budget split (the joint
+    // space strictly contains the loop-only space), while a genuinely
+    // better layout still receives half the refinement budget and wins
+    // the final comparison.
+    let mut flip = true;
+    while used < opts.budget {
+        if flip && alt_lt.is_some() {
+            if let Some((lt, _, prop)) = &mut alt_lt {
+                let prop = prop.clone();
+                lt.round(
+                    graph, node, &prop, hw, &mut critic, opts,
+                    &mut rng, &mut used, &mut history,
+                );
+            }
+        } else {
+            id_lt.round(
+                graph, node, &id_prop, hw, &mut critic, opts,
+                &mut rng, &mut used, &mut history,
+            );
+        }
+        flip = !flip;
+    }
+
+    monotonize(&mut history);
+    // final winner: best of identity vs joint layout
+    let id_ms = id_lt.best_ms;
+    let alt_ms = alt_lt.as_ref().map(|(l, _, _)| l.best_ms).unwrap_or(f64::INFINITY);
+    let (win_lt, win_dec) = match alt_lt {
+        Some((lt, dec, _)) if lt.best_ms < id_lt.best_ms => (lt, dec),
+        _ => (id_lt, id_dec),
+    };
+    OpTuneResult {
+        node,
+        decision: win_dec,
+        sched: win_lt.space.decode(&win_lt.best_point),
+        best_ms: win_lt.best_ms,
+        measurements: used,
+        history,
+        id_ms,
+        alt_ms,
+    }
+}
+
+/// Rewrite a latency trace as global best-so-far (tuning-curve form).
+fn monotonize(history: &mut [f64]) {
+    let mut run = f64::INFINITY;
+    for h in history.iter_mut() {
+        run = run.min(*h);
+        *h = run;
+    }
+}
+
+/// Loop-only tuning under a *fixed* layout decision (used by Fig. 1 /
+/// Table 3 reproductions: "optimize loops based on layout X").
+pub fn tune_loops(
+    graph: &Graph,
+    node: NodeId,
+    decision: &ComplexDecision,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> OpTuneResult {
+    let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x517));
+    let mut critic = Critic::new(STATE_DIM, &mut rng);
+    let prop = propagate(graph, std::slice::from_ref(decision), opts.mode);
+    let (sp, rd) = nest_dims(graph, node, &prop);
+    let mut lt = LoopTuning::new(&sp, &rd, hw.simd_lanes, &mut rng);
+    let mut used = 0usize;
+    let mut history = Vec::new();
+    while used < opts.budget {
+        lt.round(
+            graph, node, &prop, hw, &mut critic, opts, &mut rng,
+            &mut used, &mut history,
+        );
+    }
+    monotonize(&mut history);
+    OpTuneResult {
+        node,
+        decision: decision.clone(),
+        sched: lt.space.decode(&lt.best_point),
+        best_ms: lt.best_ms,
+        measurements: used,
+        history,
+        id_ms: lt.best_ms,
+        alt_ms: f64::INFINITY,
+    }
+}
+
+/// End-to-end tuning result for a graph.
+#[derive(Clone, Debug)]
+pub struct GraphTuneResult {
+    pub decisions: Vec<ComplexDecision>,
+    pub scheds: HashMap<NodeId, LoopSchedule>,
+    pub report: GraphReport,
+    pub measurements: usize,
+}
+
+/// Tune every complex operator of a graph sequentially in topological
+/// order (the §6 joint-stage order), then simulate the whole network
+/// under the propagated layouts.
+pub fn tune_graph(
+    graph: &Graph,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> GraphTuneResult {
+    let complex = graph.complex_nodes();
+    // per-op floor: below ~128 measurements the joint stage cannot act,
+    // so graph tuning guarantees each op a meaningful slice (total
+    // measurements may exceed `budget` on very deep nets — reported in
+    // the result).
+    let per_op = (opts.budget / complex.len().max(1)).max(128);
+    let mut decisions = Vec::new();
+    let mut scheds = HashMap::new();
+    let mut measurements = 0;
+    for &node in &complex {
+        let mut o = opts.clone();
+        o.budget = per_op;
+        let r = tune_op(graph, node, hw, &o);
+        measurements += r.measurements;
+        scheds.insert(node, r.sched);
+        decisions.push(r.decision);
+    }
+    let prop = propagate(graph, &decisions, opts.mode);
+    let report = simulate_graph(graph, &prop, &scheds, hw);
+    GraphTuneResult { decisions, scheds, report, measurements }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn small_opts(budget: usize) -> TuneOptions {
+        TuneOptions { budget, ..Default::default() }
+    }
+
+    #[test]
+    fn tuning_improves_over_default() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let hw = HwProfile::intel();
+        // default-point latency
+        let id_prop = propagate(&g, &[], PropMode::Alt);
+        let (sp, rd) = nest_dims(&g, conv, &id_prop);
+        let default_sched = LoopSpace::new(&sp, &rd)
+            .decode(&LoopSpace::new(&sp, &rd).default_point());
+        let tail = id_prop.fused_tails.get(&conv).cloned().unwrap_or_default();
+        let p = lower_complex(&g, conv, &id_prop.layouts, &default_sched, &tail, 16);
+        let base = simulate_program(&p, &hw).latency_ms;
+
+        let r = tune_op(&g, conv, &hw, &small_opts(60));
+        assert!(
+            r.best_ms < base * 0.5,
+            "tuned {} vs default {base}",
+            r.best_ms
+        );
+        assert!(r.measurements <= 60 + 4);
+    }
+
+    #[test]
+    fn joint_beats_loop_only_on_case_study() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let hw = HwProfile::intel();
+        let joint = tune_op(&g, conv, &hw, &small_opts(200));
+        let mut lo = small_opts(200);
+        lo.mode = PropMode::LoopOnly;
+        let loop_only = tune_op(&g, conv, &hw, &lo);
+        // joint tuning must not lose (its space contains loop-only's;
+        // small slack absorbs the budget the joint stage spends on
+        // layout exploration) — and on this memory-heavy first layer
+        // the searched layout should win outright at real budgets.
+        assert!(
+            joint.best_ms <= loop_only.best_ms * 1.10,
+            "joint {} vs loop-only {}",
+            joint.best_ms,
+            loop_only.best_ms
+        );
+    }
+
+    #[test]
+    fn history_is_monotone_best_so_far() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let r = tune_op(&g, conv, &HwProfile::arm(), &small_opts(40));
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn graph_tuning_runs_on_subgraph() {
+        let g = models::prop_subgraph(7);
+        let hw = HwProfile::intel();
+        let r = tune_graph(&g, &hw, &small_opts(40));
+        assert_eq!(r.decisions.len(), 2);
+        assert!(r.report.latency_ms() > 0.0);
+    }
+}

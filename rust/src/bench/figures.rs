@@ -1,0 +1,576 @@
+//! One generator per paper table/figure (§7). Each returns [`Table`]s
+//! whose rows mirror what the paper reports; `cargo bench` targets and
+//! the `figures` binary print them. Budgets are scaled (DESIGN.md) but
+//! keep the paper's stage ratios.
+
+use std::collections::HashMap;
+
+use crate::autotune::tuner::{tune_graph, tune_loops, tune_op, TuneOptions};
+use crate::baselines;
+use crate::bench::harness::Table;
+use crate::graph::{models, Graph};
+use crate::layout::{LayoutSeq, Primitive};
+use crate::propagate::{propagate, ComplexDecision, PropMode};
+use crate::sim::netsim::simulate_graph;
+use crate::sim::{cache, HwProfile};
+use crate::util::geomean;
+
+/// Scaled budget presets. `quick` keeps `cargo bench` minutes-fast;
+/// `full` is the figures-binary default.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub op_budget: usize,
+    pub graph_budget: usize,
+    pub configs_per_family: usize,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Self { op_budget: 160, graph_budget: 960, configs_per_family: 2, seed: 42 }
+    }
+
+    pub fn full() -> Self {
+        Self { op_budget: 400, graph_budget: 3200, configs_per_family: 4, seed: 42 }
+    }
+}
+
+fn opts(budget: usize, seed: u64, mode: PropMode) -> TuneOptions {
+    TuneOptions {
+        budget,
+        batch: 16,
+        top_k: 4,
+        seed,
+        mode,
+        ..Default::default()
+    }
+}
+
+/// Fixed whole-tensor layout sequences for a 4-d NHWO logical tensor.
+fn fixed_layout(name: &str) -> LayoutSeq {
+    let mut s = LayoutSeq::new();
+    match name {
+        "NHWO" => {}
+        "NOHW" => {
+            s.push(Primitive::reorder(&[0, 3, 1, 2]));
+        }
+        "HWON" => {
+            s.push(Primitive::reorder(&[1, 2, 3, 0]));
+        }
+        other => panic!("unknown fixed layout {other}"),
+    }
+    s
+}
+
+/// The NeoCPU-style packed layout `N (O/ot) H W ot`.
+fn packed_layout(o: i64, ot: i64) -> LayoutSeq {
+    let mut s = LayoutSeq::new();
+    s.push(Primitive::split(3, &[o / ot, ot]));
+    s.push(Primitive::reorder(&[0, 3, 1, 2, 4]));
+    s
+}
+
+/// The §7.3.3 searched tiled layout `N (H/ht)(W/wt)(O/ot) ht wt ot`.
+fn tiled_layout(h: i64, w: i64, o: i64, ht: i64, wt: i64, ot: i64) -> LayoutSeq {
+    let mut s = LayoutSeq::new();
+    s.push(Primitive::split(1, &[h / ht, ht]));
+    s.push(Primitive::split(3, &[w / wt, wt]));
+    s.push(Primitive::split(5, &[o / ot, ot]));
+    s.push(Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]));
+    s
+}
+
+/// C2D configs for Fig. 1 (varied channels/strides like the paper).
+fn fig1_configs() -> Vec<(String, Graph)> {
+    let mut out = Vec::new();
+    for (i, (ci, co, k, stride, hw)) in [
+        (3i64, 64i64, 7i64, 2i64, 224i64),
+        (64, 64, 3, 1, 56),
+        (64, 128, 3, 2, 56),
+        (128, 128, 3, 1, 28),
+        (256, 256, 3, 1, 14),
+        (512, 512, 3, 1, 7),
+        (16, 32, 5, 1, 28),
+        (32, 16, 1, 1, 28),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut b = crate::graph::GraphBuilder::new(&format!("c2d{i}"));
+        let x = b.input("x", &["N", "H", "W", "I"], &[1, *hw, *hw, *ci]);
+        b.conv2d(&format!("c{i}"), x, *co, *k, *stride, *k / 2);
+        out.push((format!("I{ci}-O{co}-k{k}-s{stride}-{hw}"), b.finish()));
+    }
+    out
+}
+
+/// Fig. 1: loop-tuned latency of C2D under NOHW / NHWO / HWON on each
+/// hardware profile.
+pub fn fig1(scale: &Scale) -> Vec<Table> {
+    let layouts = ["NOHW", "NHWO", "HWON"];
+    let mut tables = Vec::new();
+    for hw in HwProfile::all() {
+        let mut t = Table::new(
+            &format!("Fig 1 ({}): C2D latency (ms) per fixed layout", hw.name),
+            &["config", "NOHW", "NHWO", "HWON", "best/worst"],
+        );
+        for (name, g) in fig1_configs() {
+            let conv = g.complex_nodes()[0];
+            let mut row = vec![name.clone()];
+            let mut vals = Vec::new();
+            for lay in layouts {
+                let dec = ComplexDecision {
+                    node: conv,
+                    out_seq: fixed_layout(lay),
+                    ..Default::default()
+                };
+                let r = tune_loops(
+                    &g,
+                    conv,
+                    &dec,
+                    &hw,
+                    &opts(scale.op_budget, scale.seed, PropMode::Alt),
+                );
+                vals.push(r.best_ms);
+                row.push(format!("{:.4}", r.best_ms));
+            }
+            let best = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let worst = vals.iter().cloned().fold(0.0, f64::max);
+            row.push(format!("{:.2}x", worst / best));
+            t.row(&row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// §2 motivating example: the overlapped-tiled layout vs the NeoCPU
+/// packed layout `N (O/ot) H W ot` on the R18 first layer.
+pub fn motivating(scale: &Scale) -> Table {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let o = opts(scale.op_budget, scale.seed, PropMode::Alt);
+
+    let packed = ComplexDecision {
+        node: conv,
+        out_seq: packed_layout(64, 16),
+        ..Default::default()
+    };
+    let r_packed = tune_loops(&g, conv, &packed, &hw, &o);
+
+    // overlapped tiled layout + matching input unfold (paper Fig. 2/3)
+    let (ht, wt, ot) = (4, 16, 16);
+    let mut in_seq = LayoutSeq::new();
+    in_seq.push(Primitive::unfold(1, 2 * (ht - 1) + 7, 2 * ht));
+    in_seq.push(Primitive::unfold(3, 2 * (wt - 1) + 7, 2 * wt));
+    let tiled = ComplexDecision {
+        node: conv,
+        out_seq: tiled_layout(112, 112, 64, ht, wt, ot),
+        in_seq,
+        ..Default::default()
+    };
+    let r_tiled = tune_loops(&g, conv, &tiled, &hw, &o);
+
+    // The same comparison under a constrained loop-tuning budget —
+    // the §2 setting where schedules are not yet fully optimized and
+    // the layout's intrinsic locality dominates.
+    let mut o_small = o.clone();
+    o_small.budget = (scale.op_budget / 4).max(24);
+    let rp_small = tune_loops(&g, conv, &packed, &hw, &o_small);
+    let rt_small = tune_loops(&g, conv, &tiled, &hw, &o_small);
+
+    let mut t = Table::new(
+        "Motivating example (paper: tiled layout +32.4% over N(O/ot)HWot)",
+        &["layout", "budget", "latency (ms)", "improvement"],
+    );
+    t.row(&[
+        "N(O/ot)HWot".into(),
+        o_small.budget.to_string(),
+        format!("{:.4}", rp_small.best_ms),
+        "-".into(),
+    ]);
+    t.row(&[
+        "tiled+unfold".into(),
+        o_small.budget.to_string(),
+        format!("{:.4}", rt_small.best_ms),
+        format!("{:+.1}%", (rp_small.best_ms / rt_small.best_ms - 1.0) * 100.0),
+    ]);
+    t.row(&[
+        "N(O/ot)HWot".into(),
+        o.budget.to_string(),
+        format!("{:.4}", r_packed.best_ms),
+        "-".into(),
+    ]);
+    t.row(&[
+        "tiled+unfold".into(),
+        o.budget.to_string(),
+        format!("{:.4}", r_tiled.best_ms),
+        format!("{:+.1}%", (r_packed.best_ms / r_tiled.best_ms - 1.0) * 100.0),
+    ]);
+    t
+}
+
+/// Table 2: L1 demand misses, layout tiling vs prediction vs loop tiling
+/// on the Cortex-A76-like exact cache simulator.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2: L1 misses (Cortex-A76-like, 64B lines, 4-line prefetch)",
+        &["tile", "#L1-mis (layout)", "pred.", "#L1-mis (loop)"],
+    );
+    for cols in [4u64, 16, 64, 256] {
+        t.row(&[
+            format!("512 x {cols}"),
+            cache::table2_layout_tiled(512, cols).to_string(),
+            cache::table2_prediction(512, cols).to_string(),
+            cache::table2_loop_tiled(512, cols, 512).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 9: single-operator benchmark across the nine families, five
+/// systems, three platforms. Reports per-family geomean speedup over
+/// the worst performer (the paper's normalization).
+pub fn fig9(scale: &Scale) -> Vec<Table> {
+    let systems = ["torch", "autotvm", "flextensor", "ansor", "ALT"];
+    let mut tables = Vec::new();
+    for hw in HwProfile::all() {
+        let mut t = Table::new(
+            &format!("Fig 9 ({}): single-op speedup over worst (geomean)", hw.name),
+            &["op", "torch", "autotvm", "flextensor", "ansor", "ALT"],
+        );
+        let mut geo_alt_vs_ansor = Vec::new();
+        for fam in models::OP_FAMILIES {
+            let mut speedups: Vec<Vec<f64>> = vec![Vec::new(); systems.len()];
+            let mut rng = crate::util::Rng::new(scale.seed ^ fam.len() as u64);
+            for _ in 0..scale.configs_per_family {
+                let cfg = models::random_op_config(fam, &mut rng);
+                let node = cfg.graph.complex_nodes()[0];
+                let b = scale.op_budget;
+                let lat = [
+                    baselines::vendor(&cfg.graph, node, &hw).best_ms,
+                    baselines::autotvm_like(&cfg.graph, node, &hw, b, scale.seed)
+                        .best_ms,
+                    baselines::flextensor_like(&cfg.graph, node, &hw, b, scale.seed)
+                        .best_ms,
+                    baselines::ansor_like(&cfg.graph, node, &hw, b, scale.seed)
+                        .best_ms,
+                    tune_op(
+                        &cfg.graph,
+                        node,
+                        &hw,
+                        &opts(b, scale.seed, PropMode::Alt),
+                    )
+                    .best_ms,
+                ];
+                let worst = lat.iter().cloned().fold(0.0, f64::max);
+                for (s, &l) in lat.iter().enumerate() {
+                    speedups[s].push(worst / l);
+                }
+                geo_alt_vs_ansor.push(lat[3] / lat[4]);
+            }
+            let mut row = vec![fam.to_string()];
+            for s in &speedups {
+                row.push(format!("{:.2}", geomean(s)));
+            }
+            t.row(&row);
+        }
+        tables.push(t);
+        let mut s = Table::new(
+            &format!("Fig 9 ({}): ALT speedup over Ansor", hw.name),
+            &["metric", "value"],
+        );
+        s.row(&["geomean ALT/ansor".into(), format!("{:.2}x", geomean(&geo_alt_vs_ansor))]);
+        tables.push(s);
+    }
+    tables
+}
+
+/// The five end-to-end networks (scaled variants used when `quick`).
+fn fig10_networks(quick: bool) -> Vec<Graph> {
+    if quick {
+        vec![
+            models::resnet18(1),
+            models::mobilenet_v2(1),
+            models::bert_tiny(),
+        ]
+    } else {
+        vec![
+            models::resnet18(1),
+            models::resnet18(16), // the paper's b16 row (intel/gpu)
+            models::mobilenet_v2(1),
+            models::bert_base(),
+            models::bert_tiny(),
+            models::resnet3d_18(1),
+        ]
+    }
+}
+
+/// Fig. 10: end-to-end latency + speedup over the vendor (Torch-like)
+/// build, for Ansor-like / ALT-OL / ALT-WP / ALT.
+pub fn fig10(scale: &Scale, quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for hw in HwProfile::all() {
+        let mut t = Table::new(
+            &format!(
+                "Fig 10 ({}): end-to-end latency ms (speedup over vendor)",
+                hw.name
+            ),
+            &["network", "vendor", "ansor", "ALT-OL", "ALT-WP", "ALT"],
+        );
+        for g in fig10_networks(quick) {
+            // vendor: fixed heuristic schedules, no tuning
+            let prop = propagate(&g, &[], PropMode::Alt);
+            let vendor_ms = {
+                let mut scheds = HashMap::new();
+                for &c in &g.complex_nodes() {
+                    let out = g.tensor(g.node(c).output).shape.clone();
+                    let mut s = crate::loops::LoopSchedule::identity(&out, &[1]);
+                    for (i, tl) in s.spatial_tiles.iter_mut().enumerate() {
+                        *tl = crate::util::round_to_divisor(
+                            out[i],
+                            if i + 1 == out.len() { hw.simd_lanes as f64 } else { 4.0 },
+                        );
+                    }
+                    s.vectorize = true;
+                    s.parallel = 2;
+                    scheds.insert(c, s);
+                }
+                simulate_graph(&g, &prop, &scheds, &hw).latency_ms()
+            };
+            let mut row = vec![g.name.clone(), format!("{vendor_ms:.3}")];
+            for mode in [
+                PropMode::LoopOnly, // ansor-like == loop-only w/ default layouts
+                PropMode::LoopOnly, // ALT-OL
+                PropMode::WithoutFusionProp,
+                PropMode::Alt,
+            ] {
+                let r = tune_graph(
+                    &g,
+                    &hw,
+                    &opts(scale.graph_budget, scale.seed, mode),
+                );
+                row.push(format!(
+                    "{:.3} ({:.2}x)",
+                    r.report.latency_ms(),
+                    vendor_ms / r.report.latency_ms()
+                ));
+            }
+            t.row(&row);
+        }
+        tables.push(t);
+        if quick {
+            break; // one platform in quick mode
+        }
+    }
+    tables
+}
+
+/// Fig. 11: layout-propagation overhead ablation on the two §7.3.1
+/// subgraphs (Ansor / ALT-FP / ALT-BP / ALT).
+pub fn fig11(scale: &Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 11: propagation-overhead ablation, latency ms",
+        &["subgraph", "ansor", "ALT-FP", "ALT-BP", "ALT"],
+    );
+    let hw = HwProfile::intel();
+    for hwsz in [7, 14] {
+        let g = models::prop_subgraph(hwsz);
+        let mut row = vec![g.name.clone()];
+        for mode in [
+            PropMode::LoopOnly,
+            PropMode::ForwardShare,
+            PropMode::BackwardShare,
+            PropMode::Alt,
+        ] {
+            let r = tune_graph(&g, &hw, &opts(scale.graph_budget / 2, scale.seed, mode));
+            row.push(format!("{:.4}", r.report.latency_ms()));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Fig. 12: parameter sensitivity — template levels × budget.
+pub fn fig12(scale: &Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 12: template levels x budget (end-to-end latency ms)",
+        &["network", "1-level@B", "2-level@B", "2-level@1.5B"],
+    );
+    let hw = HwProfile::intel();
+    for g in [models::case_study(), models::prop_subgraph(14)] {
+        let mut row = vec![g.name.clone()];
+        for (levels, budget) in [
+            (1usize, scale.graph_budget),
+            (2, scale.graph_budget),
+            (2, scale.graph_budget * 3 / 2),
+        ] {
+            let mut o = opts(budget, scale.seed, PropMode::Alt);
+            o.levels = levels;
+            let r = tune_graph(&g, &hw, &o);
+            row.push(format!("{:.4}", r.report.latency_ms()));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Table 3: profiled counters of the case-study subgraph under the four
+/// §7.3.3 layouts (counts in 1e6, latency ms).
+pub fn table3(scale: &Scale) -> Table {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let o = opts(scale.op_budget, scale.seed, PropMode::Alt);
+    let mut t = Table::new(
+        "Table 3: counters per layout (1e6; latency ms)",
+        &["layout", "#Inst", "#L1-lds", "#L1-mis", "#L1-sts", "Lat."],
+    );
+
+    let mk_unfold = |ht: i64, wt: i64| -> LayoutSeq {
+        let mut s = LayoutSeq::new();
+        s.push(Primitive::unfold(1, 2 * (ht - 1) + 7, 2 * ht));
+        s.push(Primitive::unfold(3, 2 * (wt - 1) + 7, 2 * wt));
+        s
+    };
+    let cases: Vec<(&str, ComplexDecision)> = vec![
+        (
+            "NHWO & rsIO",
+            ComplexDecision { node: conv, ..Default::default() },
+        ),
+        (
+            "NOHW & OIrs",
+            ComplexDecision {
+                node: conv,
+                out_seq: fixed_layout("NOHW"),
+                w_seq: {
+                    let mut s = LayoutSeq::new();
+                    s.push(Primitive::reorder(&[3, 2, 0, 1]));
+                    s
+                },
+                ..Default::default()
+            },
+        ),
+        (
+            "N(O/ot)HWot",
+            ComplexDecision {
+                node: conv,
+                out_seq: packed_layout(64, 16),
+                ..Default::default()
+            },
+        ),
+        (
+            "tiled+unfold (searched)",
+            ComplexDecision {
+                node: conv,
+                out_seq: tiled_layout(112, 112, 64, 4, 16, 16),
+                in_seq: mk_unfold(4, 16),
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, dec) in cases {
+        let r = tune_loops(&g, conv, &dec, &hw, &o);
+        // re-simulate the winner to read its counters
+        let prop = propagate(&g, std::slice::from_ref(&dec), PropMode::Alt);
+        let (_, rep) = crate::sim::netsim::simulate_single_op(
+            &g, conv, &prop, &r.sched, &hw,
+        );
+        t.row(&[
+            name.into(),
+            format!("{:.1}", rep.instructions / 1e6),
+            format!("{:.1}", rep.l1_loads / 1e6),
+            format!("{:.1}", rep.l1_misses / 1e6),
+            format!("{:.1}", rep.l1_stores / 1e6),
+            format!("{:.3}", r.best_ms),
+        ]);
+    }
+    t
+}
+
+/// Design-choice ablations (DESIGN.md): how the cross-exploration
+/// hyper-parameters shape the result on the case study — joint-stage
+/// share, loop rounds per layout candidate, and the cost-model's
+/// measurement economy (Ansor-like vs FlexTensor-like contrast).
+pub fn ablations(scale: &Scale) -> Vec<Table> {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let budget = scale.op_budget * 4;
+
+    let mut t1 = Table::new(
+        "Ablation: joint-stage budget share (case study)",
+        &["joint_frac", "best ms"],
+    );
+    for jf in [0.0, 0.15, 0.3, 0.6] {
+        let mut o = opts(budget, scale.seed, PropMode::Alt);
+        o.joint_frac = jf;
+        let r = tune_op(&g, conv, &hw, &o);
+        t1.row(&[format!("{jf:.2}"), format!("{:.4}", r.best_ms)]);
+    }
+
+    let mut t2 = Table::new(
+        "Ablation: loop rounds per layout candidate (cross-exploration depth)",
+        &["rounds", "best ms"],
+    );
+    for rpl in [1usize, 2, 4] {
+        let mut o = opts(budget, scale.seed, PropMode::Alt);
+        o.rounds_per_layout = rpl;
+        let r = tune_op(&g, conv, &hw, &o);
+        t2.row(&[rpl.to_string(), format!("{:.4}", r.best_ms)]);
+    }
+
+    let mut t3 = Table::new(
+        "Ablation: cost-model measurement economy (same budget)",
+        &["tuner", "best ms"],
+    );
+    let with_cm = baselines::ansor_like(&g, conv, &hw, budget, scale.seed);
+    let without = baselines::flextensor_like(&g, conv, &hw, budget, scale.seed);
+    t3.row(&["with cost model (top-k measured)".into(), format!("{:.4}", with_cm.best_ms)]);
+    t3.row(&["without (every candidate measured)".into(), format!("{:.4}", without.best_ms)]);
+
+    vec![t1, t2, t3]
+}
+
+/// §7.3.4 observation: distribution of the tuned `ot` (channel tile).
+pub fn observations(scale: &Scale) -> Table {
+    let mut t = Table::new(
+        "§7.3.4: tuned channel-tile (ot) statistics per platform",
+        &["platform", "lanes", "median ot", "ot == 2x lanes?"],
+    );
+    for hw in HwProfile::all() {
+        let mut ots = Vec::new();
+        let mut rng = crate::util::Rng::new(scale.seed);
+        for _ in 0..scale.configs_per_family.max(3) {
+            let cfg = models::random_op_config("C2D", &mut rng);
+            let node = cfg.graph.complex_nodes()[0];
+            let r = tune_op(
+                &cfg.graph,
+                node,
+                &hw,
+                &opts(scale.op_budget, scale.seed, PropMode::Alt),
+            );
+            // ot = last split factor of the output sequence
+            if let Some(Primitive::Split { factors, .. }) = r
+                .decision
+                .out_seq
+                .prims
+                .iter()
+                .filter(|p| matches!(p, Primitive::Split { .. }))
+                .last()
+            {
+                ots.push(*factors.last().unwrap());
+            }
+        }
+        ots.sort();
+        let med = ots.get(ots.len() / 2).copied().unwrap_or(0);
+        t.row(&[
+            hw.name.into(),
+            hw.simd_lanes.to_string(),
+            med.to_string(),
+            format!("{}", med == 2 * hw.simd_lanes),
+        ]);
+    }
+    t
+}

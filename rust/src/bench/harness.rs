@@ -1,0 +1,166 @@
+//! Minimal timing + table-report harness (criterion replacement).
+
+use std::time::Instant;
+
+/// Median-of-n wall-clock timing of a closure, with one warmup call.
+/// Returns milliseconds.
+pub fn time_fn<F: FnMut()>(mut f: F, n: usize) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(n.max(1));
+    for _ in 0..n.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Wall-clock stopwatch with named laps (profiling aid for §Perf).
+pub struct BenchTimer {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+    last: Instant,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BenchTimer {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, laps: Vec::new(), last: now }
+    }
+
+    pub fn lap(&mut self, name: &str) {
+        let now = Instant::now();
+        self.laps
+            .push((name.to_string(), (now - self.last).as_secs_f64() * 1e3));
+        self.last = now;
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, ms) in &self.laps {
+            s.push_str(&format!("{name}: {ms:.1} ms\n"));
+        }
+        s.push_str(&format!("total: {:.1} ms\n", self.total_ms()));
+        s
+    }
+}
+
+/// Plain-text aligned table for figure/table reproductions.
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_positive() {
+        let ms = time_fn(
+            || {
+                let mut s = 0u64;
+                for i in 0..10_000 {
+                    s = s.wrapping_add(i);
+                }
+                std::hint::black_box(s);
+            },
+            3,
+        );
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("333"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn timer_laps() {
+        let mut t = BenchTimer::new();
+        t.lap("one");
+        t.lap("two");
+        assert!(t.report().contains("one"));
+        assert!(t.total_ms() >= 0.0);
+    }
+}

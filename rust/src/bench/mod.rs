@@ -1,0 +1,13 @@
+//! Benchmark harness shared by `cargo bench` targets and the `figures`
+//! binary.
+//!
+//! criterion is not available offline, so this module provides the
+//! timing/reporting scaffolding (median-of-n wall-clock, Markdown-ish
+//! tables) and, in [`figures`], one generator function per paper table
+//! and figure. Bench targets are thin `harness = false` mains calling
+//! into here.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{time_fn, BenchTimer, Table};

@@ -1,0 +1,57 @@
+//! `figures` — regenerate every paper table and figure in one run.
+//!
+//! Usage: `figures [full] [name]` where name is one of fig1, fig9,
+//! fig10, fig11, fig12, table2, table3, motivating, observations
+//! (default: all). `full` uses the larger budgets from DESIGN.md;
+//! the default quick scale finishes in minutes on one core.
+
+use alt::bench::figures as f;
+
+fn print_all(ts: Vec<alt::bench::harness::Table>) {
+    for t in ts {
+        t.print();
+        println!();
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "full");
+    let scale = if full { f::Scale::full() } else { f::Scale::quick() };
+    let which = args
+        .iter()
+        .find(|a| *a != "full" && *a != "quick")
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+
+    let t0 = std::time::Instant::now();
+    match which {
+        "table2" => f::table2().print(),
+        "motivating" => f::motivating(&scale).print(),
+        "fig1" => print_all(f::fig1(&scale)),
+        "fig9" => print_all(f::fig9(&scale)),
+        "fig10" => print_all(f::fig10(&scale, !full)),
+        "fig11" => f::fig11(&scale).print(),
+        "fig12" => f::fig12(&scale).print(),
+        "table3" => f::table3(&scale).print(),
+        "observations" => f::observations(&scale).print(),
+        "ablations" => print_all(f::ablations(&scale)),
+        _ => {
+            f::table2().print();
+            println!();
+            f::motivating(&scale).print();
+            println!();
+            print_all(f::fig1(&scale));
+            print_all(f::fig9(&scale));
+            print_all(f::fig10(&scale, !full));
+            f::fig11(&scale).print();
+            println!();
+            f::fig12(&scale).print();
+            println!();
+            f::table3(&scale).print();
+            println!();
+            f::observations(&scale).print();
+        }
+    }
+    eprintln!("[figures {which}] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

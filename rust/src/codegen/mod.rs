@@ -1,0 +1,646 @@
+//! Program generation (paper §6).
+//!
+//! Lowers one complex operator (plus its fused elementwise tail) to a
+//! *tensor program*: an ordered loop nest whose body carries the storage
+//! access expression of every operand. The pass follows §6 exactly:
+//!
+//! 1. deduce the output tensor's final layout by applying its primitive
+//!    sequence `S_Y`; the loop nest is reconstructed with one spatial
+//!    loop per storage dim (`L' = S_Y(L)`);
+//! 2. remap every other operand: replace the logical loop variables `L`
+//!    by `S_Y⁻¹(L')` in its access indices;
+//! 3. apply each operand's own sequence `S_X` to its accesses —
+//!    `S_X(S_Y⁻¹(L'))`.
+//!
+//! The resulting [`Program`] is what the device simulator executes and
+//! what cost-model features are extracted from.
+
+use crate::expr::{Const, Expr};
+use crate::graph::{Graph, Node, NodeId, OpKind};
+use crate::layout::{DimAccess, LayoutSeq, LayoutTransform};
+use crate::loops::{build_nest, Annotation, Loop, LoopSchedule};
+use crate::tensor::TensorId;
+
+/// One operand access inside the generated loop nest.
+#[derive(Clone, Debug)]
+pub struct TensorAccess {
+    pub tensor: TensorId,
+    /// Storage shape after the tensor's layout sequence.
+    pub storage_shape: Vec<i64>,
+    /// Storage index expression per storage dim, over loop-var ids.
+    pub idx: Vec<Expr>,
+    pub is_write: bool,
+    pub elem_bytes: i64,
+}
+
+impl TensorAccess {
+    /// Flattened (row-major) address expression in elements.
+    pub fn flat(&self) -> Expr {
+        Expr::flatten(&self.idx, &self.storage_shape)
+    }
+}
+
+/// A generated tensor program for one (possibly fused) loop nest.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub node: NodeId,
+    /// Loops, outermost first.
+    pub loops: Vec<Loop>,
+    pub accesses: Vec<TensorAccess>,
+    /// MAC-equivalent floating ops per innermost iteration.
+    pub flops_per_iter: f64,
+    /// Ids of elementwise nodes fused into this nest (compute_at).
+    pub fused: Vec<NodeId>,
+}
+
+impl Program {
+    pub fn total_iters(&self) -> f64 {
+        self.loops.iter().map(|l| l.extent as f64).product()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.total_iters() * self.flops_per_iter
+    }
+
+    pub fn innermost(&self) -> &Loop {
+        self.loops.last().expect("empty nest")
+    }
+
+    pub fn vectorized_loop(&self) -> Option<&Loop> {
+        self.loops.iter().find(|l| l.ann == Annotation::Vectorize)
+    }
+}
+
+/// Layout decisions for all tensors of a graph (produced by the
+/// propagation pass; identity when absent).
+///
+/// A tensor normally has one storage layout (`set`/`get`). When a
+/// runtime conversion sits between producer and consumer (Fig. 5a),
+/// the *consumer* reads a different layout than the producer wrote:
+/// that consumer-side view is a read override keyed by
+/// `(consumer node, tensor)`.
+#[derive(Clone, Debug, Default)]
+pub struct LayoutAssignment {
+    seqs: Vec<Option<LayoutSeq>>,
+    read_overrides: std::collections::HashMap<(NodeId, TensorId), LayoutSeq>,
+}
+
+impl LayoutAssignment {
+    pub fn identity(graph: &Graph) -> Self {
+        Self {
+            seqs: vec![None; graph.tensors.len()],
+            read_overrides: Default::default(),
+        }
+    }
+
+    pub fn set(&mut self, t: TensorId, seq: LayoutSeq) {
+        if t >= self.seqs.len() {
+            self.seqs.resize(t + 1, None);
+        }
+        self.seqs[t] = Some(seq);
+    }
+
+    /// The layout the producer writes (allocation layout).
+    pub fn get(&self, t: TensorId) -> LayoutSeq {
+        self.seqs.get(t).cloned().flatten().unwrap_or_default()
+    }
+
+    /// Register the layout `node` reads `t` in, when it differs from
+    /// the producer's (a conversion op materializes the repack).
+    pub fn set_read_override(&mut self, node: NodeId, t: TensorId, seq: LayoutSeq) {
+        self.read_overrides.insert((node, t), seq);
+    }
+
+    /// The layout `node` observes when reading `t`.
+    pub fn get_for(&self, node: NodeId, t: TensorId) -> LayoutSeq {
+        self.read_overrides
+            .get(&(node, t))
+            .cloned()
+            .unwrap_or_else(|| self.get(t))
+    }
+
+    pub fn is_identity(&self, t: TensorId) -> bool {
+        self.get(t).is_identity()
+    }
+}
+
+/// The logical iteration structure of a complex op before layout
+/// reconstruction: spatial dims (== logical output dims) and reduction
+/// dims, plus functions producing the operands' logical accesses.
+struct LogicalOp {
+    spatial: Vec<i64>,
+    reduction: Vec<i64>,
+    reduction_names: Vec<String>,
+    flops_per_iter: f64,
+}
+
+fn logical_op(graph: &Graph, node: &Node) -> LogicalOp {
+    let out = graph.tensor(node.output);
+    match &node.kind {
+        OpKind::Conv { kernel, groups, .. } => {
+            let x = graph.tensor(node.inputs[0]);
+            let ci = *x.shape.last().unwrap();
+            let mut reduction = vec![ci / groups];
+            let mut rnames = vec!["ri".to_string()];
+            for (d, &k) in kernel.iter().enumerate() {
+                reduction.push(k);
+                rnames.push(format!("r{}", out.dim_names[1 + d].to_lowercase()));
+            }
+            LogicalOp {
+                spatial: out.shape.clone(),
+                reduction,
+                reduction_names: rnames,
+                flops_per_iter: 2.0,
+            }
+        }
+        OpKind::Matmul | OpKind::Dense => {
+            let a = graph.tensor(node.inputs[0]);
+            let k = *a.shape.last().unwrap();
+            LogicalOp {
+                spatial: out.shape.clone(),
+                reduction: vec![k],
+                reduction_names: vec!["rk".to_string()],
+                flops_per_iter: 2.0,
+            }
+        }
+        other => panic!("logical_op on non-complex node {other:?}"),
+    }
+}
+
+/// The *effective* logical input shape a conv reads — transposed convs
+/// read a zero-expanded input (see DESIGN.md); everything else reads the
+/// producer's logical shape.
+pub fn conv_input_logical_shape(graph: &Graph, node: &Node) -> Vec<i64> {
+    let x = graph.tensor(node.inputs[0]);
+    match &node.kind {
+        OpKind::Conv { spatial, stride, kernel, transposed: true, .. } => {
+            let mut s = vec![x.shape[0]];
+            for d in 0..*spatial {
+                s.push((x.shape[1 + d] - 1) * stride[d] + 1 + 2 * (kernel[d] - 1));
+            }
+            s.push(*x.shape.last().unwrap());
+            s
+        }
+        _ => x.shape.clone(),
+    }
+}
+
+/// The logical shape a tensor's layout sequence was built against.
+/// Normally the tensor's own shape; for the input of a *transposed*
+/// convolution it is the zero-expanded shape the conv reads (templates
+/// build their `unfold`s against that).
+pub fn layout_base_shape(graph: &Graph, tensor: TensorId) -> Vec<i64> {
+    for n in &graph.nodes {
+        if let OpKind::Conv { transposed: true, .. } = &n.kind {
+            if n.inputs[0] == tensor {
+                return conv_input_logical_shape(graph, n);
+            }
+        }
+    }
+    graph.tensor(tensor).shape.clone()
+}
+
+/// Lower one complex node plus fused elementwise tail to a [`Program`].
+///
+/// `fused_tail` lists elementwise nodes (in topo order) whose compute is
+/// inlined into the tile body; the propagation pass guarantees their
+/// layouts match the output layout when it requests fusion.
+pub fn lower_complex(
+    graph: &Graph,
+    node_id: NodeId,
+    layouts: &LayoutAssignment,
+    sched: &LoopSchedule,
+    fused_tail: &[NodeId],
+    simd_lanes: i64,
+) -> Program {
+    let node = graph.node(node_id);
+    let lop = logical_op(graph, node);
+    let out_seq = layouts.get(node.output);
+    let out_tf = LayoutTransform::new(lop.spatial.clone(), &out_seq);
+    let storage_shape = out_tf.final_shape().to_vec();
+
+    // Reconstructed loop nest: one spatial loop per storage dim (§6).
+    let storage_names: Vec<String> =
+        (0..storage_shape.len()).map(|d| format!("s{d}")).collect();
+    let mut sched = sched.clone();
+    sched.repair(&storage_shape, &lop.reduction);
+    let nest = build_nest(
+        &storage_shape,
+        &storage_names,
+        &lop.reduction,
+        &lop.reduction_names,
+        &sched,
+        simd_lanes,
+    );
+
+    // Storage index expr per storage dim: outer*tile + inner.
+    let storage_idx: Vec<Expr> = nest
+        .spatial_pairs
+        .iter()
+        .zip(&sched.spatial_tiles)
+        .map(|(&(o, i), &t)| {
+            Expr::add(Expr::mul(Expr::Var(o), Const(t)), Expr::Var(i))
+        })
+        .collect();
+    // Reduction var exprs.
+    let red_idx: Vec<Expr> = nest
+        .reduction_pairs
+        .iter()
+        .zip(&sched.reduction_tiles)
+        .map(|(&(o, i), &t)| {
+            Expr::add(Expr::mul(Expr::Var(o), Const(t)), Expr::Var(i))
+        })
+        .collect();
+
+    // Logical output coordinates: L = S_Y^{-1}(L').
+    let logical = out_tf.backward(&storage_idx);
+
+    let mut accesses = Vec::new();
+    // Output write in storage coordinates (identity over storage idx).
+    let out_t = graph.tensor(node.output);
+    accesses.push(TensorAccess {
+        tensor: node.output,
+        storage_shape: storage_shape.clone(),
+        idx: storage_idx.clone(),
+        is_write: fused_tail.is_empty(),
+        elem_bytes: out_t.dtype.bytes(),
+    });
+
+    // Operand accesses: logical access -> operand's own layout seq.
+    match &node.kind {
+        OpKind::Conv { spatial, stride, dilation, groups, transposed, kernel } => {
+            let x_id = node.inputs[0];
+            let w_id = node.inputs[1];
+            let x = graph.tensor(x_id);
+            let sp = *spatial;
+            let o_expr = logical[sp + 1].clone();
+            let co = *graph.tensor(node.output).shape.last().unwrap();
+            let ci = *x.shape.last().unwrap();
+            let cig = ci / groups;
+            // input channel = group(o) * (I/groups) + ri
+            let ci_expr = if *groups == 1 {
+                red_idx[0].clone()
+            } else {
+                let per_group_o = co / groups;
+                Expr::add(
+                    Expr::mul(
+                        Expr::div(o_expr.clone(), Const(per_group_o)),
+                        Const(cig),
+                    ),
+                    red_idx[0].clone(),
+                )
+            };
+            // input spatial: sliding pattern per dim
+            let mut x_acc: Vec<DimAccess> =
+                vec![DimAccess::Simple(logical[0].clone())];
+            for d in 0..sp {
+                let (v, win_mul) = if *transposed {
+                    (1, 1) // expanded-input equivalence: stride-1 window
+                } else {
+                    (stride[d], dilation[d])
+                };
+                x_acc.push(DimAccess::Sliding {
+                    stride: v,
+                    outer: logical[1 + d].clone(),
+                    window: Expr::mul(Const(win_mul), red_idx[1 + d].clone()),
+                    win_lo: 0,
+                    win_size: win_mul * (kernel[d] - 1) + 1,
+                });
+            }
+            x_acc.push(DimAccess::Simple(ci_expr));
+            let x_shape = conv_input_logical_shape(graph, node);
+            push_access(&mut accesses, graph, node_id, x_id, &x_shape, &x_acc, layouts);
+
+            // weight access [K1..Kn, ri, o]
+            let mut w_acc: Vec<DimAccess> = (0..sp)
+                .map(|d| DimAccess::Simple(red_idx[1 + d].clone()))
+                .collect();
+            w_acc.push(DimAccess::Simple(red_idx[0].clone()));
+            w_acc.push(DimAccess::Simple(o_expr.clone()));
+            let w_shape = graph.tensor(w_id).shape.clone();
+            push_access(&mut accesses, graph, node_id, w_id, &w_shape, &w_acc, layouts);
+        }
+        OpKind::Matmul | OpKind::Dense => {
+            let a_id = node.inputs[0];
+            let b_id = node.inputs[1];
+            let rank = logical.len();
+            // A: [B.., M, K]
+            let mut a_acc: Vec<DimAccess> = logical[..rank - 1]
+                .iter()
+                .map(|e| DimAccess::Simple(e.clone()))
+                .collect();
+            a_acc.push(DimAccess::Simple(red_idx[0].clone()));
+            let a_shape = graph.tensor(a_id).shape.clone();
+            push_access(&mut accesses, graph, node_id, a_id, &a_shape, &a_acc, layouts);
+            // B: [K, N]
+            let b_acc = vec![
+                DimAccess::Simple(red_idx[0].clone()),
+                DimAccess::Simple(logical[rank - 1].clone()),
+            ];
+            let b_shape = graph.tensor(b_id).shape.clone();
+            push_access(&mut accesses, graph, node_id, b_id, &b_shape, &b_acc, layouts);
+        }
+        _ => unreachable!(),
+    }
+
+    // Tensors the weight's `store_at` primitives attached into its own
+    // storage: their reads ride the weight slab (same cache line /
+    // VMEM block — §4.1.2), so no separate access is emitted.
+    let stored_at: Vec<TensorId> = node
+        .inputs
+        .get(1)
+        .map(|&w| {
+            layouts
+                .get(w)
+                .prims
+                .iter()
+                .filter_map(|p| match p {
+                    crate::layout::Primitive::StoreAt { other, .. } => {
+                        Some(*other)
+                    }
+                    _ => None,
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    // Fused elementwise tail: extra operands read at the same logical
+    // coordinates; the final tensor is the nest's real write.
+    let mut extra_flops = 0.0;
+    for &tail_id in fused_tail {
+        let tail = graph.node(tail_id);
+        extra_flops += 1.0;
+        for &inp in &tail.inputs {
+            let it = graph.tensor(inp);
+            // skip the intermediate produced inside this fusion group
+            if it.producer == Some(node_id)
+                || fused_tail.contains(&it.producer.unwrap_or(usize::MAX))
+            {
+                continue;
+            }
+            if stored_at.contains(&inp) {
+                continue; // packed into the weight slab by store_at
+            }
+            let acc: Vec<DimAccess> = if it.rank() == 1 {
+                // bias along last logical dim
+                vec![DimAccess::Simple(logical.last().unwrap().clone())]
+            } else {
+                logical.iter().map(|e| DimAccess::Simple(e.clone())).collect()
+            };
+            let shape = it.shape.clone();
+            push_access(&mut accesses, graph, node_id, inp, &shape, &acc, layouts);
+        }
+    }
+    if let Some(&last) = fused_tail.last() {
+        let fin = graph.node(last).output;
+        let fin_t = graph.tensor(fin);
+        let fin_tf = LayoutTransform::new(fin_t.shape.clone(), &layouts.get(fin));
+        accesses.push(TensorAccess {
+            tensor: fin,
+            storage_shape: fin_tf.final_shape().to_vec(),
+            idx: fin_tf
+                .rewrite_access(
+                    &logical
+                        .iter()
+                        .map(|e| DimAccess::Simple(e.clone()))
+                        .collect::<Vec<_>>(),
+                )
+                .iter()
+                .map(|a| a.to_expr())
+                .collect(),
+            is_write: true,
+            elem_bytes: fin_t.dtype.bytes(),
+        });
+    }
+
+    // Elementwise flops amortize over reduction iterations.
+    let red_total: f64 = lop.reduction.iter().map(|&r| r as f64).product();
+    Program {
+        node: node_id,
+        loops: nest.loops,
+        accesses,
+        flops_per_iter: lop.flops_per_iter + extra_flops / red_total.max(1.0),
+        fused: fused_tail.to_vec(),
+    }
+}
+
+fn push_access(
+    accesses: &mut Vec<TensorAccess>,
+    graph: &Graph,
+    reader: NodeId,
+    tensor: TensorId,
+    logical_shape: &[i64],
+    logical_acc: &[DimAccess],
+    layouts: &LayoutAssignment,
+) {
+    // consumer-side layout: differs from the allocation layout when a
+    // conversion op sits on this edge (Fig. 5a)
+    let seq = layouts.get_for(reader, tensor);
+    let tf = LayoutTransform::new(logical_shape.to_vec(), &seq);
+    let idx: Vec<Expr> = tf
+        .rewrite_access(logical_acc)
+        .iter()
+        .map(|a| a.to_expr())
+        .collect();
+    accesses.push(TensorAccess {
+        tensor,
+        storage_shape: tf.final_shape().to_vec(),
+        idx,
+        is_write: false,
+        elem_bytes: graph.tensor(tensor).dtype.bytes(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::layout::Primitive;
+
+    fn case_conv(graph: &Graph) -> NodeId {
+        graph.complex_nodes()[0]
+    }
+
+    fn check_program_addresses_in_bounds(p: &Program) {
+        // walk a pseudo-random sample of the iteration space; every
+        // access must stay inside its storage shape.
+        let extents: Vec<i64> = p.loops.iter().map(|l| l.extent).collect();
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..200 {
+            let env: Vec<i64> = extents
+                .iter()
+                .map(|&e| rng.below(e as usize) as i64)
+                .collect();
+            for a in &p.accesses {
+                let total: i64 = a.storage_shape.iter().product();
+                let f = a.flat().eval(&env);
+                assert!(
+                    f >= 0 && f < total,
+                    "access to t{} out of bounds: {f} not in [0,{total})",
+                    a.tensor
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_layout_conv_program() {
+        let g = models::case_study();
+        let conv = case_conv(&g);
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let p = lower_complex(&g, conv, &layouts, &sched, &[], 16);
+        // 4 spatial + 3 reduction dims, two loops each
+        assert_eq!(p.loops.len(), 14);
+        assert_eq!(p.accesses.len(), 3); // out, in, weight
+        assert!((p.total_flops()
+            - 2.0 * (112.0 * 112.0 * 64.0) * (3.0 * 49.0))
+            .abs()
+            < 1.0);
+        check_program_addresses_in_bounds(&p);
+    }
+
+    #[test]
+    fn tiled_output_layout_reconstructs_nest() {
+        let g = models::case_study();
+        let conv = case_conv(&g);
+        let out = g.node(conv).output;
+        let mut layouts = LayoutAssignment::identity(&g);
+        // N (H/4) (W/16) (O/16) 4 16 16
+        let mut seq = LayoutSeq::new();
+        seq.push(Primitive::split(1, &[28, 4]))
+            .push(Primitive::split(3, &[7, 16]))
+            .push(Primitive::split(5, &[4, 16]))
+            .push(Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]));
+        layouts.set(out, seq);
+        let sched = LoopSchedule::identity(&[1, 28, 7, 4, 4, 16, 16], &[3, 7, 7]);
+        let p = lower_complex(&g, conv, &layouts, &sched, &[], 16);
+        // 7 storage dims -> 7 spatial loop pairs + 3 reduction pairs
+        assert_eq!(p.loops.len(), 20);
+        check_program_addresses_in_bounds(&p);
+    }
+
+    #[test]
+    fn unfolded_input_layout_in_bounds() {
+        let g = models::case_study();
+        let conv = case_conv(&g);
+        let node = g.node(conv);
+        let out = node.output;
+        let inp = node.inputs[0]; // padded 230x230x3
+        let mut layouts = LayoutAssignment::identity(&g);
+        let (ht, wt) = (4i64, 16i64);
+        let mut out_seq = LayoutSeq::new();
+        out_seq
+            .push(Primitive::split(1, &[112 / ht, ht]))
+            .push(Primitive::split(3, &[112 / wt, wt]))
+            .push(Primitive::split(5, &[4, 16]))
+            .push(Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]));
+        layouts.set(out, out_seq);
+        // matching unfold on the input: B = V*(ht-1)+M, S = V*ht
+        let (v, m) = (2i64, 7i64);
+        let mut in_seq = LayoutSeq::new();
+        in_seq
+            .push(Primitive::unfold(1, v * (ht - 1) + m, v * ht))
+            .push(Primitive::unfold(3, v * (wt - 1) + m, v * wt));
+        layouts.set(inp, in_seq);
+        let sched =
+            LoopSchedule::identity(&[1, 28, 7, 4, 4, 16, 16], &[3, 7, 7]);
+        let p = lower_complex(&g, conv, &layouts, &sched, &[], 16);
+        check_program_addresses_in_bounds(&p);
+    }
+
+    #[test]
+    fn fused_tail_reads_bias_and_writes_final() {
+        let g = models::case_study();
+        let conv = case_conv(&g);
+        // tail: bias, relu
+        let bias_node = conv + 1;
+        let relu_node = conv + 2;
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let p = lower_complex(
+            &g,
+            conv,
+            &layouts,
+            &sched,
+            &[bias_node, relu_node],
+            16,
+        );
+        // out(non-write), in, weight, bias, final(write)
+        assert_eq!(p.accesses.len(), 5);
+        let writes: Vec<_> = p.accesses.iter().filter(|a| a.is_write).collect();
+        assert_eq!(writes.len(), 1);
+        assert_eq!(writes[0].tensor, g.node(relu_node).output);
+        check_program_addresses_in_bounds(&p);
+    }
+
+    #[test]
+    fn store_at_packs_bias_into_weight_slab() {
+        // dense + bias: with store_at on the weight, the bias loses its
+        // separate access and the weight storage grows by one K-row
+        let mut b = crate::graph::GraphBuilder::new("t");
+        let x = b.input("x", &["M", "K"], &[8, 16]);
+        let _y = b.dense("fc", x, 32);
+        let g = b.finish();
+        let dense = g.complex_nodes()[0];
+        let node = g.node(dense);
+        let (w, bias) = (node.inputs[1], node.inputs[1] + 2);
+        assert_eq!(g.tensor(bias).shape, vec![32], "bias tensor id");
+        let bias_node = dense + 1;
+
+        let sched = LoopSchedule::identity(&[8, 32], &[16]);
+        let plain = LayoutAssignment::identity(&g);
+        let p0 = lower_complex(&g, dense, &plain, &sched, &[bias_node], 16);
+
+        let mut packed = LayoutAssignment::identity(&g);
+        let mut seq = LayoutSeq::new();
+        seq.push(crate::layout::Primitive::StoreAt { other: bias, dim: 0 });
+        packed.set(w, seq);
+        let p1 = lower_complex(&g, dense, &packed, &sched, &[bias_node], 16);
+
+        assert_eq!(p1.accesses.len(), p0.accesses.len() - 1);
+        let w_acc = p1.accesses.iter().find(|a| a.tensor == w).unwrap();
+        assert_eq!(w_acc.storage_shape, vec![17, 32]); // K+1 rows
+        // reads stay within the original K rows
+        let extents: Vec<i64> = p1.loops.iter().map(|l| l.extent).collect();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..50 {
+            let env: Vec<i64> = extents
+                .iter()
+                .map(|&e| rng.below(e as usize) as i64)
+                .collect();
+            let f = w_acc.flat().eval(&env);
+            assert!(f >= 0 && f < 17 * 32);
+        }
+    }
+
+    #[test]
+    fn gmm_program() {
+        let mut rng = crate::util::Rng::new(4);
+        let cfg = models::random_op_config("GMM", &mut rng);
+        let gmm = cfg.graph.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&cfg.graph);
+        let out_shape = cfg.graph.tensor(cfg.graph.node(gmm).output).shape.clone();
+        let k = *cfg.graph.tensor(cfg.graph.node(gmm).inputs[0]).shape.last().unwrap();
+        let sched = LoopSchedule::identity(&out_shape, &[k]);
+        let p = lower_complex(&cfg.graph, gmm, &layouts, &sched, &[], 16);
+        assert_eq!(p.accesses.len(), 3);
+        check_program_addresses_in_bounds(&p);
+    }
+
+    #[test]
+    fn grouped_conv_channel_mapping_in_bounds() {
+        let mut rng = crate::util::Rng::new(7);
+        for fam in ["GRP", "DEP", "DIL", "T2D", "C1D", "C3D", "T3D"] {
+            let cfg = models::random_op_config(fam, &mut rng);
+            let id = cfg.graph.complex_nodes()[0];
+            let layouts = LayoutAssignment::identity(&cfg.graph);
+            let out_shape =
+                cfg.graph.tensor(cfg.graph.node(id).output).shape.clone();
+            let sched = LoopSchedule::identity(&out_shape, &[1]);
+            // reduction arity fixed by repair()
+            let p = lower_complex(&cfg.graph, id, &layouts, &sched, &[], 16);
+            check_program_addresses_in_bounds(&p);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Declarative configuration for tuning jobs.
+//!
+//! A tiny `key = value` format (INI-style, no external deps) drives the
+//! launcher: budgets, stage split, hardware profile, template levels,
+//! propagation mode, workload. CLI flags override file values.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::autotune::TuneOptions;
+use crate::propagate::PropMode;
+
+/// Parsed configuration (flat key/value map with typed accessors).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Build tuner options from this config (keys: `budget`,
+    /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
+    /// `seed`, `mode`).
+    pub fn tune_options(&self) -> Result<TuneOptions, String> {
+        let d = TuneOptions::default();
+        let mode = match self.get("mode").unwrap_or("alt") {
+            "alt" => PropMode::Alt,
+            "alt-wp" | "wp" => PropMode::WithoutFusionProp,
+            "alt-ol" | "ol" | "loop-only" => PropMode::LoopOnly,
+            "alt-fp" | "fp" => PropMode::ForwardShare,
+            "alt-bp" | "bp" => PropMode::BackwardShare,
+            other => return Err(format!("unknown mode '{other}'")),
+        };
+        Ok(TuneOptions {
+            budget: self.get_usize("budget", d.budget),
+            joint_frac: self.get_f64("joint_frac", d.joint_frac),
+            batch: self.get_usize("batch", d.batch),
+            top_k: self.get_usize("top_k", d.top_k),
+            rounds_per_layout: self
+                .get_usize("rounds_per_layout", d.rounds_per_layout),
+            levels: self.get_usize("levels", d.levels).clamp(1, 2),
+            seed: self.get_u64("seed", d.seed),
+            mode,
+        })
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.map {
+            writeln!(f, "{k} = {v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let c = Config::parse(
+            "# a comment\n[tuning]\nbudget = 500\nmode = alt-wp\njoint_frac = 0.4\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("budget", 1), 500);
+        let o = c.tune_options().unwrap();
+        assert_eq!(o.budget, 500);
+        assert!((o.joint_frac - 0.4).abs() < 1e-12);
+        assert_eq!(o.mode, PropMode::WithoutFusionProp);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("not a kv line").is_err());
+        let c = Config::parse("mode = bogus").unwrap();
+        assert!(c.tune_options().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        let o = c.tune_options().unwrap();
+        assert_eq!(o.mode, PropMode::Alt);
+        assert_eq!(o.budget, TuneOptions::default().budget);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("budget = 10").unwrap();
+        c.set("budget", "99");
+        assert_eq!(c.get_usize("budget", 0), 99);
+    }
+}

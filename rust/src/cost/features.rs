@@ -1,0 +1,190 @@
+//! Program feature extraction for the cost model.
+//!
+//! Mirrors the feature classes the paper lists (§5.2.3): loop structure
+//! and accessing expressions — extents, annotations, per-operand stride
+//! behaviour at the innermost loops, and footprint summaries. All
+//! features are cheap (no simulation) and fixed-length.
+
+use crate::codegen::Program;
+use crate::loops::{Annotation, LoopKind};
+
+/// Fixed feature-vector length.
+pub const FEATURE_DIM: usize = 28;
+
+fn log1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+/// Extract the feature vector of a generated tensor program.
+pub fn extract_features(p: &Program) -> Vec<f64> {
+    let mut f = Vec::with_capacity(FEATURE_DIM);
+    let extents: Vec<i64> = p.loops.iter().map(|l| l.extent).collect();
+    let n = extents.len();
+
+    // --- global structure ---
+    f.push(log1p(p.total_iters()));
+    f.push(log1p(p.total_flops()));
+    f.push(p.flops_per_iter);
+    f.push(n as f64);
+    f.push(p.accesses.len() as f64);
+    f.push(p.fused.len() as f64);
+
+    // --- annotations ---
+    let par: f64 = p
+        .loops
+        .iter()
+        .filter(|l| l.ann == Annotation::Parallel)
+        .map(|l| l.extent as f64)
+        .product();
+    f.push(log1p(par));
+    let vec_ext = p
+        .loops
+        .iter()
+        .find(|l| l.ann == Annotation::Vectorize)
+        .map(|l| l.extent as f64)
+        .unwrap_or(0.0);
+    f.push(vec_ext);
+    let unroll: f64 = p
+        .loops
+        .iter()
+        .filter(|l| l.ann == Annotation::Unroll)
+        .map(|l| l.extent as f64)
+        .product();
+    f.push(log1p(unroll));
+
+    // --- inner-tile shape (product of the 4 innermost spatial loops,
+    // and the innermost extents themselves) ---
+    let inner: Vec<f64> = p
+        .loops
+        .iter()
+        .rev()
+        .take(4)
+        .map(|l| l.extent as f64)
+        .collect();
+    let mut it = inner.clone();
+    it.resize(4, 1.0);
+    f.extend(it.iter().map(|e| log1p(*e)));
+    let red_inner: f64 = p
+        .loops
+        .iter()
+        .rev()
+        .take_while(|l| l.kind == LoopKind::Reduction)
+        .map(|l| l.extent as f64)
+        .product();
+    f.push(log1p(red_inner));
+
+    // --- per-access stride behaviour at the innermost loops ---
+    // (vectorizability + locality signals)
+    let vec_pos = p.loops.iter().position(|l| l.ann == Annotation::Vectorize);
+    let mid: Vec<i64> = extents.iter().map(|&e| (e - 1) / 2).collect();
+    let mut unit_frac = 0.0;
+    let mut zero_frac = 0.0;
+    let mut gather_frac = 0.0;
+    let mut write_bytes = 0.0;
+    let mut read_bytes = 0.0;
+    let mut footprint_inner = 0.0;
+    for a in &p.accesses {
+        let flat = a.flat();
+        let deps = flat.vars();
+        let probe = |v: usize| -> i64 {
+            if !deps.contains(&v) || extents[v] <= 1 {
+                return 0;
+            }
+            let mut e0 = mid.clone();
+            e0[v] = 0;
+            let x0 = flat.eval(&e0);
+            e0[v] = 1;
+            (flat.eval(&e0) - x0).abs()
+        };
+        if let Some(vl) = vec_pos {
+            let s = probe(vl);
+            if s == 1 {
+                unit_frac += 1.0;
+            } else if s == 0 {
+                zero_frac += 1.0;
+            } else {
+                gather_frac += 1.0;
+            }
+        }
+        // inner footprint proxy: product of distinct extents over the
+        // last 4 loops the access depends on
+        let mut fp = 1.0;
+        for v in n.saturating_sub(4)..n {
+            if deps.contains(&v) {
+                fp *= extents[v] as f64;
+            }
+        }
+        footprint_inner += fp * a.elem_bytes as f64;
+        let total: f64 =
+            a.storage_shape.iter().map(|&d| d as f64).product::<f64>()
+                * a.elem_bytes as f64;
+        if a.is_write {
+            write_bytes += total;
+        } else {
+            read_bytes += total;
+        }
+    }
+    let na = p.accesses.len().max(1) as f64;
+    f.push(unit_frac / na);
+    f.push(zero_frac / na);
+    f.push(gather_frac / na);
+    f.push(log1p(footprint_inner));
+    f.push(log1p(read_bytes));
+    f.push(log1p(write_bytes));
+
+    // --- operational intensity proxy ---
+    f.push(log1p(p.total_flops() / (read_bytes + write_bytes + 1.0)));
+
+    // --- loop balance: extents of the 4 outermost loops ---
+    let mut outer: Vec<f64> =
+        p.loops.iter().take(4).map(|l| log1p(l.extent as f64)).collect();
+    outer.resize(4, 0.0);
+    f.extend(outer);
+
+    // reduction/spatial iteration split
+    let red_total: f64 = p
+        .loops
+        .iter()
+        .filter(|l| l.kind == LoopKind::Reduction)
+        .map(|l| l.extent as f64)
+        .product();
+    f.push(log1p(red_total));
+
+    f.resize(FEATURE_DIM, 0.0);
+    debug_assert_eq!(f.len(), FEATURE_DIM);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{lower_complex, LayoutAssignment};
+    use crate::graph::models;
+    use crate::loops::LoopSchedule;
+
+    #[test]
+    fn features_fixed_length_and_finite() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let s = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let p = lower_complex(&g, conv, &layouts, &s, &[], 16);
+        let f = extract_features(&p);
+        assert_eq!(f.len(), FEATURE_DIM);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn features_distinguish_schedules() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let a = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let mut b = a.clone();
+        b.spatial_tiles = vec![1, 4, 16, 16];
+        b.vectorize = true;
+        let pa = lower_complex(&g, conv, &layouts, &a, &[], 16);
+        let pb = lower_complex(&g, conv, &layouts, &b, &[], 16);
+        assert_ne!(extract_features(&pa), extract_features(&pb));
+    }
+}

@@ -1,0 +1,193 @@
+//! Learned cost model (paper §5.2.3).
+//!
+//! A gradient-boosted-tree regressor (the paper uses XGBoost; we
+//! implement the same model family from scratch) predicts program
+//! throughput from structural features so the tuner only "measures" the
+//! top-k candidates of each batch on the (simulated) device. The model
+//! is trained online from those measurements.
+
+pub mod features;
+pub mod gbt;
+
+pub use features::{extract_features, FEATURE_DIM};
+pub use gbt::{GbtModel, GbtParams};
+
+use crate::codegen::Program;
+
+/// Online cost model: dataset + retrained GBT ensemble.
+///
+/// Perf notes (§Perf): training cost is O(trees · depth · n·f) per
+/// retrain, so the dataset is windowed to the most recent
+/// [`CostModel::WINDOW`] samples and the retrain interval stretches as
+/// data accumulates — keeping per-measurement cost flat as budgets grow.
+pub struct CostModel {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>, // log-latency targets
+    model: Option<GbtModel>,
+    params: GbtParams,
+    /// retrain every `retrain_every` new samples
+    retrain_every: usize,
+    since_train: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostModel {
+    /// Sliding training-window size (most recent samples kept).
+    pub const WINDOW: usize = 256;
+
+    pub fn new() -> Self {
+        Self {
+            xs: Vec::new(),
+            ys: Vec::new(),
+            model: None,
+            params: GbtParams {
+                n_trees: 40,
+                max_depth: 5,
+                shrinkage: 0.2,
+                min_samples: 4,
+                colsample: 10,
+            },
+            retrain_every: 16,
+            since_train: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Record one measurement (latency in ms) and maybe retrain.
+    pub fn observe(&mut self, p: &Program, latency_ms: f64) {
+        self.observe_features(extract_features(p), latency_ms);
+    }
+
+    pub fn observe_features(&mut self, feats: Vec<f64>, latency_ms: f64) {
+        self.xs.push(feats);
+        self.ys.push(latency_ms.max(1e-9).ln());
+        if self.xs.len() > Self::WINDOW {
+            // slide the window (drop oldest)
+            let drop = self.xs.len() - Self::WINDOW;
+            self.xs.drain(..drop);
+            self.ys.drain(..drop);
+        }
+        self.since_train += 1;
+        // stretch the retrain interval as data accumulates: frequent
+        // early (model forms fast), sparse later (stable + cheap)
+        let interval = self.retrain_every.max(self.xs.len() / 8);
+        if self.since_train >= interval && self.xs.len() >= 8 {
+            self.retrain();
+        }
+    }
+
+    pub fn retrain(&mut self) {
+        self.model = Some(gbt::train(&self.xs, &self.ys, &self.params));
+        self.since_train = 0;
+    }
+
+    /// Predicted latency (ms). Falls back to a structural heuristic
+    /// before any data exists (cold start).
+    pub fn predict(&self, p: &Program) -> f64 {
+        let feats = extract_features(p);
+        self.predict_features(&feats, p)
+    }
+
+    pub fn predict_features(&self, feats: &[f64], p: &Program) -> f64 {
+        match &self.model {
+            Some(m) => m.predict(feats).exp(),
+            None => p.total_flops().max(1.0), // monotone placeholder
+        }
+    }
+
+    /// Rank candidates ascending by predicted latency; returns indices.
+    pub fn rank(&self, programs: &[Program]) -> Vec<usize> {
+        let mut scored: Vec<(usize, f64)> = programs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, self.predict(p)))
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.into_iter().map(|(i, _)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{lower_complex, LayoutAssignment};
+    use crate::graph::models;
+    use crate::loops::LoopSchedule;
+    use crate::sim::{simulate_program, HwProfile};
+    use crate::util::stats::spearman;
+    use crate::util::Rng;
+
+    fn random_schedule(rng: &mut Rng, spatial: &[i64], red: &[i64]) -> LoopSchedule {
+        let mut s = LoopSchedule::identity(spatial, red);
+        s.spatial_tiles = spatial
+            .iter()
+            .map(|&e| *rng.choose(&crate::util::divisors(e)))
+            .collect();
+        s.reduction_tiles = red
+            .iter()
+            .map(|&e| *rng.choose(&crate::util::divisors(e)))
+            .collect();
+        s.vectorize = rng.uniform() < 0.7;
+        s.parallel = rng.below(3);
+        s.unroll = if rng.uniform() < 0.5 { 8 } else { 0 };
+        s
+    }
+
+    /// The core requirement: after online training, the model ranks
+    /// unseen schedules consistently with the simulator.
+    #[test]
+    fn cost_model_learns_to_rank() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let hw = HwProfile::intel();
+        let spatial = [1i64, 112, 112, 64];
+        let red = [3i64, 7, 7];
+        let mut rng = Rng::new(11);
+        let mut cm = CostModel::new();
+
+        // train on 120 random points
+        for _ in 0..120 {
+            let s = random_schedule(&mut rng, &spatial, &red);
+            let p = lower_complex(&g, conv, &layouts, &s, &[], hw.simd_lanes);
+            let r = simulate_program(&p, &hw);
+            cm.observe(&p, r.latency_ms);
+        }
+        cm.retrain();
+
+        // evaluate rank correlation on 40 fresh points
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        for _ in 0..40 {
+            let s = random_schedule(&mut rng, &spatial, &red);
+            let p = lower_complex(&g, conv, &layouts, &s, &[], hw.simd_lanes);
+            pred.push(cm.predict(&p));
+            truth.push(simulate_program(&p, &hw).latency_ms);
+        }
+        let rho = spearman(&pred, &truth);
+        assert!(rho > 0.5, "spearman too low: {rho}");
+    }
+
+    #[test]
+    fn cold_start_is_usable() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let s = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let p = lower_complex(&g, conv, &layouts, &s, &[], 16);
+        let cm = CostModel::new();
+        assert!(cm.predict(&p) > 0.0);
+    }
+}

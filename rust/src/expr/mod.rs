@@ -1,0 +1,250 @@
+//! Index-expression IR.
+//!
+//! Layout primitives rewrite *tensor accessing expressions* (Table 1 of
+//! the paper and the `unfold` rule of Eq. (1)). Those rewrites bottom out
+//! in the small expression language here: integer affine arithmetic plus
+//! floor-division, modulo and min — exactly the operator set the paper's
+//! rules need.
+//!
+//! Expressions reference loop variables by numeric id ([`Expr::Var`]).
+//! The simulator never interprets them symbolically: it evaluates
+//! concrete points (base + unit steps) to derive address strides, so the
+//! IR only needs `eval`, `subst` and a light constant-folding `simplify`.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::rc::Rc;
+
+/// An integer index expression over loop variables.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Expr {
+    /// Loop variable by id.
+    Var(usize),
+    /// Integer constant.
+    Const(i64),
+    Add(Rc<Expr>, Rc<Expr>),
+    Sub(Rc<Expr>, Rc<Expr>),
+    Mul(Rc<Expr>, Rc<Expr>),
+    /// Floor division (both operands non-negative in all generated code).
+    Div(Rc<Expr>, Rc<Expr>),
+    /// Modulo (non-negative operands).
+    Mod(Rc<Expr>, Rc<Expr>),
+    Min(Rc<Expr>, Rc<Expr>),
+}
+
+pub use Expr::{Const, Var};
+
+impl Expr {
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::Add(Rc::new(a), Rc::new(b)).simplify()
+    }
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::Sub(Rc::new(a), Rc::new(b)).simplify()
+    }
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::Mul(Rc::new(a), Rc::new(b)).simplify()
+    }
+    pub fn div(a: Expr, b: Expr) -> Expr {
+        Expr::Div(Rc::new(a), Rc::new(b)).simplify()
+    }
+    pub fn rem(a: Expr, b: Expr) -> Expr {
+        Expr::Mod(Rc::new(a), Rc::new(b)).simplify()
+    }
+    pub fn min(a: Expr, b: Expr) -> Expr {
+        Expr::Min(Rc::new(a), Rc::new(b)).simplify()
+    }
+
+    /// Evaluate with `env[var_id]` giving each variable's value.
+    /// Out-of-range variables are an error in codegen; panic loudly.
+    pub fn eval(&self, env: &[i64]) -> i64 {
+        match self {
+            Var(i) => env[*i],
+            Const(c) => *c,
+            Expr::Add(a, b) => a.eval(env) + b.eval(env),
+            Expr::Sub(a, b) => a.eval(env) - b.eval(env),
+            Expr::Mul(a, b) => a.eval(env) * b.eval(env),
+            Expr::Div(a, b) => {
+                let (x, y) = (a.eval(env), b.eval(env));
+                debug_assert!(y != 0, "division by zero in index expr");
+                x.div_euclid(y)
+            }
+            Expr::Mod(a, b) => {
+                let (x, y) = (a.eval(env), b.eval(env));
+                debug_assert!(y != 0, "mod by zero in index expr");
+                x.rem_euclid(y)
+            }
+            Expr::Min(a, b) => a.eval(env).min(b.eval(env)),
+        }
+    }
+
+    /// Substitute each variable with the given expression
+    /// (`subs[var_id]`); variables without a mapping (`None`) stay.
+    pub fn subst(&self, subs: &[Option<Expr>]) -> Expr {
+        match self {
+            Var(i) => match subs.get(*i) {
+                Some(Some(e)) => e.clone(),
+                _ => self.clone(),
+            },
+            Const(_) => self.clone(),
+            Expr::Add(a, b) => Expr::add(a.subst(subs), b.subst(subs)),
+            Expr::Sub(a, b) => Expr::sub(a.subst(subs), b.subst(subs)),
+            Expr::Mul(a, b) => Expr::mul(a.subst(subs), b.subst(subs)),
+            Expr::Div(a, b) => Expr::div(a.subst(subs), b.subst(subs)),
+            Expr::Mod(a, b) => Expr::rem(a.subst(subs), b.subst(subs)),
+            Expr::Min(a, b) => Expr::min(a.subst(subs), b.subst(subs)),
+        }
+    }
+
+    /// Set of variable ids mentioned.
+    pub fn vars(&self) -> BTreeSet<usize> {
+        let mut out = BTreeSet::new();
+        self.collect_vars(&mut out);
+        out
+    }
+
+    fn collect_vars(&self, out: &mut BTreeSet<usize>) {
+        match self {
+            Var(i) => {
+                out.insert(*i);
+            }
+            Const(_) => {}
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Mod(a, b)
+            | Expr::Min(a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+        }
+    }
+
+    /// Light constant folding + algebraic identities. One level deep —
+    /// constructors call it bottom-up so trees stay folded.
+    pub fn simplify(&self) -> Expr {
+        match self {
+            Expr::Add(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) => Const(x + y),
+                (Const(0), e) | (e, Const(0)) => e.clone(),
+                _ => self.clone(),
+            },
+            Expr::Sub(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) => Const(x - y),
+                (e, Const(0)) => e.clone(),
+                (x, y) if x == y => Const(0),
+                _ => self.clone(),
+            },
+            Expr::Mul(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) => Const(x * y),
+                (Const(0), _) | (_, Const(0)) => Const(0),
+                (Const(1), e) | (e, Const(1)) => e.clone(),
+                _ => self.clone(),
+            },
+            Expr::Div(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) if *y != 0 => Const(x.div_euclid(*y)),
+                (e, Const(1)) => e.clone(),
+                (Const(0), _) => Const(0),
+                _ => self.clone(),
+            },
+            Expr::Mod(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) if *y != 0 => Const(x.rem_euclid(*y)),
+                (_, Const(1)) => Const(0),
+                (Const(0), _) => Const(0),
+                _ => self.clone(),
+            },
+            Expr::Min(a, b) => match (&**a, &**b) {
+                (Const(x), Const(y)) => Const(*x.min(y)),
+                (x, y) if x == y => x.clone(),
+                _ => self.clone(),
+            },
+            _ => self.clone(),
+        }
+    }
+
+    /// Linearize a multi-dim access: `sum(idx[d] * stride[d])` where
+    /// strides are row-major over `shape`. This is the flat address the
+    /// simulator samples.
+    pub fn flatten(idx: &[Expr], shape: &[i64]) -> Expr {
+        assert_eq!(idx.len(), shape.len());
+        let mut strides = vec![1i64; shape.len()];
+        for d in (0..shape.len().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        let mut acc = Const(0);
+        for (e, s) in idx.iter().zip(&strides) {
+            acc = Expr::add(acc, Expr::mul(e.clone(), Const(*s)));
+        }
+        acc
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Var(i) => write!(f, "v{i}"),
+            Const(c) => write!(f, "{c}"),
+            Expr::Add(a, b) => write!(f, "({a} + {b})"),
+            Expr::Sub(a, b) => write!(f, "({a} - {b})"),
+            Expr::Mul(a, b) => write!(f, "({a}*{b})"),
+            Expr::Div(a, b) => write!(f, "({a}//{b})"),
+            Expr::Mod(a, b) => write!(f, "({a}%{b})"),
+            Expr::Min(a, b) => write!(f, "min({a},{b})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_affine() {
+        // 3*v0 + v1 - 2
+        let e = Expr::sub(
+            Expr::add(Expr::mul(Const(3), Var(0)), Var(1)),
+            Const(2),
+        );
+        assert_eq!(e.eval(&[4, 5]), 15);
+    }
+
+    #[test]
+    fn eval_div_mod_euclid() {
+        let e = Expr::div(Var(0), Const(4));
+        assert_eq!(e.eval(&[11]), 2);
+        let m = Expr::rem(Var(0), Const(4));
+        assert_eq!(m.eval(&[11]), 3);
+    }
+
+    #[test]
+    fn simplify_identities() {
+        assert_eq!(Expr::add(Var(0), Const(0)), Var(0));
+        assert_eq!(Expr::mul(Var(0), Const(1)), Var(0));
+        assert_eq!(Expr::mul(Var(0), Const(0)), Const(0));
+        assert_eq!(Expr::div(Var(0), Const(1)), Var(0));
+        assert_eq!(Expr::rem(Var(0), Const(1)), Const(0));
+        assert_eq!(Expr::add(Const(2), Const(3)), Const(5));
+    }
+
+    #[test]
+    fn subst_replaces_vars() {
+        // v0 + 2*v1 with v0 := v2//3
+        let e = Expr::add(Var(0), Expr::mul(Const(2), Var(1)));
+        let s = e.subst(&[Some(Expr::div(Var(2), Const(3))), None]);
+        assert_eq!(s.eval(&[0, 10, 9]), 3 + 20);
+    }
+
+    #[test]
+    fn flatten_row_major() {
+        // idx (v0, v1) over shape [4, 8] -> v0*8 + v1
+        let e = Expr::flatten(&[Var(0), Var(1)], &[4, 8]);
+        assert_eq!(e.eval(&[2, 3]), 19);
+    }
+
+    #[test]
+    fn vars_collects() {
+        let e = Expr::add(Var(3), Expr::mul(Var(1), Const(2)));
+        let v: Vec<usize> = e.vars().into_iter().collect();
+        assert_eq!(v, vec![1, 3]);
+    }
+}

@@ -1,0 +1,344 @@
+//! Computational-graph IR.
+//!
+//! Operators are nodes, tensors are edges (paper §2). The graph is the
+//! unit the joint tuner works on: complex operators (convolutions, GMM)
+//! get layout + loop tuning; everything else receives layouts by
+//! propagation (§4.2) or keeps its default.
+
+pub mod models;
+pub mod ops;
+
+pub use ops::{EltKind, OpKind, PoolKind};
+
+use crate::tensor::{DType, Role, Tensor, TensorId};
+
+/// Node id within a graph.
+pub type NodeId = usize;
+
+/// One operator instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+}
+
+impl Node {
+    /// Complex operators get independent layout tuning (paper §1:
+    /// convolutions and GMM — the layout-sensitive ops).
+    pub fn is_complex(&self) -> bool {
+        matches!(self.kind, OpKind::Conv { .. } | OpKind::Matmul | OpKind::Dense)
+    }
+
+    /// Element-wise ops admit layout propagation through them
+    /// (constraint 1 of §4.2).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Eltwise { .. } | OpKind::BiasAdd | OpKind::PadOp { .. }
+        )
+    }
+}
+
+/// A computational graph in topological order (builders only append).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id]
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Nodes consuming `t`.
+    pub fn consumers(&self, t: TensorId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&t))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Node producing `t` (None for inputs/weights).
+    pub fn producer(&self, t: TensorId) -> Option<NodeId> {
+        self.tensors[t].producer
+    }
+
+    /// Complex nodes in topological order — the joint stage tunes these
+    /// sequentially and propagates results (§6).
+    pub fn complex_nodes(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_complex())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Total multiply-accumulate count (for reporting / op-intensity).
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| self.node_flops(n.id)).sum()
+    }
+
+    /// FLOPs of one node (2 * MACs for contraction ops).
+    pub fn node_flops(&self, id: NodeId) -> f64 {
+        let n = &self.nodes[id];
+        let out = self.tensor(n.output);
+        let out_elems = out.elements() as f64;
+        match &n.kind {
+            OpKind::Conv { kernel, groups, .. } => {
+                let cin = self.tensor(n.inputs[0]).shape.last().copied().unwrap_or(1);
+                let k: i64 = kernel.iter().product();
+                2.0 * out_elems * (cin / groups * k) as f64
+            }
+            OpKind::Matmul | OpKind::Dense => {
+                let k = *self.tensor(n.inputs[0]).shape.last().unwrap();
+                2.0 * out_elems * k as f64
+            }
+            OpKind::Pool { kernel, .. } => {
+                out_elems * kernel.iter().product::<i64>() as f64
+            }
+            OpKind::Softmax { .. } | OpKind::LayerNorm { .. } => 5.0 * out_elems,
+            OpKind::Reduce { .. } => {
+                self.tensor(n.inputs[0]).elements() as f64
+            }
+            _ => out_elems,
+        }
+    }
+
+    /// Short per-node description used by reports.
+    pub fn describe(&self, id: NodeId) -> String {
+        let n = &self.nodes[id];
+        format!(
+            "{}#{} {:?} -> {}",
+            n.name,
+            n.id,
+            n.inputs
+                .iter()
+                .map(|&t| self.tensor(t).name.clone())
+                .collect::<Vec<_>>(),
+            self.tensor(n.output).name
+        )
+    }
+}
+
+/// Fluent graph builder with shape inference.
+pub struct GraphBuilder {
+    pub graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        Self { graph: Graph::new(name) }
+    }
+
+    pub fn finish(self) -> Graph {
+        self.graph
+    }
+
+    fn add_tensor(
+        &mut self,
+        name: &str,
+        dim_names: &[&str],
+        shape: &[i64],
+        dtype: DType,
+        role: Role,
+        producer: Option<NodeId>,
+    ) -> TensorId {
+        let id = self.graph.tensors.len();
+        assert_eq!(dim_names.len(), shape.len(), "tensor {name} arity");
+        assert!(shape.iter().all(|&d| d > 0), "tensor {name} bad shape {shape:?}");
+        self.graph.tensors.push(Tensor {
+            id,
+            name: name.into(),
+            dim_names: dim_names.iter().map(|s| s.to_string()).collect(),
+            shape: shape.to_vec(),
+            dtype,
+            role,
+            producer,
+        });
+        id
+    }
+
+    pub fn input(&mut self, name: &str, dim_names: &[&str], shape: &[i64]) -> TensorId {
+        self.add_tensor(name, dim_names, shape, DType::F32, Role::Input, None)
+    }
+
+    pub fn weight(&mut self, name: &str, dim_names: &[&str], shape: &[i64]) -> TensorId {
+        self.add_tensor(name, dim_names, shape, DType::F32, Role::Weight, None)
+    }
+
+    /// Append an op; infers the output tensor from `kind` + inputs.
+    pub fn op(&mut self, name: &str, kind: OpKind, inputs: &[TensorId]) -> TensorId {
+        let node_id = self.graph.nodes.len();
+        let in_shapes: Vec<Vec<i64>> = inputs
+            .iter()
+            .map(|&t| self.graph.tensor(t).shape.clone())
+            .collect();
+        let (dim_names, shape) = ops::infer_shape(&kind, &in_shapes)
+            .unwrap_or_else(|e| panic!("shape inference failed for {name}: {e}"));
+        let names_ref: Vec<&str> = dim_names.iter().map(|s| s.as_str()).collect();
+        let out = self.add_tensor(
+            &format!("{name}.out"),
+            &names_ref,
+            &shape,
+            DType::F32,
+            Role::Intermediate,
+            Some(node_id),
+        );
+        self.graph.nodes.push(Node {
+            id: node_id,
+            name: name.into(),
+            kind,
+            inputs: inputs.to_vec(),
+            output: out,
+        });
+        out
+    }
+
+    // ---- convenience layers used by the model builders ----
+
+    /// conv2d in logical NHWI/HWIO/NHWO with explicit pre-padding.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        o: i64,
+        k: i64,
+        stride: i64,
+        pad: i64,
+    ) -> TensorId {
+        self.conv2d_full(name, x, o, k, stride, pad, 1, 1)
+    }
+
+    pub fn conv2d_full(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        o: i64,
+        k: i64,
+        stride: i64,
+        pad: i64,
+        dilation: i64,
+        groups: i64,
+    ) -> TensorId {
+        let xs = self.graph.tensor(x).shape.clone();
+        let ci = *xs.last().unwrap();
+        assert!(ci % groups == 0 && o % groups == 0, "{name}: groups");
+        let x = if pad > 0 {
+            self.op(
+                &format!("{name}.pad"),
+                OpKind::PadOp { before: vec![0, pad, pad, 0], after: vec![0, pad, pad, 0] },
+                &[x],
+            )
+        } else {
+            x
+        };
+        let w = self.weight(
+            &format!("{name}.w"),
+            &["KH", "KW", "I", "O"],
+            &[k, k, ci / groups, o],
+        );
+        self.op(
+            name,
+            OpKind::Conv {
+                spatial: 2,
+                stride: vec![stride, stride],
+                dilation: vec![dilation, dilation],
+                groups,
+                transposed: false,
+                kernel: vec![k, k],
+            },
+            &[x, w],
+        )
+    }
+
+    pub fn conv_bias_relu(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        o: i64,
+        k: i64,
+        stride: i64,
+        pad: i64,
+    ) -> TensorId {
+        let c = self.conv2d(name, x, o, k, stride, pad);
+        let b = self.weight(&format!("{name}.b"), &["O"], &[o]);
+        let y = self.op(&format!("{name}.bias"), OpKind::BiasAdd, &[c, b]);
+        self.op(
+            &format!("{name}.relu"),
+            OpKind::Eltwise { kind: EltKind::Relu, arity: 1 },
+            &[y],
+        )
+    }
+
+    pub fn dense(&mut self, name: &str, x: TensorId, n: i64) -> TensorId {
+        let xs = self.graph.tensor(x).shape.clone();
+        let k = *xs.last().unwrap();
+        let w = self.weight(&format!("{name}.w"), &["K", "N"], &[k, n]);
+        let y = self.op(name, OpKind::Dense, &[x, w]);
+        let b = self.weight(&format!("{name}.b"), &["N"], &[n]);
+        self.op(&format!("{name}.bias"), OpKind::BiasAdd, &[y, b])
+    }
+
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.op(name, OpKind::Eltwise { kind: EltKind::Relu, arity: 1 }, &[x])
+    }
+
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        self.op(name, OpKind::Eltwise { kind: EltKind::Add, arity: 2 }, &[a, b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_shapes_r18_layer1() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["N", "H", "W", "I"], &[1, 224, 224, 3]);
+        let y = b.conv_bias_relu("conv1", x, 64, 7, 2, 3);
+        let g = b.finish();
+        assert_eq!(g.tensor(y).shape, vec![1, 112, 112, 64]);
+        // pad, conv, bias, relu
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.complex_nodes().len(), 1);
+    }
+
+    #[test]
+    fn consumers_and_producer() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["N", "K"], &[4, 8]);
+        let y = b.dense("fc", x, 16);
+        let g = b.finish();
+        assert_eq!(g.producer(x), None);
+        let dense_node = g.complex_nodes()[0];
+        let dense_out = g.node(dense_node).output;
+        assert_eq!(g.consumers(dense_out).len(), 1); // bias consumes
+        assert!(g.producer(y).is_some());
+    }
+
+    #[test]
+    fn flops_conv() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["N", "H", "W", "I"], &[1, 8, 8, 4]);
+        let _ = b.conv2d("c", x, 16, 3, 1, 1);
+        let g = b.finish();
+        let conv = g.complex_nodes()[0];
+        // out 8x8x16, 2 * 4*3*3 per out elem
+        assert_eq!(g.node_flops(conv), 2.0 * (8 * 8 * 16) as f64 * 36.0);
+    }
+}

@@ -1,0 +1,464 @@
+//! Builders for the paper's evaluation workloads (§7): ResNet-18,
+//! MobileNet-V2, BERT-base/tiny, ResNet3D-18, the micro-benchmark
+//! subgraphs of §7.3, and the randomized single-operator configurations
+//! of §7.1.
+
+use crate::graph::{EltKind, Graph, GraphBuilder, OpKind, PoolKind};
+use crate::util::Rng;
+
+/// ResNet-18 (image, NHWI 224²). `batch` is the paper's b1/b16 knob.
+pub fn resnet18(batch: i64) -> Graph {
+    let name =
+        if batch == 1 { "resnet18".to_string() } else { format!("resnet18-b{batch}") };
+    let mut b = GraphBuilder::new(&name);
+    let x = b.input("x", &["N", "H", "W", "I"], &[batch, 224, 224, 3]);
+    let mut t = b.conv_bias_relu("conv1", x, 64, 7, 2, 3);
+    // maxpool with pad 1 (112 -> 56)
+    let pooled_pad = b.op(
+        "pool1.pad",
+        OpKind::PadOp { before: vec![0, 1, 1, 0], after: vec![0, 1, 1, 0] },
+        &[t],
+    );
+    t = b.op(
+        "pool1",
+        OpKind::Pool { kind: PoolKind::Max, kernel: vec![3, 3], stride: vec![2, 2] },
+        &[pooled_pad],
+    );
+    let stages: [(i64, i64, usize); 4] =
+        [(64, 1, 2), (128, 2, 2), (256, 2, 2), (512, 2, 2)];
+    for (si, (ch, first_stride, blocks)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let stride = if blk == 0 { *first_stride } else { 1 };
+            let name = format!("s{si}b{blk}");
+            let shortcut = if stride != 1
+                || b.graph.tensor(t).shape.last() != Some(ch)
+            {
+                b.conv2d(&format!("{name}.down"), t, *ch, 1, stride, 0)
+            } else {
+                t
+            };
+            let c1 = b.conv_bias_relu(&format!("{name}.c1"), t, *ch, 3, stride, 1);
+            let c2 = b.conv2d(&format!("{name}.c2"), c1, *ch, 3, 1, 1);
+            let bias = b.weight(&format!("{name}.c2.b"), &["O"], &[*ch]);
+            let c2b = b.op(&format!("{name}.c2.bias"), OpKind::BiasAdd, &[c2, bias]);
+            let sum = b.add(&format!("{name}.add"), c2b, shortcut);
+            t = b.relu(&format!("{name}.relu"), sum);
+        }
+    }
+    t = b.op("gap", OpKind::Reduce { keep_last: true }, &[t]);
+    b.dense("fc", t, 1000);
+    b.finish()
+}
+
+/// MobileNet-V2 (lightweight; depthwise-heavy — the paper's
+/// memory-bound showcase in Fig. 10).
+pub fn mobilenet_v2(batch: i64) -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v2");
+    let x = b.input("x", &["N", "H", "W", "I"], &[batch, 224, 224, 3]);
+    let mut t = b.conv_bias_relu("conv1", x, 32, 3, 2, 1);
+
+    // (expansion, out channels, repeats, stride) per the MV2 paper.
+    let cfg: [(i64, i64, usize, i64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut block_idx = 0;
+    for (exp, out_ch, repeats, first_stride) in cfg {
+        for r in 0..repeats {
+            let stride = if r == 0 { first_stride } else { 1 };
+            let name = format!("ir{block_idx}");
+            block_idx += 1;
+            let in_ch = *b.graph.tensor(t).shape.last().unwrap();
+            let hidden = in_ch * exp;
+            let mut y = t;
+            if exp != 1 {
+                y = b.conv_bias_relu(&format!("{name}.expand"), y, hidden, 1, 1, 0);
+            }
+            // depthwise 3x3 (groups == channels)
+            y = b.conv2d_full(&format!("{name}.dw"), y, hidden, 3, stride, 1, 1, hidden);
+            y = b.relu(&format!("{name}.dw.relu"), y);
+            // linear projection (no activation)
+            y = b.conv2d(&format!("{name}.project"), y, out_ch, 1, 1, 0);
+            if stride == 1 && in_ch == out_ch {
+                y = b.add(&format!("{name}.res"), y, t);
+            }
+            t = y;
+        }
+    }
+    t = b.conv_bias_relu("conv_last", t, 1280, 1, 1, 0);
+    t = b.op("gap", OpKind::Reduce { keep_last: true }, &[t]);
+    b.dense("fc", t, 1000);
+    b.finish()
+}
+
+/// One transformer encoder layer; `seq` tokens, `hidden` width.
+fn bert_layer(b: &mut GraphBuilder, t_in: usize, name: &str, seq: i64, hidden: i64, heads: i64) -> usize {
+    let t_in = t_in as crate::tensor::TensorId;
+    let _ = heads; // head split is folded into the fused contractions
+    // QKV projections (three GMMs).
+    let q = b.dense(&format!("{name}.q"), t_in, hidden);
+    let k = b.dense(&format!("{name}.k"), t_in, hidden);
+    let v = b.dense(&format!("{name}.v"), t_in, hidden);
+    // Attention modeled as two fused contractions with exactly the
+    // multi-head MAC count (heads * seq^2 * head_dim == seq^2 * hidden):
+    //   scores: [seq, hidden] x [hidden, seq] -> [seq, seq]
+    //   ctx:    [seq, seq]    x [seq, hidden] -> [seq, hidden]
+    let kt = b.op(
+        &format!("{name}.k.t"),
+        OpKind::Reshape { shape: vec![hidden, seq] },
+        &[k],
+    );
+    let scores = b.op(&format!("{name}.scores"), OpKind::Matmul, &[q, kt]);
+    let probs = b.op(
+        &format!("{name}.softmax"),
+        OpKind::Softmax { axis: 1 },
+        &[scores],
+    );
+    let ctx_full = b.op(&format!("{name}.ctx"), OpKind::Matmul, &[probs, v]);
+    // project back up to hidden and add residual
+    let ow = b.weight(&format!("{name}.o.w"), &["K", "N"], &[hidden, hidden]);
+    let proj = b.op(&format!("{name}.o"), OpKind::Dense, &[ctx_full, ow]);
+    let res1 = b.add(&format!("{name}.res1"), proj, t_in);
+    let ln1 = b.op(
+        &format!("{name}.ln1"),
+        OpKind::LayerNorm { axis: 1 },
+        &[res1],
+    );
+    // FFN
+    let f1 = b.dense(&format!("{name}.ffn1"), ln1, hidden * 4);
+    let g = b.op(
+        &format!("{name}.gelu"),
+        OpKind::Eltwise { kind: EltKind::Gelu, arity: 1 },
+        &[f1],
+    );
+    let f2 = b.dense(&format!("{name}.ffn2"), g, hidden);
+    let res2 = b.add(&format!("{name}.res2"), f2, ln1);
+    b.op(&format!("{name}.ln2"), OpKind::LayerNorm { axis: 1 }, &[res2])
+}
+
+/// BERT encoder stack at batch 1 (paper input `N x 128` tokens; we model
+/// the post-embedding sequence `[seq, hidden]`).
+pub fn bert(layers: usize, hidden: i64, heads: i64, seq: i64) -> Graph {
+    let mut b = GraphBuilder::new(if hidden >= 768 { "bert_base" } else { "bert_tiny" });
+    let mut t = b.input("tokens", &["M", "K"], &[seq, hidden]);
+    for l in 0..layers {
+        t = bert_layer(&mut b, t, &format!("l{l}"), seq, hidden, heads);
+    }
+    b.finish()
+}
+
+pub fn bert_base() -> Graph {
+    bert(12, 768, 12, 128)
+}
+
+pub fn bert_tiny() -> Graph {
+    bert(2, 128, 2, 128)
+}
+
+/// ResNet3D-18 (video; input `N x 16 x 112 x 112 x 3` channels-last).
+pub fn resnet3d_18(batch: i64) -> Graph {
+    let mut b = GraphBuilder::new("resnet3d_18");
+    let x = b.input("x", &["N", "D", "H", "W", "I"], &[batch, 16, 112, 112, 3]);
+
+    let conv3 = |b: &mut GraphBuilder, name: &str, x, o, k: i64, stride: i64, pad: i64| {
+        let x = if pad > 0 {
+            b.op(
+                &format!("{name}.pad"),
+                OpKind::PadOp {
+                    before: vec![0, pad, pad, pad, 0],
+                    after: vec![0, pad, pad, pad, 0],
+                },
+                &[x],
+            )
+        } else {
+            x
+        };
+        let ci = *b.graph.tensor(x).shape.last().unwrap();
+        let w = b.weight(
+            &format!("{name}.w"),
+            &["KD", "KH", "KW", "I", "O"],
+            &[k, k, k, ci, o],
+        );
+        b.op(
+            name,
+            OpKind::Conv {
+                spatial: 3,
+                stride: vec![stride, stride, stride],
+                dilation: vec![1, 1, 1],
+                groups: 1,
+                transposed: false,
+                kernel: vec![k, k, k],
+            },
+            &[x, w],
+        )
+    };
+
+    let mut t = conv3(&mut b, "conv1", x, 64, 3, 2, 1);
+    t = b.relu("conv1.relu", t);
+    let stages: [(i64, i64, usize); 3] = [(64, 1, 2), (128, 2, 2), (256, 2, 2)];
+    for (si, (ch, first_stride, blocks)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let stride = if blk == 0 { *first_stride } else { 1 };
+            let name = format!("r3d.s{si}b{blk}");
+            let shortcut = if stride != 1
+                || b.graph.tensor(t).shape.last() != Some(ch)
+            {
+                conv3(&mut b, &format!("{name}.down"), t, *ch, 1, stride, 0)
+            } else {
+                t
+            };
+            let c1 = conv3(&mut b, &format!("{name}.c1"), t, *ch, 3, stride, 1);
+            let c1r = b.relu(&format!("{name}.c1.relu"), c1);
+            let c2 = conv3(&mut b, &format!("{name}.c2"), c1r, *ch, 3, 1, 1);
+            let sum = b.add(&format!("{name}.add"), c2, shortcut);
+            t = b.relu(&format!("{name}.relu"), sum);
+        }
+    }
+    t = b.op("gap", OpKind::Reduce { keep_last: true }, &[t]);
+    b.dense("fc", t, 400);
+    b.finish()
+}
+
+/// The §7.3.3 case-study graph: pad -> C2D(O=64, k=7, s=2) -> bias ->
+/// ReLU on a 224² input (R18 layer 1, N=1, I=3 -> padded 230²).
+pub fn case_study() -> Graph {
+    let mut b = GraphBuilder::new("case_study");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 224, 224, 3]);
+    b.conv_bias_relu("conv1", x, 64, 7, 2, 3);
+    b.finish()
+}
+
+/// §7.3.1 propagation-overhead subgraphs: padding(1) -> C2D(3x3, s=1)
+/// -> C2D(1x1, s=1). `hw` is 7 (subgraph#1) or 14 (subgraph#2);
+/// channels 512, and subgraph#2's last conv emits 2048.
+pub fn prop_subgraph(hw: i64) -> Graph {
+    let mut b = GraphBuilder::new(if hw == 7 { "subgraph1" } else { "subgraph2" });
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, hw, hw, 512]);
+    let c1 = b.conv2d("c3x3", x, 512, 3, 1, 1);
+    let last_o = if hw == 7 { 512 } else { 2048 };
+    b.conv2d("c1x1", c1, last_o, 1, 1, 0);
+    b.finish()
+}
+
+/// A single-operator graph for the Fig. 9 suite.
+#[derive(Clone, Debug)]
+pub struct OpConfig {
+    pub op: &'static str,
+    pub graph: Graph,
+}
+
+/// The paper's nine single-operator families.
+pub const OP_FAMILIES: [&str; 9] =
+    ["C2D", "GRP", "DEP", "DIL", "C3D", "C1D", "GMM", "T2D", "T3D"];
+
+/// Random configuration generator for §7.1 (batch from [1,16], channels
+/// from the paper's sample set, etc.). Deterministic per (family, seed).
+pub fn random_op_config(family: &'static str, rng: &mut Rng) -> OpConfig {
+    let batches = [1i64, 16];
+    let chans = [3i64, 16, 32, 64, 512, 960, 1280];
+    let n = *rng.choose(&batches);
+    let ci = *rng.choose(&chans);
+    // keep spatial extents divisible-friendly and small enough to tune
+    let hw = *rng.choose(&[14i64, 28, 56]);
+    let co = *rng.choose(&[16i64, 32, 64, 128]);
+    let k = *rng.choose(&[1i64, 3, 5]);
+    let stride = *rng.choose(&[1i64, 2]);
+    let pad = k / 2;
+
+    let mut b = GraphBuilder::new(family);
+    match family {
+        "C2D" => {
+            let x = b.input("x", &["N", "H", "W", "I"], &[n, hw, hw, ci]);
+            b.conv2d("c2d", x, co, k, stride, pad);
+        }
+        "GRP" => {
+            let ci = ci.max(16) / 4 * 4;
+            let co = co.max(16);
+            let x = b.input("x", &["N", "H", "W", "I"], &[n, hw, hw, ci]);
+            b.conv2d_full("grp", x, co, k.max(3), stride, pad.max(1), 1, 4);
+        }
+        "DEP" => {
+            let ci = ci.max(16);
+            let x = b.input("x", &["N", "H", "W", "I"], &[n, hw, hw, ci]);
+            b.conv2d_full("dep", x, ci, k.max(3), stride, (k.max(3)) / 2, 1, ci);
+        }
+        "DIL" => {
+            let x = b.input("x", &["N", "H", "W", "I"], &[n, hw, hw, ci]);
+            let dil = 2;
+            let keff = dil * (k.max(3) - 1) + 1;
+            b.conv2d_full("dil", x, co, k.max(3), 1, keff / 2, dil, 1);
+        }
+        "C3D" => {
+            let d = *rng.choose(&[8i64, 16]);
+            let hw3 = *rng.choose(&[14i64, 28]);
+            let ci3 = *rng.choose(&[3i64, 16, 32]);
+            let x = b.input("x", &["N", "D", "H", "W", "I"], &[n.min(4), d, hw3, hw3, ci3]);
+            let xp = b.op(
+                "pad",
+                OpKind::PadOp { before: vec![0, 1, 1, 1, 0], after: vec![0, 1, 1, 1, 0] },
+                &[x],
+            );
+            let w = b.weight("w", &["KD", "KH", "KW", "I", "O"], &[3, 3, 3, ci3, co]);
+            b.op(
+                "c3d",
+                OpKind::Conv {
+                    spatial: 3,
+                    stride: vec![stride, stride, stride],
+                    dilation: vec![1, 1, 1],
+                    groups: 1,
+                    transposed: false,
+                    kernel: vec![3, 3, 3],
+                },
+                &[xp, w],
+            );
+        }
+        "C1D" => {
+            let len = *rng.choose(&[128i64, 256]);
+            let x = b.input("x", &["N", "W", "I"], &[n, len, ci]);
+            let xp = b.op(
+                "pad",
+                OpKind::PadOp { before: vec![0, k / 2, 0], after: vec![0, k / 2, 0] },
+                &[x],
+            );
+            let w = b.weight("w", &["KW", "I", "O"], &[k, ci, co]);
+            b.op(
+                "c1d",
+                OpKind::Conv {
+                    spatial: 1,
+                    stride: vec![stride],
+                    dilation: vec![1],
+                    groups: 1,
+                    transposed: false,
+                    kernel: vec![k],
+                },
+                &[xp, w],
+            );
+        }
+        "GMM" => {
+            let m = *rng.choose(&[64i64, 128, 512]);
+            let kk = *rng.choose(&[64i64, 256, 768]);
+            let nn = *rng.choose(&[64i64, 256, 768]);
+            let a = b.input("a", &["M", "K"], &[m, kk]);
+            let w = b.weight("b", &["K", "N"], &[kk, nn]);
+            b.op("gmm", OpKind::Matmul, &[a, w]);
+        }
+        "T2D" => {
+            let x = b.input("x", &["N", "H", "W", "I"], &[n.min(4), hw / 2, hw / 2, ci]);
+            let w = b.weight("w", &["KH", "KW", "I", "O"], &[4, 4, ci, co]);
+            b.op(
+                "t2d",
+                OpKind::Conv {
+                    spatial: 2,
+                    stride: vec![2, 2],
+                    dilation: vec![1, 1],
+                    groups: 1,
+                    transposed: true,
+                    kernel: vec![4, 4],
+                },
+                &[x, w],
+            );
+        }
+        "T3D" => {
+            let x = b.input(
+                "x",
+                &["N", "D", "H", "W", "I"],
+                &[1, 8, hw / 2, hw / 2, ci.min(64)],
+            );
+            let w = b.weight("w", &["KD", "KH", "KW", "I", "O"], &[4, 4, 4, ci.min(64), co]);
+            b.op(
+                "t3d",
+                OpKind::Conv {
+                    spatial: 3,
+                    stride: vec![2, 2, 2],
+                    dilation: vec![1, 1, 1],
+                    groups: 1,
+                    transposed: true,
+                    kernel: vec![4, 4, 4],
+                },
+                &[x, w],
+            );
+        }
+        other => panic!("unknown op family {other}"),
+    }
+    OpConfig { op: family, graph: b.finish() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_structure() {
+        let g = resnet18(1);
+        // 1 stem + 8 blocks x 2 convs + 3 downsamples + fc = 20+ complex
+        let complex = g.complex_nodes().len();
+        assert!(complex >= 20, "complex ops {complex}");
+        // final fc output is 1000-wide
+        let last = g.nodes.last().unwrap();
+        assert_eq!(*g.tensor(last.output).shape.last().unwrap(), 1000);
+    }
+
+    #[test]
+    fn mobilenet_depthwise_present() {
+        let g = mobilenet_v2(1);
+        let has_dw = g.nodes.iter().any(|n| {
+            matches!(&n.kind, OpKind::Conv { groups, .. } if *groups > 1)
+        });
+        assert!(has_dw);
+    }
+
+    #[test]
+    fn bert_tiny_builds() {
+        let g = bert_tiny();
+        assert!(g.complex_nodes().len() >= 2 * 7); // >= 7 GMMs per layer
+        let g2 = bert_base();
+        assert!(g2.complex_nodes().len() > g.complex_nodes().len());
+    }
+
+    #[test]
+    fn r3d_builds() {
+        let g = resnet3d_18(1);
+        assert!(g.complex_nodes().len() >= 13);
+    }
+
+    #[test]
+    fn case_study_shapes() {
+        let g = case_study();
+        let conv = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, OpKind::Conv { .. }))
+            .unwrap();
+        assert_eq!(g.tensor(conv.output).shape, vec![1, 112, 112, 64]);
+        // padded input is 230x230
+        assert_eq!(g.tensor(conv.inputs[0]).shape, vec![1, 230, 230, 3]);
+    }
+
+    #[test]
+    fn all_families_generate() {
+        let mut rng = Rng::new(1);
+        for fam in OP_FAMILIES {
+            for _ in 0..3 {
+                let cfg = random_op_config(fam, &mut rng);
+                assert!(
+                    !cfg.graph.complex_nodes().is_empty(),
+                    "{fam} lacks complex op"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_subgraphs_match_paper() {
+        let g1 = prop_subgraph(7);
+        assert_eq!(g1.complex_nodes().len(), 2);
+        let g2 = prop_subgraph(14);
+        let last = *g2.complex_nodes().last().unwrap();
+        assert_eq!(*g2.tensor(g2.node(last).output).shape.last().unwrap(), 2048);
+    }
+}

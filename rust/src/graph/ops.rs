@@ -1,0 +1,301 @@
+//! Operator kinds and shape inference.
+//!
+//! Logical layouts are fixed per op (channels-last: NWO/NHWO/NDHWO for
+//! convs, MK/KN/MN for GMM); *storage* layouts are what the tuner
+//! manipulates via primitive sequences, so the logical convention here
+//! is just the coordinate system the primitives start from.
+
+/// Elementwise op flavours (all cost-equivalent in the simulator except
+/// for operand arity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EltKind {
+    Relu,
+    Relu6,
+    Add,
+    Mul,
+    Sigmoid,
+    Gelu,
+    Tanh,
+    Identity,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Operator vocabulary — every op the paper's five networks need, plus
+/// the layout-conversion op the propagation pass inserts.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// N-d convolution over channels-last input `[N, S1..Sn, I]` with
+    /// weight `[K1..Kn, I/groups, O]`, output `[N, S1'..Sn', O]`.
+    /// Covers C1D/C2D/C3D, grouped (GRP), depthwise (DEP: groups == I),
+    /// dilated (DIL) and transposed (T2D/T3D) variants.
+    Conv {
+        spatial: usize,
+        stride: Vec<i64>,
+        dilation: Vec<i64>,
+        groups: i64,
+        transposed: bool,
+        kernel: Vec<i64>,
+    },
+    /// `[.., M, K] x [K, N] -> [.., M, N]` (batched over leading dims of
+    /// the first operand).
+    Matmul,
+    /// Dense layer: same contraction as Matmul; kept distinct because
+    /// vendor baselines schedule it differently.
+    Dense,
+    /// Elementwise with `arity` tensor operands of identical shape
+    /// (broadcast handled by BiasAdd).
+    Eltwise { kind: EltKind, arity: usize },
+    /// `x + bias` with bias along the last dim.
+    BiasAdd,
+    /// Zero padding per dimension.
+    PadOp { before: Vec<i64>, after: Vec<i64> },
+    /// Spatial pooling over channels-last input.
+    Pool { kind: PoolKind, kernel: Vec<i64>, stride: Vec<i64> },
+    /// Softmax along `axis`.
+    Softmax { axis: usize },
+    /// LayerNorm along the last dim.
+    LayerNorm { axis: usize },
+    /// Reduce spatial dims to 1 (global average pool).
+    Reduce { keep_last: bool },
+    /// Pure metadata reshape.
+    Reshape { shape: Vec<i64> },
+    /// Runtime layout conversion (inserted by propagation, Fig. 5a).
+    /// Cost = pure data movement of the tensor once through memory.
+    LayoutConvert,
+}
+
+/// Infer `(dim_names, shape)` of the output. Inputs arrive in the
+/// logical layouts documented on [`OpKind`].
+pub fn infer_shape(
+    kind: &OpKind,
+    ins: &[Vec<i64>],
+) -> Result<(Vec<String>, Vec<i64>), String> {
+    let names_spatial = |n: usize| -> Vec<String> {
+        let base = ["D", "H", "W"];
+        let mut v = vec!["N".to_string()];
+        for i in 0..n {
+            v.push(base[3 - n + i].to_string());
+        }
+        v.push("O".to_string());
+        v
+    };
+    match kind {
+        OpKind::Conv { spatial, stride, dilation, groups, transposed, kernel } => {
+            let x = &ins[0];
+            let w = &ins[1];
+            if x.len() != spatial + 2 {
+                return Err(format!("conv input rank {} != {}", x.len(), spatial + 2));
+            }
+            if w.len() != spatial + 2 {
+                return Err(format!("conv weight rank {}", w.len()));
+            }
+            let ci = x[spatial + 1];
+            if w[*spatial] != ci / groups {
+                return Err(format!(
+                    "weight I {} != input I/groups {}",
+                    w[*spatial],
+                    ci / groups
+                ));
+            }
+            let o = w[spatial + 1];
+            let mut shape = vec![x[0]];
+            for d in 0..*spatial {
+                let k_eff = dilation[d] * (kernel[d] - 1) + 1;
+                let s = if *transposed {
+                    (x[1 + d] - 1) * stride[d] + k_eff
+                } else {
+                    (x[1 + d] - k_eff) / stride[d] + 1
+                };
+                if s <= 0 {
+                    return Err(format!("conv spatial dim {d} collapses: {s}"));
+                }
+                shape.push(s);
+            }
+            shape.push(o);
+            Ok((names_spatial(*spatial), shape))
+        }
+        OpKind::Matmul | OpKind::Dense => {
+            let a = &ins[0];
+            let b = &ins[1];
+            if b.len() != 2 || a.is_empty() {
+                return Err("matmul wants [.., M, K] x [K, N]".into());
+            }
+            let k = *a.last().unwrap();
+            if b[0] != k {
+                return Err(format!("matmul K mismatch {k} vs {}", b[0]));
+            }
+            let mut shape = a[..a.len() - 1].to_vec();
+            shape.push(b[1]);
+            let mut names: Vec<String> =
+                (0..shape.len() - 2).map(|i| format!("B{i}")).collect();
+            names.push("M".into());
+            names.push("N".into());
+            Ok((names, shape))
+        }
+        OpKind::Eltwise { arity, .. } => {
+            for i in 1..*arity {
+                if ins[i] != ins[0] {
+                    return Err(format!(
+                        "eltwise shape mismatch {:?} vs {:?}",
+                        ins[i], ins[0]
+                    ));
+                }
+            }
+            Ok((default_names(ins[0].len()), ins[0].clone()))
+        }
+        OpKind::BiasAdd => {
+            if ins[1].len() != 1 || ins[1][0] != *ins[0].last().unwrap() {
+                return Err("bias must match last dim".into());
+            }
+            Ok((default_names(ins[0].len()), ins[0].clone()))
+        }
+        OpKind::PadOp { before, after } => {
+            let x = &ins[0];
+            if before.len() != x.len() || after.len() != x.len() {
+                return Err("pad arity".into());
+            }
+            let shape =
+                x.iter().zip(before.iter().zip(after)).map(|(d, (b, a))| d + b + a);
+            Ok((default_names(x.len()), shape.collect()))
+        }
+        OpKind::Pool { kernel, stride, .. } => {
+            let x = &ins[0];
+            let sp = kernel.len();
+            let mut shape = vec![x[0]];
+            for d in 0..sp {
+                shape.push((x[1 + d] - kernel[d]) / stride[d] + 1);
+            }
+            shape.push(*x.last().unwrap());
+            Ok((names_spatial(sp), shape))
+        }
+        OpKind::Softmax { axis } | OpKind::LayerNorm { axis } => {
+            if *axis >= ins[0].len() {
+                return Err("softmax/ln axis out of range".into());
+            }
+            Ok((default_names(ins[0].len()), ins[0].clone()))
+        }
+        OpKind::Reduce { keep_last } => {
+            let x = &ins[0];
+            let shape = if *keep_last {
+                vec![x[0], *x.last().unwrap()]
+            } else {
+                vec![x[0]]
+            };
+            Ok((default_names(shape.len()), shape))
+        }
+        OpKind::Reshape { shape } => {
+            let from: i64 = ins[0].iter().product();
+            let to: i64 = shape.iter().product();
+            if from != to {
+                return Err(format!("reshape {from} -> {to} element mismatch"));
+            }
+            Ok((default_names(shape.len()), shape.clone()))
+        }
+        OpKind::LayoutConvert => Ok((default_names(ins[0].len()), ins[0].clone())),
+    }
+}
+
+fn default_names(rank: usize) -> Vec<String> {
+    (0..rank).map(|i| format!("d{i}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_shape() {
+        let kind = OpKind::Conv {
+            spatial: 2,
+            stride: vec![2, 2],
+            dilation: vec![1, 1],
+            groups: 1,
+            transposed: false,
+            kernel: vec![7, 7],
+        };
+        let (names, shape) =
+            infer_shape(&kind, &[vec![1, 230, 230, 3], vec![7, 7, 3, 64]]).unwrap();
+        assert_eq!(shape, vec![1, 112, 112, 64]);
+        assert_eq!(names, vec!["N", "H", "W", "O"]);
+    }
+
+    #[test]
+    fn conv1d_and_3d_names() {
+        let k1 = OpKind::Conv {
+            spatial: 1,
+            stride: vec![1],
+            dilation: vec![1],
+            groups: 1,
+            transposed: false,
+            kernel: vec![3],
+        };
+        let (n1, s1) = infer_shape(&k1, &[vec![1, 16, 4], vec![3, 4, 8]]).unwrap();
+        assert_eq!(n1, vec!["N", "W", "O"]);
+        assert_eq!(s1, vec![1, 14, 8]);
+
+        let k3 = OpKind::Conv {
+            spatial: 3,
+            stride: vec![1, 1, 1],
+            dilation: vec![1, 1, 1],
+            groups: 1,
+            transposed: false,
+            kernel: vec![3, 3, 3],
+        };
+        let (n3, s3) =
+            infer_shape(&k3, &[vec![1, 8, 10, 10, 4], vec![3, 3, 3, 4, 8]]).unwrap();
+        assert_eq!(n3, vec!["N", "D", "H", "W", "O"]);
+        assert_eq!(s3, vec![1, 6, 8, 8, 8]);
+    }
+
+    #[test]
+    fn transposed_conv_expands() {
+        let kind = OpKind::Conv {
+            spatial: 2,
+            stride: vec![2, 2],
+            dilation: vec![1, 1],
+            groups: 1,
+            transposed: true,
+            kernel: vec![4, 4],
+        };
+        let (_, shape) =
+            infer_shape(&kind, &[vec![1, 8, 8, 16], vec![4, 4, 16, 8]]).unwrap();
+        assert_eq!(shape, vec![1, 18, 18, 8]);
+    }
+
+    #[test]
+    fn dilated_conv_shrinks_more() {
+        let kind = OpKind::Conv {
+            spatial: 2,
+            stride: vec![1, 1],
+            dilation: vec![2, 2],
+            groups: 1,
+            transposed: false,
+            kernel: vec![3, 3],
+        };
+        let (_, shape) =
+            infer_shape(&kind, &[vec![1, 16, 16, 4], vec![3, 3, 4, 8]]).unwrap();
+        // effective kernel 5 -> 12
+        assert_eq!(shape, vec![1, 12, 12, 8]);
+    }
+
+    #[test]
+    fn matmul_batched() {
+        let (names, shape) =
+            infer_shape(&OpKind::Matmul, &[vec![2, 12, 128, 64], vec![64, 128]])
+                .unwrap();
+        assert_eq!(shape, vec![2, 12, 128, 128]);
+        assert_eq!(names.last().unwrap(), "N");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(infer_shape(&OpKind::Matmul, &[vec![4, 8], vec![9, 2]]).is_err());
+        let kind = OpKind::Reshape { shape: vec![3, 3] };
+        assert!(infer_shape(&kind, &[vec![2, 4]]).is_err());
+    }
+}

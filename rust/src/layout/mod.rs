@@ -1,0 +1,151 @@
+//! Layout primitives — the paper's §4.1 transformation submodule.
+//!
+//! Six primitives manipulate tensor storage formats: the basic
+//! one-to-one `split` / `reorder` / `fuse` (Table 1) and the advanced
+//! `unfold` / `pad` / `store_at` (§4.1.2), plus inverses. A
+//! [`LayoutSeq`] is the primitive sequence attached to one tensor; the
+//! [`LayoutTransform`] engine applies a sequence to a concrete shape and
+//! provides the three derived operations the rest of the compiler needs:
+//!
+//! 1. **shape rewrite** — the transformed storage shape;
+//! 2. **forward access rewrite** — logical-index expressions → storage
+//!    index expressions (Table 1 rules + Eq. (1) for `unfold`), which is
+//!    the compilation pass that frees users from re-implementing
+//!    operators;
+//! 3. **backward mapping** — storage-dim loop variables → logical index
+//!    expressions (`S⁻¹`, §6), used to reconstruct the producer's loop
+//!    nest and remap every other operand's accesses.
+//!
+//! `store_at` is a *graph-level* pairing (attach tensor A into tensor B's
+//! storage); it is represented here but applied by
+//! [`crate::codegen`]/[`crate::propagate`], not by the index engine.
+
+pub mod primitive;
+pub mod transform;
+
+pub use primitive::{DimAccess, Primitive};
+pub use transform::LayoutTransform;
+
+use crate::tensor::TensorId;
+
+/// A primitive sequence for one tensor (paper notation `S(T)`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayoutSeq {
+    pub prims: Vec<Primitive>,
+}
+
+impl LayoutSeq {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: Primitive) -> &mut Self {
+        self.prims.push(p);
+        self
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.prims.is_empty()
+    }
+
+    /// True if the sequence contains a *non-trivial advanced* primitive
+    /// (data-expanding `unfold`/`pad`, or `store_at`). Propagation
+    /// constraint 2 (§4.2): such sequences are never propagated — a
+    /// conversion operator is inserted instead.
+    pub fn has_advanced(&self) -> bool {
+        self.prims.iter().any(|p| {
+            matches!(
+                p,
+                Primitive::Unfold { .. }
+                    | Primitive::Pad { .. }
+                    | Primitive::StoreAt { .. }
+            )
+        })
+    }
+
+    /// RL state vector (§5.2.1): concatenation of each primitive's
+    /// current parameter state.
+    pub fn state_vector(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        for p in &self.prims {
+            p.push_state(&mut v);
+        }
+        v
+    }
+
+    /// Apply to a shape, returning the transformed storage shape.
+    pub fn apply_shape(&self, shape: &[i64]) -> Vec<i64> {
+        LayoutTransform::new(shape.to_vec(), self).final_shape().to_vec()
+    }
+
+    /// Whether every primitive is applicable to `shape` (dims in range,
+    /// split factors divide, unfold fits). Used to validate sequences
+    /// produced by mechanical rewrites (e.g. the Fig. 11 forced-sharing
+    /// ablations) before they reach the transform engine.
+    pub fn is_valid_for(&self, shape: &[i64]) -> bool {
+        let mut s = shape.to_vec();
+        for p in &self.prims {
+            match p {
+                Primitive::Split { dim, factors } => {
+                    if *dim >= s.len()
+                        || factors.is_empty()
+                        || factors.iter().product::<i64>() != s[*dim]
+                    {
+                        return false;
+                    }
+                }
+                Primitive::Reorder { perm } => {
+                    if perm.len() != s.len() {
+                        return false;
+                    }
+                    let mut seen = vec![false; s.len()];
+                    for &i in perm {
+                        if i >= s.len() || seen[i] {
+                            return false;
+                        }
+                        seen[i] = true;
+                    }
+                }
+                Primitive::Fuse { dim, count } => {
+                    if *count < 1 || dim + count > s.len() {
+                        return false;
+                    }
+                }
+                Primitive::Unfold { dim, size, stride } => {
+                    if *dim >= s.len() || *size > s[*dim] || *stride < 1 {
+                        return false;
+                    }
+                }
+                Primitive::Pad { dim, .. } | Primitive::StoreAt { dim, .. } => {
+                    if *dim >= s.len() {
+                        return false;
+                    }
+                }
+                Primitive::Fold { dim, size, .. } => {
+                    if dim + 1 >= s.len() || s[*dim + 1] != *size {
+                        return false;
+                    }
+                }
+                Primitive::Unpad { dim, before, after } => {
+                    if *dim >= s.len() || s[*dim] <= before + after {
+                        return false;
+                    }
+                }
+                Primitive::DecoupleAt { dim, .. } => {
+                    if *dim >= s.len() {
+                        return false;
+                    }
+                }
+            }
+            s = transform::apply_shape(&s, p);
+        }
+        true
+    }
+}
+
+/// The layout decision for one tensor inside a tuning assignment.
+#[derive(Clone, Debug, Default)]
+pub struct TensorLayout {
+    pub tensor: TensorId,
+    pub seq: LayoutSeq,
+}

@@ -1,0 +1,222 @@
+//! The primitive vocabulary and per-dimension access descriptors.
+
+use crate::expr::Expr;
+use crate::tensor::TensorId;
+
+/// How one logical dimension of a tensor is indexed by an operator.
+///
+/// Convolutions index their input spatial dims with the sliding-window
+/// pattern `V*i + r` (stride `V`, window offset `r` with extent `M`);
+/// the paper's Eq. (1) rewrite for `unfold` is only defined for that
+/// pattern, so we keep it structured instead of flattening to a raw
+/// expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DimAccess {
+    /// Arbitrary index expression.
+    Simple(Expr),
+    /// `stride * outer + window`, where `window` takes values in
+    /// `[win_lo, win_lo + win_size)`.
+    Sliding {
+        stride: i64,
+        outer: Expr,
+        window: Expr,
+        win_lo: i64,
+        win_size: i64,
+    },
+}
+
+impl DimAccess {
+    /// Collapse to a raw expression (loses sliding structure).
+    pub fn to_expr(&self) -> Expr {
+        match self {
+            DimAccess::Simple(e) => e.clone(),
+            DimAccess::Sliding { stride, outer, window, .. } => Expr::add(
+                Expr::mul(Expr::Const(*stride), outer.clone()),
+                window.clone(),
+            ),
+        }
+    }
+
+    pub fn simple(e: Expr) -> Self {
+        DimAccess::Simple(e)
+    }
+}
+
+/// One layout primitive (paper §4.1). Dimension indices refer to the
+/// tensor's *current* storage dims at the point the primitive is applied
+/// (sequences are interpreted left to right).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Primitive {
+    /// Split dim `dim` into `factors` (product must equal the extent;
+    /// Table 1 row 1 with all new dims given explicitly).
+    Split { dim: usize, factors: Vec<i64> },
+    /// Permute storage dims: new dim `j` is old dim `perm[j]`
+    /// (Table 1 row 2).
+    Reorder { perm: Vec<usize> },
+    /// Fuse `count` consecutive dims starting at `dim` (Table 1 row 3).
+    Fuse { dim: usize, count: usize },
+    /// Overlapped tiling (§4.1.2): dim of extent `D` becomes
+    /// `[ceil((D - size)/stride) + 1, size]`.
+    Unfold { dim: usize, size: i64, stride: i64 },
+    /// Append zeros: extent `D` becomes `before + D + after`.
+    Pad { dim: usize, before: i64, after: i64 },
+    /// Attach tensor `other` into this tensor's storage along `dim`
+    /// (graph-level; see module docs).
+    StoreAt { other: TensorId, dim: usize },
+    // ---- inverses ----
+    /// Inverse of `Unfold` (drops the overlap duplicates).
+    Fold { dim: usize, size: i64, stride: i64 },
+    /// Inverse of `Pad`.
+    Unpad { dim: usize, before: i64, after: i64 },
+    /// Inverse of `StoreAt`.
+    DecoupleAt { other: TensorId, dim: usize },
+}
+
+impl Primitive {
+    /// Convenience constructors mirroring the paper's API.
+    pub fn split(dim: usize, factors: &[i64]) -> Self {
+        Primitive::Split { dim, factors: factors.to_vec() }
+    }
+    pub fn reorder(perm: &[usize]) -> Self {
+        Primitive::Reorder { perm: perm.to_vec() }
+    }
+    pub fn fuse(dim: usize, count: usize) -> Self {
+        Primitive::Fuse { dim, count }
+    }
+    pub fn unfold(dim: usize, size: i64, stride: i64) -> Self {
+        Primitive::Unfold { dim, size, stride }
+    }
+    pub fn pad(dim: usize, before: i64, after: i64) -> Self {
+        Primitive::Pad { dim, before, after }
+    }
+
+    /// Push this primitive's parameter state onto the RL state vector
+    /// (§5.2.1: e.g. split state is its factor list).
+    pub fn push_state(&self, out: &mut Vec<f64>) {
+        match self {
+            Primitive::Split { factors, .. } => {
+                for &f in factors {
+                    out.push(f as f64);
+                }
+            }
+            Primitive::Reorder { perm } => {
+                for &p in perm {
+                    out.push(p as f64);
+                }
+            }
+            Primitive::Fuse { dim, count } => {
+                out.push(*dim as f64);
+                out.push(*count as f64);
+            }
+            Primitive::Unfold { size, stride, .. }
+            | Primitive::Fold { size, stride, .. } => {
+                out.push(*size as f64);
+                out.push(*stride as f64);
+            }
+            Primitive::Pad { before, after, .. }
+            | Primitive::Unpad { before, after, .. } => {
+                out.push(*before as f64);
+                out.push(*after as f64);
+            }
+            Primitive::StoreAt { dim, .. } | Primitive::DecoupleAt { dim, .. } => {
+                out.push(*dim as f64);
+            }
+        }
+    }
+
+    /// The inverse primitive, given the shape *before* this primitive
+    /// was applied (needed to invert `Fuse` and `Split` positions).
+    pub fn inverse(&self, shape_before: &[i64]) -> Primitive {
+        match self {
+            Primitive::Split { dim, factors } => {
+                Primitive::Fuse { dim: *dim, count: factors.len() }
+            }
+            Primitive::Reorder { perm } => {
+                let mut inv = vec![0usize; perm.len()];
+                for (j, &p) in perm.iter().enumerate() {
+                    inv[p] = j;
+                }
+                Primitive::Reorder { perm: inv }
+            }
+            Primitive::Fuse { dim, count } => Primitive::Split {
+                dim: *dim,
+                factors: shape_before[*dim..*dim + *count].to_vec(),
+            },
+            Primitive::Unfold { dim, size, stride } => {
+                Primitive::Fold { dim: *dim, size: *size, stride: *stride }
+            }
+            Primitive::Fold { dim, size, stride } => {
+                Primitive::Unfold { dim: *dim, size: *size, stride: *stride }
+            }
+            Primitive::Pad { dim, before, after } => {
+                Primitive::Unpad { dim: *dim, before: *before, after: *after }
+            }
+            Primitive::Unpad { dim, before, after } => {
+                Primitive::Pad { dim: *dim, before: *before, after: *after }
+            }
+            Primitive::StoreAt { other, dim } => {
+                Primitive::DecoupleAt { other: *other, dim: *dim }
+            }
+            Primitive::DecoupleAt { other, dim } => {
+                Primitive::StoreAt { other: *other, dim: *dim }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{Const, Var};
+
+    #[test]
+    fn sliding_to_expr() {
+        let a = DimAccess::Sliding {
+            stride: 2,
+            outer: Var(0),
+            window: Var(1),
+            win_lo: 0,
+            win_size: 3,
+        };
+        assert_eq!(a.to_expr().eval(&[5, 2]), 12);
+    }
+
+    #[test]
+    fn reorder_inverse_roundtrip() {
+        let p = Primitive::reorder(&[2, 0, 1]);
+        let inv = p.inverse(&[4, 5, 6]);
+        match inv {
+            Primitive::Reorder { perm } => assert_eq!(perm, vec![1, 2, 0]),
+            _ => panic!("wrong inverse kind"),
+        }
+    }
+
+    #[test]
+    fn split_inverse_is_fuse() {
+        let p = Primitive::split(1, &[8, 4]);
+        match p.inverse(&[2, 32, 7]) {
+            Primitive::Fuse { dim: 1, count: 2 } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuse_inverse_restores_factors() {
+        let p = Primitive::fuse(0, 2);
+        match p.inverse(&[3, 5, 7]) {
+            Primitive::Split { dim: 0, factors } => {
+                assert_eq!(factors, vec![3, 5])
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn state_vector_contents() {
+        let p = Primitive::split(2, &[4, 16]);
+        let mut v = Vec::new();
+        p.push_state(&mut v);
+        assert_eq!(v, vec![4.0, 16.0]);
+        let _ = Const(0); // silence unused import in some cfg combos
+    }
+}

@@ -1,0 +1,572 @@
+//! The layout-transform engine: shape rewriting, forward access
+//! rewriting (Table 1 + Eq. (1)), backward (`S⁻¹`) mapping, and concrete
+//! data repacking for golden tests.
+
+use crate::expr::{Const, Expr};
+use crate::layout::{DimAccess, LayoutSeq, Primitive};
+
+/// A layout sequence applied to a concrete starting shape. Records the
+/// shape before every step so inverses are well-defined.
+#[derive(Clone, Debug)]
+pub struct LayoutTransform {
+    /// Primitive + the shape it was applied to.
+    steps: Vec<(Primitive, Vec<i64>)>,
+    shape: Vec<i64>,
+}
+
+impl LayoutTransform {
+    pub fn new(shape: Vec<i64>, seq: &LayoutSeq) -> Self {
+        let mut t = Self { steps: Vec::new(), shape };
+        for p in &seq.prims {
+            t.apply(p.clone());
+        }
+        t
+    }
+
+    pub fn final_shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    fn apply(&mut self, p: Primitive) {
+        let before = self.shape.clone();
+        self.shape = apply_shape(&self.shape, &p);
+        self.steps.push((p, before));
+    }
+
+    /// Forward access rewrite: per-dimension accesses of the *logical*
+    /// tensor → accesses of the transformed storage (the compilation
+    /// pass of §4.1 that rewrites `T[n][h][w][o]` step by step).
+    pub fn rewrite_access(&self, access: &[DimAccess]) -> Vec<DimAccess> {
+        let mut acc = access.to_vec();
+        for (p, shape_before) in &self.steps {
+            acc = rewrite_step(&acc, p, shape_before);
+        }
+        acc
+    }
+
+    /// Backward mapping (`S⁻¹(L')`, §6): expressions for the final
+    /// storage dims → expressions for the original logical dims.
+    /// `vars[j]` is typically `Expr::Var(loop_var_of_dim_j)`.
+    pub fn backward(&self, vars: &[Expr]) -> Vec<Expr> {
+        assert_eq!(vars.len(), self.shape.len(), "backward arity mismatch");
+        let mut exprs: Vec<Expr> = vars.to_vec();
+        for (p, shape_before) in self.steps.iter().rev() {
+            exprs = backward_step(&exprs, p, shape_before);
+        }
+        exprs
+    }
+
+    /// Concretely repack `data` (row-major over the original shape) into
+    /// the transformed layout. Out-of-source positions (padding) become
+    /// `fill`; `unfold` duplicates overlapped elements. This is the
+    /// runtime job of an inserted conversion operator (Fig. 5a) and the
+    /// golden reference for the expression rules.
+    pub fn repack(&self, data: &[f32], orig_shape: &[i64], fill: f32) -> Vec<f32> {
+        assert_eq!(
+            data.len() as i64,
+            orig_shape.iter().product::<i64>(),
+            "data/shape mismatch"
+        );
+        let new_shape = self.final_shape();
+        let total: i64 = new_shape.iter().product();
+        let vars: Vec<Expr> = (0..new_shape.len()).map(Expr::Var).collect();
+        let back = self.backward(&vars);
+        let mut out = vec![fill; total as usize];
+        let mut idx = vec![0i64; new_shape.len()];
+        for flat in 0..total {
+            // decode flat -> multi-index (row-major)
+            let mut rem = flat;
+            for d in (0..new_shape.len()).rev() {
+                idx[d] = rem % new_shape[d];
+                rem /= new_shape[d];
+            }
+            // evaluate original coordinates
+            let mut ok = true;
+            let mut off = 0i64;
+            let mut stride = 1i64;
+            for d in (0..orig_shape.len()).rev() {
+                let v = back[d].eval(&idx);
+                if v < 0 || v >= orig_shape[d] {
+                    ok = false;
+                    break;
+                }
+                off += v * stride;
+                stride *= orig_shape[d];
+            }
+            if ok {
+                out[flat as usize] = data[off as usize];
+            }
+        }
+        out
+    }
+}
+
+/// Shape rule for one primitive (Table 1 "Transformed Shape" column plus
+/// §4.1.2 for the advanced ones).
+pub fn apply_shape(shape: &[i64], p: &Primitive) -> Vec<i64> {
+    let mut s = shape.to_vec();
+    match p {
+        Primitive::Split { dim, factors } => {
+            let d = s[*dim];
+            let prod: i64 = factors.iter().product();
+            assert_eq!(
+                d, prod,
+                "split factors {factors:?} must multiply to extent {d}"
+            );
+            s.splice(*dim..*dim + 1, factors.iter().copied());
+        }
+        Primitive::Reorder { perm } => {
+            assert_eq!(perm.len(), s.len(), "reorder perm arity");
+            let mut seen = vec![false; s.len()];
+            for &p in perm {
+                assert!(!seen[p], "reorder perm must be a permutation");
+                seen[p] = true;
+            }
+            s = perm.iter().map(|&i| s[i]).collect();
+        }
+        Primitive::Fuse { dim, count } => {
+            assert!(*count >= 1 && dim + count <= s.len(), "fuse range");
+            let prod: i64 = s[*dim..*dim + *count].iter().product();
+            s.splice(*dim..*dim + *count, [prod]);
+        }
+        Primitive::Unfold { dim, size, stride } => {
+            let d = s[*dim];
+            assert!(*size <= d && *stride >= 1, "unfold {size}/{stride} on {d}");
+            let ntiles = (d - size + stride - 1) / stride + 1;
+            s.splice(*dim..*dim + 1, [ntiles, *size]);
+        }
+        Primitive::Pad { dim, before, after } => {
+            s[*dim] += before + after;
+        }
+        Primitive::Fold { dim, size, stride } => {
+            // [ntiles, size] -> original D = (ntiles-1)*stride + size
+            assert_eq!(s[*dim + 1], *size, "fold inner dim mismatch");
+            let d = (s[*dim] - 1) * stride + size;
+            s.splice(*dim..*dim + 2, [d]);
+        }
+        Primitive::Unpad { dim, before, after } => {
+            s[*dim] -= before + after;
+            assert!(s[*dim] > 0, "unpad to non-positive extent");
+        }
+        Primitive::StoreAt { dim, .. } => {
+            // attach a 1-wide slice of `other` along `dim` (e.g. the
+            // bias vector as the extra row of a GMM weight — §4.1.2)
+            s[*dim] += 1;
+        }
+        Primitive::DecoupleAt { dim, .. } => {
+            s[*dim] -= 1;
+            assert!(s[*dim] > 0, "decouple_at on 1-wide dim");
+        }
+    }
+    s
+}
+
+/// Access rewrite for one primitive (Table 1 "Transformed Accessing
+/// Expressions" column; Eq. (1) for unfold-on-sliding).
+fn rewrite_step(
+    acc: &[DimAccess],
+    p: &Primitive,
+    shape_before: &[i64],
+) -> Vec<DimAccess> {
+    let mut a = acc.to_vec();
+    match p {
+        Primitive::Split { dim, factors } => {
+            let e = a[*dim].to_expr();
+            let m = factors.len();
+            let mut parts = Vec::with_capacity(m);
+            for (j, &fj) in factors.iter().enumerate() {
+                // suffix product F_{j+1..m}
+                let suffix: i64 = factors[j + 1..].iter().product();
+                let mut part = Expr::div(e.clone(), Const(suffix));
+                if j > 0 {
+                    part = Expr::rem(part, Const(fj));
+                }
+                parts.push(DimAccess::Simple(part));
+            }
+            a.splice(*dim..*dim + 1, parts);
+        }
+        Primitive::Reorder { perm } => {
+            a = perm.iter().map(|&i| a[i].clone()).collect();
+        }
+        Primitive::Fuse { dim, count } => {
+            // (i_k * N_{k+1..} + i_{k+1} * N_{k+2..} + ... + i_{k+m})
+            let mut e = Const(0);
+            for j in 0..*count {
+                let suffix: i64 = shape_before[*dim + j + 1..*dim + *count]
+                    .iter()
+                    .product();
+                e = Expr::add(
+                    e,
+                    Expr::mul(a[*dim + j].to_expr(), Const(suffix)),
+                );
+            }
+            a.splice(*dim..*dim + *count, [DimAccess::Simple(e)]);
+        }
+        Primitive::Unfold { dim, size, stride } => {
+            let d = shape_before[*dim];
+            let ntiles = (d - size + stride - 1) / stride + 1;
+            // the last tile is right-aligned: start(t) = min(S*t, D-B)
+            let start_of = |tile: &Expr| {
+                Expr::min(
+                    Expr::mul(Const(*stride), tile.clone()),
+                    Const(d - size),
+                )
+            };
+            let (tile, off) = match &a[*dim] {
+                DimAccess::Sliding { stride: v, outer, window, win_lo, win_size } => {
+                    // Eq. (1): outputs-per-tile T = floor((B - M)/V) + 1
+                    // with window span M measured from 0 (win_lo ≥ 0).
+                    let m_eff = win_lo + win_size;
+                    let t = (size - m_eff).div_euclid(*v) + 1;
+                    assert!(t >= 1, "unfold tile smaller than window");
+                    let tile = Expr::min(
+                        Expr::div(outer.clone(), Const(t)),
+                        Const(ntiles - 1),
+                    );
+                    let e = Expr::add(
+                        Expr::mul(Const(*v), outer.clone()),
+                        window.clone(),
+                    );
+                    let off = Expr::sub(e, start_of(&tile));
+                    (tile, off)
+                }
+                DimAccess::Simple(e) => {
+                    // Generic fallback: valid when stride == size
+                    // (non-overlapping) or when accesses stay in-tile.
+                    let tile = Expr::min(
+                        Expr::div(e.clone(), Const(*stride)),
+                        Const(ntiles - 1),
+                    );
+                    let off = Expr::sub(e.clone(), start_of(&tile));
+                    (tile, off)
+                }
+            };
+            a.splice(
+                *dim..*dim + 1,
+                [DimAccess::Simple(tile), DimAccess::Simple(off)],
+            );
+        }
+        Primitive::Pad { dim, before, .. } => {
+            a[*dim] = match &a[*dim] {
+                DimAccess::Simple(e) => {
+                    DimAccess::Simple(Expr::add(e.clone(), Const(*before)))
+                }
+                DimAccess::Sliding { stride, outer, window, win_lo, win_size } => {
+                    DimAccess::Sliding {
+                        stride: *stride,
+                        outer: outer.clone(),
+                        window: Expr::add(window.clone(), Const(*before)),
+                        win_lo: win_lo + before,
+                        win_size: *win_size,
+                    }
+                }
+            };
+        }
+        Primitive::Fold { dim, stride, .. } => {
+            // [tile, off] accesses -> tile*stride + off
+            let e = Expr::add(
+                Expr::mul(a[*dim].to_expr(), Const(*stride)),
+                a[*dim + 1].to_expr(),
+            );
+            a.splice(*dim..*dim + 2, [DimAccess::Simple(e)]);
+        }
+        Primitive::Unpad { dim, before, .. } => {
+            a[*dim] = DimAccess::Simple(Expr::sub(
+                a[*dim].to_expr(),
+                Const(*before),
+            ));
+        }
+        Primitive::StoreAt { .. } | Primitive::DecoupleAt { .. } => {}
+    }
+    a
+}
+
+/// Inverse mapping for one primitive: expressions over the dims *after*
+/// the primitive → expressions over the dims *before* it.
+fn backward_step(exprs: &[Expr], p: &Primitive, shape_before: &[i64]) -> Vec<Expr> {
+    let mut e = exprs.to_vec();
+    match p {
+        Primitive::Split { dim, factors } => {
+            // combine m exprs into the original index:
+            // ((e1*F2 + e2)*F3 + ...) + e_m
+            let m = factors.len();
+            let mut acc = e[*dim].clone();
+            for j in 1..m {
+                acc = Expr::add(
+                    Expr::mul(acc, Const(factors[j])),
+                    e[*dim + j].clone(),
+                );
+            }
+            e.splice(*dim..*dim + m, [acc]);
+        }
+        Primitive::Reorder { perm } => {
+            let mut out = vec![Const(0); e.len()];
+            for (j, &p_) in perm.iter().enumerate() {
+                out[p_] = e[j].clone();
+            }
+            e = out;
+        }
+        Primitive::Fuse { dim, count } => {
+            // one expr -> count exprs via div/mod over original extents
+            let sizes = &shape_before[*dim..*dim + *count];
+            let fused = e[*dim].clone();
+            let mut parts = Vec::with_capacity(*count);
+            for j in 0..*count {
+                let suffix: i64 = sizes[j + 1..].iter().product();
+                let mut part = Expr::div(fused.clone(), Const(suffix));
+                if j > 0 {
+                    part = Expr::rem(part, Const(sizes[j]));
+                }
+                parts.push(part);
+            }
+            e.splice(*dim..*dim + 1, parts);
+        }
+        Primitive::Unfold { dim, size, stride } => {
+            // (tile, off) -> min(stride*tile, D-B) + off — the last
+            // tile is right-aligned (paper §4.1.2 clamp)
+            let d = shape_before[*dim];
+            let start = Expr::min(
+                Expr::mul(Const(*stride), e[*dim].clone()),
+                Const(d - size),
+            );
+            let orig = Expr::add(start, e[*dim + 1].clone());
+            e.splice(*dim..*dim + 2, [orig]);
+        }
+        Primitive::Pad { dim, before, .. } => {
+            e[*dim] = Expr::sub(e[*dim].clone(), Const(*before));
+        }
+        Primitive::Fold { dim, size, stride } => {
+            // inverse of fold = unfold forward on expressions: the
+            // canonical representative of element x is tile x/stride
+            // clamped (matches apply_shape for Fold).
+            let d = (shape_before[*dim] - 1) * stride + size;
+            let ntiles = (d - size + stride - 1) / stride + 1;
+            let tile = Expr::min(
+                Expr::div(e[*dim].clone(), Const(*stride)),
+                Const(ntiles - 1),
+            );
+            let off = Expr::sub(
+                e[*dim].clone(),
+                Expr::mul(Const(*stride), tile.clone()),
+            );
+            e.splice(*dim..*dim + 1, [tile, off]);
+        }
+        Primitive::Unpad { dim, before, .. } => {
+            e[*dim] = Expr::add(e[*dim].clone(), Const(*before));
+        }
+        Primitive::StoreAt { .. } | Primitive::DecoupleAt { .. } => {}
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::Var;
+
+    fn seq(prims: Vec<Primitive>) -> LayoutSeq {
+        LayoutSeq { prims }
+    }
+
+    /// The paper's first §4.1.1 example: NOHW -> N (O/ot) H W ot.
+    #[test]
+    fn paper_example_split_reorder() {
+        let s = seq(vec![
+            Primitive::split(1, &[32 / 8, 8]),
+            Primitive::reorder(&[0, 1, 3, 4, 2]),
+        ]);
+        let shape = s.apply_shape(&[2, 32, 14, 14]);
+        assert_eq!(shape, vec![2, 4, 14, 14, 8]);
+    }
+
+    /// The paper's second §4.1.1 example: NHWO --fuse/split/reorder-->
+    /// N (O/4) (HW) 4, with the documented access-expression chain.
+    #[test]
+    fn paper_example_fuse_split_reorder() {
+        let (h, w, o) = (3, 5, 8);
+        let s = seq(vec![
+            Primitive::fuse(1, 3),
+            Primitive::split(1, &[o / 4, 4, h * w]),
+            Primitive::reorder(&[0, 1, 3, 2]),
+        ]);
+        let t = LayoutTransform::new(vec![2, h, w, o], &s);
+        assert_eq!(t.final_shape(), &[2, o / 4, h * w, 4]);
+
+        // Access T[n][h][w][o] becomes
+        // T[n][e/(HW*4)][e % (HW)][ (e/HW) % 4 ] with e = h*WO + w*O + o.
+        let acc: Vec<DimAccess> =
+            (0..4).map(|i| DimAccess::Simple(Var(i))).collect();
+        let out = t.rewrite_access(&acc);
+        // check numerically over the whole index space
+        for n in 0..2 {
+            for hh in 0..h {
+                for ww in 0..w {
+                    for oo in 0..o {
+                        let env = [n, hh, ww, oo];
+                        let e = hh * (w * o) + ww * o + oo;
+                        let want = [n, e / (h * w * 4), e % (h * w), (e / (h * w)) % 4];
+                        for (d, a) in out.iter().enumerate() {
+                            assert_eq!(
+                                a.to_expr().eval(&env),
+                                want[d],
+                                "dim {d} at {env:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Paper §4.1.2: {1,2,3,4,5} unfolded with B=3, S=2 ->
+    /// {{1,2,3},{3,4,5}}.
+    #[test]
+    fn unfold_paper_array_example() {
+        let s = seq(vec![Primitive::unfold(0, 3, 2)]);
+        let t = LayoutTransform::new(vec![5], &s);
+        assert_eq!(t.final_shape(), &[2, 3]);
+        let packed = t.repack(&[1.0, 2.0, 3.0, 4.0, 5.0], &[5], 0.0);
+        assert_eq!(packed, vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]);
+    }
+
+    /// Eq. (1): sliding access V*i + r through unfold lands in-tile and
+    /// reads the same element the original access read.
+    #[test]
+    fn unfold_sliding_eq1() {
+        // D = 10, window M = 3, conv stride V = 1 -> 8 outputs.
+        // unfold size B = 6 = ht + (KH-1) with ht = 4, stride S = ht = 4.
+        let (d, b, s_, v, m) = (10i64, 6i64, 4i64, 1i64, 3i64);
+        let seq_ = seq(vec![Primitive::unfold(0, b, s_)]);
+        let t = LayoutTransform::new(vec![d], &seq_);
+        let ntiles = (d - b + s_ - 1) / s_ + 1;
+        assert_eq!(t.final_shape(), &[ntiles, b]);
+
+        let acc = vec![DimAccess::Sliding {
+            stride: v,
+            outer: Var(0),
+            window: Var(1),
+            win_lo: 0,
+            win_size: m,
+        }];
+        let out = t.rewrite_access(&acc);
+        assert_eq!(out.len(), 2);
+
+        let data: Vec<f32> = (0..d).map(|x| x as f32).collect();
+        let packed = t.repack(&data, &[d], -1.0);
+        for i in 0..(d - m) / v + 1 {
+            for r in 0..m {
+                let env = [i, r];
+                let tile = out[0].to_expr().eval(&env);
+                let off = out[1].to_expr().eval(&env);
+                assert!(
+                    (0..ntiles).contains(&tile) && (0..b).contains(&off),
+                    "OOB tile={tile} off={off} at i={i} r={r}"
+                );
+                let got = packed[(tile * b + off) as usize];
+                let want = data[(v * i + r) as usize];
+                assert_eq!(got, want, "i={i} r={r}");
+            }
+        }
+    }
+
+    /// Forward/backward consistency for a random-ish mixed sequence:
+    /// repacked[forward(idx)] == data[idx] for every logical idx.
+    #[test]
+    fn forward_backward_consistency() {
+        let shape = vec![3, 8, 6];
+        let s = seq(vec![
+            Primitive::split(1, &[2, 4]),
+            Primitive::reorder(&[0, 3, 1, 2]),
+            Primitive::fuse(2, 2),
+        ]);
+        let t = LayoutTransform::new(shape.clone(), &s);
+        let total: i64 = shape.iter().product();
+        let data: Vec<f32> = (0..total).map(|x| x as f32).collect();
+        let packed = t.repack(&data, &shape, f32::NAN);
+
+        let acc: Vec<DimAccess> =
+            (0..3).map(|i| DimAccess::Simple(Var(i))).collect();
+        let fwd = t.rewrite_access(&acc);
+        let new_shape = t.final_shape().to_vec();
+        for a in 0..shape[0] {
+            for b in 0..shape[1] {
+                for c in 0..shape[2] {
+                    let env = [a, b, c];
+                    let mut off = 0i64;
+                    for (d, f) in fwd.iter().enumerate() {
+                        let v = f.to_expr().eval(&env);
+                        assert!(v >= 0 && v < new_shape[d]);
+                        off = off * new_shape[d] + v;
+                    }
+                    let orig = (a * shape[1] + b) * shape[2] + c;
+                    assert_eq!(packed[off as usize], data[orig as usize]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_shifts_and_fills() {
+        let s = seq(vec![Primitive::pad(0, 2, 1)]);
+        let t = LayoutTransform::new(vec![3], &s);
+        assert_eq!(t.final_shape(), &[6]);
+        let packed = t.repack(&[7.0, 8.0, 9.0], &[3], 0.0);
+        assert_eq!(packed, vec![0.0, 0.0, 7.0, 8.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn unfold_nonoverlapping_equals_split() {
+        // unfold with size == stride is a plain split.
+        let su = seq(vec![Primitive::unfold(0, 4, 4)]);
+        let ss = seq(vec![Primitive::split(0, &[3, 4])]);
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let tu = LayoutTransform::new(vec![12], &su);
+        let ts = LayoutTransform::new(vec![12], &ss);
+        assert_eq!(tu.repack(&data, &[12], 0.0), ts.repack(&data, &[12], 0.0));
+    }
+
+    #[test]
+    fn unfold_ragged_last_tile_clamps() {
+        // D=7, B=3, S=2 -> ntiles = ceil(4/2)+1 = 3, last tile starts at 4.
+        let s = seq(vec![Primitive::unfold(0, 3, 2)]);
+        let t = LayoutTransform::new(vec![7], &s);
+        assert_eq!(t.final_shape(), &[3, 3]);
+        let data: Vec<f32> = (0..7).map(|x| x as f32).collect();
+        let packed = t.repack(&data, &[7], -1.0);
+        assert_eq!(packed, vec![0., 1., 2., 2., 3., 4., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn c2d_template_layout_shape() {
+        // §5.1 output template: N (H/ht) (W/wt) (O/ot) ht wt ot.
+        let (n, h, w, o) = (1, 112, 112, 64);
+        let (ht, wt, ot) = (4, 16, 16);
+        let s = seq(vec![
+            Primitive::split(1, &[h / ht, ht]),
+            Primitive::split(3, &[w / wt, wt]),
+            Primitive::split(5, &[o / ot, ot]),
+            Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]),
+        ]);
+        assert_eq!(
+            s.apply_shape(&[n, h, w, o]),
+            vec![1, 28, 7, 4, 4, 16, 16]
+        );
+    }
+
+    #[test]
+    fn state_vector_concats() {
+        let s = seq(vec![
+            Primitive::split(1, &[2, 4]),
+            Primitive::unfold(0, 6, 4),
+        ]);
+        assert_eq!(s.state_vector(), vec![2.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn has_advanced_detection() {
+        let basic = seq(vec![Primitive::split(0, &[2, 2])]);
+        assert!(!basic.has_advanced());
+        let adv = seq(vec![Primitive::unfold(0, 3, 2)]);
+        assert!(adv.has_advanced());
+    }
+}

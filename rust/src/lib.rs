@@ -1,0 +1,53 @@
+//! # ALT — joint graph-level layout & operator-level loop optimization
+//!
+//! Reproduction of *“ALT: Breaking the Wall between Graph and Operator
+//! Level Optimizations for Deep Learning Compilation”* (Xu et al., 2022)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 compiler/auto-tuner — the paper's system
+//! contribution lives here:
+//!
+//! * [`expr`] — index-expression IR (affine + floor-div/mod) used by the
+//!   layout rewrite rules of Table 1 and Eq. (1).
+//! * [`tensor`] — tensor descriptors and concrete layouts.
+//! * [`layout`] — the six layout primitives (`split`, `reorder`, `fuse`,
+//!   `unfold`, `pad`, `store_at`) plus inverses; shape and
+//!   access-expression rewriting; data repacking for golden tests.
+//! * [`graph`] — computational-graph IR and builders for the paper's
+//!   workloads (ResNet-18, MobileNet-V2, BERT, ResNet3D-18, micro graphs).
+//! * [`propagate`] — the layout-propagation pass (§4.2, §6) with its
+//!   three constraints and conversion-operator insertion.
+//! * [`loops`] — loop-nest IR + TVM-style loop primitives.
+//! * [`codegen`] — program generation: graph + layout assignment + loop
+//!   schedule → tensor program (loop nests with rewritten accesses).
+//! * [`sim`] — the simulated device (cache hierarchy with hardware
+//!   prefetch, SIMD, parallelism): the substitution for the paper's
+//!   Intel/NVIDIA/ARM testbeds (see DESIGN.md §Hardware-Adaptation).
+//! * [`cost`] — gradient-boosted-tree cost model trained online.
+//! * [`autotune`] — PPO agents, layout/loop tuning templates, and the
+//!   two-stage cross-exploration joint tuner (Fig. 8).
+//! * [`baselines`] — Ansor-like, AutoTVM-like, FlexTensor-like and
+//!   vendor-library-like comparators.
+//! * [`runtime`] — PJRT executor for the AOT HLO artifacts produced by
+//!   the Python build layer (real-host validation leg).
+//! * [`bench`] — the figure/table harnesses shared by `cargo bench`,
+//!   the `figures` binary and the examples.
+
+pub mod autotune;
+pub mod baselines;
+pub mod bench;
+pub mod codegen;
+pub mod config;
+pub mod cost;
+pub mod expr;
+pub mod graph;
+pub mod layout;
+pub mod loops;
+pub mod propagate;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,317 @@
+//! Loop-nest IR and loop schedules (paper §4.3).
+//!
+//! ALT reuses TVM's loop primitives (`split`, `reorder`, `vectorize`,
+//! `unroll`, `parallel`, `compute_at`, …). We model the subset those
+//! primitives generate when driven by the paper's tuning templates: a
+//! two-level tiled nest per operator —
+//!
+//! ```text
+//! parallel outer-spatial loops        (split outer halves, in order)
+//!   outer-reduction loops
+//!     inner-spatial tile loops        (tunable permutation)
+//!       inner-reduction loops
+//!         [vectorized innermost]      (vectorize)
+//! ```
+//!
+//! plus `compute_at` fusion of the elementwise tail into the tile body
+//! (fusion-after-tiling, Figs. 6–7). A [`LoopSchedule`] is the point in
+//! loop-tuning space; [`build_nest`] materializes the ordered loop list
+//! that codegen attaches access expressions to.
+
+use crate::util::divisors;
+
+/// Loop annotation produced by `vectorize` / `parallel` / `unroll`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Annotation {
+    None,
+    Parallel,
+    Vectorize,
+    Unroll,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopKind {
+    Spatial,
+    Reduction,
+}
+
+/// One loop in the generated nest, outermost first. `var` is the loop
+/// variable id used by access expressions.
+#[derive(Clone, Debug)]
+pub struct Loop {
+    pub var: usize,
+    pub name: String,
+    pub extent: i64,
+    pub kind: LoopKind,
+    pub ann: Annotation,
+}
+
+/// The loop-tuning decision for one operator: tile factor per spatial
+/// storage dim, tile factor per reduction dim, inner-loop permutation and
+/// annotation knobs. This matches the `O(10^7)` 7-nested-loop space the
+/// paper quotes for C2D.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoopSchedule {
+    /// Inner tile extent per spatial storage dim (must divide extent).
+    pub spatial_tiles: Vec<i64>,
+    /// Inner tile extent per reduction dim (must divide extent).
+    pub reduction_tiles: Vec<i64>,
+    /// Permutation of the inner-spatial tile loops.
+    pub inner_perm: Vec<usize>,
+    /// Vectorize the innermost loop.
+    pub vectorize: bool,
+    /// Annotate up to this many outermost loops parallel.
+    pub parallel: usize,
+    /// Unroll inner-reduction loops whose total extent is below this.
+    pub unroll: i64,
+    /// `compute_at` the elementwise tail into the tile body.
+    pub fuse_eltwise: bool,
+}
+
+impl LoopSchedule {
+    /// The untuned default: no tiling (tiles == extents), natural order.
+    pub fn identity(spatial: &[i64], reduction: &[i64]) -> Self {
+        Self {
+            spatial_tiles: spatial.to_vec(),
+            reduction_tiles: reduction.to_vec(),
+            inner_perm: (0..spatial.len()).collect(),
+            vectorize: false,
+            parallel: 0,
+            unroll: 0,
+            fuse_eltwise: true,
+        }
+    }
+
+    /// Clamp/repair a schedule so every factor divides its extent (the
+    /// tuner's feasibility projection).
+    pub fn repair(&mut self, spatial: &[i64], reduction: &[i64]) {
+        fix_tiles(&mut self.spatial_tiles, spatial);
+        fix_tiles(&mut self.reduction_tiles, reduction);
+        if self.inner_perm.len() != spatial.len()
+            || !is_perm(&self.inner_perm)
+        {
+            self.inner_perm = (0..spatial.len()).collect();
+        }
+        self.parallel = self.parallel.min(spatial.len());
+    }
+}
+
+fn fix_tiles(tiles: &mut Vec<i64>, extents: &[i64]) {
+    tiles.resize(extents.len(), 1);
+    for (t, &e) in tiles.iter_mut().zip(extents) {
+        if e <= 0 {
+            *t = 1;
+        } else if *t <= 0 || e % *t != 0 {
+            *t = crate::util::round_to_divisor(e, (*t).max(1) as f64);
+        }
+    }
+}
+
+fn is_perm(p: &[usize]) -> bool {
+    let mut seen = vec![false; p.len()];
+    p.iter().all(|&i| {
+        if i < seen.len() && !seen[i] {
+            seen[i] = true;
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Materialize the ordered loop list for a tiled nest.
+///
+/// `spatial`/`reduction` are the storage-dim extents; returns the loops
+/// outermost-first plus, for each spatial dim `d`, the pair of loop-var
+/// ids `(outer_d, inner_d)` so codegen can write the access expression
+/// `idx_d = outer_d * tile_d + inner_d` (and similarly for reductions).
+pub fn build_nest(
+    spatial: &[i64],
+    spatial_names: &[String],
+    reduction: &[i64],
+    reduction_names: &[String],
+    sched: &LoopSchedule,
+    simd_lanes: i64,
+) -> Nest {
+    assert_eq!(spatial.len(), sched.spatial_tiles.len(), "spatial arity");
+    assert_eq!(reduction.len(), sched.reduction_tiles.len(), "reduction arity");
+
+    let mut loops = Vec::new();
+    let mut var = 0usize;
+    let mut alloc = |name: String, extent: i64, kind: LoopKind, ann: Annotation| {
+        let l = Loop { var, name, extent, kind, ann };
+        var += 1;
+        loops.push(l);
+        var - 1
+    };
+
+    let ns = spatial.len();
+    let mut spatial_pairs = vec![(usize::MAX, usize::MAX); ns];
+    let mut reduction_pairs = vec![(usize::MAX, usize::MAX); reduction.len()];
+
+    // outer spatial (parallel annotation on the first `parallel` loops)
+    for d in 0..ns {
+        let outer = spatial[d] / sched.spatial_tiles[d];
+        let ann = if d < sched.parallel { Annotation::Parallel } else { Annotation::None };
+        spatial_pairs[d].0 = alloc(format!("{}.o", spatial_names[d]), outer, LoopKind::Spatial, ann);
+    }
+    // outer reduction
+    for r in 0..reduction.len() {
+        let outer = reduction[r] / sched.reduction_tiles[r];
+        reduction_pairs[r].0 = alloc(
+            format!("{}.o", reduction_names[r]),
+            outer,
+            LoopKind::Reduction,
+            Annotation::None,
+        );
+    }
+    // inner spatial in tuned order
+    for &d in &sched.inner_perm {
+        spatial_pairs[d].1 = alloc(
+            format!("{}.i", spatial_names[d]),
+            sched.spatial_tiles[d],
+            LoopKind::Spatial,
+            Annotation::None,
+        );
+    }
+    // inner reduction (+ unroll annotation)
+    for r in 0..reduction.len() {
+        let ext = sched.reduction_tiles[r];
+        let ann = if sched.unroll > 0 && ext <= sched.unroll {
+            Annotation::Unroll
+        } else {
+            Annotation::None
+        };
+        reduction_pairs[r].1 =
+            alloc(format!("{}.i", reduction_names[r]), ext, LoopKind::Reduction, ann);
+    }
+    drop(alloc);
+
+    // vectorize: the innermost loop, if it is spatial and its extent is
+    // a multiple (or divisor) of the lane count.
+    if sched.vectorize {
+        if let Some(last) = loops.last_mut() {
+            if last.kind == LoopKind::Spatial
+                && (last.extent % simd_lanes == 0 || simd_lanes % last.extent == 0)
+            {
+                last.ann = Annotation::Vectorize;
+            }
+        }
+        // if reductions are innermost, try the innermost spatial loop
+        if loops.last().map(|l| l.kind) == Some(LoopKind::Reduction) {
+            if let Some(l) = loops
+                .iter_mut()
+                .rev()
+                .find(|l| l.kind == LoopKind::Spatial)
+            {
+                if l.extent % simd_lanes == 0 || simd_lanes % l.extent == 0 {
+                    l.ann = Annotation::Vectorize;
+                }
+            }
+        }
+    }
+
+    Nest { loops, spatial_pairs, reduction_pairs }
+}
+
+/// Output of [`build_nest`].
+#[derive(Clone, Debug)]
+pub struct Nest {
+    pub loops: Vec<Loop>,
+    /// (outer var, inner var) per spatial storage dim.
+    pub spatial_pairs: Vec<(usize, usize)>,
+    /// (outer var, inner var) per reduction dim.
+    pub reduction_pairs: Vec<(usize, usize)>,
+}
+
+impl Nest {
+    pub fn total_iters(&self) -> f64 {
+        self.loops.iter().map(|l| l.extent as f64).product()
+    }
+}
+
+/// Enumerate candidate tile factors for an extent (the per-dimension
+/// option list the tuners index into).
+pub fn tile_options(extent: i64) -> Vec<i64> {
+    divisors(extent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: &[&str]) -> Vec<String> {
+        n.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn nest_structure_and_extents() {
+        let sched = LoopSchedule {
+            spatial_tiles: vec![4, 8],
+            reduction_tiles: vec![3],
+            inner_perm: vec![1, 0],
+            vectorize: true,
+            parallel: 1,
+            unroll: 4,
+            fuse_eltwise: true,
+        };
+        let nest = build_nest(
+            &[16, 32],
+            &names(&["h", "w"]),
+            &[9],
+            &names(&["rk"]),
+            &sched,
+            8,
+        );
+        // loops: h.o(4) w.o(4) rk.o(3) w.i(8) h.i(4) rk.i(3)
+        let extents: Vec<i64> = nest.loops.iter().map(|l| l.extent).collect();
+        assert_eq!(extents, vec![4, 4, 3, 8, 4, 3]);
+        assert_eq!(nest.loops[0].ann, Annotation::Parallel);
+        assert_eq!(nest.total_iters(), (4 * 4 * 3 * 8 * 4 * 3) as f64);
+        // innermost is a reduction -> vectorize falls back to h.i? h.i ext 4, lanes 8 -> 8%4==0 ok
+        let vec_loop = nest.loops.iter().find(|l| l.ann == Annotation::Vectorize);
+        assert!(vec_loop.is_some());
+        // unroll on rk.i (extent 3 <= 4)
+        assert_eq!(nest.loops.last().unwrap().ann, Annotation::Unroll);
+    }
+
+    #[test]
+    fn identity_schedule_single_loop_per_dim() {
+        let sched = LoopSchedule::identity(&[8, 8], &[4]);
+        let nest = build_nest(
+            &[8, 8],
+            &names(&["a", "b"]),
+            &[4],
+            &names(&["r"]),
+            &sched,
+            8,
+        );
+        // outer loops extent 1, inner loops full extent
+        let extents: Vec<i64> = nest.loops.iter().map(|l| l.extent).collect();
+        assert_eq!(extents, vec![1, 1, 1, 8, 8, 4]);
+    }
+
+    #[test]
+    fn repair_fixes_bad_factors() {
+        let mut s = LoopSchedule {
+            spatial_tiles: vec![5, 0],
+            reduction_tiles: vec![7],
+            inner_perm: vec![0, 0],
+            vectorize: false,
+            parallel: 9,
+            unroll: 0,
+            fuse_eltwise: false,
+        };
+        s.repair(&[16, 8], &[9]);
+        assert!(16 % s.spatial_tiles[0] == 0);
+        assert!(8 % s.spatial_tiles[1] == 0);
+        assert!(9 % s.reduction_tiles[0] == 0);
+        assert_eq!(s.inner_perm, vec![0, 1]);
+        assert_eq!(s.parallel, 2);
+    }
+
+    #[test]
+    fn tile_options_are_divisors() {
+        assert_eq!(tile_options(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+}

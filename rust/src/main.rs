@@ -1,0 +1,267 @@
+//! `alt` — the ALT compiler/auto-tuner launcher (Layer-3 leader).
+//!
+//! Subcommands:
+//!   tune     — joint layout+loop tuning of a network or single op
+//!   graph    — print a workload's computational graph
+//!   sim      — simulate a network under default layouts/schedules
+//!   propagate— show the layout-propagation result of a tuned network
+//!   run      — execute an AOT HLO artifact on the PJRT CPU runtime
+//!   figures  — regenerate a paper table/figure (also: `figures` binary)
+//!
+//! Configuration: `--config file.conf` (key = value, see
+//! rust/src/config) with `--set key=value` overrides.
+
+use std::collections::HashMap;
+
+use alt::autotune::tuner::{tune_graph, tune_op};
+use alt::bench::figures;
+use alt::bench::harness::Table;
+use alt::config::Config;
+use alt::graph::{models, Graph};
+use alt::propagate::{propagate, PropMode};
+use alt::sim::netsim::simulate_graph;
+use alt::sim::HwProfile;
+
+fn workload(name: &str) -> Option<Graph> {
+    match name {
+        "resnet18" | "r18" => Some(models::resnet18(1)),
+        "resnet18-b16" => Some(models::resnet18(16)),
+        "mobilenet_v2" | "mv2" => Some(models::mobilenet_v2(1)),
+        "bert_base" | "bb" => Some(models::bert_base()),
+        "bert_tiny" | "bt" => Some(models::bert_tiny()),
+        "resnet3d_18" | "r3d" => Some(models::resnet3d_18(1)),
+        "case_study" | "case" => Some(models::case_study()),
+        "subgraph1" => Some(models::prop_subgraph(7)),
+        "subgraph2" => Some(models::prop_subgraph(14)),
+        _ => None,
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: alt <tune|graph|sim|propagate|run|figures> [args]
+  alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
+           [--config f.conf] [--set k=v,...] [--op N]
+  alt graph --workload mv2
+  alt sim --workload bt [--hw gpu]
+  alt propagate --workload case_study [--budget N]
+  alt run --artifact model [--dir artifacts] [--iters N]
+  alt figures <fig1|fig9|fig10|fig11|fig12|table2|table3|motivating|observations|all> [--full]"
+    );
+    std::process::exit(2);
+}
+
+/// Minimal flag parser: --key value / --flag.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Config {
+    let mut cfg = flags
+        .get("config")
+        .map(|p| Config::from_file(p).unwrap_or_else(|e| panic!("{e}")))
+        .unwrap_or_default();
+    for (k, v) in flags {
+        if k != "config" && k != "set" {
+            cfg.set(k, v);
+        }
+    }
+    if let Some(sets) = flags.get("set") {
+        for kv in sets.split(',') {
+            if let Some((k, v)) = kv.split_once('=') {
+                cfg.set(k.trim(), v.trim());
+            }
+        }
+    }
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    let cfg = build_config(&flags);
+    let hw = HwProfile::by_name(cfg.get("hw").unwrap_or("intel"))
+        .unwrap_or_else(|| panic!("unknown hw profile"));
+
+    match cmd.as_str() {
+        "tune" => {
+            let wname = cfg.get("workload").unwrap_or("case_study");
+            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
+            if let Some(op) = cfg.get("op") {
+                let idx: usize = op.parse().expect("--op index");
+                let node = g.complex_nodes()[idx];
+                let r = tune_op(&g, node, &hw, &opts);
+                println!(
+                    "tuned {} op#{node}: {:.4} ms after {} measurements",
+                    g.name, r.best_ms, r.measurements
+                );
+                println!("layout: {:?}", r.decision.out_seq);
+                println!("schedule: {:?}", r.sched);
+                // optional tuning-curve dump (CSV: measurement, best_ms)
+                if let Some(path) = cfg.get("curve") {
+                    let mut csv = String::from("measurement,best_ms\n");
+                    for (i, ms) in r.history.iter().enumerate() {
+                        csv.push_str(&format!("{},{ms}\n", i + 1));
+                    }
+                    std::fs::write(path, csv).expect("write curve");
+                    println!("tuning curve -> {path}");
+                }
+            } else {
+                let r = tune_graph(&g, &hw, &opts);
+                println!(
+                    "tuned {} on {}: {:.4} ms end-to-end ({} measurements)",
+                    g.name,
+                    hw.name,
+                    r.report.latency_ms(),
+                    r.measurements
+                );
+                let mut t = Table::new("per-op latency", &["node", "label", "ms"]);
+                for n in &r.report.per_node {
+                    t.row(&[
+                        n.node.map(|i| i.to_string()).unwrap_or_default(),
+                        n.label.clone(),
+                        format!("{:.4}", n.report.latency_ms),
+                    ]);
+                }
+                t.print();
+            }
+        }
+        "graph" => {
+            let wname = cfg.get("workload").unwrap_or("case_study");
+            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            println!(
+                "{}: {} nodes, {} tensors, {} complex ops, {:.2} GFLOPs",
+                g.name,
+                g.nodes.len(),
+                g.tensors.len(),
+                g.complex_nodes().len(),
+                g.total_flops() / 1e9
+            );
+            for n in &g.nodes {
+                println!("  {}", g.describe(n.id));
+            }
+        }
+        "sim" => {
+            let wname = cfg.get("workload").unwrap_or("case_study");
+            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let prop = propagate(&g, &[], PropMode::Alt);
+            let rep = simulate_graph(&g, &prop, &HashMap::new(), &hw);
+            println!(
+                "{} on {} (default layouts/schedules): {:.4} ms, {:.2} GFLOPs",
+                g.name,
+                hw.name,
+                rep.latency_ms(),
+                rep.total.flops / 1e9
+            );
+        }
+        "propagate" => {
+            let wname = cfg.get("workload").unwrap_or("case_study");
+            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
+            let r = tune_graph(&g, &hw, &opts);
+            let prop = propagate(&g, &r.decisions, opts.mode);
+            println!(
+                "{}: {} conversions, {} fusion groups",
+                g.name,
+                prop.conversions.len(),
+                prop.fused_tails.len()
+            );
+            for c in &prop.conversions {
+                println!(
+                    "  convert t{} ({}) absorbed_by={:?}",
+                    c.tensor,
+                    g.tensor(c.tensor).name,
+                    c.absorbed_by
+                );
+            }
+        }
+        "run" => {
+            let dir = cfg.get("dir").unwrap_or("artifacts");
+            let name = cfg.get("artifact").unwrap_or("model");
+            let iters = cfg.get_usize("iters", 5);
+            let rt = alt::runtime::Runtime::new(dir)
+                .unwrap_or_else(|e| panic!("runtime: {e}"));
+            println!("platform: {}", rt.platform());
+            let exe = rt.load(name).unwrap_or_else(|e| panic!("load: {e}"));
+            let inputs: Vec<Vec<f32>> = exe
+                .spec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| alt::runtime::random_input(s, 7 + i as u64))
+                .collect();
+            let ms = exe.bench(&inputs, iters).unwrap_or_else(|e| panic!("{e}"));
+            println!("{name}: median {ms:.3} ms over {iters} runs");
+        }
+        "figures" => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let scale = if flags.contains_key("full") {
+                figures::Scale::full()
+            } else {
+                figures::Scale::quick()
+            };
+            run_figures(which, &scale);
+        }
+        _ => usage(),
+    }
+}
+
+fn run_figures(which: &str, scale: &figures::Scale) {
+    let print_all = |ts: Vec<Table>| {
+        for t in ts {
+            t.print();
+            println!();
+        }
+    };
+    match which {
+        "fig1" => print_all(figures::fig1(scale)),
+        "motivating" => figures::motivating(scale).print(),
+        "table2" => figures::table2().print(),
+        "fig9" => print_all(figures::fig9(scale)),
+        "fig10" => print_all(figures::fig10(scale, true)),
+        "fig10-full" => print_all(figures::fig10(scale, false)),
+        "fig11" => figures::fig11(scale).print(),
+        "fig12" => figures::fig12(scale).print(),
+        "table3" => figures::table3(scale).print(),
+        "observations" => figures::observations(scale).print(),
+        "ablations" => print_all(figures::ablations(scale)),
+        "all" => {
+            figures::table2().print();
+            println!();
+            figures::motivating(scale).print();
+            println!();
+            print_all(figures::fig1(scale));
+            print_all(figures::fig9(scale));
+            print_all(figures::fig10(scale, true));
+            figures::fig11(scale).print();
+            println!();
+            figures::fig12(scale).print();
+            println!();
+            figures::table3(scale).print();
+            println!();
+            figures::observations(scale).print();
+        }
+        _ => {
+            eprintln!("unknown figure '{which}'");
+            std::process::exit(2);
+        }
+    }
+}

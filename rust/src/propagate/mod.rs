@@ -1,0 +1,401 @@
+//! Layout propagation (paper §4.2 + §6).
+//!
+//! Layout decisions are made per *complex* operator (convolutions, GMM).
+//! This pass distributes those decisions across the graph while
+//! eliminating the two overheads of layout transformation:
+//!
+//! * **layout-conversion overhead** — instead of inserting a conversion
+//!   operator, let the producer yield elements in the new layout
+//!   directly (Fig. 5b). Possible when the producer is an element-wise
+//!   op (incl. padding); otherwise a [`Conversion`] is recorded, which
+//!   the graph simulator charges as a data-movement op (Fig. 5a).
+//! * **fusion-conflict overhead** — replicate the output primitive
+//!   sequence onto the element-wise consumers so their loop nests
+//!   reconstruct identically and fusion-after-tiling still applies
+//!   (Figs. 6–7).
+//!
+//! The three §4.2 constraints are enforced:
+//! 1. propagation only walks element-wise ops between same-shape tensors;
+//! 2. sequences containing non-trivial advanced primitives (`unfold`,
+//!    `pad`, `store_at`) are never propagated — conversions are inserted
+//!    when they arise;
+//! 3. each complex operator is tuned independently; between two adjacent
+//!    complex ops a conversion is inserted (or absorbed by an
+//!    intervening simple op) rather than sharing one layout.
+
+use std::collections::HashMap;
+
+use crate::codegen::LayoutAssignment;
+use crate::graph::{Graph, NodeId};
+use crate::layout::LayoutSeq;
+use crate::tensor::{Role, TensorId};
+
+/// Propagation mode — the paper's ablation variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PropMode {
+    /// Full ALT: propagation + fusion alignment + independent tuning.
+    Alt,
+    /// ALT-WP (§7.2): conversions are still absorbed, but the output
+    /// sequence is NOT replicated onto consumers — fusion is lost
+    /// whenever the output layout is non-default.
+    WithoutFusionProp,
+    /// ALT-OL: loop tuning only; every layout stays default.
+    LoopOnly,
+    /// ALT-FP (§7.3.1): force-propagate the first complex op's output
+    /// layout forward into the next complex op's input.
+    ForwardShare,
+    /// ALT-BP: force the downstream op's preferred input layout back
+    /// onto the producing complex op's output.
+    BackwardShare,
+}
+
+/// Layout decision for one complex operator (instantiated template).
+#[derive(Clone, Debug, Default)]
+pub struct ComplexDecision {
+    pub node: NodeId,
+    /// Output tensor sequence (basic primitives only).
+    pub out_seq: LayoutSeq,
+    /// Input (activation) tensor sequence — may contain `unfold`.
+    pub in_seq: LayoutSeq,
+    /// Weight tensor sequence — transformed offline for free.
+    pub w_seq: LayoutSeq,
+}
+
+/// A required runtime layout conversion (Fig. 5a) and whether an
+/// element-wise producer absorbed it (Fig. 5b).
+#[derive(Clone, Debug)]
+pub struct Conversion {
+    pub tensor: TensorId,
+    pub to: LayoutSeq,
+    /// Node that performs the conversion for free as part of its own
+    /// write (element-wise producer); `None` = standalone conversion op.
+    pub absorbed_by: Option<NodeId>,
+}
+
+/// Result of the pass: per-tensor layout sequences, per-complex-node
+/// fused element-wise tails, and the conversion list.
+#[derive(Clone, Debug, Default)]
+pub struct PropagationResult {
+    pub layouts: LayoutAssignment,
+    pub fused_tails: HashMap<NodeId, Vec<NodeId>>,
+    pub conversions: Vec<Conversion>,
+    /// Element-wise nodes covered by some fusion group (skipped by the
+    /// graph simulator).
+    pub fused_nodes: Vec<NodeId>,
+}
+
+/// Walk the single-consumer element-wise chain downstream of `tensor`.
+pub fn eltwise_chain(graph: &Graph, tensor: TensorId) -> Vec<NodeId> {
+    let mut chain = Vec::new();
+    let mut t = tensor;
+    loop {
+        let consumers = graph.consumers(t);
+        if consumers.len() != 1 {
+            break;
+        }
+        let c = consumers[0];
+        let node = graph.node(c);
+        // constraint 1: element-wise, same shape (bias broadcast allowed)
+        let same_shape = graph.tensor(node.output).shape == graph.tensor(t).shape;
+        let is_fusable = matches!(
+            node.kind,
+            crate::graph::OpKind::Eltwise { .. } | crate::graph::OpKind::BiasAdd
+        );
+        if !is_fusable || !same_shape {
+            break;
+        }
+        chain.push(c);
+        t = node.output;
+    }
+    chain
+}
+
+/// Apply the pass. `decisions` must cover each complex node at most
+/// once; complex nodes without a decision keep default layouts.
+pub fn propagate(
+    graph: &Graph,
+    decisions: &[ComplexDecision],
+    mode: PropMode,
+) -> PropagationResult {
+    let mut res = PropagationResult {
+        layouts: LayoutAssignment::identity(graph),
+        ..Default::default()
+    };
+
+    // Fig. 11 forced-sharing variants rewrite the decision list first.
+    let decisions = match mode {
+        PropMode::ForwardShare | PropMode::BackwardShare => {
+            shared_decisions(graph, decisions, mode)
+        }
+        _ => decisions.to_vec(),
+    };
+    let by_node: HashMap<NodeId, ComplexDecision> =
+        decisions.iter().map(|d| (d.node, d.clone())).collect();
+
+    for node in &graph.nodes {
+        if !node.is_complex() {
+            continue;
+        }
+        let default = ComplexDecision { node: node.id, ..Default::default() };
+        let dec = by_node.get(&node.id).unwrap_or(&default);
+        let effective = if mode == PropMode::LoopOnly { &default } else { dec };
+
+        // ---- weight: offline transform, always free ----
+        if node.inputs.len() > 1 && !effective.w_seq.is_identity() {
+            res.layouts.set(node.inputs[1], effective.w_seq.clone());
+        }
+
+        // ---- input activation ----
+        let x = node.inputs[0];
+        // If upstream propagation already produced exactly this layout,
+        // no conversion is needed at all.
+        if !effective.in_seq.is_identity()
+            && res.layouts.get(x) != effective.in_seq
+        {
+            let xt = graph.tensor(x);
+            if xt.role == Role::Weight {
+                res.layouts.set(x, effective.in_seq.clone());
+            } else {
+                let producer = xt.producer.map(|p| graph.node(p));
+                let absorbable = producer
+                    .map(|p| p.is_elementwise() && !res.fused_nodes.contains(&p.id))
+                    .unwrap_or(false);
+                if absorbable {
+                    // Fig. 5b: the element-wise producer yields the new
+                    // layout directly — the tensor's allocation layout
+                    // becomes the consumer's preference.
+                    res.layouts.set(x, effective.in_seq.clone());
+                } else {
+                    // Fig. 5a: a conversion op repacks; the producer
+                    // keeps its own layout, only this consumer observes
+                    // the converted one.
+                    res.layouts
+                        .set_read_override(node.id, x, effective.in_seq.clone());
+                }
+                res.conversions.push(Conversion {
+                    tensor: x,
+                    to: effective.in_seq.clone(),
+                    // constraint 2: advanced primitives are never
+                    // propagated across *complex* producers; an
+                    // element-wise producer (e.g. the padding op) may
+                    // still absorb the conversion (Fig. 5b).
+                    absorbed_by: if absorbable {
+                        producer.map(|p| p.id)
+                    } else {
+                        None
+                    },
+                });
+            }
+        }
+
+        // ---- output + downstream fusion alignment ----
+        res.layouts.set(node.output, effective.out_seq.clone());
+        let chain = eltwise_chain(graph, node.output);
+        let fuse_ok = match mode {
+            // ALT-WP: the tail keeps its default layout, so a
+            // reconstructed (non-identity) conv nest cannot align with
+            // the tail's nest — fusion is lost (Fig. 6).
+            PropMode::WithoutFusionProp => effective.out_seq.is_identity(),
+            _ => true,
+        };
+        // constraint 2: out_seq is basic-only by template construction
+        if fuse_ok && !chain.is_empty() && !effective.out_seq.has_advanced() {
+            for &c in &chain {
+                res.layouts.set(graph.node(c).output, effective.out_seq.clone());
+            }
+            res.fused_tails.insert(node.id, chain.clone());
+            res.fused_nodes.extend(chain);
+        }
+    }
+    res
+}
+
+/// Rewrites for the Fig. 11 forced-sharing ablations.
+fn shared_decisions(
+    graph: &Graph,
+    decisions: &[ComplexDecision],
+    mode: PropMode,
+) -> Vec<ComplexDecision> {
+    let mut out = decisions.to_vec();
+    let complex = graph.complex_nodes();
+    for pair in complex.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        let ia = out.iter().position(|d| d.node == a);
+        let ib = out.iter().position(|d| d.node == b);
+        if let (Some(ia), Some(ib)) = (ia, ib) {
+            match mode {
+                PropMode::ForwardShare => {
+                    // downstream op consumes the upstream layout as-is
+                    // (when applicable to its input's logical shape)
+                    let seq = out[ia].out_seq.clone();
+                    let in_shape =
+                        &graph.tensor(graph.node(b).inputs[0]).shape;
+                    out[ib].in_seq = if seq.is_valid_for(in_shape) {
+                        seq
+                    } else {
+                        LayoutSeq::new()
+                    };
+                }
+                PropMode::BackwardShare => {
+                    // upstream op must emit the downstream's preference;
+                    // basic-only constraint: drop advanced primitives.
+                    // The remaining primitives may reference dims the
+                    // dropped ones would have created — validate against
+                    // the producer's output shape and fall back to the
+                    // identity layout when the rewrite is inapplicable.
+                    let mut seq = out[ib].in_seq.clone();
+                    seq.prims.retain(|p| {
+                        !matches!(
+                            p,
+                            crate::layout::Primitive::Unfold { .. }
+                                | crate::layout::Primitive::Pad { .. }
+                                | crate::layout::Primitive::StoreAt { .. }
+                        )
+                    });
+                    let out_shape =
+                        &graph.tensor(graph.node(a).output).shape;
+                    out[ia].out_seq = if seq.is_valid_for(out_shape) {
+                        seq
+                    } else {
+                        LayoutSeq::new()
+                    };
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::layout::Primitive;
+
+    fn tiled_seq() -> LayoutSeq {
+        let mut s = LayoutSeq::new();
+        s.push(Primitive::split(3, &[4, 16]))
+            .push(Primitive::reorder(&[0, 1, 2, 3, 4]));
+        s
+    }
+
+    #[test]
+    fn fusion_tail_detected_and_aligned() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let dec = ComplexDecision {
+            node: conv,
+            out_seq: tiled_seq(),
+            ..Default::default()
+        };
+        let res = propagate(&g, &[dec], PropMode::Alt);
+        let tail = &res.fused_tails[&conv];
+        assert_eq!(tail.len(), 2, "bias + relu fused");
+        for &t in tail {
+            assert_eq!(res.layouts.get(g.node(t).output), tiled_seq());
+        }
+    }
+
+    #[test]
+    fn wp_mode_loses_fusion_for_nondefault_layout() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let dec = ComplexDecision {
+            node: conv,
+            out_seq: tiled_seq(),
+            ..Default::default()
+        };
+        let res = propagate(&g, &[dec], PropMode::WithoutFusionProp);
+        assert!(res.fused_tails.get(&conv).is_none());
+        // but with a default layout fusion survives
+        let dec2 = ComplexDecision { node: conv, ..Default::default() };
+        let res2 = propagate(&g, &[dec2], PropMode::WithoutFusionProp);
+        assert!(res2.fused_tails.get(&conv).is_some());
+    }
+
+    #[test]
+    fn loop_only_ignores_decisions() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let dec = ComplexDecision {
+            node: conv,
+            out_seq: tiled_seq(),
+            ..Default::default()
+        };
+        let res = propagate(&g, &[dec], PropMode::LoopOnly);
+        assert!(res.layouts.is_identity(g.node(conv).output));
+        assert!(res.conversions.is_empty());
+    }
+
+    #[test]
+    fn pad_producer_absorbs_input_conversion() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let mut in_seq = LayoutSeq::new();
+        in_seq.push(Primitive::unfold(1, 13, 8));
+        let dec = ComplexDecision { node: conv, in_seq, ..Default::default() };
+        let res = propagate(&g, &[dec], PropMode::Alt);
+        assert_eq!(res.conversions.len(), 1);
+        let conv_in = g.node(conv).inputs[0];
+        assert_eq!(res.conversions[0].tensor, conv_in);
+        // the producer of the conv input is the padding op -> absorbed
+        let pad = g.tensor(conv_in).producer.unwrap();
+        assert_eq!(res.conversions[0].absorbed_by, Some(pad));
+    }
+
+    #[test]
+    fn complex_to_complex_needs_real_conversion() {
+        // prop_subgraph: pad -> c3x3 -> c1x1 (no eltwise between convs)
+        let g = models::prop_subgraph(7);
+        let convs = g.complex_nodes();
+        let mut in_seq = LayoutSeq::new();
+        in_seq.push(Primitive::split(3, &[32, 16]));
+        let decs = vec![
+            ComplexDecision {
+                node: convs[0],
+                out_seq: tiled_seq(),
+                ..Default::default()
+            },
+            ComplexDecision { node: convs[1], in_seq, ..Default::default() },
+        ];
+        let res = propagate(&g, &decs, PropMode::Alt);
+        let conv2_in = g.node(convs[1]).inputs[0];
+        let conv = res
+            .conversions
+            .iter()
+            .find(|c| c.tensor == conv2_in)
+            .expect("conversion for complex-complex edge");
+        assert!(conv.absorbed_by.is_none());
+    }
+
+    #[test]
+    fn forward_share_copies_out_to_downstream_in() {
+        let g = models::prop_subgraph(7);
+        let convs = g.complex_nodes();
+        let decs = vec![
+            ComplexDecision {
+                node: convs[0],
+                out_seq: tiled_seq(),
+                ..Default::default()
+            },
+            ComplexDecision { node: convs[1], ..Default::default() },
+        ];
+        let res = propagate(&g, &decs, PropMode::ForwardShare);
+        let conv2_in = g.node(convs[1]).inputs[0];
+        assert_eq!(res.layouts.get(conv2_in), tiled_seq());
+    }
+
+    #[test]
+    fn weights_transform_free() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let mut w_seq = LayoutSeq::new();
+        w_seq.push(Primitive::split(3, &[4, 16]));
+        let dec =
+            ComplexDecision { node: conv, w_seq: w_seq.clone(), ..Default::default() };
+        let res = propagate(&g, &[dec], PropMode::Alt);
+        assert_eq!(res.layouts.get(g.node(conv).inputs[1]), w_seq);
+        assert!(res.conversions.is_empty(), "weights never convert at runtime");
+    }
+}

@@ -1,0 +1,146 @@
+//! Hardware profiles for the simulated device.
+//!
+//! Parameterised after the paper's three platforms (§7): a many-core
+//! Intel Xeon-class server CPU, an NVIDIA V100-class GPU, and a Kirin
+//! 990-class ARM SoC. Numbers are order-of-magnitude calibrations — the
+//! tuner only compares candidates *within* one profile, and the figures
+//! report speedup ratios, so only relative structure matters
+//! (lane width, cache sizes, prefetch depth, core count).
+
+/// A simulated device description.
+#[derive(Clone, Debug)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// f32 SIMD lanes (AVX-512: 16, warp: 32, NEON: 4).
+    pub simd_lanes: i64,
+    /// Parallel hardware units (cores / SMs / big cores).
+    pub cores: i64,
+    /// FMA issue ports per core (each retiring `simd_lanes` MACs).
+    pub fma_ports: f64,
+    pub freq_ghz: f64,
+    pub l1_bytes: i64,
+    pub l2_bytes: i64,
+    pub line_bytes: i64,
+    /// Contiguous lines fetched per demand miss (hardware prefetch /
+    /// coalescing depth). Table 2 measures 4 on Cortex-A76.
+    pub prefetch_lines: i64,
+    /// Average cost (cycles) of an L1 hit per SIMD bundle.
+    pub l1_cost: f64,
+    /// L2 hit latency in cycles (per line).
+    pub l2_latency: f64,
+    /// DRAM latency per line in cycles (before prefetch amortization).
+    pub mem_latency: f64,
+    /// Fraction of DRAM latency exposed for streaming (overlap factor).
+    pub mem_overlap: f64,
+    /// Memory parallelism cap: cores beyond this do not add bandwidth.
+    pub bw_saturation_cores: f64,
+    /// Fixed per-program launch overhead (kernel launch / loop setup).
+    pub launch_overhead_ms: f64,
+}
+
+impl HwProfile {
+    /// Effective per-line DRAM cost after overlap.
+    pub fn mem_latency_eff(&self) -> f64 {
+        self.mem_latency * self.mem_overlap
+    }
+
+    /// 40-core Intel Xeon Gold-class (AVX-512).
+    pub fn intel() -> Self {
+        Self {
+            name: "intel",
+            simd_lanes: 16,
+            cores: 40,
+            fma_ports: 2.0,
+            freq_ghz: 2.5,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 1024 * 1024,
+            line_bytes: 64,
+            prefetch_lines: 4,
+            l1_cost: 0.5,
+            l2_latency: 14.0,
+            mem_latency: 80.0,
+            mem_overlap: 0.35,
+            bw_saturation_cores: 8.0,
+            launch_overhead_ms: 2e-3,
+        }
+    }
+
+    /// NVIDIA V100-class: 80 SMs modeled as cores, 32-lane warps,
+    /// coalescing modeled as deep prefetch over 128B lines.
+    pub fn gpu() -> Self {
+        Self {
+            name: "gpu",
+            simd_lanes: 32,
+            cores: 80,
+            fma_ports: 2.0,
+            freq_ghz: 1.4,
+            l1_bytes: 96 * 1024,  // shared memory + L1
+            l2_bytes: 6 * 1024 * 1024,
+            line_bytes: 128,
+            prefetch_lines: 8,
+            l1_cost: 0.25,
+            l2_latency: 30.0,
+            mem_latency: 120.0,
+            mem_overlap: 0.15, // deep memory-level parallelism
+            bw_saturation_cores: 40.0,
+            launch_overhead_ms: 5e-3,
+        }
+    }
+
+    /// Kirin 990-class ARM big cores (Cortex-A76, NEON).
+    pub fn arm() -> Self {
+        Self {
+            name: "arm",
+            simd_lanes: 4,
+            cores: 4,
+            fma_ports: 2.0,
+            freq_ghz: 2.6,
+            l1_bytes: 64 * 1024,
+            l2_bytes: 512 * 1024,
+            line_bytes: 64,
+            prefetch_lines: 4, // measured in the paper's Table 2
+            l1_cost: 0.5,
+            l2_latency: 12.0,
+            mem_latency: 100.0,
+            mem_overlap: 0.5,
+            bw_saturation_cores: 2.0,
+            launch_overhead_ms: 1e-3,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "intel" => Some(Self::intel()),
+            "gpu" => Some(Self::gpu()),
+            "arm" => Some(Self::arm()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Self> {
+        vec![Self::intel(), Self::gpu(), Self::arm()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for hw in HwProfile::all() {
+            let again = HwProfile::by_name(hw.name).unwrap();
+            assert_eq!(again.simd_lanes, hw.simd_lanes);
+        }
+        assert!(HwProfile::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn profiles_are_distinct() {
+        let i = HwProfile::intel();
+        let g = HwProfile::gpu();
+        let a = HwProfile::arm();
+        assert!(i.simd_lanes != g.simd_lanes && g.simd_lanes != a.simd_lanes);
+        assert!(a.cores < i.cores);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tensor descriptors.
+//!
+//! A tensor in ALT is a logical multi-dimensional value; its *storage
+//! layout* is the composition of the layout-primitive sequence attached
+//! to it by the tuner (see [`crate::layout`]). The descriptor here keeps
+//! the logical shape plus bookkeeping the graph and propagation passes
+//! need: role (input/weight/intermediate/output) and the producing node.
+
+use std::fmt;
+
+/// Element types we model. Sizes feed the cache simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    I8,
+}
+
+impl DType {
+    pub fn bytes(self) -> i64 {
+        match self {
+            DType::F32 => 4,
+            DType::BF16 => 2,
+            DType::I8 => 1,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::BF16 => write!(f, "bf16"),
+            DType::I8 => write!(f, "i8"),
+        }
+    }
+}
+
+/// Role of a tensor in the graph; drives layout-tuning decisions
+/// (weights transform offline for free; intermediates need propagation
+/// or conversion ops — paper §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Graph input (activations arriving from outside).
+    Input,
+    /// Constant parameter — layout changes are free (offline repack).
+    Weight,
+    /// Produced and consumed inside the graph.
+    Intermediate,
+    /// Graph output.
+    Output,
+}
+
+/// Unique tensor id within a [`crate::graph::Graph`].
+pub type TensorId = usize;
+
+/// A logical tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    /// Logical dimension names, e.g. `["N", "H", "W", "O"]`. Layout
+    /// primitives operate on *storage* dims derived from these.
+    pub dim_names: Vec<String>,
+    /// Logical extents (same order as `dim_names`).
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+    pub role: Role,
+    /// Producing node id (None for inputs/weights).
+    pub producer: Option<usize>,
+}
+
+impl Tensor {
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elements(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> i64 {
+        self.elements() * self.dtype.bytes()
+    }
+
+    /// Human-readable layout string, e.g. `NHWO`.
+    pub fn layout_string(&self) -> String {
+        self.dim_names.join("")
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {}[{}] ({:?})",
+            self.name,
+            self.dtype,
+            self.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x"),
+            self.role
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Tensor {
+        Tensor {
+            id: 0,
+            name: "conv".into(),
+            dim_names: vec!["N".into(), "H".into(), "W".into(), "O".into()],
+            shape: vec![1, 112, 112, 64],
+            dtype: DType::F32,
+            role: Role::Intermediate,
+            producer: Some(3),
+        }
+    }
+
+    #[test]
+    fn sizes() {
+        let x = t();
+        assert_eq!(x.rank(), 4);
+        assert_eq!(x.elements(), 112 * 112 * 64);
+        assert_eq!(x.bytes(), 112 * 112 * 64 * 4);
+        assert_eq!(x.layout_string(), "NHWO");
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::I8.bytes(), 1);
+    }
+}

@@ -1,0 +1,93 @@
+//! Small shared utilities: deterministic RNG, divisor enumeration,
+//! statistics helpers. No external crates — the tuner must be
+//! reproducible bit-for-bit from a seed.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// All divisors of `n`, ascending. Tuning spaces for split factors are
+/// divisor sets (the paper rounds `R(D * a)` to a feasible factor).
+pub fn divisors(n: i64) -> Vec<i64> {
+    assert!(n >= 1, "divisors of non-positive {n}");
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Round `x` to the nearest divisor of `n` (the paper's `R(·)` with the
+/// feasibility projection). Ties round down.
+pub fn round_to_divisor(n: i64, x: f64) -> i64 {
+    let divs = divisors(n);
+    let mut best = divs[0];
+    let mut best_d = f64::INFINITY;
+    for &d in &divs {
+        let dist = (d as f64 - x).abs();
+        if dist < best_d {
+            best_d = dist;
+            best = d;
+        }
+    }
+    best
+}
+
+/// Ceil division for positive integers.
+pub fn ceil_div(a: i64, b: i64) -> i64 {
+    assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Geometric mean of positive values (used by all speedup reports).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.max(1e-30).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert_eq!(divisors(64), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn round_to_divisor_picks_nearest() {
+        assert_eq!(round_to_divisor(32, 0.5 * 32.0), 16);
+        assert_eq!(round_to_divisor(12, 5.0), 4); // 4 and 6 tie -> down
+        assert_eq!(round_to_divisor(12, 5.1), 6);
+        assert_eq!(round_to_divisor(7, 3.0), 1); // only 1 and 7
+        assert_eq!(round_to_divisor(7, 6.0), 7);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,235 @@
+//! Property-based tests (seeded RNG in place of proptest — no external
+//! crates offline) for the layout-transform engine and codegen: the
+//! invariants that make joint tuning sound.
+
+use alt::codegen::{lower_complex, LayoutAssignment};
+use alt::expr::{Expr, Var};
+use alt::graph::models;
+use alt::layout::{DimAccess, LayoutSeq, LayoutTransform, Primitive};
+use alt::loops::LoopSchedule;
+use alt::util::{divisors, Rng};
+
+/// Random *basic* primitive sequence valid for `shape`.
+fn random_basic_seq(shape: &[i64], rng: &mut Rng, len: usize) -> LayoutSeq {
+    let mut seq = LayoutSeq::new();
+    let mut cur = shape.to_vec();
+    for _ in 0..len {
+        match rng.below(3) {
+            0 => {
+                // split a random dim into 2 factors
+                let d = rng.below(cur.len());
+                let divs = divisors(cur[d]);
+                let f = *rng.choose(&divs);
+                seq.push(Primitive::split(d, &[cur[d] / f, f]));
+            }
+            1 => {
+                // random permutation
+                let mut perm: Vec<usize> = (0..cur.len()).collect();
+                rng.shuffle(&mut perm);
+                seq.push(Primitive::reorder(&perm));
+            }
+            _ => {
+                // fuse two adjacent dims
+                if cur.len() >= 2 {
+                    let d = rng.below(cur.len() - 1);
+                    seq.push(Primitive::fuse(d, 2));
+                }
+            }
+        }
+        cur = seq.apply_shape(shape);
+    }
+    seq
+}
+
+/// INVARIANT 1 (Table 1 soundness): for any basic sequence, repacked
+/// data read through the forward-rewritten access equals the original
+/// data read through the logical access — for *every* index.
+#[test]
+fn prop_forward_rewrite_matches_repack() {
+    let mut rng = Rng::new(2024);
+    for trial in 0..40 {
+        let shape = vec![
+            *rng.choose(&[2i64, 3, 4]),
+            *rng.choose(&[4i64, 6, 8]),
+            *rng.choose(&[2i64, 5]),
+        ];
+        let len = 1 + rng.below(4);
+        let seq = random_basic_seq(&shape, &mut rng, len);
+        let tf = LayoutTransform::new(shape.clone(), &seq);
+        let total: i64 = shape.iter().product();
+        let data: Vec<f32> = (0..total).map(|x| x as f32).collect();
+        let packed = tf.repack(&data, &shape, f32::NAN);
+
+        let acc: Vec<DimAccess> =
+            (0..shape.len()).map(|i| DimAccess::Simple(Var(i))).collect();
+        let fwd = tf.rewrite_access(&acc);
+        let new_shape = tf.final_shape().to_vec();
+        // walk the whole logical index space
+        let mut idx = vec![0i64; shape.len()];
+        loop {
+            let mut off = 0i64;
+            for (d, f) in fwd.iter().enumerate() {
+                let v = f.to_expr().eval(&idx);
+                assert!(
+                    v >= 0 && v < new_shape[d],
+                    "trial {trial}: dim {d} OOB ({v} vs {new_shape:?}) seq={seq:?}"
+                );
+                off = off * new_shape[d] + v;
+            }
+            let mut lin = 0i64;
+            for (d, &i) in idx.iter().enumerate() {
+                lin = lin * shape[d] + i;
+            }
+            assert_eq!(
+                packed[off as usize], data[lin as usize],
+                "trial {trial}: value mismatch at {idx:?} seq={seq:?}"
+            );
+            // increment multi-index
+            let mut d = shape.len();
+            loop {
+                if d == 0 {
+                    break;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+            if idx.iter().all(|&i| i == 0) {
+                break;
+            }
+        }
+    }
+}
+
+/// INVARIANT 2 (S · S⁻¹ = id): backward-then-forward over random basic
+/// sequences returns the original storage coordinates.
+#[test]
+fn prop_backward_inverts_forward() {
+    let mut rng = Rng::new(77);
+    for _ in 0..40 {
+        let shape = vec![*rng.choose(&[4i64, 6]), *rng.choose(&[8i64, 12]), 3];
+        let len = 1 + rng.below(3);
+        let seq = random_basic_seq(&shape, &mut rng, len);
+        let tf = LayoutTransform::new(shape.clone(), &seq);
+        let new_shape = tf.final_shape().to_vec();
+        // storage vars -> logical exprs
+        let vars: Vec<Expr> = (0..new_shape.len()).map(Var).collect();
+        let logical = tf.backward(&vars);
+        // forward rewrite of those logical exprs must return the vars
+        let acc: Vec<DimAccess> =
+            logical.iter().map(|e| DimAccess::Simple(e.clone())).collect();
+        let fwd = tf.rewrite_access(&acc);
+        // numeric check over random storage points
+        for _ in 0..50 {
+            let env: Vec<i64> = new_shape
+                .iter()
+                .map(|&e| rng.below(e as usize) as i64)
+                .collect();
+            for (d, f) in fwd.iter().enumerate() {
+                assert_eq!(
+                    f.to_expr().eval(&env),
+                    env[d],
+                    "S(S^-1) != id at {env:?} for seq {seq:?}"
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT 3: unfold repack duplicates but never invents values, and
+/// every (tile, offset) pair maps back into the source extent.
+#[test]
+fn prop_unfold_duplicates_only() {
+    let mut rng = Rng::new(5);
+    for _ in 0..60 {
+        let d = 5 + rng.below(40) as i64;
+        let size = 1 + rng.below(d as usize) as i64;
+        let stride = 1 + rng.below(size as usize) as i64;
+        let mut seq = LayoutSeq::new();
+        seq.push(Primitive::unfold(0, size, stride));
+        let tf = LayoutTransform::new(vec![d], &seq);
+        let data: Vec<f32> = (0..d).map(|x| x as f32).collect();
+        let packed = tf.repack(&data, &[d], f32::NAN);
+        // no NaN (every slot filled from source), all values from data
+        for v in &packed {
+            assert!(!v.is_nan());
+            assert!(*v >= 0.0 && *v < d as f32);
+        }
+        // every source element appears at least once
+        let mut seen = vec![false; d as usize];
+        for v in &packed {
+            seen[*v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "lost elements: B={size} S={stride} D={d}");
+    }
+}
+
+/// INVARIANT 4: any (random layout, random schedule) pair lowers to a
+/// program whose accesses stay in bounds across the iteration space.
+#[test]
+fn prop_codegen_in_bounds_under_random_layout_and_schedule() {
+    let mut rng = Rng::new(31337);
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let out = g.node(conv).output;
+    let out_shape = g.tensor(out).shape.clone();
+    for trial in 0..25 {
+        let len = 1 + rng.below(3);
+        let seq = random_basic_seq(&out_shape, &mut rng, len);
+        let storage = seq.apply_shape(&out_shape);
+        let mut layouts = LayoutAssignment::identity(&g);
+        layouts.set(out, seq.clone());
+        let mut sched = LoopSchedule::identity(&storage, &[3, 7, 7]);
+        sched.spatial_tiles = storage
+            .iter()
+            .map(|&e| *rng.choose(&divisors(e)))
+            .collect();
+        sched.reduction_tiles =
+            vec![3, 7, 7].iter().map(|&e| *rng.choose(&divisors(e))).collect();
+        sched.vectorize = rng.uniform() < 0.5;
+        sched.parallel = rng.below(3);
+        let p = lower_complex(&g, conv, &layouts, &sched, &[], 16);
+        let extents: Vec<i64> = p.loops.iter().map(|l| l.extent).collect();
+        // total iteration count must be invariant under scheduling
+        let spatial_total: f64 = storage.iter().map(|&e| e as f64).product();
+        assert!(
+            (p.total_iters() - spatial_total * (3.0 * 7.0 * 7.0)).abs() < 1.0,
+            "trial {trial}: iteration count changed"
+        );
+        for _ in 0..120 {
+            let env: Vec<i64> = extents
+                .iter()
+                .map(|&e| rng.below(e as usize) as i64)
+                .collect();
+            for a in &p.accesses {
+                let total: i64 = a.storage_shape.iter().product();
+                let f = a.flat().eval(&env);
+                assert!(
+                    f >= 0 && f < total,
+                    "trial {trial}: OOB {f}/{total} seq={seq:?}"
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT 5: layout transforms preserve element count for basic
+/// sequences (no silent data growth), and only grow it for advanced.
+#[test]
+fn prop_basic_seq_preserves_element_count() {
+    let mut rng = Rng::new(64);
+    for _ in 0..60 {
+        let shape = vec![*rng.choose(&[2i64, 4]), 6, *rng.choose(&[8i64, 10])];
+        let len = 1 + rng.below(4);
+        let seq = random_basic_seq(&shape, &mut rng, len);
+        let out = seq.apply_shape(&shape);
+        assert_eq!(
+            out.iter().product::<i64>(),
+            shape.iter().product::<i64>(),
+            "basic seq changed element count: {seq:?}"
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Runtime integration: load the AOT HLO artifacts on the PJRT CPU
+//! client and execute them — the rust side of the three-layer contract.
+//! Skips (with a loud message) when `make artifacts` hasn't run.
+
+use std::path::Path;
+
+use alt::runtime::{random_input, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let entries = rt.entries();
+    for required in [
+        "model",
+        "case_nhwo",
+        "case_nohw",
+        "case_tiled",
+        "case_tiled_untile",
+        "gmm_store_at",
+        "gmm_tiled",
+    ] {
+        assert!(
+            entries.iter().any(|e| e == required),
+            "missing artifact {required}; have {entries:?}"
+        );
+    }
+}
+
+#[test]
+fn quickstart_model_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("model").expect("load model");
+    let inputs: Vec<Vec<f32>> = exe
+        .spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| random_input(s, i as u64))
+        .collect();
+    let stats = exe.run(&inputs).expect("run");
+    // R18 layer 1: 1x112x112x64 output
+    assert_eq!(stats.output_elems, 112 * 112 * 64);
+    assert!(stats.latency_ms > 0.0);
+    // ReLU output: non-negative
+    assert!(stats.sample.iter().all(|v| *v >= 0.0));
+}
+
+#[test]
+fn tiled_pallas_variant_matches_reference_numerics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let nhwo = rt.load("case_nhwo").expect("load");
+    let tiled = rt.load("case_tiled_untile").expect("load");
+    let inputs: Vec<Vec<f32>> = nhwo
+        .spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| random_input(s, 40 + i as u64))
+        .collect();
+    let a = nhwo.run(&inputs).expect("run nhwo");
+    let b = tiled.run(&inputs).expect("run tiled");
+    assert_eq!(a.output_elems, b.output_elems);
+    for (x, y) in a.sample.iter().zip(&b.sample) {
+        assert!(
+            (x - y).abs() < 1e-2 * (1.0 + x.abs()),
+            "numeric drift: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn gmm_store_at_artifact_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("gmm_store_at").expect("load");
+    let inputs: Vec<Vec<f32>> = exe
+        .spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| random_input(s, 80 + i as u64))
+        .collect();
+    let stats = exe.run(&inputs).expect("run");
+    assert_eq!(stats.output_elems, 128 * 512);
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.load("nonexistent").is_err());
+}
