@@ -2,16 +2,27 @@
 //!
 //! Measures the three dominant costs of one "measurement" unit:
 //! program lowering (codegen), simulation (device model), and
-//! cost-model feature extraction + prediction — plus the end-to-end
-//! measurements/second the tuner achieves. EXPERIMENTS.md §Perf
-//! tracks these numbers before/after optimization.
+//! cost-model feature extraction + prediction — plus the throughput of
+//! the candidate-evaluation engine (candidates/sec for the full
+//! `lower → featurize → predict → simulate` pipeline, serial vs
+//! parallel vs memo-warm) and the end-to-end measurements/second the
+//! tuner achieves. Engine numbers are also written to
+//! `BENCH_engine.json` (override the path with `BENCH_ENGINE_JSON`);
+//! `scripts/bench_engine.sh` wraps this.
 
+use std::collections::HashSet;
+use std::time::Instant;
+
+use alt::autotune::LoopSpace;
 use alt::bench::harness::time_fn;
 use alt::codegen::{lower_complex, LayoutAssignment};
 use alt::cost::CostModel;
+use alt::engine::{Engine, EvalContext};
 use alt::graph::models;
 use alt::loops::LoopSchedule;
+use alt::propagate::{propagate, PropMode};
 use alt::sim::{simulate_program, HwProfile};
+use alt::util::Rng;
 
 fn main() {
     let g = models::case_study();
@@ -67,7 +78,59 @@ fn main() {
     println!("per-measurement: {:.3} ms  ({:.0} measurements/s)",
         per_meas, 1000.0 / per_meas);
 
-    // end-to-end: one tuning round of the real tuner
+    // --- engine throughput: candidates/sec through the full pipeline ---
+    // distinct candidates so cold runs contain no accidental memo hits
+    let prop = propagate(&g, &[], PropMode::Alt);
+    let space = LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+    let mut rng = Rng::new(7);
+    let mut seen = HashSet::new();
+    let mut cands: Vec<LoopSchedule> = Vec::new();
+    while cands.len() < 256 {
+        let pt = space.random_point(&mut rng);
+        if seen.insert(pt.clone()) {
+            cands.push(space.decode(&pt));
+        }
+    }
+    let ctx = EvalContext::new(&g, conv, &prop, &hw);
+    let n = cands.len() as f64;
+
+    let bench_engine = |engine: &Engine| -> f64 {
+        let t0 = Instant::now();
+        std::hint::black_box(engine.pipeline_batch(&ctx, &cands, &cm));
+        n / t0.elapsed().as_secs_f64()
+    };
+
+    // untimed warm-up pass on a throwaway engine: populates the
+    // process-global expr interner / simplify memo so the timed serial
+    // and parallel runs see identical global-cache state — the
+    // speedup then isolates threading, not cache warmth. Each timed
+    // engine still starts with a cold candidate memo of its own.
+    Engine::serial().pipeline_batch(&ctx, &cands, &cm);
+
+    let serial = Engine::serial();
+    let serial_cps = bench_engine(&serial);
+    let parallel = Engine::new(0);
+    let parallel_cps = bench_engine(&parallel);
+    let before_warm = parallel.stats();
+    let warm_cps = bench_engine(&parallel); // same engine: 100% memo hits
+    let speedup = parallel_cps / serial_cps;
+    let warm_stats = parallel.stats().since(&before_warm); // warm-run delta
+
+    println!("\n== engine (candidates/sec, {} candidates) ==", cands.len());
+    println!("serial (1 thread):      {:.0} cand/s", serial_cps);
+    println!(
+        "parallel ({} threads):  {:.0} cand/s  ({:.2}x)",
+        parallel.threads(),
+        parallel_cps,
+        speedup
+    );
+    println!(
+        "memo-warm re-run:       {:.0} cand/s  (hit rate {:.0}%)",
+        warm_cps,
+        warm_stats.hit_rate() * 100.0
+    );
+
+    // end-to-end: one tuning run of the real tuner (parallel engine)
     let t0 = std::time::Instant::now();
     let opts = alt::autotune::TuneOptions {
         budget: 48,
@@ -75,10 +138,45 @@ fn main() {
     };
     let r = alt::autotune::tuner::tune_op(&g, conv, &hw, &opts);
     let el = t0.elapsed().as_secs_f64();
+    let tune_meas_per_s = r.measurements as f64 / el;
     println!(
-        "tune_op(48 measurements): {:.2} s  ({:.0} meas/s), best {:.4} ms",
+        "\ntune_op(48 measurements): {:.2} s  ({:.0} meas/s), best {:.4} ms, \
+         memo hit rate {:.0}%",
         el,
-        r.measurements as f64 / el,
-        r.best_ms
+        tune_meas_per_s,
+        r.best_ms,
+        r.engine.hit_rate() * 100.0
     );
+
+    // machine-readable report for scripts/bench_engine.sh / CI trending
+    let path = std::env::var("BENCH_ENGINE_JSON")
+        .unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    let json = format!(
+        "{{\n  \"candidates\": {},\n  \"threads\": {},\n  \
+         \"serial_cand_per_sec\": {:.1},\n  \
+         \"parallel_cand_per_sec\": {:.1},\n  \
+         \"parallel_speedup\": {:.3},\n  \
+         \"memo_warm_cand_per_sec\": {:.1},\n  \
+         \"memo_hit_rate\": {:.4},\n  \
+         \"tune_op_meas_per_sec\": {:.1},\n  \
+         \"tune_op_memo_hit_rate\": {:.4},\n  \
+         \"lower_ms\": {:.4},\n  \"simulate_ms\": {:.4},\n  \
+         \"predict_ms\": {:.4}\n}}\n",
+        cands.len(),
+        parallel.threads(),
+        serial_cps,
+        parallel_cps,
+        speedup,
+        warm_cps,
+        warm_stats.hit_rate(),
+        tune_meas_per_s,
+        r.engine.hit_rate(),
+        lower_ms,
+        sim_ms,
+        predict_ms,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("engine report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

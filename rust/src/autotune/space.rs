@@ -154,6 +154,15 @@ impl LoopSpace {
         s
     }
 
+    /// Decode a whole candidate batch (the engine evaluates rounds as
+    /// batches; decoding up front keeps the parallel stage pure).
+    pub fn decode_batch<'a>(
+        &self,
+        points: impl IntoIterator<Item = &'a Point>,
+    ) -> Vec<LoopSchedule> {
+        points.into_iter().map(|p| self.decode(p)).collect()
+    }
+
     /// Total option count for a point dimension.
     pub fn n_options(&self, dim: usize) -> usize {
         self.options[dim].len()
@@ -230,6 +239,17 @@ mod tests {
             for (t, e) in d.reduction_tiles.iter().zip(&s.reduction) {
                 assert_eq!(e % t, 0);
             }
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_single_decode() {
+        let mut rng = Rng::new(9);
+        let s = LoopSpace::new(&[8, 16], &[4]);
+        let pts: Vec<Point> = (0..8).map(|_| s.random_point(&mut rng)).collect();
+        let batch = s.decode_batch(pts.iter());
+        for (p, d) in pts.iter().zip(&batch) {
+            assert_eq!(*d, s.decode(p));
         }
     }
 

@@ -15,19 +15,27 @@
 //! measurement (here: one simulator evaluation of a lowered program);
 //! candidates are pre-ranked by the cost model and only the top-k of
 //! each batch are measured (§5.2.3).
+//!
+//! Candidate evaluation — lowering, feature extraction, prediction and
+//! simulation — runs on the [`crate::engine`] worker pool: each round's
+//! batch is lowered in parallel and the measured top-k simulated in
+//! parallel, with cross-round memoization deduplicating the candidates
+//! that PPO walks and joint-stage space reconstruction revisit. The
+//! trajectory is bit-for-bit identical for any `TuneOptions::threads`
+//! value (results are consumed in submission order and the cost model
+//! is updated serially), so parallelism is purely a throughput knob.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::autotune::ppo::{gae, CategoricalActor, Critic, GaussianActor, Transition};
 use crate::autotune::space::LoopSpace;
 use crate::autotune::template;
-use crate::codegen::lower_complex;
+use crate::engine::{Engine, EngineStats, EvalContext};
 use crate::graph::{Graph, NodeId};
 use crate::loops::LoopSchedule;
 use crate::propagate::{propagate, ComplexDecision, PropMode, PropagationResult};
-use crate::sim::netsim::{simulate_graph, GraphReport};
-use crate::sim::{simulate_program, HwProfile};
-use crate::cost::CostModel;
+use crate::sim::netsim::{simulate_graph_with, GraphReport};
+use crate::sim::HwProfile;
 use crate::util::Rng;
 
 /// Fixed state-vector width fed to all agents (padded/truncated).
@@ -41,7 +49,7 @@ fn pad_state(mut v: Vec<f64>) -> Vec<f64> {
 
 /// Tuning configuration. The paper's full-scale settings (budget 1,000
 /// single-op / 20,000 end-to-end, batch 128, top-8) are scaled down by
-/// default so benches finish on one core; ratios are preserved.
+/// default so benches finish quickly; ratios are preserved.
 #[derive(Clone, Debug)]
 pub struct TuneOptions {
     /// Total simulated-measurement budget for this op/graph.
@@ -60,6 +68,9 @@ pub struct TuneOptions {
     pub levels: usize,
     pub seed: u64,
     pub mode: PropMode,
+    /// Candidate-evaluation worker threads (0 = one per core, 1 =
+    /// serial). Any value yields an identical tuning result.
+    pub threads: usize,
 }
 
 impl Default for TuneOptions {
@@ -73,6 +84,7 @@ impl Default for TuneOptions {
             levels: 1,
             seed: 0,
             mode: PropMode::Alt,
+            threads: 0,
         }
     }
 }
@@ -91,50 +103,9 @@ pub struct OpTuneResult {
     pub id_ms: f64,
     /// best latency of the joint-stage winning layout track, if any
     pub alt_ms: f64,
-}
-
-/// Evaluate one (decision, schedule) candidate on the simulator.
-fn measure(
-    graph: &Graph,
-    node: NodeId,
-    prop: &PropagationResult,
-    sched: &LoopSchedule,
-    hw: &HwProfile,
-    cost: &mut CostModel,
-) -> f64 {
-    let tail = prop.fused_tails.get(&node).cloned().unwrap_or_default();
-    let p = lower_complex(graph, node, &prop.layouts, sched, &tail, hw.simd_lanes);
-    let r = simulate_program(&p, hw);
-    let mut ms = r.latency_ms;
-    // Charge the conversions this op's layout decisions force, so the
-    // tuner internalizes exactly what the graph simulator will charge:
-    // * un-absorbed (Fig. 5a): a standalone strided repack op;
-    // * absorbed (Fig. 5b): the *delta* of the producer writing the
-    //   transformed (possibly expanded) layout with strided stores
-    //   instead of its plain contiguous output.
-    for c in &prop.conversions {
-        let t = graph.tensor(c.tensor);
-        let plain = t.bytes() as f64;
-        let expanded = {
-            let base = crate::codegen::layout_base_shape(graph, c.tensor);
-            let tf = crate::layout::LayoutTransform::new(base, &c.to);
-            tf.final_shape().iter().product::<i64>() as f64
-                * t.dtype.bytes() as f64
-        };
-        // Repacks copy long contiguous runs on at least one side
-        // (tiles are large blocks), so they are bandwidth-bound like a
-        // memcpy — the paper measures single-digit microseconds.
-        if c.absorbed_by.is_none() {
-            let conv = crate::sim::simulate_streaming(plain, expanded, true, hw);
-            ms += conv.latency_ms;
-        } else {
-            let with = crate::sim::simulate_streaming(plain, expanded, true, hw);
-            let without = crate::sim::simulate_streaming(plain, plain, true, hw);
-            ms += (with.latency_ms - without.latency_ms).max(0.0);
-        }
-    }
-    cost.observe(&p, r.latency_ms);
-    ms
+    /// candidate-eval engine counters for this op's run (memo hit rate
+    /// is the dedup win over re-lowering every candidate)
+    pub engine: EngineStats,
 }
 
 /// A loop-tuning context for one fixed layout: space + PPO walk state
@@ -143,7 +114,7 @@ fn measure(
 struct LoopTuning {
     space: LoopSpace,
     actor: CategoricalActor,
-    cost: CostModel,
+    cost: crate::cost::CostModel,
     best_point: Vec<usize>,
     best_ms: f64,
 }
@@ -154,7 +125,7 @@ impl LoopTuning {
         let n = space.n_dims();
         Self {
             actor: CategoricalActor::new(STATE_DIM, 2 * n, rng),
-            cost: CostModel::new(),
+            cost: crate::cost::CostModel::new(),
             // structured (Ansor-sketch-style) starting point; measured
             // in the first round as the incumbent candidate
             best_point: space.heuristic_point(simd_lanes),
@@ -165,6 +136,7 @@ impl LoopTuning {
 
     /// One round: sample a batch of candidates (PPO-guided walk from the
     /// incumbent + random restarts), rank by cost model, measure top-k.
+    /// Lowering and simulation are batched onto the engine pool.
     #[allow(clippy::too_many_arguments)]
     fn round(
         &mut self,
@@ -172,12 +144,14 @@ impl LoopTuning {
         node: NodeId,
         prop: &PropagationResult,
         hw: &HwProfile,
+        engine: &Engine,
         critic: &mut Critic,
         opts: &TuneOptions,
         rng: &mut Rng,
         used: &mut usize,
         history: &mut Vec<f64>,
     ) {
+        let ctx = EvalContext::new(graph, node, prop, hw);
         let mut cands: Vec<(Vec<usize>, Option<(usize, f64, Vec<f64>)>)> = Vec::new();
         // candidate 0: the incumbent itself (guarantees the heuristic
         // start is measured in round one)
@@ -213,24 +187,15 @@ impl LoopTuning {
                 cands.push((p, last));
             }
         }
-        // rank by predicted latency
-        let mut scored: Vec<(usize, f64)> = cands
+        // rank by predicted latency: batch-lower on the engine pool
+        // (memoized across rounds), then predict from cached features
+        let mut scheds =
+            self.space.decode_batch(cands.iter().map(|(p, _)| p));
+        let entries = engine.lower_batch(&ctx, &scheds);
+        let mut scored: Vec<(usize, f64)> = entries
             .iter()
             .enumerate()
-            .map(|(i, (p, _))| {
-                let sched = self.space.decode(p);
-                let tail =
-                    prop.fused_tails.get(&node).cloned().unwrap_or_default();
-                let prog = lower_complex(
-                    graph,
-                    node,
-                    &prop.layouts,
-                    &sched,
-                    &tail,
-                    hw.simd_lanes,
-                );
-                (i, self.cost.predict(&prog))
-            })
+            .map(|(i, e)| (i, self.cost.predict_features(e.features(), e.program())))
             .collect();
         scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
 
@@ -238,8 +203,10 @@ impl LoopTuning {
         // latency + one reserved exploration pick uniform over the rest
         // (prevents cost-model blind spots from trapping the walk)
         let mut to_measure: Vec<usize> = Vec::new();
+        let mut chosen: HashSet<usize> = HashSet::new();
         if !self.best_ms.is_finite() {
             to_measure.push(0); // the incumbent candidate
+            chosen.insert(0);
         }
         let model_slots = if opts.top_k > 2 {
             opts.top_k - 2
@@ -250,7 +217,7 @@ impl LoopTuning {
             if to_measure.len() >= model_slots {
                 break;
             }
-            if !to_measure.contains(&i) {
+            if chosen.insert(i) {
                 to_measure.push(i);
             }
         }
@@ -258,32 +225,54 @@ impl LoopTuning {
             let rest: Vec<usize> = scored
                 .iter()
                 .map(|&(i, _)| i)
-                .filter(|i| !to_measure.contains(i))
+                .filter(|i| !chosen.contains(i))
                 .collect();
             if !rest.is_empty() {
-                to_measure.push(rest[rng.below(rest.len())]);
+                let pick = rest[rng.below(rest.len())];
+                chosen.insert(pick);
+                to_measure.push(pick);
             }
         }
         if opts.top_k > 2 {
             // dedicated sketch slot: measure one canonical tiling per
             // round regardless of the cost model's opinion (GBTs
             // extrapolate poorly into unseen tile regimes)
-            cands.push((self.space.sketch_point(hw.simd_lanes, rng), None));
+            let p = self.space.sketch_point(hw.simd_lanes, rng);
+            scheds.push(self.space.decode(&p));
+            cands.push((p, None));
             to_measure.push(cands.len() - 1);
         }
         let u = if self.best_ms.is_finite() { self.best_ms * 1.5 } else { 1.0 };
+
+        // simulate the selected candidates in parallel, then fold the
+        // results back in selection order (identical cost-model update
+        // sequence and best-so-far trace for any thread count). Reuse
+        // the entries the ranking stage already looked up — only the
+        // appended sketch candidate needs a fresh memo lookup — so the
+        // engine's hit counters witness cross-round dedup, not this
+        // round's second stage re-touching its own keys.
+        let m_entries: Vec<std::sync::Arc<crate::engine::EvalEntry>> = to_measure
+            .iter()
+            .map(|&i| {
+                if i < entries.len() {
+                    entries[i].clone()
+                } else {
+                    engine.eval(&ctx, &scheds[i])
+                }
+            })
+            .collect();
+        let measured = engine.measure_entries(&ctx, &m_entries);
         let mut batch_tr: Vec<Transition> = Vec::new();
-        for &i in to_measure.iter() {
-            let (p, meta) = &cands[i];
-            let sched = self.space.decode(p);
-            let ms = measure(graph, node, prop, &sched, hw, &mut self.cost);
+        for (&i, m) in to_measure.iter().zip(&measured) {
+            let ms = m.total_ms;
+            self.cost.observe_features(m.entry.features().as_ref().clone(), m.raw_ms);
             *used += 1;
             if ms < self.best_ms {
                 self.best_ms = ms;
-                self.best_point = p.clone();
+                self.best_point = cands[i].0.clone();
             }
             history.push(self.best_ms);
-            if let Some((a, logp, st)) = meta {
+            if let Some((a, logp, st)) = &cands[i].1 {
                 batch_tr.push(Transition {
                     state: st.clone(),
                     action: vec![],
@@ -334,13 +323,28 @@ fn nest_dims(
     (storage, reduction)
 }
 
-/// Tune one complex operator with the two-stage cross-exploration.
+/// Tune one complex operator with the two-stage cross-exploration,
+/// creating a fresh candidate-eval engine sized by `opts.threads`.
 pub fn tune_op(
     graph: &Graph,
     node: NodeId,
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> OpTuneResult {
+    let engine = Engine::new(opts.threads);
+    tune_op_with(graph, node, hw, opts, &engine)
+}
+
+/// [`tune_op`] against a caller-provided engine, so graph-level tuning
+/// shares one memo cache across all ops.
+pub fn tune_op_with(
+    graph: &Graph,
+    node: NodeId,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+    engine: &Engine,
+) -> OpTuneResult {
+    let stats0 = engine.stats();
     let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x9E37));
     let mut critic = Critic::new(STATE_DIM, &mut rng);
     let np = template::n_params(graph, node, opts.levels);
@@ -363,7 +367,7 @@ pub fn tune_op(
     let (sp0, rd0) = nest_dims(graph, node, &id_prop);
     let mut id_lt = LoopTuning::new(&sp0, &rd0, hw.simd_lanes, &mut rng);
     id_lt.round(
-        graph, node, &id_prop, hw, &mut critic, opts, &mut rng,
+        graph, node, &id_prop, hw, engine, &mut critic, opts, &mut rng,
         &mut used, &mut history,
     );
 
@@ -391,7 +395,7 @@ pub fn tune_op(
                     break;
                 }
                 lt.round(
-                    graph, node, &prop, hw, &mut critic, opts,
+                    graph, node, &prop, hw, engine, &mut critic, opts,
                     &mut rng, &mut used, &mut history,
                 );
             }
@@ -446,13 +450,13 @@ pub fn tune_op(
             if let Some((lt, _, prop)) = &mut alt_lt {
                 let prop = prop.clone();
                 lt.round(
-                    graph, node, &prop, hw, &mut critic, opts,
+                    graph, node, &prop, hw, engine, &mut critic, opts,
                     &mut rng, &mut used, &mut history,
                 );
             }
         } else {
             id_lt.round(
-                graph, node, &id_prop, hw, &mut critic, opts,
+                graph, node, &id_prop, hw, engine, &mut critic, opts,
                 &mut rng, &mut used, &mut history,
             );
         }
@@ -476,6 +480,7 @@ pub fn tune_op(
         history,
         id_ms,
         alt_ms,
+        engine: engine.stats().since(&stats0),
     }
 }
 
@@ -497,6 +502,8 @@ pub fn tune_loops(
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> OpTuneResult {
+    let engine = Engine::new(opts.threads);
+    let stats0 = engine.stats();
     let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x517));
     let mut critic = Critic::new(STATE_DIM, &mut rng);
     let prop = propagate(graph, std::slice::from_ref(decision), opts.mode);
@@ -506,7 +513,7 @@ pub fn tune_loops(
     let mut history = Vec::new();
     while used < opts.budget {
         lt.round(
-            graph, node, &prop, hw, &mut critic, opts, &mut rng,
+            graph, node, &prop, hw, &engine, &mut critic, opts, &mut rng,
             &mut used, &mut history,
         );
     }
@@ -520,6 +527,7 @@ pub fn tune_loops(
         history,
         id_ms: lt.best_ms,
         alt_ms: f64::INFINITY,
+        engine: engine.stats().since(&stats0),
     }
 }
 
@@ -530,16 +538,21 @@ pub struct GraphTuneResult {
     pub scheds: HashMap<NodeId, LoopSchedule>,
     pub report: GraphReport,
     pub measurements: usize,
+    /// cumulative engine counters across all ops + the final graph sim
+    pub engine: EngineStats,
 }
 
 /// Tune every complex operator of a graph sequentially in topological
 /// order (the §6 joint-stage order), then simulate the whole network
-/// under the propagated layouts.
+/// under the propagated layouts. One engine (and memo cache) spans the
+/// entire run, so the final graph simulation re-uses programs the
+/// per-op tuning already lowered.
 pub fn tune_graph(
     graph: &Graph,
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> GraphTuneResult {
+    let engine = Engine::new(opts.threads);
     let complex = graph.complex_nodes();
     // per-op floor: below ~128 measurements the joint stage cannot act,
     // so graph tuning guarantees each op a meaningful slice (total
@@ -552,20 +565,28 @@ pub fn tune_graph(
     for &node in &complex {
         let mut o = opts.clone();
         o.budget = per_op;
-        let r = tune_op(graph, node, hw, &o);
+        let r = tune_op_with(graph, node, hw, &o, &engine);
         measurements += r.measurements;
         scheds.insert(node, r.sched);
         decisions.push(r.decision);
     }
     let prop = propagate(graph, &decisions, opts.mode);
-    let report = simulate_graph(graph, &prop, &scheds, hw);
-    GraphTuneResult { decisions, scheds, report, measurements }
+    let report = simulate_graph_with(graph, &prop, &scheds, hw, &engine);
+    GraphTuneResult {
+        decisions,
+        scheds,
+        report,
+        measurements,
+        engine: engine.stats(),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::lower_complex;
     use crate::graph::models;
+    use crate::sim::simulate_program;
 
     fn small_opts(budget: usize) -> TuneOptions {
         TuneOptions { budget, ..Default::default() }
@@ -632,5 +653,18 @@ mod tests {
         let r = tune_graph(&g, &hw, &small_opts(40));
         assert_eq!(r.decisions.len(), 2);
         assert!(r.report.latency_ms() > 0.0);
+        // the incumbent is re-measured every round: the shared memo
+        // cache must see repeats
+        assert!(r.engine.hits > 0, "memo never hit: {:?}", r.engine);
+    }
+
+    #[test]
+    fn memo_dedups_within_one_op() {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let r = tune_op(&g, conv, &HwProfile::intel(), &small_opts(60));
+        let total = r.engine.hits + r.engine.misses;
+        assert!(total > 0);
+        assert!(r.engine.hits > 0, "expected duplicate candidates: {:?}", r.engine);
     }
 }

@@ -122,6 +122,29 @@ impl LayoutAssignment {
     pub fn is_identity(&self, t: TensorId) -> bool {
         self.get(t).is_identity()
     }
+
+    /// Deterministic content hash over all non-identity sequences and
+    /// read overrides — the layout component of the candidate-eval
+    /// engine's memoization key. Two assignments that lower every node
+    /// identically hash equal regardless of construction order.
+    pub fn content_hash(&self) -> u64 {
+        use std::hash::Hash;
+        let mut h = crate::util::StableHasher::new();
+        for (t, s) in self.seqs.iter().enumerate() {
+            if let Some(s) = s {
+                if !s.is_identity() {
+                    (t, s).hash(&mut h);
+                }
+            }
+        }
+        let mut ov: Vec<(&(NodeId, TensorId), &LayoutSeq)> =
+            self.read_overrides.iter().collect();
+        ov.sort_by_key(|(k, _)| **k);
+        for (k, s) in ov {
+            (k, s).hash(&mut h);
+        }
+        std::hash::Hasher::finish(&h)
+    }
 }
 
 /// The logical iteration structure of a complex op before layout

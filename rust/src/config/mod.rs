@@ -60,7 +60,7 @@ impl Config {
 
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
-    /// `seed`, `mode`).
+    /// `seed`, `mode`, `threads`).
     pub fn tune_options(&self) -> Result<TuneOptions, String> {
         let d = TuneOptions::default();
         let mode = match self.get("mode").unwrap_or("alt") {
@@ -81,6 +81,7 @@ impl Config {
             levels: self.get_usize("levels", d.levels).clamp(1, 2),
             seed: self.get_u64("seed", d.seed),
             mode,
+            threads: self.get_usize("threads", d.threads),
         })
     }
 }
@@ -124,6 +125,14 @@ mod tests {
         let o = c.tune_options().unwrap();
         assert_eq!(o.mode, PropMode::Alt);
         assert_eq!(o.budget, TuneOptions::default().budget);
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let c = Config::parse("threads = 3").unwrap();
+        assert_eq!(c.tune_options().unwrap().threads, 3);
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.tune_options().unwrap().threads, 0); // auto
     }
 
     #[test]

@@ -1,0 +1,565 @@
+//! Parallel candidate-evaluation engine.
+//!
+//! ALT's joint tuning loop is measurement-bound: every candidate costs
+//! one pass of `lower_complex → feature extraction → cost-model predict
+//! → simulate_program`, and the tuner runs thousands of them. This
+//! module turns that inner loop into a batched, multi-core pipeline in
+//! the spirit of TVM/Ansor's parallel measurement infrastructure:
+//!
+//! * **Worker pool** — [`Engine::run`] fans a batch of independent
+//!   candidate evaluations across a scoped-thread pool
+//!   (`std::thread::scope`, no external crates). Results come back in
+//!   submission order, so every caller is bit-for-bit deterministic
+//!   regardless of thread count — the property the determinism test in
+//!   `tests/engine.rs` pins down.
+//! * **Cross-round memoization** — duplicate candidates recur heavily:
+//!   the incumbent point is re-measured every round, PPO walks revisit
+//!   neighbours, and joint-stage layout proposals re-explore the same
+//!   loop space. [`Engine`] caches the lowered [`Program`], its feature
+//!   vector, and (lazily) its [`SimReport`] keyed by
+//!   `(node, layout-assignment hash, loop schedule)`, so no candidate
+//!   is ever lowered or simulated twice per engine lifetime.
+//!
+//! ### Memoization key derivation
+//!
+//! A lowered program is a pure function of `(graph, node, layout
+//! assignment, fused tail, schedule, SIMD lanes)`. All but the
+//! schedule fold into [`EvalContext::key_base`]: a
+//! [`crate::util::stable_hash`] over the node id, the
+//! [`LayoutAssignment::content_hash`] (all non-identity sequences +
+//! read overrides), the fused tail, the hardware profile (its `Debug`
+//! rendering covers every model parameter), and a graph fingerprint
+//! covering exactly the neighbourhood lowering reads — so one engine
+//! may safely outlive a graph. The schedule is kept *structurally* in
+//! the key — schedules are tiny and exact comparison removes any
+//! chance of a hash collision along the dimension that actually
+//! varies per candidate.
+//!
+//! Cost-model *predictions* are deliberately **not** cached: the model
+//! retrains online, so predictions must always go through the current
+//! ensemble (cached feature vectors make them cheap). Only
+//! deterministic pure stages are memoized, which is what keeps the
+//! parallel engine's tuning trajectory identical to the serial one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::codegen::{lower_complex, Program};
+use crate::cost::{extract_features, CostModel};
+use crate::graph::{Graph, NodeId};
+use crate::layout::LayoutTransform;
+use crate::loops::LoopSchedule;
+use crate::propagate::PropagationResult;
+use crate::sim::{simulate_program, simulate_streaming, HwProfile, SimReport};
+use crate::util::stable_hash;
+
+/// One fully-evaluated candidate: the lowered program, its cost-model
+/// features, and (once a measurement stage ran) its simulation report.
+/// Both stages fill lazily through `OnceLock`, so two workers racing
+/// on the same candidate coordinate on one computation instead of
+/// duplicating it.
+#[derive(Debug)]
+pub struct EvalEntry {
+    lowered: OnceLock<Lowered>,
+    report: OnceLock<SimReport>,
+}
+
+#[derive(Debug)]
+struct Lowered {
+    program: Arc<Program>,
+    features: Arc<Vec<f64>>,
+}
+
+impl EvalEntry {
+    fn empty() -> Self {
+        Self { lowered: OnceLock::new(), report: OnceLock::new() }
+    }
+
+    fn lowered(&self) -> &Lowered {
+        self.lowered.get().expect("entry handed out before lowering")
+    }
+
+    /// The lowered program (initialized before any caller sees the entry).
+    pub fn program(&self) -> &Arc<Program> {
+        &self.lowered().program
+    }
+
+    /// The cost-model feature vector of the lowered program.
+    pub fn features(&self) -> &Arc<Vec<f64>> {
+        &self.lowered().features
+    }
+
+    /// The simulation report, if this candidate was ever measured.
+    pub fn report(&self) -> Option<&SimReport> {
+        self.report.get()
+    }
+}
+
+/// A measured candidate: raw nest latency plus the total including the
+/// layout-conversion charges of the evaluation context.
+#[derive(Clone, Debug)]
+pub struct Measured {
+    pub entry: Arc<EvalEntry>,
+    /// `simulate_program` latency of the nest alone (what the cost
+    /// model trains on, matching the serial tuner).
+    pub raw_ms: f64,
+    /// Nest latency plus conversion charges (what the tuner ranks by).
+    pub total_ms: f64,
+}
+
+/// Monotonic counters snapshot; `hits / (hits + misses)` is the memo
+/// hit rate over the engine lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Candidate evaluations answered from the memo cache.
+    pub hits: u64,
+    /// Candidate evaluations that had to lower + featurize.
+    pub misses: u64,
+    /// `simulate_program` executions (≤ misses once warm).
+    pub simulated: u64,
+}
+
+impl EngineStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter delta since an earlier snapshot of the same engine.
+    pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            simulated: self.simulated - earlier.simulated,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    simulated: AtomicU64,
+}
+
+/// Everything fixed across one batch of candidates: the operator being
+/// tuned, the propagated layout assignment, the device model, and the
+/// precomputed conversion charges that assignment forces.
+pub struct EvalContext<'a> {
+    pub graph: &'a Graph,
+    pub node: NodeId,
+    pub prop: &'a PropagationResult,
+    pub hw: &'a HwProfile,
+    tail: Vec<NodeId>,
+    /// Conversion latency terms in graph order; applied to each
+    /// candidate with left-to-right addition so totals stay bitwise
+    /// identical to the historical serial accumulation.
+    conv_terms: Vec<f64>,
+    /// Hash over (node, layouts, tail, hardware, graph) — see module
+    /// docs.
+    key_base: u64,
+}
+
+impl<'a> EvalContext<'a> {
+    /// Context for tuning `node`, charging the conversions its layout
+    /// decisions force (the tuner's reward signal, Fig. 5).
+    pub fn new(
+        graph: &'a Graph,
+        node: NodeId,
+        prop: &'a PropagationResult,
+        hw: &'a HwProfile,
+    ) -> Self {
+        let mut ctx = Self::for_node(graph, node, prop, hw);
+        ctx.conv_terms = conversion_terms(graph, prop, hw);
+        ctx
+    }
+
+    /// Context without conversion charges (whole-graph simulation
+    /// accounts for conversions as explicit graph-level ops instead).
+    pub fn for_node(
+        graph: &'a Graph,
+        node: NodeId,
+        prop: &'a PropagationResult,
+        hw: &'a HwProfile,
+    ) -> Self {
+        let tail = prop.fused_tails.get(&node).cloned().unwrap_or_default();
+        // One engine may outlive a graph (tune_graph shares it across
+        // ops and the final sim), so a (node, layouts) pair from a
+        // *different* graph must never alias a cached program. Lowering
+        // reads only the node, its fused tail, and their tensors —
+        // graph_fingerprint hashes exactly that neighbourhood (plus
+        // graph name/arity), staying O(node) on this hot path instead
+        // of O(graph).
+        let key_base = stable_hash(&(
+            node,
+            prop.layouts.content_hash(),
+            &tail,
+            format!("{hw:?}"),
+            graph_fingerprint(graph, node, &tail),
+        ));
+        Self { graph, node, prop, hw, tail, conv_terms: Vec::new(), key_base }
+    }
+
+    /// Total conversion charge (diagnostics; candidates receive the
+    /// terms one by one).
+    pub fn conversion_ms(&self) -> f64 {
+        self.conv_terms.iter().sum()
+    }
+}
+
+/// Hash of everything `lower_complex` reads from the graph for one
+/// node: the node and its fused-tail nodes (kind, name), every tensor
+/// they touch (shape, dtype, dim names, producer), and the graph's
+/// name/arity as a cheap global discriminator.
+fn graph_fingerprint(graph: &Graph, node: NodeId, tail: &[NodeId]) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = crate::util::StableHasher::new();
+    graph.name.hash(&mut h);
+    graph.nodes.len().hash(&mut h);
+    graph.tensors.len().hash(&mut h);
+    for &id in std::iter::once(&node).chain(tail.iter()) {
+        let n = graph.node(id);
+        n.name.hash(&mut h);
+        format!("{:?}", n.kind).hash(&mut h);
+        for &t in n.inputs.iter().chain(std::iter::once(&n.output)) {
+            let ten = graph.tensor(t);
+            t.hash(&mut h);
+            ten.shape.hash(&mut h);
+            ten.dim_names.hash(&mut h);
+            ten.dtype.hash(&mut h);
+            ten.producer.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+/// Latency charge of every conversion in `prop`, in graph order —
+/// exactly the per-measurement accounting the serial tuner used:
+/// un-absorbed conversions (Fig. 5a) cost a standalone strided repack;
+/// absorbed ones (Fig. 5b) cost the delta of the producer writing the
+/// expanded layout instead of its plain contiguous output.
+fn conversion_terms(graph: &Graph, prop: &PropagationResult, hw: &HwProfile) -> Vec<f64> {
+    let mut terms = Vec::with_capacity(prop.conversions.len());
+    for c in &prop.conversions {
+        let t = graph.tensor(c.tensor);
+        let plain = t.bytes() as f64;
+        let expanded = {
+            let base = crate::codegen::layout_base_shape(graph, c.tensor);
+            let tf = LayoutTransform::new(base, &c.to);
+            tf.final_shape().iter().product::<i64>() as f64 * t.dtype.bytes() as f64
+        };
+        // Repacks copy long contiguous runs on at least one side (tiles
+        // are large blocks), so they are bandwidth-bound like a memcpy.
+        if c.absorbed_by.is_none() {
+            let conv = simulate_streaming(plain, expanded, true, hw);
+            terms.push(conv.latency_ms);
+        } else {
+            let with = simulate_streaming(plain, expanded, true, hw);
+            let without = simulate_streaming(plain, plain, true, hw);
+            terms.push((with.latency_ms - without.latency_ms).max(0.0));
+        }
+    }
+    terms
+}
+
+type MemoKey = (u64, LoopSchedule);
+
+/// The parallel candidate-evaluation engine: scoped worker pool plus
+/// the cross-round memo cache. One engine normally spans a whole
+/// tuning run (op or graph) so layout proposals that re-visit the same
+/// loop points hit the cache.
+pub struct Engine {
+    threads: usize,
+    memo: Mutex<HashMap<MemoKey, Arc<EvalEntry>>>,
+    counters: Counters,
+}
+
+impl Engine {
+    /// `threads == 0` ⇒ one worker per available core.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { threads, memo: Mutex::new(HashMap::new()), counters: Counters::default() }
+    }
+
+    /// Single-threaded engine — the serial baseline the determinism
+    /// test and the hotpath bench compare against.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of memoized candidates.
+    pub fn memo_len(&self) -> usize {
+        self.memo.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            simulated: self.counters.simulated.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `n` independent jobs on the worker pool; `out[i] = f(i)`.
+    /// Order-preserving, so callers are deterministic for any pool size.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// Lower + featurize one candidate, memoized. The slot is claimed
+    /// under a single lock acquisition, so a duplicate candidate in
+    /// one parallel batch waits on the first worker's `OnceLock`
+    /// instead of re-lowering — hit/miss counts are therefore
+    /// deterministic for a given candidate sequence, any pool size.
+    pub fn eval(&self, ctx: &EvalContext, sched: &LoopSchedule) -> Arc<EvalEntry> {
+        let key = (ctx.key_base, sched.clone());
+        let mut created = false;
+        let entry = self
+            .memo
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| {
+                created = true;
+                Arc::new(EvalEntry::empty())
+            })
+            .clone();
+        if created {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        entry.lowered.get_or_init(|| {
+            let p = lower_complex(
+                ctx.graph,
+                ctx.node,
+                &ctx.prop.layouts,
+                sched,
+                &ctx.tail,
+                ctx.hw.simd_lanes,
+            );
+            let features = Arc::new(extract_features(&p));
+            Lowered { program: Arc::new(p), features }
+        });
+        entry
+    }
+
+    /// The candidate's simulation report, computed at most once.
+    fn simulated(&self, ctx: &EvalContext, entry: &EvalEntry) -> SimReport {
+        entry
+            .report
+            .get_or_init(|| {
+                self.counters.simulated.fetch_add(1, Ordering::Relaxed);
+                simulate_program(entry.program(), ctx.hw)
+            })
+            .clone()
+    }
+
+    /// Batch-lower a candidate set (the ranking stage: programs +
+    /// features for cost-model prediction).
+    pub fn lower_batch(
+        &self,
+        ctx: &EvalContext,
+        scheds: &[LoopSchedule],
+    ) -> Vec<Arc<EvalEntry>> {
+        self.run(scheds.len(), |i| self.eval(ctx, &scheds[i]))
+    }
+
+    /// Batch-measure a candidate set (lookup + simulate) — for
+    /// standalone use. Inside a two-stage round prefer
+    /// [`Engine::measure_entries`] with the entries `lower_batch`
+    /// already returned: re-keying here would register a memo "hit"
+    /// per candidate just lowered, polluting the hit rate that is
+    /// supposed to witness *cross-round* deduplication.
+    pub fn measure_batch(
+        &self,
+        ctx: &EvalContext,
+        scheds: &[LoopSchedule],
+    ) -> Vec<Measured> {
+        let entries = self.lower_batch(ctx, scheds);
+        self.measure_entries(ctx, &entries)
+    }
+
+    /// Simulate already-evaluated candidates and apply the context's
+    /// conversion charges. No memo lookup happens, so stats reflect
+    /// only genuine first-stage lookups.
+    pub fn measure_entries(
+        &self,
+        ctx: &EvalContext,
+        entries: &[Arc<EvalEntry>],
+    ) -> Vec<Measured> {
+        self.run(entries.len(), |i| {
+            let entry = entries[i].clone();
+            let report = self.simulated(ctx, &entry);
+            let raw_ms = report.latency_ms;
+            let mut total_ms = raw_ms;
+            for t in &ctx.conv_terms {
+                total_ms += *t;
+            }
+            Measured { entry, raw_ms, total_ms }
+        })
+    }
+
+    /// Full per-candidate pipeline `lower → featurize → predict →
+    /// simulate` in one parallel pass — the throughput unit the
+    /// hotpath bench reports as candidates/sec.
+    pub fn pipeline_batch(
+        &self,
+        ctx: &EvalContext,
+        scheds: &[LoopSchedule],
+        cost: &CostModel,
+    ) -> Vec<(f64, Measured)> {
+        self.run(scheds.len(), |i| {
+            let entry = self.eval(ctx, &scheds[i]);
+            let pred = cost.predict_features(entry.features(), entry.program());
+            let report = self.simulated(ctx, &entry);
+            let raw_ms = report.latency_ms;
+            let mut total_ms = raw_ms;
+            for t in &ctx.conv_terms {
+                total_ms += *t;
+            }
+            (pred, Measured { entry, raw_ms, total_ms })
+        })
+    }
+
+    /// Simulate many complex nodes of one graph under a shared
+    /// propagation result — the whole-graph evaluation stage of
+    /// [`crate::sim::netsim`]. Reports come back in `jobs` order.
+    pub fn simulate_nodes(
+        &self,
+        graph: &Graph,
+        prop: &PropagationResult,
+        hw: &HwProfile,
+        jobs: &[(NodeId, LoopSchedule)],
+    ) -> Vec<SimReport> {
+        self.run(jobs.len(), |i| {
+            let (node, sched) = &jobs[i];
+            let ctx = EvalContext::for_node(graph, *node, prop, hw);
+            let entry = self.eval(&ctx, sched);
+            self.simulated(&ctx, &entry)
+        })
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::propagate::{propagate, PropMode};
+
+    fn setup() -> (Graph, NodeId, PropagationResult, HwProfile) {
+        let g = models::case_study();
+        let conv = g.complex_nodes()[0];
+        let prop = propagate(&g, &[], PropMode::Alt);
+        (g, conv, prop, HwProfile::intel())
+    }
+
+    #[test]
+    fn run_preserves_order() {
+        let e = Engine::new(4);
+        let out = e.run(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn memo_hits_on_duplicate_candidates() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let e = Engine::serial();
+        let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let a = e.eval(&ctx, &sched);
+        let b = e.eval(&ctx, &sched);
+        assert!(Arc::ptr_eq(&a, &b), "duplicate candidate must hit memo");
+        let s = e.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(e.memo_len(), 1);
+    }
+
+    #[test]
+    fn measure_matches_direct_simulation() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let e = Engine::serial();
+        let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
+        let batch = e.measure_batch(&ctx, std::slice::from_ref(&sched));
+        let m = &batch[0];
+        let p = lower_complex(&g, conv, &prop.layouts, &sched, &ctx.tail, hw.simd_lanes);
+        let direct = simulate_program(&p, &hw);
+        assert_eq!(m.raw_ms.to_bits(), direct.latency_ms.to_bits());
+        assert!(m.total_ms >= m.raw_ms);
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_batch() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let mut scheds = Vec::new();
+        let mut rng = crate::util::Rng::new(5);
+        let space = crate::autotune::LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+        for _ in 0..12 {
+            scheds.push(space.decode(&space.random_point(&mut rng)));
+        }
+        let serial = Engine::serial().measure_batch(&ctx, &scheds);
+        let parallel = Engine::new(4).measure_batch(&ctx, &scheds);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.total_ms.to_bits(), p.total_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn different_layouts_do_not_collide() {
+        let (g, conv, prop, hw) = setup();
+        // a second propagation with a non-identity decision must key
+        // differently even for the same schedule
+        let mut dec2 = crate::autotune::template::identity_decision(conv);
+        dec2.out_seq.push(crate::layout::Primitive::split(3, &[4, 16]));
+        let prop2 = propagate(&g, std::slice::from_ref(&dec2), PropMode::Alt);
+        let ctx1 = EvalContext::new(&g, conv, &prop, &hw);
+        let ctx2 = EvalContext::new(&g, conv, &prop2, &hw);
+        assert_ne!(ctx1.key_base, ctx2.key_base);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal crate error type — a dependency-free `anyhow` stand-in.
+//!
+//! The crate must build in offline environments with no registry
+//! access, so instead of pulling `anyhow` we carry a single
+//! message-holding error. Construction goes through [`Error::msg`] or
+//! the [`crate::bail`] / [`crate::err`] macros; interop `From` impls
+//! cover the std error types the crate actually meets.
+
+use std::fmt;
+
+/// Crate-wide error: an explanatory message (optionally chained).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Wrap with leading context, mirroring `anyhow::Context`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Self { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Self { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow!`-style constructor: `err!("bad spec '{s}'")`.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_roundtrip_and_context() {
+        let e = Error::msg("boom").context("loading x");
+        assert_eq!(e.to_string(), "loading x: boom");
+    }
+
+    fn fails() -> Result<()> {
+        bail!("code {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "code 7");
+    }
+
+    #[test]
+    fn from_std_errors() {
+        let r: Result<i32> = "x".parse::<i32>().map_err(Error::from);
+        assert!(r.is_err());
+    }
+}

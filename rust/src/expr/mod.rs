@@ -10,48 +10,188 @@
 //! The simulator never interprets them symbolically: it evaluates
 //! concrete points (base + unit steps) to derive address strides, so the
 //! IR only needs `eval`, `subst` and a light constant-folding `simplify`.
+//!
+//! ## Interning
+//!
+//! Sub-expressions are **hash-consed**: constructors route children
+//! through a process-wide arena of `Arc` nodes, so structurally equal
+//! subtrees share one allocation and the whole IR is `Send + Sync` —
+//! the property the parallel candidate-evaluation engine
+//! ([`crate::engine`]) relies on to lower and simulate candidates
+//! across worker threads. The arena never evicts (pointer identity of a
+//! canonical node is stable for the process lifetime), which makes the
+//! memoized-`simplify` table sound: it is keyed by the canonical child
+//! pointers, and structurally equal children always intern to the same
+//! pointer. The same invariant lets `Eq`/`Hash` compare children by
+//! pointer identity, so interning is O(1) per node rather than a
+//! structural re-walk of the subtree. Layout rewrites re-derive the
+//! same handful of index shapes for every candidate in a tuning run,
+//! so the arena stays small while the constructor fast path skips
+//! re-simplification entirely.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fmt;
-use std::rc::Rc;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// An integer index expression over loop variables.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug)]
 pub enum Expr {
     /// Loop variable by id.
     Var(usize),
     /// Integer constant.
     Const(i64),
-    Add(Rc<Expr>, Rc<Expr>),
-    Sub(Rc<Expr>, Rc<Expr>),
-    Mul(Rc<Expr>, Rc<Expr>),
+    Add(Arc<Expr>, Arc<Expr>),
+    Sub(Arc<Expr>, Arc<Expr>),
+    Mul(Arc<Expr>, Arc<Expr>),
     /// Floor division (both operands non-negative in all generated code).
-    Div(Rc<Expr>, Rc<Expr>),
+    Div(Arc<Expr>, Arc<Expr>),
     /// Modulo (non-negative operands).
-    Mod(Rc<Expr>, Rc<Expr>),
-    Min(Rc<Expr>, Rc<Expr>),
+    Mod(Arc<Expr>, Arc<Expr>),
+    Min(Arc<Expr>, Arc<Expr>),
 }
 
 pub use Expr::{Const, Var};
 
+// Equality and hashing are *semantically structural* but implemented
+// shallowly: composite nodes compare children by `Arc` pointer
+// identity. This is sound because every composite `Expr` in the crate
+// is built through the constructors below, which intern children into
+// the canonical arena — so for children, pointer equality ⟺
+// structural equality. The payoff is O(1) hashing/interning per node
+// on codegen's hottest path (a derived structural Hash would re-walk
+// whole subtrees at every constructor call). Do NOT build composite
+// variants directly with un-interned children.
+impl PartialEq for Expr {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Var(a), Var(b)) => a == b,
+            (Const(a), Const(b)) => a == b,
+            (Expr::Add(a1, b1), Expr::Add(a2, b2))
+            | (Expr::Sub(a1, b1), Expr::Sub(a2, b2))
+            | (Expr::Mul(a1, b1), Expr::Mul(a2, b2))
+            | (Expr::Div(a1, b1), Expr::Div(a2, b2))
+            | (Expr::Mod(a1, b1), Expr::Mod(a2, b2))
+            | (Expr::Min(a1, b1), Expr::Min(a2, b2)) => {
+                Arc::ptr_eq(a1, a2) && Arc::ptr_eq(b1, b2)
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Expr {}
+
+impl Hash for Expr {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        std::mem::discriminant(self).hash(state);
+        match self {
+            Var(i) => i.hash(state),
+            Const(c) => c.hash(state),
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Mod(a, b)
+            | Expr::Min(a, b) => {
+                (Arc::as_ptr(a) as usize).hash(state);
+                (Arc::as_ptr(b) as usize).hash(state);
+            }
+        }
+    }
+}
+
+/// Binary operator tags for the simplify-memo key.
+const OP_ADD: u8 = 0;
+const OP_SUB: u8 = 1;
+const OP_MUL: u8 = 2;
+const OP_DIV: u8 = 3;
+const OP_MOD: u8 = 4;
+const OP_MIN: u8 = 5;
+
+const SHARDS: usize = 16;
+
+/// Process-wide hash-consing arena + memoized-simplify table, sharded
+/// to keep lock contention negligible under the parallel engine.
+struct Interner {
+    nodes: Vec<Mutex<HashSet<Arc<Expr>>>>,
+    simplify_memo: Vec<Mutex<HashMap<(u8, usize, usize), Expr>>>,
+}
+
+fn interner() -> &'static Interner {
+    static INTERNER: OnceLock<Interner> = OnceLock::new();
+    INTERNER.get_or_init(|| Interner {
+        nodes: (0..SHARDS).map(|_| Mutex::new(HashSet::new())).collect(),
+        simplify_memo: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+    })
+}
+
+fn shard_of<T: Hash>(v: &T) -> usize {
+    // DefaultHasher::new() uses fixed keys — deterministic per process.
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    v.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// Intern an expression node, returning its canonical shared `Arc`.
+/// Structurally equal inputs always return pointer-identical nodes.
+pub fn intern(e: Expr) -> Arc<Expr> {
+    let it = interner();
+    let mut set = it.nodes[shard_of(&e)].lock().unwrap();
+    if let Some(a) = set.get(&e) {
+        return a.clone();
+    }
+    let a = Arc::new(e);
+    set.insert(a.clone());
+    a
+}
+
+/// Number of distinct nodes in the interning arena (diagnostics).
+pub fn intern_len() -> usize {
+    interner().nodes.iter().map(|s| s.lock().unwrap().len()).sum()
+}
+
+/// Build a binary node from canonical children with memoized simplify.
+/// Keying by child pointers is sound because `intern` is canonical and
+/// the arena never evicts.
+fn binop(op: u8, a: Arc<Expr>, b: Arc<Expr>) -> Expr {
+    let key = (op, Arc::as_ptr(&a) as usize, Arc::as_ptr(&b) as usize);
+    let it = interner();
+    let shard = (key.1 ^ key.2.rotate_left(17) ^ ((op as usize) << 3)) % SHARDS;
+    if let Some(r) = it.simplify_memo[shard].lock().unwrap().get(&key) {
+        return r.clone();
+    }
+    let raw = match op {
+        OP_ADD => Expr::Add(a, b),
+        OP_SUB => Expr::Sub(a, b),
+        OP_MUL => Expr::Mul(a, b),
+        OP_DIV => Expr::Div(a, b),
+        OP_MOD => Expr::Mod(a, b),
+        _ => Expr::Min(a, b),
+    };
+    let r = raw.simplify();
+    it.simplify_memo[shard].lock().unwrap().insert(key, r.clone());
+    r
+}
+
 impl Expr {
     pub fn add(a: Expr, b: Expr) -> Expr {
-        Expr::Add(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_ADD, intern(a), intern(b))
     }
     pub fn sub(a: Expr, b: Expr) -> Expr {
-        Expr::Sub(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_SUB, intern(a), intern(b))
     }
     pub fn mul(a: Expr, b: Expr) -> Expr {
-        Expr::Mul(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_MUL, intern(a), intern(b))
     }
     pub fn div(a: Expr, b: Expr) -> Expr {
-        Expr::Div(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_DIV, intern(a), intern(b))
     }
     pub fn rem(a: Expr, b: Expr) -> Expr {
-        Expr::Mod(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_MOD, intern(a), intern(b))
     }
     pub fn min(a: Expr, b: Expr) -> Expr {
-        Expr::Min(Rc::new(a), Rc::new(b)).simplify()
+        binop(OP_MIN, intern(a), intern(b))
     }
 
     /// Evaluate with `env[var_id]` giving each variable's value.
@@ -246,5 +386,39 @@ mod tests {
         let e = Expr::add(Var(3), Expr::mul(Var(1), Const(2)));
         let v: Vec<usize> = e.vars().into_iter().collect();
         assert_eq!(v, vec![1, 3]);
+    }
+
+    #[test]
+    fn interning_is_canonical() {
+        // structurally equal nodes intern to the same allocation
+        let a = intern(Expr::add(Var(0), Const(7)));
+        let b = intern(Expr::add(Var(0), Const(7)));
+        assert!(Arc::ptr_eq(&a, &b));
+        // equal subtrees built via constructors share children
+        let e1 = Expr::mul(Expr::add(Var(1), Const(2)), Var(3));
+        let e2 = Expr::mul(Expr::add(Var(1), Const(2)), Var(3));
+        assert_eq!(e1, e2);
+        if let (Expr::Mul(x, _), Expr::Mul(y, _)) = (&e1, &e2) {
+            assert!(Arc::ptr_eq(x, y), "hash-consed children must share");
+        } else {
+            panic!("expected Mul nodes");
+        }
+    }
+
+    #[test]
+    fn interned_exprs_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Expr>();
+        assert_send_sync::<Arc<Expr>>();
+    }
+
+    #[test]
+    fn memoized_simplify_matches_fresh_simplify() {
+        // first call populates the memo, second must return the same value
+        let a = Expr::mul(Var(2), Const(1));
+        let b = Expr::mul(Var(2), Const(1));
+        assert_eq!(a, b);
+        assert_eq!(a, Var(2));
+        assert!(intern_len() > 0);
     }
 }

@@ -29,7 +29,7 @@ pub use transform::LayoutTransform;
 use crate::tensor::TensorId;
 
 /// A primitive sequence for one tensor (paper notation `S(T)`).
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
 pub struct LayoutSeq {
     pub prims: Vec<Primitive>,
 }

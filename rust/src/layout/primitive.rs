@@ -45,7 +45,7 @@ impl DimAccess {
 /// One layout primitive (paper §4.1). Dimension indices refer to the
 /// tensor's *current* storage dims at the point the primitive is applied
 /// (sequences are interpreted left to right).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Primitive {
     /// Split dim `dim` into `factors` (product must equal the extent;
     /// Table 1 row 1 with all new dims given explicitly).

@@ -26,6 +26,10 @@
 //! * [`cost`] — gradient-boosted-tree cost model trained online.
 //! * [`autotune`] — PPO agents, layout/loop tuning templates, and the
 //!   two-stage cross-exploration joint tuner (Fig. 8).
+//! * [`engine`] — the parallel candidate-evaluation engine: a scoped
+//!   worker pool that batches the `lower → featurize → predict →
+//!   simulate` pipeline across cores, with cross-round memoization of
+//!   duplicate candidates.
 //! * [`baselines`] — Ansor-like, AutoTVM-like, FlexTensor-like and
 //!   vendor-library-like comparators.
 //! * [`runtime`] — PJRT executor for the AOT HLO artifacts produced by
@@ -39,6 +43,8 @@ pub mod bench;
 pub mod codegen;
 pub mod config;
 pub mod cost;
+pub mod engine;
+pub mod error;
 pub mod expr;
 pub mod graph;
 pub mod layout;
@@ -49,5 +55,7 @@ pub mod sim;
 pub mod tensor;
 pub mod util;
 
+pub use error::Error;
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

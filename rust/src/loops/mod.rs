@@ -50,7 +50,10 @@ pub struct Loop {
 /// storage dim, tile factor per reduction dim, inner-loop permutation and
 /// annotation knobs. This matches the `O(10^7)` 7-nested-loop space the
 /// paper quotes for C2D.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Eq + Hash` so the candidate-evaluation engine can memoize lowered
+/// programs by `(layout hash, schedule)` across tuning rounds.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct LoopSchedule {
     /// Inner tile extent per spatial storage dim (must divide extent).
     pub spatial_tiles: Vec<i64>,

@@ -193,6 +193,7 @@ fn main() {
                 );
             }
         }
+        #[cfg(feature = "pjrt")]
         "run" => {
             let dir = cfg.get("dir").unwrap_or("artifacts");
             let name = cfg.get("artifact").unwrap_or("model");
@@ -210,6 +211,14 @@ fn main() {
                 .collect();
             let ms = exe.bench(&inputs, iters).unwrap_or_else(|e| panic!("{e}"));
             println!("{name}: median {ms:.3} ms over {iters} runs");
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "run" => {
+            eprintln!(
+                "`alt run` needs the PJRT runtime: rebuild with \
+                 `--features pjrt` (requires the xla crate)"
+            );
+            std::process::exit(2);
         }
         "figures" => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");

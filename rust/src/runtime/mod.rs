@@ -7,12 +7,18 @@
 //! `compile` → `execute`) and times them, so the layout rankings the
 //! simulated device produces can be cross-checked against genuine
 //! execution on the host CPU. Python is never on this path.
+//!
+//! The `xla`-backed half ([`Executable`], [`Runtime`]) is gated behind
+//! the `pjrt` cargo feature: the crate must build with zero external
+//! dependencies in offline environments, so enabling `pjrt` requires
+//! adding the `xla` crate to `Cargo.toml` by hand. Manifest/spec
+//! parsing and deterministic input generation are always available
+//! (they are pure std and unit-tested offline).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Error, Result};
+use crate::{bail, err};
 
 /// Parsed entry of `artifacts/manifest.txt` (written by aot.py):
 /// `name \t file \t in_specs \t out_specs` with specs like
@@ -40,13 +46,17 @@ impl TensorSpec {
 fn parse_spec(s: &str) -> Result<TensorSpec> {
     let (dtype, rest) = s
         .split_once('[')
-        .ok_or_else(|| anyhow!("bad tensor spec '{s}'"))?;
+        .ok_or_else(|| err!("bad tensor spec '{s}'"))?;
     let dims = rest.trim_end_matches(']');
     let shape = if dims.is_empty() {
         vec![]
     } else {
         dims.split(',')
-            .map(|d| d.trim().parse::<usize>().context("dim"))
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|e| Error::msg(e).context("dim"))
+            })
             .collect::<Result<Vec<_>>>()?
     };
     Ok(TensorSpec { dtype: dtype.to_string(), shape })
@@ -56,7 +66,7 @@ fn parse_spec(s: &str) -> Result<TensorSpec> {
 pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
     let path = dir.join("manifest.txt");
     let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {}", path.display()))?;
+        .map_err(|e| Error::msg(e).context(format!("reading {}", path.display())))?;
     let mut out = Vec::new();
     for line in text.lines() {
         if line.trim().is_empty() {
@@ -79,12 +89,6 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
     Ok(out)
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
 /// Result of one timed execution.
 #[derive(Clone, Debug)]
 pub struct RunStats {
@@ -94,103 +98,6 @@ pub struct RunStats {
     pub sample: Vec<f32>,
 }
 
-impl Executable {
-    /// Execute with the given f32 inputs (row-major, matching the spec).
-    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<RunStats> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: want {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
-            if data.len() != spec.elements() {
-                bail!("{}: input size mismatch", self.spec.name);
-            }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
-        }
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()?;
-        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        let sample = values.iter().take(8).copied().collect();
-        Ok(RunStats { latency_ms, output_elems: values.len(), sample })
-    }
-
-    /// Median-of-n timed runs (first run excluded as warmup).
-    pub fn bench(&self, inputs: &[Vec<f32>], n: usize) -> Result<f64> {
-        let _ = self.run(inputs)?; // warmup + compile caches
-        let mut times = Vec::with_capacity(n);
-        for _ in 0..n {
-            times.push(self.run(inputs)?.latency_ms);
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Ok(times[times.len() / 2])
-    }
-}
-
-/// Registry of compiled artifacts backed by one PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, ArtifactSpec>,
-}
-
-impl Runtime {
-    /// Create a CPU runtime over an artifact directory.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let cache = read_manifest(&dir)?
-            .into_iter()
-            .map(|s| (s.name.clone(), s))
-            .collect();
-        Ok(Self { client, dir, cache })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn entries(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.cache.keys().cloned().collect();
-        v.sort();
-        v
-    }
-
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.cache.get(name)
-    }
-
-    /// Load + compile one artifact.
-    pub fn load(&self, name: &str) -> Result<Executable> {
-        let spec = self
-            .cache
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        Ok(Executable { spec, exe })
-    }
-}
-
 /// Deterministic pseudo-random input for a spec (seeded; build-agnostic).
 pub fn random_input(spec: &TensorSpec, seed: u64) -> Vec<f32> {
     let mut rng = crate::util::Rng::new(seed);
@@ -198,6 +105,131 @@ pub fn random_input(spec: &TensorSpec, seed: u64) -> Vec<f32> {
         .map(|_| (rng.uniform() as f32 - 0.5) * 0.2)
         .collect()
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::time::Instant;
+
+    use super::*;
+    use crate::{bail, err};
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        /// Execute with the given f32 inputs (row-major, matching the spec).
+        pub fn run(&self, inputs: &[Vec<f32>]) -> Result<RunStats> {
+            if inputs.len() != self.spec.inputs.len() {
+                bail!(
+                    "{}: want {} inputs, got {}",
+                    self.spec.name,
+                    self.spec.inputs.len(),
+                    inputs.len()
+                );
+            }
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+                if data.len() != spec.elements() {
+                    bail!("{}: input size mismatch", self.spec.name);
+                }
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lits.push(
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| err!("reshape: {e:?}"))?,
+                );
+            }
+            let t0 = Instant::now();
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| err!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("sync: {e:?}"))?;
+            let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // aot.py lowers with return_tuple=True → 1-tuple
+            let out = result.to_tuple1().map_err(|e| err!("tuple: {e:?}"))?;
+            let values =
+                out.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}"))?;
+            let sample = values.iter().take(8).copied().collect();
+            Ok(RunStats { latency_ms, output_elems: values.len(), sample })
+        }
+
+        /// Median-of-n timed runs (first run excluded as warmup).
+        pub fn bench(&self, inputs: &[Vec<f32>], n: usize) -> Result<f64> {
+            let _ = self.run(inputs)?; // warmup + compile caches
+            let mut times = Vec::with_capacity(n);
+            for _ in 0..n {
+                times.push(self.run(inputs)?.latency_ms);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Ok(times[times.len() / 2])
+        }
+    }
+
+    /// Registry of compiled artifacts backed by one PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, ArtifactSpec>,
+    }
+
+    impl Runtime {
+        /// Create a CPU runtime over an artifact directory.
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = artifacts_dir.as_ref().to_path_buf();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| err!("PJRT cpu client: {e:?}"))?;
+            let cache = read_manifest(&dir)?
+                .into_iter()
+                .map(|s| (s.name.clone(), s))
+                .collect();
+            Ok(Self { client, dir, cache })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn entries(&self) -> Vec<String> {
+            let mut v: Vec<String> = self.cache.keys().cloned().collect();
+            v.sort();
+            v
+        }
+
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.cache.get(name)
+        }
+
+        /// Load + compile one artifact.
+        pub fn load(&self, name: &str) -> Result<Executable> {
+            let spec = self
+                .cache
+                .get(name)
+                .ok_or_else(|| err!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| err!("bad path"))?,
+            )
+            .map_err(|e| err!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| err!("compile {name}: {e:?}"))?;
+            Ok(Executable { spec, exe })
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {

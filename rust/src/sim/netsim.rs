@@ -1,10 +1,17 @@
 //! Whole-graph simulation: sequential execution of a network under a
 //! layout assignment (propagation result) and per-operator loop
 //! schedules — the "end-to-end inference" measurement of §7.2.
+//!
+//! [`simulate_graph_with`] evaluates the complex-operator nests on the
+//! candidate-evaluation engine's worker pool (and through its memo
+//! cache, so a graph simulation following a tuning run re-uses the
+//! programs tuning already lowered); reports are accumulated in graph
+//! order, so the totals are identical for any pool size.
 
 use std::collections::HashMap;
 
 use crate::codegen::{lower_complex, Program};
+use crate::engine::Engine;
 use crate::graph::{Graph, NodeId, OpKind};
 use crate::layout::LayoutTransform;
 use crate::loops::LoopSchedule;
@@ -52,18 +59,37 @@ fn storage_bytes(graph: &Graph, t: usize, prop: &PropagationResult) -> f64 {
 }
 
 /// Simulate the whole graph. `scheds` maps complex nodes to their loop
-/// schedules (identity when missing).
+/// schedules (identity when missing). Serial convenience wrapper over
+/// [`simulate_graph_with`].
 pub fn simulate_graph(
     graph: &Graph,
     prop: &PropagationResult,
     scheds: &HashMap<NodeId, LoopSchedule>,
     hw: &HwProfile,
 ) -> GraphReport {
-    let mut rep = GraphReport::default();
-    let mut push = |node: Option<NodeId>, label: String, r: SimReport| {
-        rep.total.accumulate(&r);
-        rep.per_node.push(NodeCost { node, label, report: r });
-    };
+    simulate_graph_with(graph, prop, scheds, hw, &Engine::serial())
+}
+
+/// One pending row of the graph report: either a cheap streaming cost
+/// (computed inline) or a complex nest evaluated on the engine pool.
+enum Row {
+    Ready(Option<NodeId>, String, SimReport),
+    Complex(NodeId, String, usize), // index into the engine job list
+}
+
+/// Simulate the whole graph, evaluating complex-operator nests on
+/// `engine`'s worker pool (memoized — a run right after tuning hits
+/// the tuner's cache). Accumulation order matches the serial path, so
+/// the report is identical for any engine size.
+pub fn simulate_graph_with(
+    graph: &Graph,
+    prop: &PropagationResult,
+    scheds: &HashMap<NodeId, LoopSchedule>,
+    hw: &HwProfile,
+    engine: &Engine,
+) -> GraphReport {
+    let mut rows: Vec<Row> = Vec::new();
+    let mut jobs: Vec<(NodeId, LoopSchedule)> = Vec::new();
 
     // Standalone layout conversions (Fig. 5a): strided repack through
     // memory — read the tensor, write the consumer-side (possibly
@@ -75,9 +101,10 @@ pub fn simulate_graph(
             let tf = LayoutTransform::new(base, &c.to);
             let written = tf.final_shape().iter().product::<i64>() as f64
                 * graph.tensor(c.tensor).dtype.bytes() as f64;
-            // run-based repack: bandwidth-bound (see tuner::measure)
+            // run-based repack: bandwidth-bound (see engine conversion
+            // accounting)
             let r = simulate_streaming(read, written, true, hw);
-            push(None, format!("convert(t{})", c.tensor), r);
+            rows.push(Row::Ready(None, format!("convert(t{})", c.tensor), r));
         }
     }
 
@@ -87,27 +114,14 @@ pub fn simulate_graph(
         }
         match &node.kind {
             OpKind::Conv { .. } | OpKind::Matmul | OpKind::Dense => {
-                let tail = prop
-                    .fused_tails
-                    .get(&node.id)
-                    .cloned()
-                    .unwrap_or_default();
                 let sched = scheds.get(&node.id).cloned().unwrap_or_else(|| {
                     LoopSchedule::identity(
                         &graph.tensor(node.output).shape,
                         &[1],
                     )
                 });
-                let p = lower_complex(
-                    graph,
-                    node.id,
-                    &prop.layouts,
-                    &sched,
-                    &tail,
-                    hw.simd_lanes,
-                );
-                let r = simulate_program(&p, hw);
-                push(Some(node.id), node.name.clone(), r);
+                rows.push(Row::Complex(node.id, node.name.clone(), jobs.len()));
+                jobs.push((node.id, sched));
             }
             OpKind::Reshape { .. } => { /* metadata only */ }
             OpKind::Eltwise { .. } | OpKind::BiasAdd => {
@@ -116,7 +130,7 @@ pub fn simulate_graph(
                 let written = tensor_bytes(graph, node.output);
                 let contiguous = prop.layouts.is_identity(node.output);
                 let r = simulate_streaming(read, written, contiguous, hw);
-                push(Some(node.id), node.name.clone(), r);
+                rows.push(Row::Ready(Some(node.id), node.name.clone(), r));
             }
             OpKind::PadOp { .. } => {
                 let read = tensor_bytes(graph, node.inputs[0]);
@@ -128,7 +142,7 @@ pub fn simulate_graph(
                 // pass remains bandwidth-bound
                 let written = storage_bytes(graph, node.output, prop);
                 let r = simulate_streaming(read, written, true, hw);
-                push(Some(node.id), node.name.clone(), r);
+                rows.push(Row::Ready(Some(node.id), node.name.clone(), r));
             }
             OpKind::Pool { .. }
             | OpKind::Softmax { .. }
@@ -139,9 +153,24 @@ pub fn simulate_graph(
                     node.inputs.iter().map(|&t| tensor_bytes(graph, t)).sum();
                 let written = tensor_bytes(graph, node.output);
                 let r = simulate_streaming(read, written, true, hw);
-                push(Some(node.id), node.name.clone(), r);
+                rows.push(Row::Ready(Some(node.id), node.name.clone(), r));
             }
         }
+    }
+
+    // Evaluate every complex nest in parallel, then fold the report in
+    // the original (serial) order.
+    let reports = engine.simulate_nodes(graph, prop, hw, &jobs);
+    let mut rep = GraphReport::default();
+    for row in rows {
+        let (node, label, r) = match row {
+            Row::Ready(node, label, r) => (node, label, r),
+            Row::Complex(node, label, j) => {
+                (Some(node), label, reports[j].clone())
+            }
+        };
+        rep.total.accumulate(&r);
+        rep.per_node.push(NodeCost { node, label, report: r });
     }
     rep
 }
@@ -208,6 +237,27 @@ mod tests {
             a.per_node.iter().filter(|n| n.label.starts_with("convert")).count();
         assert_eq!(conv_rows, 1);
         assert!(a.latency_ms() > b.latency_ms());
+    }
+
+    #[test]
+    fn parallel_graph_sim_matches_serial() {
+        let g = models::resnet18(1);
+        let prop = propagate(&g, &[], PropMode::Alt);
+        let hw = HwProfile::intel();
+        let serial = simulate_graph(&g, &prop, &HashMap::new(), &hw);
+        let parallel = simulate_graph_with(
+            &g,
+            &prop,
+            &HashMap::new(),
+            &hw,
+            &Engine::new(4),
+        );
+        assert_eq!(
+            serial.latency_ms().to_bits(),
+            parallel.latency_ms().to_bits(),
+            "pool size must not change the report"
+        );
+        assert_eq!(serial.per_node.len(), parallel.per_node.len());
     }
 
     #[test]

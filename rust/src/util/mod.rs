@@ -7,6 +7,45 @@ pub mod stats;
 
 pub use rng::Rng;
 
+/// FNV-1a 64-bit `Hasher`. Std's `RandomState` is seeded per process;
+/// memoization keys (the engine's candidate cache, layout hashes) need
+/// a hasher that is reproducible run to run, so cache behaviour — and
+/// therefore reported hit rates — is deterministic.
+#[derive(Clone, Debug)]
+pub struct StableHasher(u64);
+
+impl StableHasher {
+    pub fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::hash::Hasher for StableHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+}
+
+/// Stable 64-bit hash of any `Hash` value (see [`StableHasher`]).
+pub fn stable_hash<T: std::hash::Hash + ?Sized>(v: &T) -> u64 {
+    let mut h = StableHasher::new();
+    v.hash(&mut h);
+    std::hash::Hasher::finish(&h)
+}
+
 /// All divisors of `n`, ascending. Tuning spaces for split factors are
 /// divisor sets (the paper rounds `R(D * a)` to a feasible factor).
 pub fn divisors(n: i64) -> Vec<i64> {
@@ -89,5 +128,14 @@ mod tests {
     fn geomean_basic() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stable_hash_is_stable_and_discriminating() {
+        // fixed expectations would over-specify; determinism within and
+        // across calls is the contract
+        assert_eq!(stable_hash(&(1u64, "abc")), stable_hash(&(1u64, "abc")));
+        assert_ne!(stable_hash(&(1u64, "abc")), stable_hash(&(2u64, "abc")));
+        assert_ne!(stable_hash(&vec![1i64, 2]), stable_hash(&vec![2i64, 1]));
     }
 }

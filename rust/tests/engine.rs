@@ -1,0 +1,298 @@
+//! Candidate-evaluation engine: determinism + interned-expression
+//! equivalence (seeded RNG in place of proptest — no external crates).
+//!
+//! Two invariants make the parallel engine safe to put on the tuner's
+//! hot path:
+//! 1. thread count must not change any tuning result, bit for bit;
+//! 2. the hash-consed `Arc` expression IR must be semantically
+//!    identical to the historical `Rc` tree semantics (construction,
+//!    eval, subst, simplify, vars).
+
+use alt::autotune::tuner::{tune_graph, tune_op, TuneOptions};
+use alt::expr::{Const, Expr, Var};
+use alt::graph::models;
+use alt::sim::HwProfile;
+use alt::util::Rng;
+
+fn opts(budget: usize, threads: usize) -> TuneOptions {
+    TuneOptions { budget, seed: 3, threads, ..Default::default() }
+}
+
+/// The acceptance-criteria determinism test: parallel engine and the
+/// serial path produce identical results for the same RNG seed. Budget
+/// ≥ 96 so the joint stage (layout proposals + space reconstruction)
+/// is exercised, not just loop-only rounds.
+#[test]
+fn parallel_tuning_equals_serial_bit_for_bit() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let serial = tune_op(&g, conv, &hw, &opts(120, 1));
+    let parallel = tune_op(&g, conv, &hw, &opts(120, 4));
+    assert_eq!(
+        serial.best_ms.to_bits(),
+        parallel.best_ms.to_bits(),
+        "best latency diverged: serial {} vs parallel {}",
+        serial.best_ms,
+        parallel.best_ms
+    );
+    assert_eq!(serial.sched, parallel.sched, "winning schedule diverged");
+    assert_eq!(serial.measurements, parallel.measurements);
+    assert_eq!(serial.history.len(), parallel.history.len());
+    for (a, b) in serial.history.iter().zip(&parallel.history) {
+        assert_eq!(a.to_bits(), b.to_bits(), "tuning trace diverged");
+    }
+    assert_eq!(serial.decision.out_seq, parallel.decision.out_seq);
+}
+
+/// Memo cache must report a nonzero hit rate over a full joint-stage
+/// run: the incumbent is re-measured each round and layout proposals
+/// re-visit loop points.
+#[test]
+fn memo_hit_rate_nonzero_over_joint_run() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let r = tune_op(&g, conv, &HwProfile::intel(), &opts(120, 0));
+    assert!(
+        r.engine.hits > 0,
+        "joint-stage run produced no memo hits: {:?}",
+        r.engine
+    );
+    assert!(r.engine.hit_rate() > 0.0 && r.engine.hit_rate() < 1.0);
+    // memoization must never skip budget accounting
+    assert!(r.measurements >= 120);
+}
+
+#[test]
+fn graph_tuning_deterministic_across_thread_counts() {
+    let g = models::prop_subgraph(7);
+    let hw = HwProfile::arm();
+    let serial = tune_graph(&g, &hw, &opts(40, 1));
+    let parallel = tune_graph(&g, &hw, &opts(40, 3));
+    assert_eq!(
+        serial.report.latency_ms().to_bits(),
+        parallel.report.latency_ms().to_bits()
+    );
+    assert_eq!(serial.measurements, parallel.measurements);
+}
+
+// ---------------------------------------------------------------------
+// Interned-Expr equivalence: a boxed reference tree with the historical
+// Rc semantics, compared against constructor-built interned exprs.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum RefExpr {
+    Var(usize),
+    Const(i64),
+    Add(Box<RefExpr>, Box<RefExpr>),
+    Sub(Box<RefExpr>, Box<RefExpr>),
+    Mul(Box<RefExpr>, Box<RefExpr>),
+    Div(Box<RefExpr>, Box<RefExpr>),
+    Mod(Box<RefExpr>, Box<RefExpr>),
+    Min(Box<RefExpr>, Box<RefExpr>),
+}
+
+impl RefExpr {
+    fn eval(&self, env: &[i64]) -> i64 {
+        match self {
+            RefExpr::Var(i) => env[*i],
+            RefExpr::Const(c) => *c,
+            RefExpr::Add(a, b) => a.eval(env) + b.eval(env),
+            RefExpr::Sub(a, b) => a.eval(env) - b.eval(env),
+            RefExpr::Mul(a, b) => a.eval(env) * b.eval(env),
+            RefExpr::Div(a, b) => a.eval(env).div_euclid(b.eval(env)),
+            RefExpr::Mod(a, b) => a.eval(env).rem_euclid(b.eval(env)),
+            RefExpr::Min(a, b) => a.eval(env).min(b.eval(env)),
+        }
+    }
+
+    /// Build the interned expression through the public constructors
+    /// (the path codegen and the layout rewriter use).
+    fn build(&self) -> Expr {
+        match self {
+            RefExpr::Var(i) => Var(*i),
+            RefExpr::Const(c) => Const(*c),
+            RefExpr::Add(a, b) => Expr::add(a.build(), b.build()),
+            RefExpr::Sub(a, b) => Expr::sub(a.build(), b.build()),
+            RefExpr::Mul(a, b) => Expr::mul(a.build(), b.build()),
+            RefExpr::Div(a, b) => Expr::div(a.build(), b.build()),
+            RefExpr::Mod(a, b) => Expr::rem(a.build(), b.build()),
+            RefExpr::Min(a, b) => Expr::min(a.build(), b.build()),
+        }
+    }
+
+    fn vars(&self, out: &mut std::collections::BTreeSet<usize>) {
+        match self {
+            RefExpr::Var(i) => {
+                out.insert(*i);
+            }
+            RefExpr::Const(_) => {}
+            RefExpr::Add(a, b)
+            | RefExpr::Sub(a, b)
+            | RefExpr::Mul(a, b)
+            | RefExpr::Div(a, b)
+            | RefExpr::Mod(a, b)
+            | RefExpr::Min(a, b) => {
+                a.vars(out);
+                b.vars(out);
+            }
+        }
+    }
+
+    fn subst(&self, subs: &[Option<RefExpr>]) -> RefExpr {
+        match self {
+            RefExpr::Var(i) => match subs.get(*i) {
+                Some(Some(e)) => e.clone(),
+                _ => self.clone(),
+            },
+            RefExpr::Const(_) => self.clone(),
+            RefExpr::Add(a, b) => {
+                RefExpr::Add(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+            RefExpr::Sub(a, b) => {
+                RefExpr::Sub(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+            RefExpr::Mul(a, b) => {
+                RefExpr::Mul(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+            RefExpr::Div(a, b) => {
+                RefExpr::Div(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+            RefExpr::Mod(a, b) => {
+                RefExpr::Mod(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+            RefExpr::Min(a, b) => {
+                RefExpr::Min(Box::new(a.subst(subs)), Box::new(b.subst(subs)))
+            }
+        }
+    }
+}
+
+const NVARS: usize = 4;
+
+/// Random expression over `NVARS` variables. Div/Mod denominators are
+/// positive constants — the only form generated code produces (layout
+/// rewrites divide by tile extents), and the form the IR's
+/// debug-asserts require.
+fn random_expr(rng: &mut Rng, depth: usize) -> RefExpr {
+    if depth == 0 || rng.uniform() < 0.3 {
+        return if rng.uniform() < 0.5 {
+            RefExpr::Var(rng.below(NVARS))
+        } else {
+            RefExpr::Const(rng.below(17) as i64 - 8)
+        };
+    }
+    let a = Box::new(random_expr(rng, depth - 1));
+    match rng.below(6) {
+        0 => RefExpr::Add(a, Box::new(random_expr(rng, depth - 1))),
+        1 => RefExpr::Sub(a, Box::new(random_expr(rng, depth - 1))),
+        2 => RefExpr::Mul(a, Box::new(random_expr(rng, depth - 1))),
+        3 => RefExpr::Div(a, Box::new(RefExpr::Const(1 + rng.below(6) as i64))),
+        4 => RefExpr::Mod(a, Box::new(RefExpr::Const(1 + rng.below(6) as i64))),
+        _ => RefExpr::Min(a, Box::new(random_expr(rng, depth - 1))),
+    }
+}
+
+fn random_env(rng: &mut Rng) -> Vec<i64> {
+    (0..NVARS).map(|_| rng.below(23) as i64).collect()
+}
+
+#[test]
+fn interned_construction_and_eval_match_reference() {
+    let mut rng = Rng::new(41);
+    for _ in 0..300 {
+        let r = random_expr(&mut rng, 4);
+        let e = r.build();
+        for _ in 0..5 {
+            let env = random_env(&mut rng);
+            assert_eq!(
+                e.eval(&env),
+                r.eval(&env),
+                "eval mismatch for {e} at {env:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn interned_subst_matches_reference() {
+    let mut rng = Rng::new(42);
+    for _ in 0..150 {
+        let r = random_expr(&mut rng, 3);
+        let e = r.build();
+        let subs_ref: Vec<Option<RefExpr>> = (0..NVARS)
+            .map(|_| {
+                if rng.uniform() < 0.5 {
+                    Some(random_expr(&mut rng, 2))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let subs: Vec<Option<Expr>> =
+            subs_ref.iter().map(|o| o.as_ref().map(|s| s.build())).collect();
+        let es = e.subst(&subs);
+        let rs = r.subst(&subs_ref);
+        for _ in 0..5 {
+            let env = random_env(&mut rng);
+            assert_eq!(
+                es.eval(&env),
+                rs.eval(&env),
+                "subst mismatch for {e} at {env:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn interned_vars_match_reference() {
+    let mut rng = Rng::new(43);
+    for _ in 0..200 {
+        let r = random_expr(&mut rng, 4);
+        let e = r.build();
+        let mut want = std::collections::BTreeSet::new();
+        r.vars(&mut want);
+        // simplify may *drop* variables (e.g. `x - x`, `0 * x`), never
+        // invent them
+        let got = e.vars();
+        assert!(
+            got.is_subset(&want),
+            "vars invented: {got:?} vs {want:?} for {e}"
+        );
+    }
+}
+
+#[test]
+fn simplify_preserves_semantics() {
+    // simplify runs inside every constructor; check the identities the
+    // layout rewriter depends on stay exact over the whole env space
+    let mut rng = Rng::new(44);
+    for _ in 0..200 {
+        let r = random_expr(&mut rng, 3);
+        let e = r.build();
+        let s = e.simplify();
+        let env = random_env(&mut rng);
+        assert_eq!(s.eval(&env), e.eval(&env), "simplify changed {e}");
+    }
+}
+
+#[test]
+fn repeated_construction_is_structurally_stable() {
+    // hash-consing must be transparent: constructing the same tree
+    // twice yields equal values with equal hashes
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut rng = Rng::new(45);
+    for _ in 0..100 {
+        let r = random_expr(&mut rng, 4);
+        let a = r.build();
+        let b = r.build();
+        assert_eq!(a, b);
+        let mut ha = DefaultHasher::new();
+        let mut hb = DefaultHasher::new();
+        a.hash(&mut ha);
+        b.hash(&mut hb);
+        assert_eq!(ha.finish(), hb.finish());
+    }
+}

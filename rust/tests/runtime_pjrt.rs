@@ -1,6 +1,8 @@
 //! Runtime integration: load the AOT HLO artifacts on the PJRT CPU
 //! client and execute them — the rust side of the three-layer contract.
 //! Skips (with a loud message) when `make artifacts` hasn't run.
+//! Compiled only with the `pjrt` feature (the xla-backed runtime leg).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Run the tuner hot-path bench and capture the candidate-evaluation
+# engine throughput report (serial vs parallel candidates/sec, memo hit
+# rate) as BENCH_engine.json.
+#
+# Usage: scripts/bench_engine.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_engine.json}"
+
+# cargo runs bench binaries with cwd = package root (rust/), so hand
+# the bench an absolute output path anchored at the workspace root
+BENCH_ENGINE_JSON="$PWD/$out" cargo bench --bench hotpath
+
+echo
+echo "== $out =="
+cat "$out"
