@@ -130,7 +130,9 @@ fn main() {
         warm_stats.hit_rate() * 100.0
     );
 
-    // end-to-end: one tuning run of the real tuner (parallel engine)
+    // end-to-end: one tuning run of the real tuner (parallel engine;
+    // the serial-walk vs speculative comparison lives in the `tuner`
+    // bench — scripts/bench_tuner.sh)
     let t0 = std::time::Instant::now();
     let opts = alt::autotune::TuneOptions {
         budget: 48,
@@ -139,11 +141,13 @@ fn main() {
     let r = alt::autotune::tuner::tune_op(&g, conv, &hw, &opts);
     let el = t0.elapsed().as_secs_f64();
     let tune_meas_per_s = r.measurements as f64 / el;
+    let tune_rounds_per_s = r.rounds as f64 / el;
     println!(
-        "\ntune_op(48 measurements): {:.2} s  ({:.0} meas/s), best {:.4} ms, \
-         memo hit rate {:.0}%",
+        "\ntune_op(48 measurements): {:.2} s  ({:.0} meas/s, {:.1} rounds/s), \
+         best {:.4} ms, memo hit rate {:.0}%",
         el,
         tune_meas_per_s,
+        tune_rounds_per_s,
         r.best_ms,
         r.engine.hit_rate() * 100.0
     );
@@ -159,6 +163,7 @@ fn main() {
          \"memo_warm_cand_per_sec\": {:.1},\n  \
          \"memo_hit_rate\": {:.4},\n  \
          \"tune_op_meas_per_sec\": {:.1},\n  \
+         \"tune_op_rounds_per_sec\": {:.2},\n  \
          \"tune_op_memo_hit_rate\": {:.4},\n  \
          \"lower_ms\": {:.4},\n  \"simulate_ms\": {:.4},\n  \
          \"predict_ms\": {:.4}\n}}\n",
@@ -170,6 +175,7 @@ fn main() {
         warm_cps,
         warm_stats.hit_rate(),
         tune_meas_per_s,
+        tune_rounds_per_s,
         r.engine.hit_rate(),
         lower_ms,
         sim_ms,

@@ -1,0 +1,180 @@
+//! Bench: tuning-loop throughput — the serial walk vs the batched +
+//! speculative joint stage (the §Perf acceptance measurement for this
+//! subsystem).
+//!
+//! Times whole `tune_op` runs on the case-study C2D with a
+//! joint-heavy budget split, comparing the serial walk (`threads = 1`,
+//! `speculation = 1`) against the batched pipeline at several thread
+//! counts with speculative joint-stage proposals (`speculation = 4`).
+//! Reports measurements/sec and rounds/sec, re-checks the
+//! speculative path's thread-count determinism, and verifies the memo
+//! cache honours a small eviction cap. Results are written to
+//! `BENCH_tuner.json` (override with `BENCH_TUNER_JSON`);
+//! `scripts/bench_tuner.sh` wraps this.
+
+use std::time::Instant;
+
+use alt::autotune::tuner::{tune_op, tune_op_with, OpTuneResult, TuneOptions};
+use alt::engine::Engine;
+use alt::graph::models;
+use alt::sim::HwProfile;
+
+const SPECULATION: usize = 4;
+
+fn opts(threads: usize, speculation: usize) -> TuneOptions {
+    TuneOptions {
+        budget: 192,
+        joint_frac: 0.5, // joint-heavy: the stage this bench measures
+        seed: 11,
+        threads,
+        speculation,
+        ..Default::default()
+    }
+}
+
+struct Run {
+    threads: usize,
+    speculation: usize,
+    wall_s: f64,
+    meas_per_sec: f64,
+    rounds_per_sec: f64,
+    result: OpTuneResult,
+}
+
+fn main() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+
+    // untimed warm-ups covering BOTH timed trajectories (the serial
+    // walk and the spec=4 walk propose different layouts, so each
+    // interns different expr shapes): populates the process-global
+    // expr interner / simplify memo so every timed run below sees the
+    // same warm global-cache state and the speedups isolate
+    // threading + speculation. The engine memo is per-run (fresh
+    // engine per tune_op), so that stays cold for each timed run.
+    tune_op(&g, conv, &hw, &opts(0, 1));
+    tune_op(&g, conv, &hw, &opts(0, SPECULATION));
+
+    let time = |threads: usize, speculation: usize| -> Run {
+        let o = opts(threads, speculation);
+        let t0 = Instant::now();
+        let result = tune_op(&g, conv, &hw, &o);
+        let wall_s = t0.elapsed().as_secs_f64();
+        Run {
+            threads: if threads == 0 { Engine::new(0).threads() } else { threads },
+            speculation,
+            wall_s,
+            meas_per_sec: result.measurements as f64 / wall_s,
+            rounds_per_sec: result.rounds as f64 / wall_s,
+            result,
+        }
+    };
+
+    let serial = time(1, 1);
+    println!("== tuner loop (budget 192, joint_frac 0.5) ==");
+    println!(
+        "serial walk (1 thread):      {:.2} s  ({:.0} meas/s, {:.1} rounds/s)",
+        serial.wall_s, serial.meas_per_sec, serial.rounds_per_sec
+    );
+
+    let cores = Engine::new(0).threads();
+    let mut thread_counts = vec![2usize, 4, 8];
+    if !thread_counts.contains(&cores) {
+        thread_counts.push(cores);
+    }
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let batched: Vec<Run> = thread_counts
+        .iter()
+        .map(|&t| {
+            let r = time(t, SPECULATION);
+            println!(
+                "batched+spec (K={}, {:>2} thr): {:.2} s  ({:.0} meas/s, {:.1} rounds/s, {:.2}x)",
+                SPECULATION,
+                r.threads,
+                r.wall_s,
+                r.meas_per_sec,
+                r.rounds_per_sec,
+                r.meas_per_sec / serial.meas_per_sec
+            );
+            r
+        })
+        .collect();
+    let best = batched
+        .iter()
+        .map(|r| r.meas_per_sec)
+        .fold(0.0f64, f64::max);
+    let speedup_best = best / serial.meas_per_sec;
+    println!("best speedup vs serial walk: {speedup_best:.2}x");
+
+    // determinism re-check on the bench config itself: the speculative
+    // trajectory must not depend on thread count (the batched runs at
+    // different thread counts must agree with a 1-thread replay)
+    let replay = tune_op(&g, conv, &hw, &opts(1, SPECULATION));
+    let deterministic = batched.iter().all(|r| {
+        r.result.best_ms.to_bits() == replay.best_ms.to_bits()
+            && r.result.measurements == replay.measurements
+            && r.result.history.len() == replay.history.len()
+            && r.result
+                .history
+                .iter()
+                .zip(&replay.history)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+    println!("thread-count determinism:    {deterministic}");
+
+    // memo-cache eviction bound: a tiny cap must hold under a real run
+    let memo_cap = 256usize;
+    let capped_engine = Engine::with_memo_cap(0, memo_cap);
+    let capped = tune_op_with(&g, conv, &hw, &opts(0, SPECULATION), &capped_engine);
+    let memo_len = capped_engine.memo_len();
+    let cap_respected = memo_len <= memo_cap;
+    println!(
+        "memo cap {memo_cap}: {memo_len} entries after run, {} evictions (respected: {cap_respected})",
+        capped.engine.evicted
+    );
+
+    // machine-readable report for scripts/bench_tuner.sh / CI trending
+    let path = std::env::var("BENCH_TUNER_JSON")
+        .unwrap_or_else(|_| "BENCH_tuner.json".to_string());
+    let batched_json: Vec<String> = batched
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"threads\": {}, \"speculation\": {}, \"wall_s\": {:.3}, \
+                 \"meas_per_sec\": {:.1}, \"rounds_per_sec\": {:.2}}}",
+                r.threads, r.speculation, r.wall_s, r.meas_per_sec, r.rounds_per_sec
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"budget\": {},\n  \"joint_frac\": {},\n  \
+         \"speculation\": {},\n  \
+         \"serial\": {{\"threads\": 1, \"wall_s\": {:.3}, \
+         \"meas_per_sec\": {:.1}, \"rounds_per_sec\": {:.2}}},\n  \
+         \"batched\": [\n{}\n  ],\n  \
+         \"speedup_best\": {:.3},\n  \
+         \"deterministic\": {},\n  \
+         \"memo_cap\": {},\n  \"memo_len_after_capped_run\": {},\n  \
+         \"memo_evictions\": {},\n  \"memo_cap_respected\": {}\n}}\n",
+        opts(0, 1).budget,
+        opts(0, 1).joint_frac,
+        SPECULATION,
+        serial.wall_s,
+        serial.meas_per_sec,
+        serial.rounds_per_sec,
+        batched_json.join(",\n"),
+        speedup_best,
+        deterministic,
+        memo_cap,
+        memo_len,
+        capped.engine.evicted,
+        cap_respected,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("tuner report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

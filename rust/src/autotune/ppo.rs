@@ -5,6 +5,20 @@
 //! `(0,1)`, and categorical direction actors for the loop random walk);
 //! a single **global shared critic** fits the rewards of every agent to
 //! model interference among sub-spaces (§5.2.2).
+//!
+//! ## Batched paths
+//!
+//! The tuner is batch-first: a whole round of rollouts is drawn in one
+//! call and handed to the candidate-evaluation engine as a single
+//! batch. The batched entry points are bit-compatible with their
+//! one-at-a-time ancestors — [`GaussianActor::sample_n`] reuses one
+//! forward pass but consumes the RNG exactly like `n` serial
+//! [`GaussianActor::sample`] calls, and the `update_batch` methods run
+//! the same GAE → clipped-surrogate → shared-critic sequence the tuner
+//! historically inlined — so switching call shape never changes a
+//! tuning trajectory. Actors are cheap plain data (`Clone`, `Sync`),
+//! which is what lets the speculative joint stage snapshot the shared
+//! critic and fan independent rollouts across worker threads.
 
 use crate::util::Rng;
 
@@ -159,7 +173,10 @@ pub struct Transition {
 }
 
 /// Shared critic: fits state -> expected reward (the global critic of
-/// §5.2.2 shared by all actors).
+/// §5.2.2 shared by all actors). `Clone` lets the speculative joint
+/// stage hand each in-flight proposal a private snapshot and replay
+/// the winning updates into the master during ordered reduction.
+#[derive(Clone)]
 pub struct Critic {
     net: Mlp,
     lr: f64,
@@ -174,6 +191,12 @@ impl Critic {
         self.net.forward(state)[0]
     }
 
+    /// Batched [`Critic::value`]: one call for a whole round's states.
+    /// Pure reads — identical to per-state calls in any order.
+    pub fn values(&self, states: &[&[f64]]) -> Vec<f64> {
+        states.iter().map(|s| self.value(s)).collect()
+    }
+
     pub fn update(&mut self, batch: &[(Vec<f64>, f64)]) {
         for (s, target) in batch {
             let v = self.value(s);
@@ -185,6 +208,7 @@ impl Critic {
 
 /// Continuous actor: diagonal Gaussian over `dim` raw actions, squashed
 /// through a sigmoid to `(0,1)` (the paper's split-actor mapping, Eq. 2).
+#[derive(Clone)]
 pub struct GaussianActor {
     net: Mlp,
     log_std: f64,
@@ -205,14 +229,32 @@ impl GaussianActor {
 
     /// Sample raw actions + log-prob; squashed values in (0,1).
     pub fn sample(&self, state: &[f64], rng: &mut Rng) -> (Vec<f64>, Vec<f64>, f64) {
+        self.sample_n(state, 1, rng).pop().expect("n >= 1")
+    }
+
+    /// Draw `n` proposals from one state in a single call — one MLP
+    /// forward shared by every draw. RNG consumption and results are
+    /// bit-identical to `n` serial [`GaussianActor::sample`] calls
+    /// (the policy is frozen between them), so the speculative joint
+    /// stage can widen a PPO step without changing its trajectory.
+    pub fn sample_n(
+        &self,
+        state: &[f64],
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<(Vec<f64>, Vec<f64>, f64)> {
         let mean = self.net.forward(state);
         let std = self.log_std.exp();
-        let raw: Vec<f64> =
-            mean.iter().map(|m| m + std * rng.normal()).collect();
-        let logp = self.log_prob(&mean, &raw);
-        let squashed: Vec<f64> =
-            raw.iter().map(|r| 1.0 / (1.0 + (-r).exp())).collect();
-        (raw, squashed, logp)
+        (0..n)
+            .map(|_| {
+                let raw: Vec<f64> =
+                    mean.iter().map(|m| m + std * rng.normal()).collect();
+                let logp = self.log_prob(&mean, &raw);
+                let squashed: Vec<f64> =
+                    raw.iter().map(|r| 1.0 / (1.0 + (-r).exp())).collect();
+                (raw, squashed, logp)
+            })
+            .collect()
     }
 
     fn log_prob(&self, mean: &[f64], raw: &[f64]) -> f64 {
@@ -261,6 +303,16 @@ impl GaussianActor {
         }
     }
 
+    /// One whole PPO round in a single call: GAE over the rollout, the
+    /// clipped-surrogate actor step, then the shared-critic regression
+    /// on `(state, reward)` — exactly the sequence the tuner used to
+    /// inline, in the same order.
+    pub fn update_batch(&mut self, critic: &mut Critic, batch: &[Transition]) {
+        let (adv, targets) = round_advantages(batch);
+        self.update(batch, &adv);
+        critic.update(&targets);
+    }
+
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -268,6 +320,7 @@ impl GaussianActor {
 
 /// Categorical actor over `n_actions` discrete choices (loop random-walk
 /// directions, §5.2.2).
+#[derive(Clone)]
 pub struct CategoricalActor {
     net: Mlp,
     n_actions: usize,
@@ -293,8 +346,7 @@ impl CategoricalActor {
         exps.into_iter().map(|e| e / z).collect()
     }
 
-    pub fn sample(&self, state: &[f64], rng: &mut Rng) -> (usize, f64) {
-        let p = self.probs(state);
+    fn draw(&self, p: &[f64], rng: &mut Rng) -> (usize, f64) {
         let mut u = rng.uniform();
         for (i, pi) in p.iter().enumerate() {
             if u < *pi {
@@ -303,6 +355,56 @@ impl CategoricalActor {
             u -= pi;
         }
         (self.n_actions - 1, p[self.n_actions - 1].max(1e-12).ln())
+    }
+
+    pub fn sample(&self, state: &[f64], rng: &mut Rng) -> (usize, f64) {
+        let p = self.probs(state);
+        self.draw(&p, rng)
+    }
+
+    /// Draw `n` iid actions from one state — the softmax is computed
+    /// once, the RNG is consumed exactly as by `n` serial
+    /// [`CategoricalActor::sample`] calls.
+    pub fn sample_n(
+        &self,
+        state: &[f64],
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<(usize, f64)> {
+        let p = self.probs(state);
+        (0..n).map(|_| self.draw(&p, rng)).collect()
+    }
+
+    /// Sample one guided-walk rollout: `steps` policy steps over an
+    /// abstract point space (`state_of` embeds a point, `step` applies
+    /// a `(dim, ±1)` move). Returns the endpoint plus the last step's
+    /// `(action, logp, state)` — the transition the tuner credits, as
+    /// in the serial walk. The actor is only read, so batched callers
+    /// fan independent rollouts across worker threads, each with its
+    /// own RNG stream.
+    pub fn walk<P, S, F>(
+        &self,
+        start: P,
+        steps: usize,
+        rng: &mut Rng,
+        state_of: S,
+        step: F,
+    ) -> (P, Option<(usize, f64, Vec<f64>)>)
+    where
+        S: Fn(&P) -> Vec<f64>,
+        F: Fn(P, usize, i64) -> P,
+    {
+        let mut p = start;
+        let mut last = None;
+        for _ in 0..steps {
+            let st = state_of(&p);
+            let (a, logp) = self.sample(&st, rng);
+            let dim = a / 2;
+            let dir = if a % 2 == 0 { 1 } else { -1 };
+            p = step(p, dim, dir);
+            last = Some((a, logp, st));
+        }
+        (p, last)
     }
 
     pub fn update(&mut self, batch: &[Transition], advantages: &[f64]) {
@@ -328,9 +430,30 @@ impl CategoricalActor {
         }
     }
 
+    /// One whole PPO round in a single call — see
+    /// [`GaussianActor::update_batch`].
+    pub fn update_batch(&mut self, critic: &mut Critic, batch: &[Transition]) {
+        let (adv, targets) = round_advantages(batch);
+        self.update(batch, &adv);
+        critic.update(&targets);
+    }
+
     pub fn n_actions(&self) -> usize {
         self.n_actions
     }
+}
+
+/// GAE advantages plus the critic regression targets of one rollout
+/// (the shared prologue of both `update_batch` paths).
+fn round_advantages(batch: &[Transition]) -> (Vec<f64>, Vec<(Vec<f64>, f64)>) {
+    let rewards: Vec<f64> = batch.iter().map(|t| t.reward).collect();
+    let values: Vec<f64> = batch.iter().map(|t| t.value).collect();
+    let adv = gae(&rewards, &values, 0.99, 0.95);
+    let targets = batch
+        .iter()
+        .map(|t| (t.state.clone(), t.reward))
+        .collect();
+    (adv, targets)
 }
 
 /// Generalized advantage estimation over a rollout of rewards/values
@@ -455,5 +578,106 @@ mod tests {
         let adv = gae(&[1.0, 2.0, 3.0, 4.0], &[0.0; 4], 0.99, 0.95);
         let mean: f64 = adv.iter().sum::<f64>() / 4.0;
         assert!(mean.abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_sample_n_matches_serial_samples() {
+        let mut rng = Rng::new(21);
+        let actor = GaussianActor::new(4, 3, &mut rng);
+        let state = vec![0.2, -0.1, 0.7, 0.0];
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let batched = actor.sample_n(&state, 5, &mut r1);
+        for (raw_b, sq_b, logp_b) in batched {
+            let (raw, sq, logp) = actor.sample(&state, &mut r2);
+            assert_eq!(raw, raw_b);
+            assert_eq!(sq, sq_b);
+            assert_eq!(logp.to_bits(), logp_b.to_bits());
+        }
+        // the two RNGs must have consumed identical draw counts
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn categorical_sample_n_matches_serial_samples() {
+        let mut rng = Rng::new(23);
+        let actor = CategoricalActor::new(2, 6, &mut rng);
+        let state = vec![0.4, 0.9];
+        let mut r1 = Rng::new(31);
+        let mut r2 = Rng::new(31);
+        let batched = actor.sample_n(&state, 8, &mut r1);
+        for (a_b, logp_b) in batched {
+            let (a, logp) = actor.sample(&state, &mut r2);
+            assert_eq!(a, a_b);
+            assert_eq!(logp.to_bits(), logp_b.to_bits());
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn update_batch_matches_inline_sequence() {
+        // update_batch must be bit-identical to the historical
+        // gae → actor.update → critic.update inline sequence
+        let mut rng = Rng::new(29);
+        let mut a1 = CategoricalActor::new(2, 4, &mut rng);
+        let mut a2 = a1.clone();
+        let mut c1 = Critic::new(2, &mut rng);
+        let mut c2 = c1.clone();
+        let mut batch = Vec::new();
+        let mut srng = Rng::new(97);
+        for i in 0..6 {
+            let state = vec![srng.uniform(), srng.uniform()];
+            let (a, logp) = a1.sample(&state, &mut srng);
+            batch.push(Transition {
+                state,
+                action: vec![],
+                action_idx: a,
+                logp,
+                reward: (i as f64) * 0.3 - 0.5,
+                value: 0.1 * i as f64,
+            });
+        }
+        let rewards: Vec<f64> = batch.iter().map(|t| t.reward).collect();
+        let values: Vec<f64> = batch.iter().map(|t| t.value).collect();
+        let adv = gae(&rewards, &values, 0.99, 0.95);
+        a1.update(&batch, &adv);
+        c1.update(
+            &batch
+                .iter()
+                .map(|t| (t.state.clone(), t.reward))
+                .collect::<Vec<_>>(),
+        );
+        a2.update_batch(&mut c2, &batch);
+        let probe = vec![0.3, -0.2];
+        for (x, y) in a1.probs(&probe).iter().zip(a2.probs(&probe).iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(c1.value(&probe).to_bits(), c2.value(&probe).to_bits());
+    }
+
+    #[test]
+    fn walk_is_deterministic_and_bounded() {
+        let mut rng = Rng::new(33);
+        let actor = CategoricalActor::new(3, 6, &mut rng);
+        let state_of = |p: &Vec<i64>| p.iter().map(|&x| x as f64).collect();
+        let step = |mut p: Vec<i64>, dim: usize, dir: i64| {
+            p[dim] = (p[dim] + dir).clamp(0, 9);
+            p
+        };
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let (p1, t1) = actor.walk(vec![4, 4, 4], 3, &mut r1, state_of, step);
+        let (p2, t2) = actor.walk(vec![4, 4, 4], 3, &mut r2, state_of, step);
+        assert_eq!(p1, p2);
+        assert!(t1.is_some());
+        let (a1, l1, s1) = t1.unwrap();
+        let (a2, l2, s2) = t2.unwrap();
+        assert_eq!((a1, l1.to_bits(), s1), (a2, l2.to_bits(), s2));
+        assert!(p1.iter().all(|&x| (0..=9).contains(&x)));
+        // zero steps: no transition, point unchanged
+        let (p0, t0) =
+            actor.walk(vec![1, 2, 3], 0, &mut r1, state_of, step);
+        assert_eq!(p0, vec![1, 2, 3]);
+        assert!(t0.is_none());
     }
 }

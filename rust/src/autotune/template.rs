@@ -57,6 +57,22 @@ pub fn instantiate(
     }
 }
 
+/// Instantiate one decision per parameter vector — the speculative
+/// joint stage turns a whole batch of sampled actions into layout
+/// decisions in one call (instantiation is pure; each worker then
+/// reconstructs its own loop space from its decision).
+pub fn instantiate_batch<'a>(
+    graph: &Graph,
+    node_id: NodeId,
+    params: impl IntoIterator<Item = &'a [f64]>,
+    levels: usize,
+) -> Vec<ComplexDecision> {
+    params
+        .into_iter()
+        .map(|p| instantiate(graph, node_id, p, levels))
+        .collect()
+}
+
 /// The default (untuned) decision: identity layouts everywhere.
 pub fn identity_decision(node: NodeId) -> ComplexDecision {
     ComplexDecision { node, ..Default::default() }

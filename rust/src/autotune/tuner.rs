@@ -16,21 +16,41 @@
 //! candidates are pre-ranked by the cost model and only the top-k of
 //! each batch are measured (§5.2.3).
 //!
-//! Candidate evaluation — lowering, feature extraction, prediction and
-//! simulation — runs on the [`crate::engine`] worker pool: each round's
-//! batch is lowered in parallel and the measured top-k simulated in
-//! parallel, with cross-round memoization deduplicating the candidates
-//! that PPO walks and joint-stage space reconstruction revisit. The
+//! ## Batched execution
+//!
+//! The whole loop is batch-first: every round draws its rollouts in
+//! one pass (PPO walks, sketches, restarts), feeds the candidates to
+//! the [`crate::engine`] pool as a single batch (lowering, cost-model
+//! prediction and simulation all fan out), and folds the results back
+//! in submission order with one `update_batch` per agent. The
 //! trajectory is bit-for-bit identical for any `TuneOptions::threads`
-//! value (results are consumed in submission order and the cost model
-//! is updated serially), so parallelism is purely a throughput knob.
+//! value (results are consumed in submission order and model updates
+//! stay serial), so parallelism is purely a throughput knob.
+//!
+//! ## Speculative joint stage
+//!
+//! With `TuneOptions::speculation = K > 1` the joint stage widens each
+//! PPO step to K layout proposals sampled from the *same* policy
+//! state, evaluated concurrently — each proposal reconstructs its loop
+//! space and runs its rounds on a width-capped slice of the engine
+//! pool, with a private RNG stream (deterministic seed-split off the
+//! master RNG) and a private snapshot of the shared critic. An
+//! **ordered reduction** then commits the proposals in sampling order:
+//! replaying each one's critic updates, charging its measurements
+//! against the joint budget (proposals past the budget are discarded —
+//! classic speculation waste), and folding its reward into the layout
+//! actor's episode. For a fixed `(seed, speculation)` the result is
+//! bit-for-bit identical at any thread count; `speculation = 1` (the
+//! default) *is* the serial walk — it threads the master RNG and live
+//! critic through one proposal at a time, exactly as the historical
+//! tuner did.
 
 use std::collections::{HashMap, HashSet};
 
-use crate::autotune::ppo::{gae, CategoricalActor, Critic, GaussianActor, Transition};
+use crate::autotune::ppo::{CategoricalActor, Critic, GaussianActor, Transition};
 use crate::autotune::space::LoopSpace;
 use crate::autotune::template;
-use crate::engine::{Engine, EngineStats, EvalContext};
+use crate::engine::{Engine, EngineHandle, EngineStats, EvalContext};
 use crate::graph::{Graph, NodeId};
 use crate::loops::LoopSchedule;
 use crate::propagate::{propagate, ComplexDecision, PropMode, PropagationResult};
@@ -71,6 +91,16 @@ pub struct TuneOptions {
     /// Candidate-evaluation worker threads (0 = one per core, 1 =
     /// serial). Any value yields an identical tuning result.
     pub threads: usize,
+    /// Layout proposals speculatively evaluated in parallel per
+    /// joint-stage PPO step. `1` (and `0`) = the serial walk. Values
+    /// above 1 change the search trajectory *deterministically*: a
+    /// fixed `(seed, speculation)` pair gives bit-identical results at
+    /// any thread count. Unlike `threads`, this knob is intentionally
+    /// machine-independent — it never auto-derives from core count.
+    pub speculation: usize,
+    /// Engine memo-cache entry cap (0 = [`Engine::DEFAULT_MEMO_CAP`]).
+    /// Eviction bounds memory for long runs and never changes results.
+    pub memo_cap: usize,
 }
 
 impl Default for TuneOptions {
@@ -85,6 +115,8 @@ impl Default for TuneOptions {
             seed: 0,
             mode: PropMode::Alt,
             threads: 0,
+            speculation: 1,
+            memo_cap: 0,
         }
     }
 }
@@ -97,6 +129,9 @@ pub struct OpTuneResult {
     pub sched: LoopSchedule,
     pub best_ms: f64,
     pub measurements: usize,
+    /// PPO rounds executed (each round = one candidate batch through
+    /// the engine); rounds/sec is the tuner-loop throughput unit.
+    pub rounds: usize,
     /// best-so-far trace (one entry per measurement) for tuning curves
     pub history: Vec<f64>,
     /// best latency of the identity-layout track (diagnostics)
@@ -106,6 +141,40 @@ pub struct OpTuneResult {
     /// candidate-eval engine counters for this op's run (memo hit rate
     /// is the dedup win over re-lowering every candidate)
     pub engine: EngineStats,
+}
+
+/// Per-run mutable accounting threaded through every round: budget
+/// units spent, round count, and the best-so-far trace. Speculative
+/// proposals fill a private `Trace` that the ordered reduction merges
+/// into the master.
+#[derive(Clone, Debug, Default)]
+struct Trace {
+    used: usize,
+    rounds: usize,
+    history: Vec<f64>,
+    /// When set, every shared-critic training batch the rounds produce
+    /// is recorded so a speculative proposal can be replayed into the
+    /// master critic at commit time.
+    record_critic: bool,
+    critic_batches: Vec<Vec<(Vec<f64>, f64)>>,
+}
+
+impl Trace {
+    fn recording() -> Self {
+        Self { record_critic: true, ..Default::default() }
+    }
+}
+
+/// Everything fixed across one op's tuning run: the operator, the
+/// device model, the options, and a (possibly width-capped) engine
+/// handle for this context's candidate batches.
+#[derive(Clone, Copy)]
+struct RoundCtx<'a> {
+    graph: &'a Graph,
+    node: NodeId,
+    hw: &'a HwProfile,
+    engine: EngineHandle<'a>,
+    opts: &'a TuneOptions,
 }
 
 /// A loop-tuning context for one fixed layout: space + PPO walk state
@@ -134,24 +203,21 @@ impl LoopTuning {
         }
     }
 
-    /// One round: sample a batch of candidates (PPO-guided walk from the
-    /// incumbent + random restarts), rank by cost model, measure top-k.
-    /// Lowering and simulation are batched onto the engine pool.
-    #[allow(clippy::too_many_arguments)]
+    /// One round: draw a whole batch of rollouts (PPO-guided walks
+    /// from the incumbent + sketches + random restarts), rank by cost
+    /// model, measure top-k. Lowering, prediction and simulation are
+    /// batched onto the engine pool; agents update once per round via
+    /// `update_batch`.
     fn round(
         &mut self,
-        graph: &Graph,
-        node: NodeId,
+        ctx: &RoundCtx<'_>,
         prop: &PropagationResult,
-        hw: &HwProfile,
-        engine: &Engine,
         critic: &mut Critic,
-        opts: &TuneOptions,
         rng: &mut Rng,
-        used: &mut usize,
-        history: &mut Vec<f64>,
+        trace: &mut Trace,
     ) {
-        let ctx = EvalContext::new(graph, node, prop, hw);
+        let opts = ctx.opts;
+        let ectx = EvalContext::new(ctx.graph, ctx.node, prop, ctx.hw);
         let mut cands: Vec<(Vec<usize>, Option<(usize, f64, Vec<f64>)>)> = Vec::new();
         // candidate 0: the incumbent itself (guarantees the heuristic
         // start is measured in round one)
@@ -162,7 +228,7 @@ impl LoopTuning {
                 cands.push((self.space.random_point(rng), None));
             } else if b % 8 == 5 || !self.best_ms.is_finite() {
                 // structured sketch candidate (canonical tilings)
-                cands.push((self.space.sketch_point(hw.simd_lanes, rng), None));
+                cands.push((self.space.sketch_point(ctx.hw.simd_lanes, rng), None));
             } else if b % 4 == 3 {
                 // single-dimension mutation of the incumbent: jump one
                 // option to a uniformly random value (coarse move the
@@ -172,32 +238,38 @@ impl LoopTuning {
                 p[dim] = rng.below(self.space.n_options(dim));
                 cands.push((p, None));
             } else {
-                // PPO-guided walk: 1-3 steps from the incumbent
-                let mut p = self.best_point.clone();
+                // PPO-guided walk rollout: 1-3 steps from the incumbent
                 let steps = 1 + rng.below(3);
-                let mut last = None;
-                for _ in 0..steps {
-                    let st = pad_state(self.space.state(&p));
-                    let (a, logp) = self.actor.sample(&st, rng);
-                    let dim = a / 2;
-                    let dir = if a % 2 == 0 { 1 } else { -1 };
-                    p = self.space.neighbor(&p, dim, dir);
-                    last = Some((a, logp, st));
-                }
+                let (p, last) = self.actor.walk(
+                    self.best_point.clone(),
+                    steps,
+                    rng,
+                    |p| pad_state(self.space.state(p)),
+                    |p, dim, dir| self.space.neighbor(&p, dim, dir),
+                );
                 cands.push((p, last));
             }
         }
-        // rank by predicted latency: batch-lower on the engine pool
-        // (memoized across rounds), then predict from cached features
+        // rank by predicted latency: one engine pass lowers (memoized
+        // across rounds) and predicts from the cached features in the
+        // same job — the GBT is pure, so fusing it into the lowering
+        // batch parallelizes prediction without an extra pool spawn
         let mut scheds =
             self.space.decode_batch(cands.iter().map(|(p, _)| p));
-        let entries = engine.lower_batch(&ctx, &scheds);
-        let mut scored: Vec<(usize, f64)> = entries
+        let evaluated: Vec<(std::sync::Arc<crate::engine::EvalEntry>, f64)> =
+            ctx.engine.run(scheds.len(), |i| {
+                let e = ctx.engine.eval(&ectx, &scheds[i]);
+                let pred = self.cost.predict_features(e.features(), e.program());
+                (e, pred)
+            });
+        let mut scored: Vec<(usize, f64)> = evaluated
             .iter()
+            .map(|(_, pred)| *pred)
             .enumerate()
-            .map(|(i, e)| (i, self.cost.predict_features(e.features(), e.program())))
             .collect();
         scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let entries: Vec<std::sync::Arc<crate::engine::EvalEntry>> =
+            evaluated.into_iter().map(|(e, _)| e).collect();
 
         // measure: incumbent (round one only) + top-(k-1) by predicted
         // latency + one reserved exploration pick uniform over the rest
@@ -208,13 +280,9 @@ impl LoopTuning {
             to_measure.push(0); // the incumbent candidate
             chosen.insert(0);
         }
-        let model_slots = if opts.top_k > 2 {
-            opts.top_k - 2
-        } else {
-            opts.top_k.saturating_sub(1).max(1)
-        };
+        let slots = model_slots(opts.top_k);
         for &(i, _) in scored.iter() {
-            if to_measure.len() >= model_slots {
+            if to_measure.len() >= slots {
                 break;
             }
             if chosen.insert(i) {
@@ -237,7 +305,7 @@ impl LoopTuning {
             // dedicated sketch slot: measure one canonical tiling per
             // round regardless of the cost model's opinion (GBTs
             // extrapolate poorly into unseen tile regimes)
-            let p = self.space.sketch_point(hw.simd_lanes, rng);
+            let p = self.space.sketch_point(ctx.hw.simd_lanes, rng);
             scheds.push(self.space.decode(&p));
             cands.push((p, None));
             to_measure.push(cands.len() - 1);
@@ -257,21 +325,30 @@ impl LoopTuning {
                 if i < entries.len() {
                     entries[i].clone()
                 } else {
-                    engine.eval(&ctx, &scheds[i])
+                    ctx.engine.eval(&ectx, &scheds[i])
                 }
             })
             .collect();
-        let measured = engine.measure_entries(&ctx, &m_entries);
+        let measured = ctx.engine.measure_entries(&ectx, &m_entries);
+        // batched critic evaluation of the walk transitions (the
+        // critic is not updated during the fold, so one `values` call
+        // matches the historical per-transition lookups)
+        let walk_states: Vec<&[f64]> = to_measure
+            .iter()
+            .filter_map(|&i| cands[i].1.as_ref().map(|w| w.2.as_slice()))
+            .collect();
+        let values = critic.values(&walk_states);
+        let mut vi = 0;
         let mut batch_tr: Vec<Transition> = Vec::new();
         for (&i, m) in to_measure.iter().zip(&measured) {
             let ms = m.total_ms;
             self.cost.observe_features(m.entry.features().as_ref().clone(), m.raw_ms);
-            *used += 1;
+            trace.used += 1;
             if ms < self.best_ms {
                 self.best_ms = ms;
                 self.best_point = cands[i].0.clone();
             }
-            history.push(self.best_ms);
+            trace.history.push(self.best_ms);
             if let Some((a, logp, st)) = &cands[i].1 {
                 batch_tr.push(Transition {
                     state: st.clone(),
@@ -279,21 +356,19 @@ impl LoopTuning {
                     action_idx: *a,
                     logp: *logp,
                     reward: u - ms,
-                    value: critic.value(st),
+                    value: values[vi],
                 });
+                vi += 1;
             }
         }
+        trace.rounds += 1;
         if batch_tr.len() >= 2 {
-            let rewards: Vec<f64> = batch_tr.iter().map(|t| t.reward).collect();
-            let values: Vec<f64> = batch_tr.iter().map(|t| t.value).collect();
-            let adv = gae(&rewards, &values, 0.99, 0.95);
-            self.actor.update(&batch_tr, &adv);
-            critic.update(
-                &batch_tr
-                    .iter()
-                    .map(|t| (t.state.clone(), t.reward))
-                    .collect::<Vec<_>>(),
-            );
+            if trace.record_critic {
+                trace.critic_batches.push(
+                    batch_tr.iter().map(|t| (t.state.clone(), t.reward)).collect(),
+                );
+            }
+            self.actor.update_batch(critic, &batch_tr);
         }
     }
 }
@@ -323,15 +398,215 @@ fn nest_dims(
     (storage, reduction)
 }
 
+/// The joint-stage winning track: loop-tuning state + the layout
+/// decision and propagation that produced it.
+struct AltTrack {
+    lt: LoopTuning,
+    dec: ComplexDecision,
+    prop: PropagationResult,
+}
+
+/// One fully-evaluated speculative proposal, returned by a worker for
+/// the ordered reduction.
+struct SpecResult {
+    lt: LoopTuning,
+    dec: ComplexDecision,
+    prop: PropagationResult,
+    trace: Trace,
+    raw: Vec<f64>,
+    logp: f64,
+}
+
+/// Cost-model measurement slots per round — the single source of truth
+/// shared by the round's selection logic and the speculative fan-out
+/// estimate below.
+fn model_slots(top_k: usize) -> usize {
+    if top_k > 2 {
+        top_k - 2
+    } else {
+        top_k.saturating_sub(1).max(1)
+    }
+}
+
+/// Upper estimate of the measurements one speculative proposal
+/// consumes (used to shrink the fan-out near budget exhaustion; a
+/// deterministic function of opts). Each round measures up to
+/// model-slots + the exploration pick + the sketch slot, and a fresh
+/// proposal's first round also measures its incumbent.
+fn measured_per_proposal(opts: &TuneOptions) -> usize {
+    let per_round = model_slots(opts.top_k)
+        + usize::from(opts.top_k > 1)
+        + usize::from(opts.top_k > 2);
+    opts.rounds_per_layout.max(1) * per_round + 1
+}
+
+/// Fold one finished layout proposal into the joint-stage state, in
+/// walk order: reward the layout actor, adopt the track if it leads,
+/// update policies every 4 proposals — identical for the serial walk
+/// and the ordered reduction of speculative batches.
+#[allow(clippy::too_many_arguments)]
+fn fold_proposal(
+    episode: &mut Vec<Transition>,
+    layout_actor: &mut GaussianActor,
+    critic: &mut Critic,
+    alt_lt: &mut Option<AltTrack>,
+    id_best: f64,
+    lt: LoopTuning,
+    dec: ComplexDecision,
+    prop: PropagationResult,
+    raw: Vec<f64>,
+    logp: f64,
+    st: &[f64],
+) {
+    let best_known = alt_lt
+        .as_ref()
+        .map(|t| t.lt.best_ms)
+        .unwrap_or(f64::INFINITY)
+        .min(id_best);
+    let u = best_known.max(lt.best_ms) * 1.2;
+    episode.push(Transition {
+        state: st.to_vec(),
+        action: raw,
+        action_idx: 0,
+        logp,
+        reward: u - lt.best_ms,
+        value: critic.value(st),
+    });
+    let alt_best = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
+    if lt.best_ms < alt_best {
+        *alt_lt = Some(AltTrack { lt, dec, prop });
+    }
+    if episode.len() >= 4 {
+        layout_actor.update_batch(critic, episode);
+        episode.clear();
+    }
+}
+
+/// The joint stage: layout proposals scored by reconstructed loop
+/// tuning. `speculation == 1` walks serially (master RNG, live
+/// critic); `speculation > 1` evaluates K proposals per PPO step in
+/// parallel with a deterministic seed-split and ordered reduction.
+#[allow(clippy::too_many_arguments)]
+fn joint_stage(
+    ctx: &RoundCtx<'_>,
+    layout_actor: &mut GaussianActor,
+    critic: &mut Critic,
+    rng: &mut Rng,
+    trace: &mut Trace,
+    alt_lt: &mut Option<AltTrack>,
+    id_best: f64,
+    joint_budget: usize,
+) {
+    let opts = ctx.opts;
+    let spec = opts.speculation.max(1);
+    let mut episode: Vec<Transition> = Vec::new();
+    while trace.used < joint_budget {
+        let incumbent_seq = alt_lt
+            .as_ref()
+            .map(|t| t.dec.out_seq.clone())
+            .unwrap_or_default();
+        let st = pad_state(incumbent_seq.state_vector());
+        if spec == 1 {
+            // ---- serial walk (the historical trajectory, bit for bit)
+            let (raw, params, logp) = layout_actor.sample(&st, rng);
+            let dec = template::instantiate(ctx.graph, ctx.node, &params, opts.levels);
+            let prop = propagate(ctx.graph, std::slice::from_ref(&dec), opts.mode);
+            let (sp, rd) = nest_dims(ctx.graph, ctx.node, &prop);
+            // reconstruct the loop space for this layout (at least one
+            // round per proposal, or the budget never drains)
+            let mut lt = LoopTuning::new(&sp, &rd, ctx.hw.simd_lanes, rng);
+            for _ in 0..opts.rounds_per_layout.max(1) {
+                if trace.used >= joint_budget {
+                    break;
+                }
+                lt.round(ctx, &prop, critic, rng, trace);
+            }
+            fold_proposal(
+                &mut episode, layout_actor, critic, alt_lt, id_best, lt, dec,
+                prop, raw, logp, &st,
+            );
+        } else {
+            // ---- speculative batch: K proposals off one policy state
+            let remaining = joint_budget - trace.used;
+            let per_prop = measured_per_proposal(opts).max(1);
+            let k = spec.min(remaining.div_ceil(per_prop)).max(1);
+            // serial prologue on the master RNG: K action draws (one
+            // shared forward pass), then one stream seed per proposal
+            let proposals = layout_actor.sample_n(&st, k, rng);
+            let seeds: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+            let decisions = template::instantiate_batch(
+                ctx.graph,
+                ctx.node,
+                proposals.iter().map(|(_, params, _)| params.as_slice()),
+                opts.levels,
+            );
+            let snapshot = critic.clone();
+            let pool = ctx.engine.engine().threads().max(1);
+            let inflight = k.min(pool);
+            let inner = (pool / inflight).max(1);
+            // parallel phase: each proposal reconstructs its loop
+            // space and runs its rounds on a pool slice, isolated
+            // behind its RNG stream and critic snapshot
+            let results: Vec<SpecResult> =
+                ctx.engine.engine().run_with(inflight, k, |i| {
+                    let mut prng = Rng::new(seeds[i]);
+                    let dec = decisions[i].clone();
+                    let prop =
+                        propagate(ctx.graph, std::slice::from_ref(&dec), opts.mode);
+                    let (sp, rd) = nest_dims(ctx.graph, ctx.node, &prop);
+                    let mut pcritic = snapshot.clone();
+                    let mut lt =
+                        LoopTuning::new(&sp, &rd, ctx.hw.simd_lanes, &mut prng);
+                    let sub = RoundCtx {
+                        engine: ctx.engine.engine().handle_with(inner),
+                        ..*ctx
+                    };
+                    let mut ptrace = Trace::recording();
+                    // at least one round per proposal, matching the
+                    // serial walk (a zero-round proposal would commit
+                    // no measurements and the budget would never drain)
+                    for _ in 0..opts.rounds_per_layout.max(1) {
+                        lt.round(&sub, &prop, &mut pcritic, &mut prng, &mut ptrace);
+                    }
+                    let (raw, _, logp) = proposals[i].clone();
+                    SpecResult { lt, dec, prop, trace: ptrace, raw, logp }
+                });
+            // ordered reduction: commit proposals in sampling order;
+            // whatever exceeds the budget is speculation waste
+            for r in results {
+                if trace.used >= joint_budget {
+                    break;
+                }
+                for batch in &r.trace.critic_batches {
+                    critic.update(batch);
+                }
+                trace.used += r.trace.used;
+                trace.rounds += r.trace.rounds;
+                trace.history.extend_from_slice(&r.trace.history);
+                fold_proposal(
+                    &mut episode, layout_actor, critic, alt_lt, id_best, r.lt,
+                    r.dec, r.prop, r.raw, r.logp, &st,
+                );
+            }
+        }
+    }
+}
+
+/// Engine sized by the options (`threads`, `memo_cap`).
+fn engine_for(opts: &TuneOptions) -> Engine {
+    let cap = if opts.memo_cap == 0 { Engine::DEFAULT_MEMO_CAP } else { opts.memo_cap };
+    Engine::with_memo_cap(opts.threads, cap)
+}
+
 /// Tune one complex operator with the two-stage cross-exploration,
-/// creating a fresh candidate-eval engine sized by `opts.threads`.
+/// creating a fresh candidate-eval engine sized by the options.
 pub fn tune_op(
     graph: &Graph,
     node: NodeId,
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> OpTuneResult {
-    let engine = Engine::new(opts.threads);
+    let engine = engine_for(opts);
     tune_op_with(graph, node, hw, opts, &engine)
 }
 
@@ -349,9 +624,9 @@ pub fn tune_op_with(
     let mut critic = Critic::new(STATE_DIM, &mut rng);
     let np = template::n_params(graph, node, opts.levels);
     let mut layout_actor = GaussianActor::new(STATE_DIM, np.max(1), &mut rng);
+    let ctx = RoundCtx { graph, node, hw, engine: engine.handle(), opts };
 
-    let mut used = 0usize;
-    let mut history = Vec::new();
+    let mut trace = Trace::default();
     // The joint stage needs a handful of layout trials to pay for its
     // space reconstructions; at starvation budgets it degrades to pure
     // loop tuning (ALT then gracefully equals ALT-OL).
@@ -366,75 +641,23 @@ pub fn tune_op_with(
     let id_prop = propagate(graph, std::slice::from_ref(&id_dec), opts.mode);
     let (sp0, rd0) = nest_dims(graph, node, &id_prop);
     let mut id_lt = LoopTuning::new(&sp0, &rd0, hw.simd_lanes, &mut rng);
-    id_lt.round(
-        graph, node, &id_prop, hw, engine, &mut critic, opts, &mut rng,
-        &mut used, &mut history,
-    );
+    id_lt.round(&ctx, &id_prop, &mut critic, &mut rng, &mut trace);
 
     // best non-identity layout found by the joint stage
-    let mut alt_lt: Option<(LoopTuning, ComplexDecision, PropagationResult)> =
-        None;
+    let mut alt_lt: Option<AltTrack> = None;
 
     // ---- joint stage (skipped entirely in LoopOnly mode) ----
     if opts.mode != PropMode::LoopOnly && np > 0 {
-        let mut episode: Vec<Transition> = Vec::new();
-        while used < joint_budget {
-            let incumbent_seq = alt_lt
-                .as_ref()
-                .map(|(_, d, _)| d.out_seq.clone())
-                .unwrap_or_default();
-            let st = pad_state(incumbent_seq.state_vector());
-            let (raw, params, logp) = layout_actor.sample(&st, &mut rng);
-            let dec = template::instantiate(graph, node, &params, opts.levels);
-            let prop = propagate(graph, std::slice::from_ref(&dec), opts.mode);
-            let (sp, rd) = nest_dims(graph, node, &prop);
-            // reconstruct the loop space for this layout
-            let mut lt = LoopTuning::new(&sp, &rd, hw.simd_lanes, &mut rng);
-            for _ in 0..opts.rounds_per_layout {
-                if used >= joint_budget {
-                    break;
-                }
-                lt.round(
-                    graph, node, &prop, hw, engine, &mut critic, opts,
-                    &mut rng, &mut used, &mut history,
-                );
-            }
-            let best_known = alt_lt
-                .as_ref()
-                .map(|(l, _, _)| l.best_ms)
-                .unwrap_or(f64::INFINITY)
-                .min(id_lt.best_ms);
-            let u = best_known.max(lt.best_ms) * 1.2;
-            episode.push(Transition {
-                state: st.clone(),
-                action: raw,
-                action_idx: 0,
-                logp,
-                reward: u - lt.best_ms,
-                value: critic.value(&st),
-            });
-            let alt_best = alt_lt
-                .as_ref()
-                .map(|(l, _, _)| l.best_ms)
-                .unwrap_or(f64::INFINITY);
-            if lt.best_ms < alt_best {
-                alt_lt = Some((lt, dec, prop));
-            }
-            if episode.len() >= 4 {
-                let rewards: Vec<f64> =
-                    episode.iter().map(|t| t.reward).collect();
-                let values: Vec<f64> = episode.iter().map(|t| t.value).collect();
-                let adv = gae(&rewards, &values, 0.99, 0.95);
-                layout_actor.update(&episode, &adv);
-                critic.update(
-                    &episode
-                        .iter()
-                        .map(|t| (t.state.clone(), t.reward))
-                        .collect::<Vec<_>>(),
-                );
-                episode.clear();
-            }
-        }
+        joint_stage(
+            &ctx,
+            &mut layout_actor,
+            &mut critic,
+            &mut rng,
+            &mut trace,
+            &mut alt_lt,
+            id_lt.best_ms,
+            joint_budget,
+        );
     }
 
     // ---- loop-only stage: layouts frozen, no space reconstruction.
@@ -445,30 +668,24 @@ pub fn tune_op_with(
     // better layout still receives half the refinement budget and wins
     // the final comparison.
     let mut flip = true;
-    while used < opts.budget {
+    while trace.used < opts.budget {
         if flip && alt_lt.is_some() {
-            if let Some((lt, _, prop)) = &mut alt_lt {
-                let prop = prop.clone();
-                lt.round(
-                    graph, node, &prop, hw, engine, &mut critic, opts,
-                    &mut rng, &mut used, &mut history,
-                );
+            if let Some(t) = &mut alt_lt {
+                let prop = t.prop.clone();
+                t.lt.round(&ctx, &prop, &mut critic, &mut rng, &mut trace);
             }
         } else {
-            id_lt.round(
-                graph, node, &id_prop, hw, engine, &mut critic, opts,
-                &mut rng, &mut used, &mut history,
-            );
+            id_lt.round(&ctx, &id_prop, &mut critic, &mut rng, &mut trace);
         }
         flip = !flip;
     }
 
-    monotonize(&mut history);
+    monotonize(&mut trace.history);
     // final winner: best of identity vs joint layout
     let id_ms = id_lt.best_ms;
-    let alt_ms = alt_lt.as_ref().map(|(l, _, _)| l.best_ms).unwrap_or(f64::INFINITY);
+    let alt_ms = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
     let (win_lt, win_dec) = match alt_lt {
-        Some((lt, dec, _)) if lt.best_ms < id_lt.best_ms => (lt, dec),
+        Some(t) if t.lt.best_ms < id_lt.best_ms => (t.lt, t.dec),
         _ => (id_lt, id_dec),
     };
     OpTuneResult {
@@ -476,8 +693,9 @@ pub fn tune_op_with(
         decision: win_dec,
         sched: win_lt.space.decode(&win_lt.best_point),
         best_ms: win_lt.best_ms,
-        measurements: used,
-        history,
+        measurements: trace.used,
+        rounds: trace.rounds,
+        history: trace.history,
         id_ms,
         alt_ms,
         engine: engine.stats().since(&stats0),
@@ -502,29 +720,27 @@ pub fn tune_loops(
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> OpTuneResult {
-    let engine = Engine::new(opts.threads);
+    let engine = engine_for(opts);
     let stats0 = engine.stats();
     let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x517));
     let mut critic = Critic::new(STATE_DIM, &mut rng);
     let prop = propagate(graph, std::slice::from_ref(decision), opts.mode);
     let (sp, rd) = nest_dims(graph, node, &prop);
     let mut lt = LoopTuning::new(&sp, &rd, hw.simd_lanes, &mut rng);
-    let mut used = 0usize;
-    let mut history = Vec::new();
-    while used < opts.budget {
-        lt.round(
-            graph, node, &prop, hw, &engine, &mut critic, opts, &mut rng,
-            &mut used, &mut history,
-        );
+    let ctx = RoundCtx { graph, node, hw, engine: engine.handle(), opts };
+    let mut trace = Trace::default();
+    while trace.used < opts.budget {
+        lt.round(&ctx, &prop, &mut critic, &mut rng, &mut trace);
     }
-    monotonize(&mut history);
+    monotonize(&mut trace.history);
     OpTuneResult {
         node,
         decision: decision.clone(),
         sched: lt.space.decode(&lt.best_point),
         best_ms: lt.best_ms,
-        measurements: used,
-        history,
+        measurements: trace.used,
+        rounds: trace.rounds,
+        history: trace.history,
         id_ms: lt.best_ms,
         alt_ms: f64::INFINITY,
         engine: engine.stats().since(&stats0),
@@ -538,6 +754,8 @@ pub struct GraphTuneResult {
     pub scheds: HashMap<NodeId, LoopSchedule>,
     pub report: GraphReport,
     pub measurements: usize,
+    /// cumulative PPO rounds across all ops
+    pub rounds: usize,
     /// cumulative engine counters across all ops + the final graph sim
     pub engine: EngineStats,
 }
@@ -552,7 +770,7 @@ pub fn tune_graph(
     hw: &HwProfile,
     opts: &TuneOptions,
 ) -> GraphTuneResult {
-    let engine = Engine::new(opts.threads);
+    let engine = engine_for(opts);
     let complex = graph.complex_nodes();
     // per-op floor: below ~128 measurements the joint stage cannot act,
     // so graph tuning guarantees each op a meaningful slice (total
@@ -562,11 +780,13 @@ pub fn tune_graph(
     let mut decisions = Vec::new();
     let mut scheds = HashMap::new();
     let mut measurements = 0;
+    let mut rounds = 0;
     for &node in &complex {
         let mut o = opts.clone();
         o.budget = per_op;
         let r = tune_op_with(graph, node, hw, &o, &engine);
         measurements += r.measurements;
+        rounds += r.rounds;
         scheds.insert(node, r.sched);
         decisions.push(r.decision);
     }
@@ -577,6 +797,7 @@ pub fn tune_graph(
         scheds,
         report,
         measurements,
+        rounds,
         engine: engine.stats(),
     }
 }
@@ -613,6 +834,7 @@ mod tests {
             r.best_ms
         );
         assert!(r.measurements <= 60 + 4);
+        assert!(r.rounds > 0);
     }
 
     #[test]
@@ -653,6 +875,7 @@ mod tests {
         let r = tune_graph(&g, &hw, &small_opts(40));
         assert_eq!(r.decisions.len(), 2);
         assert!(r.report.latency_ms() > 0.0);
+        assert!(r.rounds > 0);
         // the incumbent is re-measured every round: the shared memo
         // cache must see repeats
         assert!(r.engine.hits > 0, "memo never hit: {:?}", r.engine);

@@ -60,7 +60,7 @@ impl Config {
 
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
-    /// `seed`, `mode`, `threads`).
+    /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`).
     pub fn tune_options(&self) -> Result<TuneOptions, String> {
         let d = TuneOptions::default();
         let mode = match self.get("mode").unwrap_or("alt") {
@@ -82,6 +82,9 @@ impl Config {
             seed: self.get_u64("seed", d.seed),
             mode,
             threads: self.get_usize("threads", d.threads),
+            // 0 is accepted as "no speculation" (same as 1)
+            speculation: self.get_usize("speculation", d.speculation).max(1),
+            memo_cap: self.get_usize("memo_cap", d.memo_cap),
         })
     }
 }
@@ -133,6 +136,20 @@ mod tests {
         assert_eq!(c.tune_options().unwrap().threads, 3);
         let d = Config::parse("").unwrap();
         assert_eq!(d.tune_options().unwrap().threads, 0); // auto
+    }
+
+    #[test]
+    fn speculation_and_memo_cap_keys_parse() {
+        let c = Config::parse("speculation = 4\nmemo_cap = 512").unwrap();
+        let o = c.tune_options().unwrap();
+        assert_eq!(o.speculation, 4);
+        assert_eq!(o.memo_cap, 512);
+        let d = Config::parse("").unwrap().tune_options().unwrap();
+        assert_eq!(d.speculation, 1); // serial walk by default
+        assert_eq!(d.memo_cap, 0); // engine default cap
+        // 0 means "no speculation", normalized to 1
+        let z = Config::parse("speculation = 0").unwrap().tune_options().unwrap();
+        assert_eq!(z.speculation, 1);
     }
 
     #[test]

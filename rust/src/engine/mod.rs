@@ -40,8 +40,33 @@
 //! ensemble (cached feature vectors make them cheap). Only
 //! deterministic pure stages are memoized, which is what keeps the
 //! parallel engine's tuning trajectory identical to the serial one.
+//!
+//! ### Eviction
+//!
+//! The memo cache is size-capped with a **clock / second-chance**
+//! policy ([`Engine::with_memo_cap`], default
+//! [`Engine::DEFAULT_MEMO_CAP`]): every hit marks its entry
+//! referenced; when an insert pushes the map over the cap, the clock
+//! hand walks insertion order, giving referenced entries a second
+//! chance and dropping cold ones. Entries are pure functions of their
+//! key, so eviction can never change a tuning result — only force a
+//! re-lower later (a fresh miss). When the cap binds under a parallel
+//! batch, *which* entry gets evicted can depend on thread
+//! interleaving; results still cannot, and with the default cap no
+//! tier-1 workload ever binds. The invariance is property-tested in
+//! `tests/batched_tuner.rs`.
+//!
+//! ### Batch submission & nested sub-batches
+//!
+//! [`Engine::run`] uses every pool thread. The speculative joint stage
+//! instead fans K independent *proposals* at the outer level and gives
+//! each one a width-capped [`EngineHandle`]
+//! ([`Engine::handle_with`]) for its inner candidate batches, so
+//! K × inner ≈ pool size and nested batches never oversubscribe the
+//! machine. A handle shares the engine's memo cache and counters; the
+//! width only caps how many workers one call may occupy.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -118,6 +143,9 @@ pub struct EngineStats {
     pub misses: u64,
     /// `simulate_program` executions (≤ misses once warm).
     pub simulated: u64,
+    /// Memo entries dropped by the clock eviction (0 until the cap
+    /// binds).
+    pub evicted: u64,
 }
 
 impl EngineStats {
@@ -136,6 +164,7 @@ impl EngineStats {
             hits: self.hits - earlier.hits,
             misses: self.misses - earlier.misses,
             simulated: self.simulated - earlier.simulated,
+            evicted: self.evicted - earlier.evicted,
         }
     }
 }
@@ -145,6 +174,7 @@ struct Counters {
     hits: AtomicU64,
     misses: AtomicU64,
     simulated: AtomicU64,
+    evicted: AtomicU64,
 }
 
 /// Everything fixed across one batch of candidates: the operator being
@@ -269,25 +299,118 @@ fn conversion_terms(graph: &Graph, prop: &PropagationResult, hw: &HwProfile) -> 
 
 type MemoKey = (u64, LoopSchedule);
 
+struct MemoSlot {
+    entry: Arc<EvalEntry>,
+    /// Clock reference bit: set on every hit, cleared when the hand
+    /// passes, evicted when found clear.
+    referenced: bool,
+}
+
+/// Size-capped memo cache with clock (second-chance) eviction. The
+/// ring holds the keys in insertion order, `Arc`-shared with the map
+/// so clock bookkeeping costs a pointer per entry, not a second
+/// `LoopSchedule` clone; each live key appears exactly once (eviction
+/// pops it, a second chance recycles it to the back).
+struct MemoCache {
+    map: HashMap<Arc<MemoKey>, MemoSlot>,
+    ring: VecDeque<Arc<MemoKey>>,
+    cap: usize,
+}
+
+impl MemoCache {
+    fn new(cap: usize) -> Self {
+        Self { map: HashMap::new(), ring: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Look up or claim `key`; returns the entry, whether it was
+    /// created, and the number of entries evicted to stay under the
+    /// cap.
+    fn lookup_or_insert(&mut self, key: MemoKey) -> (Arc<EvalEntry>, bool, u64) {
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.referenced = true;
+            return (slot.entry.clone(), false, 0);
+        }
+        let key = Arc::new(key);
+        let entry = Arc::new(EvalEntry::empty());
+        self.map.insert(
+            key.clone(),
+            MemoSlot { entry: entry.clone(), referenced: false },
+        );
+        self.ring.push_back(key.clone());
+        let mut evicted = 0;
+        while self.map.len() > self.cap {
+            let Some(k) = self.ring.pop_front() else { break };
+            if Arc::ptr_eq(&k, &key) {
+                // the page being brought in is exempt from its own
+                // eviction pass (classic second-chance): evicting it
+                // would defeat the same-batch OnceLock dedup the memo
+                // exists for when every resident entry is hot
+                self.ring.push_back(k);
+                continue;
+            }
+            match self.map.get_mut(k.as_ref()) {
+                Some(slot) if slot.referenced => {
+                    slot.referenced = false;
+                    self.ring.push_back(k);
+                }
+                Some(_) => {
+                    self.map.remove(k.as_ref());
+                    evicted += 1;
+                }
+                None => {}
+            }
+        }
+        (entry, true, evicted)
+    }
+}
+
 /// The parallel candidate-evaluation engine: scoped worker pool plus
 /// the cross-round memo cache. One engine normally spans a whole
 /// tuning run (op or graph) so layout proposals that re-visit the same
 /// loop points hit the cache.
 pub struct Engine {
     threads: usize,
-    memo: Mutex<HashMap<MemoKey, Arc<EvalEntry>>>,
+    memo: Mutex<MemoCache>,
     counters: Counters,
 }
 
+/// A width-capped view of an engine for nested batch submission: the
+/// speculative joint stage runs K proposals at the outer level and
+/// hands each one a handle with `width ≈ threads / K`, so the
+/// proposals' inner candidate batches share the pool instead of
+/// oversubscribing it. Handles share the engine's memo cache and
+/// counters.
+#[derive(Clone, Copy)]
+pub struct EngineHandle<'e> {
+    engine: &'e Engine,
+    width: usize,
+}
+
 impl Engine {
+    /// Default memo-cache entry cap — far above what any single tuning
+    /// run touches, so eviction only fires in long-running services
+    /// (or when a smaller cap is chosen explicitly).
+    pub const DEFAULT_MEMO_CAP: usize = 1 << 16;
+
     /// `threads == 0` ⇒ one worker per available core.
     pub fn new(threads: usize) -> Self {
+        Self::with_memo_cap(threads, Self::DEFAULT_MEMO_CAP)
+    }
+
+    /// An engine whose memo cache holds at most `cap` entries
+    /// (clock-evicted beyond that; `cap` is clamped to ≥ 1). Eviction
+    /// trades recomputation for memory and never changes results.
+    pub fn with_memo_cap(threads: usize, cap: usize) -> Self {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        Self { threads, memo: Mutex::new(HashMap::new()), counters: Counters::default() }
+        Self {
+            threads,
+            memo: Mutex::new(MemoCache::new(cap)),
+            counters: Counters::default(),
+        }
     }
 
     /// Single-threaded engine — the serial baseline the determinism
@@ -300,9 +423,25 @@ impl Engine {
         self.threads
     }
 
+    /// Memo-cache entry cap.
+    pub fn memo_cap(&self) -> usize {
+        self.memo.lock().unwrap().cap
+    }
+
     /// Number of memoized candidates.
     pub fn memo_len(&self) -> usize {
-        self.memo.lock().unwrap().len()
+        self.memo.lock().unwrap().map.len()
+    }
+
+    /// Full-width handle (batch submission API).
+    pub fn handle(&self) -> EngineHandle<'_> {
+        self.handle_with(self.threads)
+    }
+
+    /// Handle whose batches use at most `width` workers — the
+    /// per-proposal sub-batch view (min 1, capped at the pool size).
+    pub fn handle_with(&self, width: usize) -> EngineHandle<'_> {
+        EngineHandle { engine: self, width: width.clamp(1, self.threads.max(1)) }
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -310,6 +449,7 @@ impl Engine {
             hits: self.counters.hits.load(Ordering::Relaxed),
             misses: self.counters.misses.load(Ordering::Relaxed),
             simulated: self.counters.simulated.load(Ordering::Relaxed),
+            evicted: self.counters.evicted.load(Ordering::Relaxed),
         }
     }
 
@@ -320,7 +460,18 @@ impl Engine {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let workers = self.threads.min(n);
+        self.run_with(self.threads, n, f)
+    }
+
+    /// [`Engine::run`] capped at `width` workers — the nested-batch
+    /// primitive: an outer fan-out gives each job a slice of the pool
+    /// for its own inner batches. Order-preserving like `run`.
+    pub fn run_with<T, F>(&self, width: usize, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = width.min(self.threads).min(n);
         if workers <= 1 {
             return (0..n).map(f).collect();
         }
@@ -348,24 +499,20 @@ impl Engine {
     /// under a single lock acquisition, so a duplicate candidate in
     /// one parallel batch waits on the first worker's `OnceLock`
     /// instead of re-lowering — hit/miss counts are therefore
-    /// deterministic for a given candidate sequence, any pool size.
+    /// deterministic for a given candidate sequence, any pool size
+    /// (eviction victims, when the cap binds, are the one exception;
+    /// see the module docs).
     pub fn eval(&self, ctx: &EvalContext, sched: &LoopSchedule) -> Arc<EvalEntry> {
         let key = (ctx.key_base, sched.clone());
-        let mut created = false;
-        let entry = self
-            .memo
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert_with(|| {
-                created = true;
-                Arc::new(EvalEntry::empty())
-            })
-            .clone();
+        let (entry, created, evicted) =
+            self.memo.lock().unwrap().lookup_or_insert(key);
         if created {
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
         } else {
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if evicted > 0 {
+            self.counters.evicted.fetch_add(evicted, Ordering::Relaxed);
         }
         entry.lowered.get_or_init(|| {
             let p = lower_complex(
@@ -400,7 +547,7 @@ impl Engine {
         ctx: &EvalContext,
         scheds: &[LoopSchedule],
     ) -> Vec<Arc<EvalEntry>> {
-        self.run(scheds.len(), |i| self.eval(ctx, &scheds[i]))
+        self.handle().lower_batch(ctx, scheds)
     }
 
     /// Batch-measure a candidate set (lookup + simulate) — for
@@ -426,16 +573,7 @@ impl Engine {
         ctx: &EvalContext,
         entries: &[Arc<EvalEntry>],
     ) -> Vec<Measured> {
-        self.run(entries.len(), |i| {
-            let entry = entries[i].clone();
-            let report = self.simulated(ctx, &entry);
-            let raw_ms = report.latency_ms;
-            let mut total_ms = raw_ms;
-            for t in &ctx.conv_terms {
-                total_ms += *t;
-            }
-            Measured { entry, raw_ms, total_ms }
-        })
+        self.handle().measure_entries(ctx, entries)
     }
 
     /// Full per-candidate pipeline `lower → featurize → predict →
@@ -482,6 +620,59 @@ impl Engine {
 impl Default for Engine {
     fn default() -> Self {
         Self::new(0)
+    }
+}
+
+impl<'e> EngineHandle<'e> {
+    /// The underlying engine (shared memo + counters).
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    /// Worker cap of this handle's batches.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Order-preserving batch run capped at this handle's width.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.engine.run_with(self.width, n, f)
+    }
+
+    /// Memoized single-candidate evaluation (same memo as the engine).
+    pub fn eval(&self, ctx: &EvalContext, sched: &LoopSchedule) -> Arc<EvalEntry> {
+        self.engine.eval(ctx, sched)
+    }
+
+    /// Width-capped [`Engine::lower_batch`].
+    pub fn lower_batch(
+        &self,
+        ctx: &EvalContext,
+        scheds: &[LoopSchedule],
+    ) -> Vec<Arc<EvalEntry>> {
+        self.run(scheds.len(), |i| self.engine.eval(ctx, &scheds[i]))
+    }
+
+    /// Width-capped [`Engine::measure_entries`].
+    pub fn measure_entries(
+        &self,
+        ctx: &EvalContext,
+        entries: &[Arc<EvalEntry>],
+    ) -> Vec<Measured> {
+        self.run(entries.len(), |i| {
+            let entry = entries[i].clone();
+            let report = self.engine.simulated(ctx, &entry);
+            let raw_ms = report.latency_ms;
+            let mut total_ms = raw_ms;
+            for t in &ctx.conv_terms {
+                total_ms += *t;
+            }
+            Measured { entry, raw_ms, total_ms }
+        })
     }
 }
 
@@ -548,6 +739,82 @@ mod tests {
         for (s, p) in serial.iter().zip(&parallel) {
             assert_eq!(s.total_ms.to_bits(), p.total_ms.to_bits());
         }
+    }
+
+    #[test]
+    fn run_with_caps_width_and_preserves_order() {
+        let e = Engine::new(4);
+        for width in [0, 1, 2, 3, 8] {
+            let out = e.run_with(width, 50, |i| i * 3);
+            assert_eq!(out, (0..50).map(|i| i * 3).collect::<Vec<_>>());
+        }
+        let h = e.handle_with(2);
+        assert_eq!(h.width(), 2);
+        assert_eq!(e.handle_with(99).width(), 4, "width clamps to pool size");
+        assert_eq!(h.run(10, |i| i + 1), (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handle_batches_match_engine_batches() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let space = crate::autotune::LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+        let mut rng = crate::util::Rng::new(11);
+        let scheds: Vec<LoopSchedule> =
+            (0..10).map(|_| space.decode(&space.random_point(&mut rng))).collect();
+        let e = Engine::new(4);
+        let full = e.measure_batch(&ctx, &scheds);
+        let e2 = Engine::new(4);
+        let entries = e2.handle_with(2).lower_batch(&ctx, &scheds);
+        let narrow = e2.handle_with(2).measure_entries(&ctx, &entries);
+        for (a, b) in full.iter().zip(&narrow) {
+            assert_eq!(a.total_ms.to_bits(), b.total_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn clock_eviction_caps_memo_and_keeps_results() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let space = crate::autotune::LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+        let mut rng = crate::util::Rng::new(13);
+        let mut scheds: Vec<LoopSchedule> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        while scheds.len() < 8 {
+            let p = space.random_point(&mut rng);
+            if seen.insert(p.clone()) {
+                scheds.push(space.decode(&p));
+            }
+        }
+        let e = Engine::with_memo_cap(1, 4);
+        assert_eq!(e.memo_cap(), 4);
+        for s in &scheds {
+            e.eval(&ctx, s);
+        }
+        assert!(e.memo_len() <= 4, "memo over cap: {}", e.memo_len());
+        let s = e.stats();
+        assert_eq!(s.misses, 8);
+        assert_eq!(s.evicted, 4);
+        // an evicted candidate re-lowers to the same program
+        let uncapped = Engine::serial();
+        let a = e.measure_batch(&ctx, &scheds[..1]);
+        let b = uncapped.measure_batch(&ctx, &scheds[..1]);
+        assert_eq!(a[0].total_ms.to_bits(), b[0].total_ms.to_bits());
+        // second chance: a hit entry survives the hand passing over it
+        let hot = scheds[7].clone();
+        let before = e.eval(&ctx, &hot); // hit → referenced
+        while scheds.len() < 11 {
+            let p = space.random_point(&mut rng);
+            if seen.insert(p.clone()) {
+                scheds.push(space.decode(&p));
+            }
+        }
+        e.eval(&ctx, &scheds[8]);
+        e.eval(&ctx, &scheds[9]);
+        e.eval(&ctx, &scheds[10]); // hand reaches `hot`: spared, next cold evicted
+        let after = e.eval(&ctx, &hot);
+        assert!(Arc::ptr_eq(&before, &after), "referenced entry was evicted");
+        assert!(e.memo_len() <= 4);
     }
 
     #[test]

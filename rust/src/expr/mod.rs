@@ -18,20 +18,45 @@
 //! subtrees share one allocation and the whole IR is `Send + Sync` —
 //! the property the parallel candidate-evaluation engine
 //! ([`crate::engine`]) relies on to lower and simulate candidates
-//! across worker threads. The arena never evicts (pointer identity of a
-//! canonical node is stable for the process lifetime), which makes the
-//! memoized-`simplify` table sound: it is keyed by the canonical child
-//! pointers, and structurally equal children always intern to the same
-//! pointer. The same invariant lets `Eq`/`Hash` compare children by
-//! pointer identity, so interning is O(1) per node rather than a
-//! structural re-walk of the subtree. Layout rewrites re-derive the
-//! same handful of index shapes for every candidate in a tuning run,
-//! so the arena stays small while the constructor fast path skips
-//! re-simplification entirely.
+//! across worker threads. `Eq`/`Hash` compare children by pointer
+//! identity, so interning is O(1) per node rather than a structural
+//! re-walk of the subtree. Layout rewrites re-derive the same handful
+//! of index shapes for every candidate in a tuning run, so the arena
+//! stays small while the constructor fast path skips re-simplification
+//! entirely.
+//!
+//! ## Eviction & the pointer-stability invariant
+//!
+//! Long-running services must not grow the arena monotonically, so it
+//! is size-capped ([`set_arena_cap`]): when the cap is exceeded a
+//! sweep ([`sweep_arena`]) drops every node whose *only* strong
+//! reference is the arena itself. That criterion is what keeps
+//! pointer-identity comparison sound across evictions:
+//!
+//! * a node is evicted only when **no live `Expr` anywhere references
+//!   it** — neither as an `Arc` child (every live composite value
+//!   pins its children) nor from the arena (interned parents pin
+//!   their children too, so sweeps iterate to a fixpoint, leaves
+//!   last). Any two live expressions with structurally equal children
+//!   therefore still share canonical child pointers, and a fresh
+//!   construction of an evicted shape simply re-interns it as a new
+//!   canonical node.
+//! * the memoized-`simplify` table is keyed by child *addresses*;
+//!   every entry pins its two operand `Arc`s (plus its result's
+//!   children), so an address in a live key always denotes a live
+//!   node — stale-address (ABA) lookups are structurally impossible.
+//!   Sweeps clear the table first, which both unpins that garbage and
+//!   bounds the table; entries are pure, so a clear only costs
+//!   re-simplification.
+//!
+//! Eviction is thus invisible to results: it changes when work is
+//! recomputed, never what any expression evaluates to — pinned by the
+//! eviction property test in `tests/batched_tuner.rs`.
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fmt;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// An integer index expression over loop variables.
@@ -111,11 +136,18 @@ const OP_MIN: u8 = 5;
 
 const SHARDS: usize = 16;
 
+/// A memoized-simplify entry: the result plus the two operand `Arc`s
+/// of its key. Pinning the operands is load-bearing: a node whose
+/// address appears in a live memo key can never drop to a strong count
+/// of 1, so a sweep can never evict it and the key can never dangle —
+/// even if an insert races with a sweep's memo clear.
+type SimplifyEntry = (Arc<Expr>, Arc<Expr>, Expr);
+
 /// Process-wide hash-consing arena + memoized-simplify table, sharded
 /// to keep lock contention negligible under the parallel engine.
 struct Interner {
     nodes: Vec<Mutex<HashSet<Arc<Expr>>>>,
-    simplify_memo: Vec<Mutex<HashMap<(u8, usize, usize), Expr>>>,
+    simplify_memo: Vec<Mutex<HashMap<(u8, usize, usize), SimplifyEntry>>>,
 }
 
 fn interner() -> &'static Interner {
@@ -133,17 +165,106 @@ fn shard_of<T: Hash>(v: &T) -> usize {
     (h.finish() as usize) % SHARDS
 }
 
+/// Default node cap for the interning arena. Typical tuning runs stay
+/// two orders of magnitude below this; the cap exists so long-running
+/// services are bounded.
+pub const DEFAULT_ARENA_CAP: usize = 1 << 18;
+
+/// Approximate live-node count (exact after each sweep).
+static ARENA_LEN: AtomicUsize = AtomicUsize::new(0);
+static ARENA_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_ARENA_CAP);
+/// Node count at which the next automatic sweep fires (0 ⇒ the cap).
+/// Raised above the cap after a sweep that could not get under it —
+/// everything still referenced — so pinned-full arenas don't sweep on
+/// every insert.
+static NEXT_SWEEP: AtomicUsize = AtomicUsize::new(0);
+static SWEEPING: AtomicBool = AtomicBool::new(false);
+
+/// Current arena node cap.
+pub fn arena_cap() -> usize {
+    ARENA_CAP.load(Ordering::Relaxed)
+}
+
+/// Set the arena node cap (min 1). Lowering it takes effect at the
+/// next intern; eviction never changes what expressions evaluate to.
+pub fn set_arena_cap(cap: usize) {
+    ARENA_CAP.store(cap.max(1), Ordering::Relaxed);
+    NEXT_SWEEP.store(0, Ordering::Relaxed);
+}
+
 /// Intern an expression node, returning its canonical shared `Arc`.
-/// Structurally equal inputs always return pointer-identical nodes.
+/// Structurally equal inputs always return pointer-identical nodes
+/// (for as long as either lives — see the module docs on eviction).
 pub fn intern(e: Expr) -> Arc<Expr> {
     let it = interner();
-    let mut set = it.nodes[shard_of(&e)].lock().unwrap();
-    if let Some(a) = set.get(&e) {
-        return a.clone();
-    }
-    let a = Arc::new(e);
-    set.insert(a.clone());
+    let a = {
+        let mut set = it.nodes[shard_of(&e)].lock().unwrap();
+        if let Some(a) = set.get(&e) {
+            return a.clone();
+        }
+        let a = Arc::new(e);
+        set.insert(a.clone());
+        a
+    };
+    ARENA_LEN.fetch_add(1, Ordering::Relaxed);
+    maybe_sweep(it);
     a
+}
+
+/// Trigger a sweep when the arena outgrows its cap (and the post-sweep
+/// hysteresis gate). Runs after the shard lock is released; a single
+/// sweeper at a time.
+fn maybe_sweep(it: &Interner) {
+    let cap = ARENA_CAP.load(Ordering::Relaxed);
+    let len = ARENA_LEN.load(Ordering::Relaxed);
+    if len <= cap.max(NEXT_SWEEP.load(Ordering::Relaxed)) {
+        return;
+    }
+    if SWEEPING.swap(true, Ordering::SeqCst) {
+        return; // another thread is already sweeping
+    }
+    sweep(it);
+    let live = ARENA_LEN.load(Ordering::Relaxed);
+    let gate = if live > cap { live + (cap / 2).max(1) } else { 0 };
+    NEXT_SWEEP.store(gate, Ordering::Relaxed);
+    SWEEPING.store(false, Ordering::SeqCst);
+}
+
+/// Evict every node whose only strong reference is the arena itself;
+/// returns the number of nodes dropped. Safe at any time from any
+/// thread — live expressions keep their children pinned (the count is
+/// inspected under the owning shard's lock, so no new reference can
+/// appear mid-check), and the simplify memo is cleared first so its
+/// child-address keys can never dangle.
+pub fn sweep_arena() -> usize {
+    sweep(interner())
+}
+
+fn sweep(it: &Interner) -> usize {
+    // 1) drop the simplify memo: its values pin their children, and
+    //    its keys are child addresses that must not outlive the nodes.
+    for m in &it.simplify_memo {
+        m.lock().unwrap().clear();
+    }
+    // 2) drop unreferenced nodes. Parents pin children, so each pass
+    //    unpins the next layer down — iterate to a fixpoint.
+    let mut evicted_total = 0;
+    loop {
+        let mut evicted = 0;
+        for shard in &it.nodes {
+            let mut set = shard.lock().unwrap();
+            let before = set.len();
+            set.retain(|a| Arc::strong_count(a) > 1);
+            evicted += before - set.len();
+        }
+        if evicted == 0 {
+            break;
+        }
+        evicted_total += evicted;
+    }
+    let live: usize = it.nodes.iter().map(|s| s.lock().unwrap().len()).sum();
+    ARENA_LEN.store(live, Ordering::Relaxed);
+    evicted_total
 }
 
 /// Number of distinct nodes in the interning arena (diagnostics).
@@ -153,14 +274,16 @@ pub fn intern_len() -> usize {
 
 /// Build a binary node from canonical children with memoized simplify.
 /// Keying by child pointers is sound because `intern` is canonical and
-/// the arena never evicts.
+/// every memo entry pins its operand `Arc`s (see [`SimplifyEntry`]) —
+/// an address in a live key is always an address of a live node.
 fn binop(op: u8, a: Arc<Expr>, b: Arc<Expr>) -> Expr {
     let key = (op, Arc::as_ptr(&a) as usize, Arc::as_ptr(&b) as usize);
     let it = interner();
     let shard = (key.1 ^ key.2.rotate_left(17) ^ ((op as usize) << 3)) % SHARDS;
-    if let Some(r) = it.simplify_memo[shard].lock().unwrap().get(&key) {
+    if let Some((_, _, r)) = it.simplify_memo[shard].lock().unwrap().get(&key) {
         return r.clone();
     }
+    let (ka, kb) = (a.clone(), b.clone());
     let raw = match op {
         OP_ADD => Expr::Add(a, b),
         OP_SUB => Expr::Sub(a, b),
@@ -170,7 +293,7 @@ fn binop(op: u8, a: Arc<Expr>, b: Arc<Expr>) -> Expr {
         _ => Expr::Min(a, b),
     };
     let r = raw.simplify();
-    it.simplify_memo[shard].lock().unwrap().insert(key, r.clone());
+    it.simplify_memo[shard].lock().unwrap().insert(key, (ka, kb, r.clone()));
     r
 }
 
@@ -420,5 +543,56 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a, Var(2));
         assert!(intern_len() > 0);
+    }
+
+    #[test]
+    fn sweep_evicts_only_unreferenced_nodes() {
+        // var ids far outside anything other tests intern, so the
+        // nodes built here are provably garbage once dropped
+        const BASE: usize = 900_100;
+        let held = Expr::add(Var(BASE), Const(41));
+        let garbage: Vec<Expr> = (0..64)
+            .map(|i| Expr::add(Var(BASE + 1 + i), Const(43)))
+            .collect();
+        drop(garbage);
+        let evicted = sweep_arena();
+        assert!(evicted >= 64, "sweep dropped only {evicted} nodes");
+        // the held value survives and stays canonical: a fresh build of
+        // the same shape must compare equal (shared child pointers)
+        let rebuilt = Expr::add(Var(BASE), Const(41));
+        assert_eq!(held, rebuilt);
+        // an evicted shape re-interns cleanly and is canonical again
+        let again = Expr::add(Var(BASE + 1), Const(43));
+        let again2 = Expr::add(Var(BASE + 1), Const(43));
+        assert_eq!(again, again2);
+    }
+
+    #[test]
+    fn eviction_is_invisible_to_evaluation() {
+        const BASE: usize = 910_000;
+        // same expression built before and after a sweep that evicts
+        // the first copy must evaluate identically
+        let mk = || {
+            Expr::add(
+                Expr::mul(Var(0), Const(7)),
+                Expr::rem(Var(1), Const(5)),
+            )
+        };
+        let before = mk().eval(&[3, 13]);
+        let garbage: Vec<Expr> =
+            (0..32).map(|i| Expr::mul(Var(BASE + i), Const(9))).collect();
+        drop(garbage);
+        sweep_arena();
+        assert_eq!(mk().eval(&[3, 13]), before);
+        assert_eq!(before, 3 * 7 + 13 % 5);
+    }
+
+    #[test]
+    fn arena_cap_roundtrips() {
+        let old = arena_cap();
+        set_arena_cap(12_345);
+        assert_eq!(arena_cap(), 12_345);
+        set_arena_cap(old);
+        assert_eq!(arena_cap(), old);
     }
 }

@@ -24,12 +24,16 @@
 //!   prefetch, SIMD, parallelism): the substitution for the paper's
 //!   Intel/NVIDIA/ARM testbeds (see DESIGN.md §Hardware-Adaptation).
 //! * [`cost`] — gradient-boosted-tree cost model trained online.
-//! * [`autotune`] — PPO agents, layout/loop tuning templates, and the
-//!   two-stage cross-exploration joint tuner (Fig. 8).
+//! * [`autotune`] — PPO agents (with batched rollout/update paths),
+//!   layout/loop tuning templates, and the two-stage cross-exploration
+//!   joint tuner (Fig. 8); the joint stage can speculatively evaluate
+//!   K layout proposals per PPO step (`TuneOptions::speculation`) with
+//!   a deterministic seed-split and ordered reduction.
 //! * [`engine`] — the parallel candidate-evaluation engine: a scoped
 //!   worker pool that batches the `lower → featurize → predict →
 //!   simulate` pipeline across cores, with cross-round memoization of
-//!   duplicate candidates.
+//!   duplicate candidates (size-capped, clock-evicted) and width-capped
+//!   handles for nested per-proposal sub-batches.
 //! * [`baselines`] — Ansor-like, AutoTVM-like, FlexTensor-like and
 //!   vendor-library-like comparators.
 //! * [`runtime`] — PJRT executor for the AOT HLO artifacts produced by

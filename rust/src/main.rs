@@ -41,6 +41,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: alt <tune|graph|sim|propagate|run|figures> [args]
   alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
+           [--threads N] [--speculation K] [--memo_cap N]
            [--config f.conf] [--set k=v,...] [--op N]
   alt graph --workload mv2
   alt sim --workload bt [--hw gpu]

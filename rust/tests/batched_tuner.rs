@@ -1,0 +1,160 @@
+//! Batched/speculative tuning-loop invariants:
+//!
+//! 1. the speculative joint stage (`speculation = K > 1`) is
+//!    bit-identical across thread counts for a fixed seed — the
+//!    seed-split + ordered-reduction determinism the engine's worker
+//!    pool must never break;
+//! 2. `speculation` only widens the joint stage — below the joint
+//!    budget threshold it is a strict no-op;
+//! 3. eviction (engine memo clock + expr-arena sweeps) never changes
+//!    tuning results, only recomputation cost.
+
+use alt::autotune::tuner::{tune_op, tune_op_with, OpTuneResult, TuneOptions};
+use alt::engine::Engine;
+use alt::graph::models;
+use alt::sim::HwProfile;
+
+fn opts(budget: usize, threads: usize, speculation: usize) -> TuneOptions {
+    TuneOptions { budget, seed: 5, threads, speculation, ..Default::default() }
+}
+
+fn assert_identical(a: &OpTuneResult, label_a: &str, b: &OpTuneResult, label_b: &str) {
+    assert_eq!(
+        a.best_ms.to_bits(),
+        b.best_ms.to_bits(),
+        "best latency diverged: {label_a} {} vs {label_b} {}",
+        a.best_ms,
+        b.best_ms
+    );
+    assert_eq!(a.sched, b.sched, "winning schedule diverged");
+    assert_eq!(a.decision.out_seq, b.decision.out_seq, "winning layout diverged");
+    assert_eq!(a.measurements, b.measurements, "budget accounting diverged");
+    assert_eq!(a.rounds, b.rounds, "round count diverged");
+    assert_eq!(a.history.len(), b.history.len(), "trace length diverged");
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.to_bits(), y.to_bits(), "tuning trace diverged");
+    }
+}
+
+/// The acceptance-criteria determinism test for the speculative path:
+/// K proposals per PPO step, evaluated on 1 worker vs a full pool,
+/// must walk the exact same trajectory (budget ≥ 96 so the joint
+/// stage actually speculates).
+#[test]
+fn speculative_tuning_bit_identical_across_thread_counts() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let serial = tune_op(&g, conv, &hw, &opts(160, 1, 3));
+    let parallel = tune_op(&g, conv, &hw, &opts(160, 4, 3));
+    assert_identical(&serial, "threads=1", &parallel, "threads=4");
+}
+
+/// Different speculation widths are *allowed* to walk different
+/// trajectories (that is the documented contract) — but each width
+/// must itself be deterministic, and a repeat run must reproduce it.
+#[test]
+fn each_speculation_width_is_self_deterministic() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    for k in [2, 4] {
+        let a = tune_op(&g, conv, &hw, &opts(128, 2, k));
+        let b = tune_op(&g, conv, &hw, &opts(128, 2, k));
+        assert_identical(&a, "run A", &b, "run B");
+    }
+}
+
+/// Below the joint-budget threshold (budget < 96) the joint stage is
+/// skipped entirely, so `speculation` must be a strict no-op.
+#[test]
+fn speculation_is_a_noop_without_a_joint_stage() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::arm();
+    let narrow = tune_op(&g, conv, &hw, &opts(60, 2, 1));
+    let wide = tune_op(&g, conv, &hw, &opts(60, 2, 4));
+    assert_identical(&narrow, "speculation=1", &wide, "speculation=4");
+}
+
+/// Speculative runs keep the tuning-loop contracts: budget respected
+/// up to one in-flight proposal of slack, monotone best-so-far trace,
+/// and cross-round memo reuse.
+#[test]
+fn speculative_run_respects_budget_and_improves() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let r = tune_op(&g, conv, &HwProfile::intel(), &opts(200, 0, 4));
+    assert!(r.best_ms.is_finite() && r.best_ms > 0.0);
+    assert!(r.measurements >= 200, "budget underrun: {}", r.measurements);
+    // worst case: one committed proposal overshoots the joint budget
+    // (rounds_per_layout rounds × ~(top_k+1) measurements each)
+    assert!(
+        r.measurements <= 200 + 24,
+        "speculation overshot the budget: {}",
+        r.measurements
+    );
+    for w in r.history.windows(2) {
+        assert!(w[1] <= w[0] + 1e-12);
+    }
+    assert!(r.engine.hits > 0, "no memo reuse: {:?}", r.engine);
+}
+
+/// Property: memo-cache eviction is invisible to results. Tiny caps
+/// force heavy eviction mid-run; the trajectory must not move by a
+/// bit, and the cache must honour its bound.
+#[test]
+fn memo_eviction_never_changes_tuning_results() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    for seed in [5u64, 11] {
+        for spec in [1usize, 3] {
+            let mut o = opts(120, 2, spec);
+            o.seed = seed;
+            let uncapped_engine = Engine::new(2);
+            let uncapped = tune_op_with(&g, conv, &hw, &o, &uncapped_engine);
+            for cap in [8usize, 64] {
+                let capped_engine = Engine::with_memo_cap(2, cap);
+                let capped = tune_op_with(&g, conv, &hw, &o, &capped_engine);
+                assert_identical(
+                    &uncapped,
+                    "uncapped",
+                    &capped,
+                    &format!("memo_cap={cap}"),
+                );
+                assert!(
+                    capped_engine.memo_len() <= cap,
+                    "cap {cap} violated: {} entries",
+                    capped_engine.memo_len()
+                );
+                assert!(capped.engine.evicted > 0, "cap {cap} never evicted");
+            }
+        }
+    }
+}
+
+/// Property: expr-arena sweeps triggered mid-run by a tiny cap never
+/// change tuning results (pointer-stability invariant of
+/// `rust/src/expr`); the `memo_cap` TuneOptions knob routes through
+/// `tune_op` the same way.
+#[test]
+fn expr_arena_eviction_never_changes_tuning_results() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let mut o = opts(120, 2, 2);
+    o.memo_cap = 32; // also exercise the options-level memo cap
+    let baseline = tune_op(&g, conv, &hw, &o);
+    let old_cap = alt::expr::arena_cap();
+    // small enough that sweeps fire during the run, large enough that
+    // live working sets always fit
+    alt::expr::set_arena_cap(2048);
+    let swept = tune_op(&g, conv, &hw, &o);
+    alt::expr::set_arena_cap(old_cap);
+    assert_identical(&baseline, "default arena cap", &swept, "arena cap 2048");
+    // explicit sweep keeps canonical interning intact
+    alt::expr::sweep_arena();
+    let after = tune_op(&g, conv, &hw, &o);
+    assert_identical(&baseline, "pre-sweep", &after, "post-sweep");
+}

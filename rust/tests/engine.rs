@@ -74,6 +74,34 @@ fn graph_tuning_deterministic_across_thread_counts() {
         parallel.report.latency_ms().to_bits()
     );
     assert_eq!(serial.measurements, parallel.measurements);
+    assert_eq!(serial.rounds, parallel.rounds);
+}
+
+/// Speculative graph tuning (per-op joint stages fan K proposals over
+/// the shared engine) stays deterministic across thread counts too —
+/// the nested sub-batch path exercised end to end.
+#[test]
+fn speculative_graph_tuning_deterministic_across_thread_counts() {
+    let g = models::prop_subgraph(7);
+    let hw = HwProfile::arm();
+    let mk = |threads| TuneOptions {
+        budget: 40, // per-op floor of 128 kicks in → joint stage active
+        seed: 3,
+        threads,
+        speculation: 3,
+        ..Default::default()
+    };
+    let serial = tune_graph(&g, &hw, &mk(1));
+    let parallel = tune_graph(&g, &hw, &mk(4));
+    assert_eq!(
+        serial.report.latency_ms().to_bits(),
+        parallel.report.latency_ms().to_bits()
+    );
+    assert_eq!(serial.measurements, parallel.measurements);
+    assert_eq!(serial.rounds, parallel.rounds);
+    for (a, b) in serial.decisions.iter().zip(&parallel.decisions) {
+        assert_eq!(a.out_seq, b.out_seq);
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
-# Run the tuner hot-path bench and capture the candidate-evaluation
-# engine throughput report (serial vs parallel candidates/sec, memo hit
-# rate) as BENCH_engine.json.
+# Run the tuning-loop bench and capture the serial-walk vs
+# batched+speculative throughput report (meas/sec and rounds/sec at
+# several thread counts, thread-count determinism, memo eviction
+# bound) as BENCH_tuner.json.
 #
-# Usage: scripts/bench_engine.sh [output.json]
+# Usage: scripts/bench_tuner.sh [output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_engine.json}"
+out="${1:-BENCH_tuner.json}"
 
 # cargo runs bench binaries with cwd = package root (rust/), so hand
 # the bench an absolute output path (relative args anchor at the
@@ -16,7 +17,7 @@ case "$out" in
   /*) abs="$out" ;;
   *) abs="$PWD/$out" ;;
 esac
-BENCH_ENGINE_JSON="$abs" cargo bench --bench hotpath
+BENCH_TUNER_JSON="$abs" cargo bench --bench tuner
 
 echo
 echo "== $abs =="
