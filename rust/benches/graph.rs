@@ -1,0 +1,207 @@
+//! Bench: graph-tuning throughput — the sequential per-op walk vs the
+//! sharded orchestrator (the §Perf acceptance measurement for the
+//! multi-workload scheduler).
+//!
+//! Tunes a small fleet of figure workloads (§7.3 case study + the two
+//! §7.3.1 propagation subgraphs) three ways at several thread counts:
+//!
+//! * `seq`      — `shards = 1`: the historical sequential walk;
+//! * `sharded`  — `shards = 0, budget_realloc = false`: concurrent
+//!   shards, historical budget split — must reproduce `seq` results
+//!   bit-for-bit (sharding as a pure throughput knob);
+//! * `adaptive` — `shards = 0, budget_realloc = true`: concurrent
+//!   shards with adaptive budget reallocation — different (better or
+//!   equal-quality) trajectory, checked for end-to-end latency parity
+//!   and thread-count determinism.
+//!
+//! Results go to `BENCH_graph.json` (override with `BENCH_GRAPH_JSON`);
+//! `scripts/bench_graph.sh` wraps this, CI enforces the hard floors
+//! (sharded==sequential parity, thread-count determinism) and warns on
+//! the speedup/latency ratios (shared runners are too noisy to gate).
+
+use std::time::Instant;
+
+use alt::autotune::tuner::{tune_graphs, GraphTuneResult, TuneOptions};
+use alt::engine::Engine;
+use alt::graph::{models, Graph};
+use alt::sim::HwProfile;
+
+const BUDGET: usize = 320;
+
+fn opts(threads: usize, shards: usize, realloc: bool) -> TuneOptions {
+    TuneOptions {
+        budget: BUDGET,
+        seed: 11,
+        threads,
+        shards,
+        budget_realloc: realloc,
+        ..Default::default()
+    }
+}
+
+fn fleet() -> Vec<Graph> {
+    vec![
+        models::case_study(),
+        models::prop_subgraph(7),
+        models::prop_subgraph(14),
+    ]
+}
+
+/// Bit-level equality of everything the determinism contract covers.
+fn same(a: &GraphTuneResult, b: &GraphTuneResult) -> bool {
+    a.report.latency_ms().to_bits() == b.report.latency_ms().to_bits()
+        && a.measurements == b.measurements
+        && a.rounds == b.rounds
+        && a.scheds == b.scheds
+        && a.decisions == b.decisions
+        && a.ops.len() == b.ops.len()
+        && a.ops.iter().zip(&b.ops).all(|(x, y)| {
+            x.best_ms.to_bits() == y.best_ms.to_bits()
+                && x.history.len() == y.history.len()
+                && x.history
+                    .iter()
+                    .zip(&y.history)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+fn all_same(a: &[GraphTuneResult], b: &[GraphTuneResult]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| same(x, y))
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+struct Run {
+    wall_s: f64,
+    results: Vec<GraphTuneResult>,
+}
+
+fn run(nets: &[Graph], hw: &HwProfile, o: &TuneOptions) -> Run {
+    let t0 = Instant::now();
+    let results = tune_graphs(nets, hw, o);
+    Run { wall_s: t0.elapsed().as_secs_f64(), results }
+}
+
+fn main() {
+    let nets = fleet();
+    let hw = HwProfile::intel();
+    let n_graphs = nets.len() as f64;
+
+    // untimed warm-up: populates the process-global expr interner /
+    // simplify memo over both trajectories so timed runs compare
+    // threading + scheduling, not first-touch interning
+    run(&nets, &hw, &opts(0, 1, false));
+    run(&nets, &hw, &opts(0, 0, true));
+
+    // single-thread references: the parity + determinism baselines
+    let seq_ref = run(&nets, &hw, &opts(1, 1, false));
+    let shard_ref = run(&nets, &hw, &opts(1, 0, false));
+    let adapt_ref = run(&nets, &hw, &opts(1, 0, true));
+
+    // parity: non-adaptive sharding must reproduce the sequential
+    // results bit-for-bit (checked once against the 1-thread
+    // references; the loop below checks thread-invariance separately
+    // so a parity break is never misreported as a determinism break)
+    let sharded_matches_sequential =
+        all_same(&shard_ref.results, &seq_ref.results);
+
+    println!("== graph orchestrator (budget {BUDGET}, {} workloads) ==", nets.len());
+    println!(
+        "sequential walk (1 thread):  {:.2} s  ({:.2} graphs/s)",
+        seq_ref.wall_s,
+        n_graphs / seq_ref.wall_s
+    );
+
+    let cores = Engine::new(0).threads();
+    let mut thread_counts = vec![2usize, 4, 8];
+    if !thread_counts.contains(&cores) {
+        thread_counts.push(cores);
+    }
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut deterministic = true;
+    let mut speedup_best = 0.0f64;
+    for &t in &thread_counts {
+        let seq = run(&nets, &hw, &opts(t, 1, false));
+        let sharded = run(&nets, &hw, &opts(t, 0, false));
+        let adaptive = run(&nets, &hw, &opts(t, 0, true));
+        // hard invariant: every mode is thread-invariant (each compared
+        // against its own 1-thread reference)
+        deterministic &= all_same(&seq.results, &seq_ref.results)
+            && all_same(&sharded.results, &shard_ref.results)
+            && all_same(&adaptive.results, &adapt_ref.results);
+        let speedup = seq.wall_s / sharded.wall_s;
+        speedup_best = speedup_best.max(speedup);
+        println!(
+            "threads {t:>2}: seq {:.2} s | sharded {:.2} s ({speedup:.2}x) | adaptive {:.2} s",
+            seq.wall_s, sharded.wall_s, adaptive.wall_s
+        );
+        rows.push(format!(
+            "    {{\"threads\": {t}, \"seq_wall_s\": {:.3}, \
+             \"seq_graphs_per_sec\": {:.3}, \"sharded_wall_s\": {:.3}, \
+             \"sharded_graphs_per_sec\": {:.3}, \"speedup\": {:.3}, \
+             \"adaptive_wall_s\": {:.3}, \"adaptive_graphs_per_sec\": {:.3}}}",
+            seq.wall_s,
+            n_graphs / seq.wall_s,
+            sharded.wall_s,
+            n_graphs / sharded.wall_s,
+            speedup,
+            adaptive.wall_s,
+            n_graphs / adaptive.wall_s,
+        ));
+    }
+
+    // end-to-end latency parity of the adaptive trajectory (quality
+    // guard: reallocation must not trade latency for throughput)
+    let ratios: Vec<f64> = adapt_ref
+        .results
+        .iter()
+        .zip(&seq_ref.results)
+        .map(|(a, s)| a.report.latency_ms() / s.report.latency_ms())
+        .collect();
+    let latency_ratio = geomean(&ratios);
+    let seq_meas: usize = seq_ref.results.iter().map(|r| r.measurements).sum();
+    let adapt_meas: usize =
+        adapt_ref.results.iter().map(|r| r.measurements).sum();
+    println!("best sharded speedup:        {speedup_best:.2}x");
+    println!("sharded == sequential:       {sharded_matches_sequential}");
+    println!("thread-count determinism:    {deterministic}");
+    println!(
+        "adaptive latency ratio:      {latency_ratio:.3} (geomean vs sequential)"
+    );
+    println!(
+        "adaptive measurements:       {adapt_meas} vs sequential {seq_meas}"
+    );
+
+    let path = std::env::var("BENCH_GRAPH_JSON")
+        .unwrap_or_else(|_| "BENCH_graph.json".to_string());
+    let json = format!(
+        "{{\n  \"budget\": {BUDGET},\n  \"workloads\": {},\n  \
+         \"serial\": {{\"threads\": 1, \"wall_s\": {:.3}, \
+         \"graphs_per_sec\": {:.3}}},\n  \"runs\": [\n{}\n  ],\n  \
+         \"speedup_best\": {:.3},\n  \
+         \"sharded_matches_sequential\": {},\n  \
+         \"deterministic\": {},\n  \
+         \"adaptive_latency_ratio\": {:.4},\n  \
+         \"adaptive_measurements\": {},\n  \
+         \"sequential_measurements\": {}\n}}\n",
+        nets.len(),
+        seq_ref.wall_s,
+        n_graphs / seq_ref.wall_s,
+        rows.join(",\n"),
+        speedup_best,
+        sharded_matches_sequential,
+        deterministic,
+        latency_ratio,
+        adapt_meas,
+        seq_meas,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("graph report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,10 +1,16 @@
 //! The auto-tuning module (paper §5): layout templates, PPO agents, the
-//! loop space, and the two-stage cross-exploration tuner.
+//! loop space, the two-stage cross-exploration tuner, and the sharded
+//! graph-tuning orchestrator with adaptive budget reallocation.
 
+pub mod orchestrator;
 pub mod ppo;
 pub mod space;
 pub mod template;
 pub mod tuner;
 
+pub use orchestrator::{
+    tune_graph, tune_graph_with, tune_graphs, tune_graphs_with,
+    GraphTuneResult,
+};
 pub use space::LoopSpace;
-pub use tuner::{tune_graph, tune_op, GraphTuneResult, OpTuneResult, TuneOptions};
+pub use tuner::{tune_op, OpTuneResult, OpTuner, TuneOptions};

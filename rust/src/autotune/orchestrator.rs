@@ -1,0 +1,461 @@
+//! Sharded graph-tuning orchestrator with adaptive budget
+//! reallocation (ROADMAP: multi-graph sharding).
+//!
+//! The historical `tune_graph` walked a network's complex operators
+//! strictly sequentially with a one-off `budget / n_ops` split — the
+//! "one-off workflow" rigidity the paper argues against at the
+//! graph/operator boundary. This module replaces that walk with a
+//! three-part orchestration:
+//!
+//! * **Shard analysis** ([`crate::graph::shard`]) partitions the
+//!   complex ops into independently tunable shards along the §4.2
+//!   propagation-reachability structure. Ops coupled through an
+//!   element-wise chain stay sequential inside one shard (the §6
+//!   topological order); ops separated by a non-propagatable boundary
+//!   tune concurrently.
+//! * **Shard scheduling** runs the shards over one shared
+//!   [`Engine`], each holding a *fair-share* handle
+//!   ([`Engine::fair_handles`]) so no shard's candidate batches can
+//!   starve another's. Per-op work is driven through the resumable
+//!   [`OpTuner`], and every op carries its own engine tally, so
+//!   per-op → per-shard → per-graph stats compose exactly.
+//! * **Adaptive budget reallocation** (`TuneOptions::budget_realloc`)
+//!   starts every op at the per-op floor and then feeds the remaining
+//!   graph budget, phase by phase, to the ops whose best-so-far
+//!   history is still improving — plateaued shards stop consuming
+//!   budget instead of burning their fixed share. With
+//!   `budget_realloc = false` every op receives the historical fixed
+//!   split, and a sharded run reproduces the sequential results
+//!   bit-for-bit (sharding is then a pure throughput knob).
+//!
+//! ## Determinism contract
+//!
+//! For a fixed `(seed, shards)` the outcome — decisions, schedules,
+//! latencies, histories, measurement counts — is bit-identical at any
+//! `threads` value: per-op trajectories never depend on engine cache
+//! state (property-tested by the eviction suite), shard membership is
+//! a pure function of the graph, phase barriers make every
+//! reallocation decision from completed, deterministic state, and
+//! results are folded in topological order. `shards = 1` (the
+//! default) takes the sequential legacy path and reproduces the
+//! pre-orchestrator `tune_graph` bit-for-bit. Engine *counters* in
+//! sharded runs are deterministic as long as the memo cap does not
+//! bind (the same caveat the engine has always documented).
+//!
+//! ## Multi-workload front end
+//!
+//! [`tune_graphs`] shards several networks across one scheduler and
+//! one engine — the figure harness tunes whole workload fleets this
+//! way. Budgets are per-graph ledgers; shards of all graphs share the
+//! fair-handle pool, so a small graph's shards fill the cores a big
+//! graph's plateaued shards stopped using.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::autotune::tuner::{
+    engine_for, measured_per_round, tune_op_with, OpTuneResult, OpTuner,
+    TuneOptions,
+};
+use crate::engine::{Engine, EngineStats};
+use crate::graph::{shard, Graph, NodeId};
+use crate::loops::LoopSchedule;
+use crate::propagate::{propagate, ComplexDecision};
+use crate::sim::netsim::{simulate_graph_with, GraphReport};
+use crate::sim::HwProfile;
+
+/// Per-op measurement floor: below ~128 measurements the joint stage
+/// cannot act, so graph tuning guarantees each op a meaningful slice
+/// (total measurements may exceed the graph budget on very deep nets —
+/// surfaced as [`GraphTuneResult::budget_overshoot`]).
+pub const PER_OP_FLOOR: usize = 128;
+
+/// Best-so-far window (measurements) the adaptive scheduler inspects:
+/// an op is "improving" while its global best dropped by more than
+/// [`REALLOC_EPS`] over its last window.
+const REALLOC_WINDOW: usize = 16;
+const REALLOC_EPS: f64 = 0.003;
+
+/// Hard cap on reallocation phases — a backstop far above what any
+/// real budget reaches (each phase spends at least one grant quantum).
+const MAX_REALLOC_ROUNDS: usize = 64;
+
+/// End-to-end tuning result for a graph.
+#[derive(Clone, Debug)]
+pub struct GraphTuneResult {
+    pub decisions: Vec<ComplexDecision>,
+    pub scheds: HashMap<NodeId, LoopSchedule>,
+    pub report: GraphReport,
+    pub measurements: usize,
+    /// cumulative PPO rounds across all ops
+    pub rounds: usize,
+    /// Engine counters attributable to *this* graph's run: the sum of
+    /// the per-op tallies plus the final whole-graph simulation —
+    /// delta-based, so results compose when many runs share an engine
+    /// (equal to a global before/after snapshot when the engine is
+    /// held exclusively).
+    pub engine: EngineStats,
+    /// Measurements spent beyond `opts.budget`. The per-op floor can
+    /// force this on deep nets (`n_ops * floor > budget`); the
+    /// adaptive scheduler never grants past the budget, so any
+    /// overshoot is the floor's (plus at most one in-flight
+    /// round/proposal per op).
+    pub budget_overshoot: usize,
+    /// Scheduling units the run used (1 = the sequential legacy path).
+    pub shards: usize,
+    /// Per-op results in topological order (decisions/scheds above are
+    /// projections of these).
+    pub ops: Vec<OpTuneResult>,
+}
+
+/// Tune every complex operator of a graph, then simulate the whole
+/// network under the propagated layouts. One engine (and memo cache)
+/// spans the entire run, so the final graph simulation re-uses
+/// programs the per-op tuning already lowered. `opts.shards == 1`
+/// walks ops sequentially in topological order exactly as the
+/// pre-orchestrator tuner did; other values shard (see module docs).
+pub fn tune_graph(
+    graph: &Graph,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> GraphTuneResult {
+    let engine = engine_for(opts);
+    tune_graph_with(graph, hw, opts, &engine)
+}
+
+/// [`tune_graph`] against a caller-provided engine (shared memo cache
+/// across whole fleets of runs; stats stay delta-based).
+pub fn tune_graph_with(
+    graph: &Graph,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+    engine: &Engine,
+) -> GraphTuneResult {
+    let complex = graph.complex_nodes();
+    if opts.shards == 1 || complex.len() <= 1 {
+        // ---- sequential legacy path (bit-for-bit the historical
+        // serial loop; a single op cannot shard, and realloc of a
+        // one-op graph is a no-op by construction) ----
+        let per_op = fixed_split(opts.budget, complex.len());
+        let mut o = opts.clone();
+        o.budget = per_op;
+        let ops: Vec<OpTuneResult> = complex
+            .iter()
+            .map(|&node| tune_op_with(graph, node, hw, &o, engine))
+            .collect();
+        return assemble(graph, hw, opts, ops, engine, 1);
+    }
+    let (mut per_graph, mut shards_used) =
+        tune_ops_sharded(&[graph], hw, opts, engine);
+    assemble(
+        graph,
+        hw,
+        opts,
+        per_graph.pop().expect("one graph in, one result out"),
+        engine,
+        shards_used.pop().unwrap_or(1),
+    )
+}
+
+/// Multi-workload front end: tune several networks over one scheduler
+/// and one shared engine. With `shards == 1` this is a sequential
+/// fold of [`tune_graph_with`]; otherwise every graph's shards join
+/// one fair-share pool and each graph keeps its own budget ledger.
+/// Results come back in input order.
+pub fn tune_graphs(
+    graphs: &[Graph],
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> Vec<GraphTuneResult> {
+    let engine = engine_for(opts);
+    tune_graphs_with(graphs, hw, opts, &engine)
+}
+
+/// [`tune_graphs`] against a caller-provided engine.
+pub fn tune_graphs_with(
+    graphs: &[Graph],
+    hw: &HwProfile,
+    opts: &TuneOptions,
+    engine: &Engine,
+) -> Vec<GraphTuneResult> {
+    if opts.shards == 1 || graphs.len() <= 1 {
+        return graphs
+            .iter()
+            .map(|g| tune_graph_with(g, hw, opts, engine))
+            .collect();
+    }
+    let refs: Vec<&Graph> = graphs.iter().collect();
+    let (results, shards_used) = tune_ops_sharded(&refs, hw, opts, engine);
+    results
+        .into_iter()
+        .zip(graphs)
+        .zip(shards_used)
+        .map(|((ops, g), s)| assemble(g, hw, opts, ops, engine, s))
+        .collect()
+}
+
+/// The historical one-off split: every op gets the same share, floored.
+fn fixed_split(budget: usize, n_ops: usize) -> usize {
+    (budget / n_ops.max(1)).max(PER_OP_FLOOR)
+}
+
+/// One scheduling unit: a shard of one graph's complex ops, tuned
+/// sequentially in topological order on a fair-share engine handle.
+struct Unit<'a> {
+    graph_idx: usize,
+    tuners: Vec<OpTuner<'a>>,
+}
+
+/// The sharded core: build units for every graph, drive them through
+/// the floor phase and the adaptive reallocation phases, return per-op
+/// results grouped per graph in topological order (plus each graph's
+/// unit count).
+fn tune_ops_sharded<'a>(
+    graphs: &[&'a Graph],
+    hw: &'a HwProfile,
+    opts: &TuneOptions,
+    engine: &Engine,
+) -> (Vec<Vec<OpTuneResult>>, Vec<usize>) {
+    let mut units: Vec<Unit<'a>> = Vec::new();
+    let mut shards_per_graph = vec![0usize; graphs.len()];
+    for (gi, g) in graphs.iter().enumerate() {
+        let n_ops = g.complex_nodes().len();
+        // Every op keeps the historical per-op budget basis (it fixes
+        // the joint-stage layout-exploration share). Adaptive mode
+        // additionally lowers the *initial target* to the floor: the
+        // scheduler hands out the rest by improvement, and a floor
+        // below the joint share just pauses the joint stage until a
+        // grant resumes it. Fixed mode is exactly the legacy split.
+        let mut o = opts.clone();
+        o.budget = fixed_split(opts.budget, n_ops);
+        let plan = shard::analyze(g);
+        for nodes in shard::pack(&plan, opts.shards) {
+            shards_per_graph[gi] += 1;
+            units.push(Unit {
+                graph_idx: gi,
+                tuners: nodes
+                    .iter()
+                    .map(|&node| {
+                        let mut t = OpTuner::new(g, node, hw, &o);
+                        if opts.budget_realloc {
+                            t.set_target(PER_OP_FLOOR.min(t.target()));
+                        }
+                        t
+                    })
+                    .collect(),
+            });
+        }
+    }
+    let n = units.len();
+    let slots: Vec<Mutex<Unit<'a>>> = units.into_iter().map(Mutex::new).collect();
+    // Fair shares are recomputed per phase over the *active* units, so
+    // a late reallocation phase with one improving shard gets the whole
+    // pool instead of the floor phase's 1/n sliver. Widths never affect
+    // results (only throughput), so this cannot touch the determinism
+    // contract.
+    let run_phase = |active: &[bool]| {
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active == 0 {
+            return;
+        }
+        let handles = engine.fair_handles(n_active);
+        let mut handle_of = vec![0usize; n];
+        let mut next = 0usize;
+        for (i, &a) in active.iter().enumerate() {
+            if a {
+                handle_of[i] = next;
+                next += 1;
+            }
+        }
+        let inflight = n_active.min(engine.threads()).max(1);
+        engine.run_with(inflight, n, |i| {
+            if !active[i] {
+                return;
+            }
+            let mut unit = slots[i].lock().expect("unit lock");
+            for t in unit.tuners.iter_mut() {
+                t.advance(handles[handle_of[i]]);
+            }
+        });
+    };
+
+    // ---- phase 0: every op runs to its floor ----
+    run_phase(&vec![true; n]);
+
+    // ---- adaptive phases: feed remaining budget to improving ops ----
+    if opts.budget_realloc {
+        let quantum = measured_per_round(opts).max(1) * 2;
+        for _ in 0..MAX_REALLOC_ROUNDS {
+            // barrier state: spent per graph + improving ops, all read
+            // from completed (deterministic) tuner state
+            let mut spent = vec![0usize; graphs.len()];
+            let mut improving: Vec<(usize, usize, usize)> = Vec::new();
+            for (i, slot) in slots.iter().enumerate() {
+                let unit = slot.lock().expect("unit lock");
+                for (j, t) in unit.tuners.iter().enumerate() {
+                    spent[unit.graph_idx] += t.used();
+                    if t.recent_gain(REALLOC_WINDOW) > REALLOC_EPS {
+                        improving.push((i, j, unit.graph_idx));
+                    }
+                }
+            }
+            let pool: Vec<usize> = spent
+                .iter()
+                .map(|&s| opts.budget.saturating_sub(s))
+                .collect();
+            improving.retain(|&(_, _, gi)| pool[gi] >= quantum);
+            if improving.is_empty() {
+                break;
+            }
+            let mut counts = vec![0usize; graphs.len()];
+            for &(_, _, gi) in &improving {
+                counts[gi] += 1;
+            }
+            // geometric split per graph among its improving ops: each
+            // phase hands out a quarter of the per-op share of the
+            // remaining ledger (at least one round's worth), so grants
+            // stay adaptive — improvement is re-checked between phases
+            // — yet the pool drains within the phase cap. Deterministic
+            // order: unit index, then op index; clamped to the ledger.
+            let mut left = pool.clone();
+            let mut active = vec![false; n];
+            let mut granted_any = false;
+            for &(i, j, gi) in &improving {
+                let share =
+                    (pool[gi] / (4 * counts[gi].max(1))).max(quantum);
+                let grant = share.min(left[gi]);
+                if grant < quantum {
+                    continue;
+                }
+                left[gi] -= grant;
+                slots[i].lock().expect("unit lock").tuners[j].grant(grant);
+                active[i] = true;
+                granted_any = true;
+            }
+            if !granted_any {
+                break;
+            }
+            run_phase(&active);
+        }
+    }
+
+    // ---- drain, regrouping per graph in topological order ----
+    let mut by_node: Vec<HashMap<NodeId, OpTuneResult>> =
+        graphs.iter().map(|_| HashMap::new()).collect();
+    for slot in slots {
+        let unit = slot.into_inner().expect("unit lock");
+        let gi = unit.graph_idx;
+        for t in unit.tuners {
+            let r = t.finish();
+            by_node[gi].insert(r.node, r);
+        }
+    }
+    let results = graphs
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| {
+            g.complex_nodes()
+                .iter()
+                .map(|node| {
+                    by_node[gi].remove(node).expect("every complex op tuned")
+                })
+                .collect()
+        })
+        .collect();
+    (results, shards_per_graph)
+}
+
+/// Fold per-op results into the graph result: propagate the winning
+/// decisions, simulate the whole network on the shared engine, and
+/// compose the delta-based stats (op tallies + final-sim delta).
+fn assemble(
+    graph: &Graph,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+    ops: Vec<OpTuneResult>,
+    engine: &Engine,
+    shards: usize,
+) -> GraphTuneResult {
+    let decisions: Vec<ComplexDecision> =
+        ops.iter().map(|r| r.decision.clone()).collect();
+    let scheds: HashMap<NodeId, LoopSchedule> =
+        ops.iter().map(|r| (r.node, r.sched.clone())).collect();
+    let measurements: usize = ops.iter().map(|r| r.measurements).sum();
+    let rounds: usize = ops.iter().map(|r| r.rounds).sum();
+    let prop = propagate(graph, &decisions, opts.mode);
+    let sim0 = engine.stats();
+    let report = simulate_graph_with(graph, &prop, &scheds, hw, engine);
+    let sim_delta = engine.stats().since(&sim0);
+    let engine_stats =
+        ops.iter().fold(sim_delta, |acc, r| acc.merged(&r.engine));
+    GraphTuneResult {
+        decisions,
+        scheds,
+        report,
+        measurements,
+        rounds,
+        engine: engine_stats,
+        budget_overshoot: measurements.saturating_sub(opts.budget),
+        shards,
+        ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::propagate::PropMode;
+
+    fn opts(budget: usize, shards: usize, realloc: bool) -> TuneOptions {
+        TuneOptions {
+            budget,
+            seed: 7,
+            shards,
+            budget_realloc: realloc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sequential_graph_tuning_still_works() {
+        let g = models::prop_subgraph(7);
+        let r = tune_graph(&g, &HwProfile::intel(), &opts(40, 1, true));
+        assert_eq!(r.decisions.len(), 2);
+        assert_eq!(r.shards, 1);
+        assert_eq!(r.ops.len(), 2);
+        // floor forces 2 * 128 measurements against a budget of 40
+        assert_eq!(r.budget_overshoot, r.measurements - 40);
+        assert!(r.report.latency_ms() > 0.0);
+    }
+
+    #[test]
+    fn sharded_graph_tuning_runs_and_respects_the_ledger() {
+        let g = models::prop_subgraph(14);
+        let budget = 480;
+        let r = tune_graph(&g, &HwProfile::intel(), &opts(budget, 0, true));
+        assert_eq!(r.shards, 2, "two independent convs, two shards");
+        assert!(r.measurements >= 2 * PER_OP_FLOOR, "floors guaranteed");
+        // adaptive grants never push past the budget by more than one
+        // in-flight round per op
+        let slack = 2 * measured_per_round(&opts(budget, 0, true));
+        assert!(
+            r.measurements <= budget + slack,
+            "overshot: {} > {budget} + {slack}",
+            r.measurements
+        );
+        assert_eq!(
+            r.budget_overshoot,
+            r.measurements.saturating_sub(budget)
+        );
+    }
+
+    #[test]
+    fn mode_is_respected_in_sharded_runs() {
+        let g = models::prop_subgraph(7);
+        let mut o = opts(300, 0, true);
+        o.mode = PropMode::LoopOnly;
+        let r = tune_graph(&g, &HwProfile::arm(), &o);
+        assert!(r.decisions.iter().all(|d| d.out_seq.is_identity()));
+    }
+}

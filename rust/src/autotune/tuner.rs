@@ -44,19 +44,37 @@
 //! default) *is* the serial walk — it threads the master RNG and live
 //! critic through one proposal at a time, exactly as the historical
 //! tuner did.
+//!
+//! ## Resumable per-op tuning
+//!
+//! All per-op state lives in [`OpTuner`]: `tune_op_with` is now
+//! `new` + one `advance` to the budget + `finish`, and the sharded
+//! graph orchestrator ([`crate::autotune::orchestrator`]) drives the
+//! same struct in *slices* — run to the per-op floor, observe the
+//! best-so-far history, [`OpTuner::grant`] more budget to ops that are
+//! still improving, `advance` again. Splitting a run into slices is
+//! invisible to the trajectory: one call or many, the result is
+//! bit-identical (the identity-baseline round, the joint stage's
+//! budget share, and the loop-only alternation all resume exactly
+//! where they paused).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
 use crate::autotune::ppo::{CategoricalActor, Critic, GaussianActor, Transition};
 use crate::autotune::space::LoopSpace;
 use crate::autotune::template;
-use crate::engine::{Engine, EngineHandle, EngineStats, EvalContext};
+use crate::engine::{Engine, EngineHandle, EngineStats, EngineTally, EvalContext};
 use crate::graph::{Graph, NodeId};
 use crate::loops::LoopSchedule;
 use crate::propagate::{propagate, ComplexDecision, PropMode, PropagationResult};
-use crate::sim::netsim::{simulate_graph_with, GraphReport};
 use crate::sim::HwProfile;
 use crate::util::Rng;
+
+// Graph-level tuning lives in the shard orchestrator; re-exported here
+// so historical `autotune::tuner::tune_graph` imports keep resolving.
+pub use crate::autotune::orchestrator::{
+    tune_graph, tune_graph_with, tune_graphs, tune_graphs_with, GraphTuneResult,
+};
 
 /// Fixed state-vector width fed to all agents (padded/truncated).
 const STATE_DIM: usize = 32;
@@ -101,6 +119,22 @@ pub struct TuneOptions {
     /// Engine memo-cache entry cap (0 = [`Engine::DEFAULT_MEMO_CAP`]).
     /// Eviction bounds memory for long runs and never changes results.
     pub memo_cap: usize,
+    /// Graph-tuning shard count (see [`crate::autotune::orchestrator`]):
+    /// `1` (the default) is the sequential legacy path — bit-for-bit the
+    /// historical `tune_graph`; `0` = one shard per independence group
+    /// of the §4.2 shard analysis (auto); `N > 1` packs the groups into
+    /// at most N shards. Like `speculation`, the knob is deliberately
+    /// machine-independent: a fixed `(seed, shards)` pair gives
+    /// bit-identical results at any thread count. Op-level tuning
+    /// ignores it.
+    pub shards: usize,
+    /// Adaptive budget reallocation for *sharded* graph tuning: every
+    /// op starts at the per-op floor and the scheduler feeds the
+    /// remaining graph budget to shards whose best-so-far history is
+    /// still improving. `false` keeps the historical fixed
+    /// `budget / n_ops` split (sharded runs then reproduce the
+    /// sequential results bit-for-bit). Ignored when `shards == 1`.
+    pub budget_realloc: bool,
 }
 
 impl Default for TuneOptions {
@@ -117,6 +151,8 @@ impl Default for TuneOptions {
             threads: 0,
             speculation: 1,
             memo_cap: 0,
+            shards: 1,
+            budget_realloc: true,
         }
     }
 }
@@ -428,16 +464,23 @@ fn model_slots(top_k: usize) -> usize {
     }
 }
 
+/// Upper estimate of the measurements one tuning round consumes:
+/// model-slots + the exploration pick + the sketch slot. Shared by the
+/// speculative fan-out estimate and the orchestrator's grant quantum
+/// (a grant must buy at least one real round).
+pub(crate) fn measured_per_round(opts: &TuneOptions) -> usize {
+    model_slots(opts.top_k)
+        + usize::from(opts.top_k > 1)
+        + usize::from(opts.top_k > 2)
+}
+
 /// Upper estimate of the measurements one speculative proposal
 /// consumes (used to shrink the fan-out near budget exhaustion; a
 /// deterministic function of opts). Each round measures up to
-/// model-slots + the exploration pick + the sketch slot, and a fresh
-/// proposal's first round also measures its incumbent.
+/// [`measured_per_round`], and a fresh proposal's first round also
+/// measures its incumbent.
 fn measured_per_proposal(opts: &TuneOptions) -> usize {
-    let per_round = model_slots(opts.top_k)
-        + usize::from(opts.top_k > 1)
-        + usize::from(opts.top_k > 2);
-    opts.rounds_per_layout.max(1) * per_round + 1
+    opts.rounds_per_layout.max(1) * measured_per_round(opts) + 1
 }
 
 /// Fold one finished layout proposal into the joint-stage state, in
@@ -486,6 +529,12 @@ fn fold_proposal(
 /// tuning. `speculation == 1` walks serially (master RNG, live
 /// critic); `speculation > 1` evaluates K proposals per PPO step in
 /// parallel with a deterministic seed-split and ordered reduction.
+///
+/// `target` is the [`OpTuner`] advance bound: when a budget slice ends
+/// mid-joint-stage the loop pauses (episode state persists in the
+/// tuner) and the next `advance` resumes it. With `target ≥
+/// joint_budget` — every one-shot run — the bound is inert and the
+/// stage runs exactly as it always did.
 #[allow(clippy::too_many_arguments)]
 fn joint_stage(
     ctx: &RoundCtx<'_>,
@@ -494,13 +543,14 @@ fn joint_stage(
     rng: &mut Rng,
     trace: &mut Trace,
     alt_lt: &mut Option<AltTrack>,
+    episode: &mut Vec<Transition>,
     id_best: f64,
     joint_budget: usize,
+    target: usize,
 ) {
     let opts = ctx.opts;
     let spec = opts.speculation.max(1);
-    let mut episode: Vec<Transition> = Vec::new();
-    while trace.used < joint_budget {
+    while trace.used < joint_budget && trace.used < target {
         let incumbent_seq = alt_lt
             .as_ref()
             .map(|t| t.dec.out_seq.clone())
@@ -522,7 +572,7 @@ fn joint_stage(
                 lt.round(ctx, &prop, critic, rng, trace);
             }
             fold_proposal(
-                &mut episode, layout_actor, critic, alt_lt, id_best, lt, dec,
+                episode, layout_actor, critic, alt_lt, id_best, lt, dec,
                 prop, raw, logp, &st,
             );
         } else {
@@ -541,7 +591,13 @@ fn joint_stage(
                 opts.levels,
             );
             let snapshot = critic.clone();
-            let pool = ctx.engine.engine().threads().max(1);
+            // the fan-out budget is this handle's width — under the
+            // shard orchestrator that is the shard's fair share, so
+            // speculation cannot oversubscribe the pool S-fold; for a
+            // full-width handle (tune_op) it is the whole pool, the
+            // historical sizing. Widths only shape throughput: k and
+            // the per-proposal trajectories never depend on them.
+            let pool = ctx.engine.width().max(1);
             let inflight = k.min(pool);
             let inner = (pool / inflight).max(1);
             // parallel phase: each proposal reconstructs its loop
@@ -557,8 +613,10 @@ fn joint_stage(
                     let mut pcritic = snapshot.clone();
                     let mut lt =
                         LoopTuning::new(&sp, &rd, ctx.hw.simd_lanes, &mut prng);
+                    // narrow the caller's handle: the sub-batches keep
+                    // the shard/op tally they are accounted to
                     let sub = RoundCtx {
-                        engine: ctx.engine.engine().handle_with(inner),
+                        engine: ctx.engine.narrowed(inner),
                         ..*ctx
                     };
                     let mut ptrace = Trace::recording();
@@ -584,7 +642,7 @@ fn joint_stage(
                 trace.rounds += r.trace.rounds;
                 trace.history.extend_from_slice(&r.trace.history);
                 fold_proposal(
-                    &mut episode, layout_actor, critic, alt_lt, id_best, r.lt,
+                    episode, layout_actor, critic, alt_lt, id_best, r.lt,
                     r.dec, r.prop, r.raw, r.logp, &st,
                 );
             }
@@ -593,7 +651,7 @@ fn joint_stage(
 }
 
 /// Engine sized by the options (`threads`, `memo_cap`).
-fn engine_for(opts: &TuneOptions) -> Engine {
+pub(crate) fn engine_for(opts: &TuneOptions) -> Engine {
     let cap = if opts.memo_cap == 0 { Engine::DEFAULT_MEMO_CAP } else { opts.memo_cap };
     Engine::with_memo_cap(opts.threads, cap)
 }
@@ -619,86 +677,269 @@ pub fn tune_op_with(
     opts: &TuneOptions,
     engine: &Engine,
 ) -> OpTuneResult {
-    let stats0 = engine.stats();
-    let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x9E37));
-    let mut critic = Critic::new(STATE_DIM, &mut rng);
-    let np = template::n_params(graph, node, opts.levels);
-    let mut layout_actor = GaussianActor::new(STATE_DIM, np.max(1), &mut rng);
-    let ctx = RoundCtx { graph, node, hw, engine: engine.handle(), opts };
+    let mut t = OpTuner::new(graph, node, hw, opts);
+    t.advance(engine.handle());
+    t.finish()
+}
 
-    let mut trace = Trace::default();
-    // The joint stage needs a handful of layout trials to pay for its
-    // space reconstructions; at starvation budgets it degrades to pure
-    // loop tuning (ALT then gracefully equals ALT-OL).
-    let joint_budget = if opts.budget < 96 {
-        0
-    } else {
-        ((opts.budget as f64) * opts.joint_frac).round() as usize
-    };
+/// Resumable per-op tuning: everything `tune_op_with` used to keep on
+/// its stack — RNG, critic, layout actor, the identity and joint-stage
+/// tracks, the loop-only alternation flag, the trace — held in one
+/// struct so the run can pause at a budget target and continue later.
+/// The shard orchestrator drives ops to the per-op floor, inspects
+/// their best-so-far histories, and [`grant`](OpTuner::grant)s more
+/// budget to the ones still improving; one `advance` to the full
+/// budget reproduces the historical one-shot run bit for bit.
+///
+/// The tuner owns an [`EngineTally`] and attaches it to every engine
+/// handle it uses, so [`OpTuneResult::engine`] counts exactly this
+/// op's lookups — composable (and deterministic while the memo cap
+/// does not bind) even when many ops share one engine concurrently.
+pub struct OpTuner<'a> {
+    graph: &'a Graph,
+    node: NodeId,
+    hw: &'a HwProfile,
+    opts: TuneOptions,
+    rng: Rng,
+    critic: Critic,
+    layout_actor: GaussianActor,
+    np: usize,
+    joint_budget: usize,
+    id_dec: ComplexDecision,
+    id_prop: PropagationResult,
+    id_lt: LoopTuning,
+    alt_lt: Option<AltTrack>,
+    episode: Vec<Transition>,
+    trace: Trace,
+    started: bool,
+    flip: bool,
+    target: usize,
+    tally: EngineTally,
+}
 
-    // ---- baseline: identity layout ----
-    let id_dec = template::identity_decision(node);
-    let id_prop = propagate(graph, std::slice::from_ref(&id_dec), opts.mode);
-    let (sp0, rd0) = nest_dims(graph, node, &id_prop);
-    let mut id_lt = LoopTuning::new(&sp0, &rd0, hw.simd_lanes, &mut rng);
-    id_lt.round(&ctx, &id_prop, &mut critic, &mut rng, &mut trace);
-
-    // best non-identity layout found by the joint stage
-    let mut alt_lt: Option<AltTrack> = None;
-
-    // ---- joint stage (skipped entirely in LoopOnly mode) ----
-    if opts.mode != PropMode::LoopOnly && np > 0 {
-        joint_stage(
-            &ctx,
-            &mut layout_actor,
-            &mut critic,
-            &mut rng,
-            &mut trace,
-            &mut alt_lt,
-            id_lt.best_ms,
-            joint_budget,
-        );
-    }
-
-    // ---- loop-only stage: layouts frozen, no space reconstruction.
-    // Rounds alternate between the joint-stage winner and the identity
-    // baseline, so a mis-chosen layout can never make joint tuning lose
-    // to plain loop tuning by more than the 2x budget split (the joint
-    // space strictly contains the loop-only space), while a genuinely
-    // better layout still receives half the refinement budget and wins
-    // the final comparison.
-    let mut flip = true;
-    while trace.used < opts.budget {
-        if flip && alt_lt.is_some() {
-            if let Some(t) = &mut alt_lt {
-                let prop = t.prop.clone();
-                t.lt.round(&ctx, &prop, &mut critic, &mut rng, &mut trace);
-            }
+impl<'a> OpTuner<'a> {
+    /// Initialize the run (same RNG draw order as the historical
+    /// one-shot path: critic, layout actor, identity track). The
+    /// initial advance target is the options budget; `grant` raises it.
+    pub fn new(
+        graph: &'a Graph,
+        node: NodeId,
+        hw: &'a HwProfile,
+        opts: &TuneOptions,
+    ) -> Self {
+        let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x9E37));
+        let critic = Critic::new(STATE_DIM, &mut rng);
+        let np = template::n_params(graph, node, opts.levels);
+        let layout_actor = GaussianActor::new(STATE_DIM, np.max(1), &mut rng);
+        // The joint stage needs a handful of layout trials to pay for
+        // its space reconstructions; at starvation budgets it degrades
+        // to pure loop tuning (ALT then gracefully equals ALT-OL). The
+        // share is fixed by the *options* budget, never by later
+        // targets: `set_target`/`grant` move the pause point, not the
+        // layout-exploration share.
+        let joint_budget = if opts.budget < 96 {
+            0
         } else {
-            id_lt.round(&ctx, &id_prop, &mut critic, &mut rng, &mut trace);
+            ((opts.budget as f64) * opts.joint_frac).round() as usize
+        };
+        let id_dec = template::identity_decision(node);
+        let id_prop = propagate(graph, std::slice::from_ref(&id_dec), opts.mode);
+        let (sp0, rd0) = nest_dims(graph, node, &id_prop);
+        let id_lt = LoopTuning::new(&sp0, &rd0, hw.simd_lanes, &mut rng);
+        // `max` keeps an over-unity joint_frac exact: the one-shot path
+        // then ends with the joint stage, exactly like the historical
+        // loop (whose loop-only stage saw its budget already spent).
+        // Only relevant when the joint stage runs at all.
+        let target = if opts.mode != PropMode::LoopOnly && np > 0 {
+            opts.budget.max(joint_budget)
+        } else {
+            opts.budget
+        };
+        Self {
+            graph,
+            node,
+            hw,
+            opts: opts.clone(),
+            rng,
+            critic,
+            layout_actor,
+            np,
+            joint_budget,
+            id_dec,
+            id_prop,
+            id_lt,
+            alt_lt: None,
+            episode: Vec::new(),
+            trace: Trace::default(),
+            started: false,
+            flip: true,
+            target,
+            tally: EngineTally::new(),
         }
-        flip = !flip;
     }
 
-    monotonize(&mut trace.history);
-    // final winner: best of identity vs joint layout
-    let id_ms = id_lt.best_ms;
-    let alt_ms = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
-    let (win_lt, win_dec) = match alt_lt {
-        Some(t) if t.lt.best_ms < id_lt.best_ms => (t.lt, t.dec),
-        _ => (id_lt, id_dec),
-    };
-    OpTuneResult {
-        node,
-        decision: win_dec,
-        sched: win_lt.space.decode(&win_lt.best_point),
-        best_ms: win_lt.best_ms,
-        measurements: trace.used,
-        rounds: trace.rounds,
-        history: trace.history,
-        id_ms,
-        alt_ms,
-        engine: engine.stats().since(&stats0),
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Measurements consumed so far.
+    pub fn used(&self) -> usize {
+        self.trace.used
+    }
+
+    /// Current advance target (measurements).
+    pub fn target(&self) -> usize {
+        self.target
+    }
+
+    /// Raise the advance target by `extra` measurements (the adaptive
+    /// scheduler's budget grant).
+    pub fn grant(&mut self, extra: usize) {
+        self.target += extra;
+    }
+
+    /// Lower the initial advance target below the options budget — the
+    /// orchestrator's floor phase. The joint-stage share keeps its
+    /// options-budget basis (the historical per-op split), so adaptive
+    /// runs explore layouts exactly as generously as the legacy path;
+    /// a floor below the joint share simply pauses the joint stage
+    /// until a grant resumes it.
+    pub fn set_target(&mut self, target: usize) {
+        self.target = target;
+    }
+
+    /// Global best latency over the first `k` measurements of the
+    /// trace (`∞` before the first measurement).
+    pub fn best_after(&self, k: usize) -> f64 {
+        self.trace
+            .history
+            .iter()
+            .take(k)
+            .fold(f64::INFINITY, |a, &b| a.min(b))
+    }
+
+    /// Relative latency gain over the last `window` measurements — the
+    /// adaptive scheduler's improvement signal. `∞` while the trace is
+    /// shorter than the window (too young to judge), `0.0` once the op
+    /// has fully plateaued.
+    pub fn recent_gain(&self, window: usize) -> f64 {
+        let n = self.trace.history.len();
+        if n <= window {
+            return f64::INFINITY;
+        }
+        let before = self.best_after(n - window);
+        let now = self.best_after(n);
+        if before.is_finite() && before > 0.0 {
+            (before - now) / before
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Run the tuning loop until `used() >= target()`. Stage order is
+    /// the historical one — identity-baseline round, joint stage up to
+    /// its budget share, loop-only alternation — and every stage
+    /// resumes exactly where a previous slice paused, so splitting a
+    /// run into slices cannot change the trajectory.
+    pub fn advance(&mut self, engine: EngineHandle<'_>) {
+        let target = self.target;
+        let Self {
+            graph,
+            node,
+            hw,
+            opts,
+            rng,
+            critic,
+            layout_actor,
+            np,
+            joint_budget,
+            id_prop,
+            id_lt,
+            alt_lt,
+            episode,
+            trace,
+            started,
+            flip,
+            tally,
+            ..
+        } = self;
+        let engine = engine.with_tally(&*tally);
+        let ctx =
+            RoundCtx { graph: *graph, node: *node, hw: *hw, engine, opts: &*opts };
+
+        // ---- baseline: identity layout (first slice only) ----
+        if !*started {
+            *started = true;
+            id_lt.round(&ctx, id_prop, critic, rng, trace);
+        }
+
+        // ---- joint stage (skipped entirely in LoopOnly mode) ----
+        if opts.mode != PropMode::LoopOnly && *np > 0 {
+            joint_stage(
+                &ctx,
+                layout_actor,
+                critic,
+                rng,
+                trace,
+                alt_lt,
+                episode,
+                id_lt.best_ms,
+                *joint_budget,
+                target,
+            );
+        }
+
+        // ---- loop-only stage: layouts frozen, no space
+        // reconstruction. Rounds alternate between the joint-stage
+        // winner and the identity baseline, so a mis-chosen layout can
+        // never make joint tuning lose to plain loop tuning by more
+        // than the 2x budget split (the joint space strictly contains
+        // the loop-only space), while a genuinely better layout still
+        // receives half the refinement budget and wins the final
+        // comparison. Only begins once the joint stage has exhausted
+        // its share — a slice that pauses mid-joint resumes there.
+        let joint_done = trace.used >= *joint_budget
+            || opts.mode == PropMode::LoopOnly
+            || *np == 0;
+        if joint_done {
+            while trace.used < target {
+                if *flip && alt_lt.is_some() {
+                    if let Some(t) = alt_lt.as_mut() {
+                        let prop = t.prop.clone();
+                        t.lt.round(&ctx, &prop, critic, rng, trace);
+                    }
+                } else {
+                    id_lt.round(&ctx, id_prop, critic, rng, trace);
+                }
+                *flip = !*flip;
+            }
+        }
+    }
+
+    /// Close the run: monotonize the trace, pick the winning track,
+    /// report this op's engine tally.
+    pub fn finish(self) -> OpTuneResult {
+        let Self { node, id_dec, id_lt, alt_lt, mut trace, tally, .. } = self;
+        monotonize(&mut trace.history);
+        // final winner: best of identity vs joint layout
+        let id_ms = id_lt.best_ms;
+        let alt_ms = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
+        let (win_lt, win_dec) = match alt_lt {
+            Some(t) if t.lt.best_ms < id_lt.best_ms => (t.lt, t.dec),
+            _ => (id_lt, id_dec),
+        };
+        OpTuneResult {
+            node,
+            decision: win_dec,
+            sched: win_lt.space.decode(&win_lt.best_point),
+            best_ms: win_lt.best_ms,
+            measurements: trace.used,
+            rounds: trace.rounds,
+            history: trace.history,
+            id_ms,
+            alt_ms,
+            engine: tally.stats(),
+        }
     }
 }
 
@@ -744,61 +985,6 @@ pub fn tune_loops(
         id_ms: lt.best_ms,
         alt_ms: f64::INFINITY,
         engine: engine.stats().since(&stats0),
-    }
-}
-
-/// End-to-end tuning result for a graph.
-#[derive(Clone, Debug)]
-pub struct GraphTuneResult {
-    pub decisions: Vec<ComplexDecision>,
-    pub scheds: HashMap<NodeId, LoopSchedule>,
-    pub report: GraphReport,
-    pub measurements: usize,
-    /// cumulative PPO rounds across all ops
-    pub rounds: usize,
-    /// cumulative engine counters across all ops + the final graph sim
-    pub engine: EngineStats,
-}
-
-/// Tune every complex operator of a graph sequentially in topological
-/// order (the §6 joint-stage order), then simulate the whole network
-/// under the propagated layouts. One engine (and memo cache) spans the
-/// entire run, so the final graph simulation re-uses programs the
-/// per-op tuning already lowered.
-pub fn tune_graph(
-    graph: &Graph,
-    hw: &HwProfile,
-    opts: &TuneOptions,
-) -> GraphTuneResult {
-    let engine = engine_for(opts);
-    let complex = graph.complex_nodes();
-    // per-op floor: below ~128 measurements the joint stage cannot act,
-    // so graph tuning guarantees each op a meaningful slice (total
-    // measurements may exceed `budget` on very deep nets — reported in
-    // the result).
-    let per_op = (opts.budget / complex.len().max(1)).max(128);
-    let mut decisions = Vec::new();
-    let mut scheds = HashMap::new();
-    let mut measurements = 0;
-    let mut rounds = 0;
-    for &node in &complex {
-        let mut o = opts.clone();
-        o.budget = per_op;
-        let r = tune_op_with(graph, node, hw, &o, &engine);
-        measurements += r.measurements;
-        rounds += r.rounds;
-        scheds.insert(node, r.sched);
-        decisions.push(r.decision);
-    }
-    let prop = propagate(graph, &decisions, opts.mode);
-    let report = simulate_graph_with(graph, &prop, &scheds, hw, &engine);
-    GraphTuneResult {
-        decisions,
-        scheds,
-        report,
-        measurements,
-        rounds,
-        engine: engine.stats(),
     }
 }
 

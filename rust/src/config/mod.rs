@@ -58,9 +58,20 @@ impl Config {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Boolean accessor: accepts `true/false`, `yes/no`, `on/off`,
+    /// `1/0`; anything else (or a missing key) yields the default.
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("yes") | Some("on") | Some("1") => true,
+            Some("false") | Some("no") | Some("off") | Some("0") => false,
+            _ => default,
+        }
+    }
+
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
-    /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`).
+    /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`, `shards`,
+    /// `budget_realloc`).
     pub fn tune_options(&self) -> Result<TuneOptions, String> {
         let d = TuneOptions::default();
         let mode = match self.get("mode").unwrap_or("alt") {
@@ -85,6 +96,10 @@ impl Config {
             // 0 is accepted as "no speculation" (same as 1)
             speculation: self.get_usize("speculation", d.speculation).max(1),
             memo_cap: self.get_usize("memo_cap", d.memo_cap),
+            // 1 = sequential legacy path (default), 0 = auto-shard,
+            // N>1 = pack independence groups into N shards
+            shards: self.get_usize("shards", d.shards),
+            budget_realloc: self.get_bool("budget_realloc", d.budget_realloc),
         })
     }
 }
@@ -150,6 +165,42 @@ mod tests {
         // 0 means "no speculation", normalized to 1
         let z = Config::parse("speculation = 0").unwrap().tune_options().unwrap();
         assert_eq!(z.speculation, 1);
+    }
+
+    #[test]
+    fn shards_and_realloc_keys_parse() {
+        let c = Config::parse("shards = 4\nbudget_realloc = false").unwrap();
+        let o = c.tune_options().unwrap();
+        assert_eq!(o.shards, 4);
+        assert!(!o.budget_realloc);
+        // defaults preserve the historical behavior: sequential graph
+        // tuning, adaptive reallocation armed for when sharding is on
+        let d = Config::parse("").unwrap().tune_options().unwrap();
+        assert_eq!(d.shards, 1);
+        assert!(d.budget_realloc);
+        // 0 = auto-shard (one shard per independence group)
+        let z = Config::parse("shards = 0").unwrap().tune_options().unwrap();
+        assert_eq!(z.shards, 0);
+        // bool spellings
+        for (s, v) in
+            [("on", true), ("1", true), ("no", false), ("0", false)]
+        {
+            let c = Config::parse(&format!("budget_realloc = {s}")).unwrap();
+            assert_eq!(c.tune_options().unwrap().budget_realloc, v, "{s}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips_new_keys() {
+        let mut c = Config::default();
+        c.set("shards", "3");
+        c.set("budget_realloc", "false");
+        c.set("budget", "640");
+        let reparsed = Config::parse(&format!("{c}")).unwrap();
+        let o = reparsed.tune_options().unwrap();
+        assert_eq!(o.shards, 3);
+        assert!(!o.budget_realloc);
+        assert_eq!(o.budget, 640);
     }
 
     #[test]

@@ -65,6 +65,13 @@
 //! K × inner ≈ pool size and nested batches never oversubscribe the
 //! machine. A handle shares the engine's memo cache and counters; the
 //! width only caps how many workers one call may occupy.
+//!
+//! The shard orchestrator generalizes this: [`Engine::fair_handles`]
+//! splits the pool into balanced per-shard shares (so concurrent
+//! shards cannot starve each other), and a handle may carry an
+//! [`EngineTally`] ([`EngineHandle::with_tally`]) that counts its own
+//! scope's lookups in addition to the global counters — the basis of
+//! the composable per-op/per-shard/per-graph stats accounting.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -167,6 +174,17 @@ impl EngineStats {
             evicted: self.evicted - earlier.evicted,
         }
     }
+
+    /// Component-wise sum — per-op tallies compose into per-shard and
+    /// per-graph totals (the delta-based accounting contract).
+    pub fn merged(&self, other: &EngineStats) -> EngineStats {
+        EngineStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            simulated: self.simulated + other.simulated,
+            evicted: self.evicted + other.evicted,
+        }
+    }
 }
 
 #[derive(Default)]
@@ -175,6 +193,43 @@ struct Counters {
     misses: AtomicU64,
     simulated: AtomicU64,
     evicted: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            simulated: self.simulated.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A private counter scope: evaluations routed through a handle that
+/// carries a tally are counted here *in addition to* the engine's
+/// global counters. This is how per-op/per-shard stats stay exact when
+/// many tuning runs share one engine concurrently — a global
+/// before/after snapshot would interleave everybody's work, a tally
+/// counts only its own scope's lookups. Because memo keys of distinct
+/// ops never alias (the node id and graph fingerprint are in the key),
+/// a tally's hit/miss counts are deterministic for a fixed candidate
+/// sequence regardless of what runs concurrently (eviction under a
+/// binding cap is the one documented exception).
+#[derive(Default)]
+pub struct EngineTally {
+    counters: Counters,
+}
+
+impl EngineTally {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counters recorded into this tally so far.
+    pub fn stats(&self) -> EngineStats {
+        self.counters.snapshot()
+    }
 }
 
 /// Everything fixed across one batch of candidates: the operator being
@@ -375,15 +430,18 @@ pub struct Engine {
 }
 
 /// A width-capped view of an engine for nested batch submission: the
-/// speculative joint stage runs K proposals at the outer level and
-/// hands each one a handle with `width ≈ threads / K`, so the
-/// proposals' inner candidate batches share the pool instead of
-/// oversubscribing it. Handles share the engine's memo cache and
-/// counters.
+/// speculative joint stage runs K proposals at the outer level and the
+/// shard orchestrator runs S shards, each holding a handle with
+/// `width ≈ threads / K`, so nested candidate batches share the pool
+/// instead of oversubscribing it ([`Engine::fair_handles`] computes a
+/// balanced split). Handles share the engine's memo cache and global
+/// counters, and may additionally carry an [`EngineTally`] that
+/// records this scope's lookups for composable per-op accounting.
 #[derive(Clone, Copy)]
 pub struct EngineHandle<'e> {
     engine: &'e Engine,
     width: usize,
+    tally: Option<&'e EngineTally>,
 }
 
 impl Engine {
@@ -441,16 +499,30 @@ impl Engine {
     /// Handle whose batches use at most `width` workers — the
     /// per-proposal sub-batch view (min 1, capped at the pool size).
     pub fn handle_with(&self, width: usize) -> EngineHandle<'_> {
-        EngineHandle { engine: self, width: width.clamp(1, self.threads.max(1)) }
+        EngineHandle {
+            engine: self,
+            width: width.clamp(1, self.threads.max(1)),
+            tally: None,
+        }
+    }
+
+    /// Split the pool into `n` fair shares: widths sum to the pool
+    /// size (each at least 1), with the remainder spread over the
+    /// first `threads % n` handles. The shard orchestrator hands one
+    /// to each concurrent shard so no shard's candidate batches can
+    /// starve another's — and the split is deterministic, so it never
+    /// affects results, only throughput.
+    pub fn fair_handles(&self, n: usize) -> Vec<EngineHandle<'_>> {
+        let n = n.max(1);
+        let base = self.threads / n;
+        let extra = self.threads % n;
+        (0..n)
+            .map(|i| self.handle_with((base + usize::from(i < extra)).max(1)))
+            .collect()
     }
 
     pub fn stats(&self) -> EngineStats {
-        EngineStats {
-            hits: self.counters.hits.load(Ordering::Relaxed),
-            misses: self.counters.misses.load(Ordering::Relaxed),
-            simulated: self.counters.simulated.load(Ordering::Relaxed),
-            evicted: self.counters.evicted.load(Ordering::Relaxed),
-        }
+        self.counters.snapshot()
     }
 
     /// Run `n` independent jobs on the worker pool; `out[i] = f(i)`.
@@ -503,16 +575,33 @@ impl Engine {
     /// (eviction victims, when the cap binds, are the one exception;
     /// see the module docs).
     pub fn eval(&self, ctx: &EvalContext, sched: &LoopSchedule) -> Arc<EvalEntry> {
+        self.eval_tallied(ctx, sched, None)
+    }
+
+    /// [`Engine::eval`] that additionally records the lookup into a
+    /// caller-scoped tally (handles carrying one route through here).
+    fn eval_tallied(
+        &self,
+        ctx: &EvalContext,
+        sched: &LoopSchedule,
+        tally: Option<&EngineTally>,
+    ) -> Arc<EvalEntry> {
         let key = (ctx.key_base, sched.clone());
         let (entry, created, evicted) =
             self.memo.lock().unwrap().lookup_or_insert(key);
-        if created {
-            self.counters.misses.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.counters.hits.fetch_add(1, Ordering::Relaxed);
-        }
-        if evicted > 0 {
-            self.counters.evicted.fetch_add(evicted, Ordering::Relaxed);
+        let bump = |c: &Counters| {
+            if created {
+                c.misses.fetch_add(1, Ordering::Relaxed);
+            } else {
+                c.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            if evicted > 0 {
+                c.evicted.fetch_add(evicted, Ordering::Relaxed);
+            }
+        };
+        bump(&self.counters);
+        if let Some(t) = tally {
+            bump(&t.counters);
         }
         entry.lowered.get_or_init(|| {
             let p = lower_complex(
@@ -531,10 +620,22 @@ impl Engine {
 
     /// The candidate's simulation report, computed at most once.
     fn simulated(&self, ctx: &EvalContext, entry: &EvalEntry) -> SimReport {
+        self.simulated_tallied(ctx, entry, None)
+    }
+
+    fn simulated_tallied(
+        &self,
+        ctx: &EvalContext,
+        entry: &EvalEntry,
+        tally: Option<&EngineTally>,
+    ) -> SimReport {
         entry
             .report
             .get_or_init(|| {
                 self.counters.simulated.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = tally {
+                    t.counters.simulated.fetch_add(1, Ordering::Relaxed);
+                }
                 simulate_program(entry.program(), ctx.hw)
             })
             .clone()
@@ -634,6 +735,26 @@ impl<'e> EngineHandle<'e> {
         self.width
     }
 
+    /// Same engine *and tally*, narrower batch width — nested
+    /// sub-batches (speculative proposals inside a shard) keep their
+    /// caller's accounting scope.
+    pub fn narrowed(self, width: usize) -> EngineHandle<'e> {
+        EngineHandle {
+            width: width.clamp(1, self.engine.threads.max(1)),
+            ..self
+        }
+    }
+
+    /// This handle with a per-scope tally attached: every lookup and
+    /// simulation run through the returned handle is counted into
+    /// `tally` as well as the engine's global counters.
+    pub fn with_tally<'t>(self, tally: &'t EngineTally) -> EngineHandle<'t>
+    where
+        'e: 't,
+    {
+        EngineHandle { engine: self.engine, width: self.width, tally: Some(tally) }
+    }
+
     /// Order-preserving batch run capped at this handle's width.
     pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
@@ -645,7 +766,7 @@ impl<'e> EngineHandle<'e> {
 
     /// Memoized single-candidate evaluation (same memo as the engine).
     pub fn eval(&self, ctx: &EvalContext, sched: &LoopSchedule) -> Arc<EvalEntry> {
-        self.engine.eval(ctx, sched)
+        self.engine.eval_tallied(ctx, sched, self.tally)
     }
 
     /// Width-capped [`Engine::lower_batch`].
@@ -654,7 +775,8 @@ impl<'e> EngineHandle<'e> {
         ctx: &EvalContext,
         scheds: &[LoopSchedule],
     ) -> Vec<Arc<EvalEntry>> {
-        self.run(scheds.len(), |i| self.engine.eval(ctx, &scheds[i]))
+        let tally = self.tally;
+        self.run(scheds.len(), |i| self.engine.eval_tallied(ctx, &scheds[i], tally))
     }
 
     /// Width-capped [`Engine::measure_entries`].
@@ -663,9 +785,10 @@ impl<'e> EngineHandle<'e> {
         ctx: &EvalContext,
         entries: &[Arc<EvalEntry>],
     ) -> Vec<Measured> {
+        let tally = self.tally;
         self.run(entries.len(), |i| {
             let entry = entries[i].clone();
-            let report = self.engine.simulated(ctx, &entry);
+            let report = self.engine.simulated_tallied(ctx, &entry, tally);
             let raw_ms = report.latency_ms;
             let mut total_ms = raw_ms;
             for t in &ctx.conv_terms {
@@ -815,6 +938,52 @@ mod tests {
         let after = e.eval(&ctx, &hot);
         assert!(Arc::ptr_eq(&before, &after), "referenced entry was evicted");
         assert!(e.memo_len() <= 4);
+    }
+
+    #[test]
+    fn fair_handles_split_the_pool() {
+        let e = Engine::new(8);
+        for n in [1usize, 2, 3, 5, 8, 11] {
+            let hs = e.fair_handles(n);
+            assert_eq!(hs.len(), n);
+            let total: usize = hs.iter().map(|h| h.width()).sum();
+            assert!(total >= 8, "widths {total} must cover the pool");
+            // balanced: widths differ by at most one (before the ≥1 floor)
+            let wmax = hs.iter().map(|h| h.width()).max().unwrap();
+            let wmin = hs.iter().map(|h| h.width()).min().unwrap();
+            assert!(wmax - wmin <= 1, "unbalanced split {wmin}..{wmax}");
+        }
+        // more shares than workers: every handle still gets one worker
+        let hs = Engine::new(2).fair_handles(5);
+        assert!(hs.iter().all(|h| h.width() == 1));
+    }
+
+    #[test]
+    fn tally_counts_scope_exactly() {
+        let (g, conv, prop, hw) = setup();
+        let ctx = EvalContext::new(&g, conv, &prop, &hw);
+        let e = Engine::new(2);
+        let space = crate::autotune::LoopSpace::new(&[1, 112, 112, 64], &[3, 7, 7]);
+        let mut rng = crate::util::Rng::new(3);
+        let scheds: Vec<LoopSchedule> =
+            (0..6).map(|_| space.decode(&space.random_point(&mut rng))).collect();
+        // untallied warm-up traffic the tally must not see
+        e.lower_batch(&ctx, &scheds[..2]);
+        let tally = EngineTally::new();
+        let before = e.stats();
+        let h = e.handle().with_tally(&tally);
+        let entries = h.lower_batch(&ctx, &scheds);
+        h.measure_entries(&ctx, &entries);
+        // scope counters == global delta when nothing else runs
+        assert_eq!(tally.stats(), e.stats().since(&before));
+        assert_eq!(tally.stats().hits, 2, "warm-up entries hit");
+        assert_eq!(tally.stats().misses, 4);
+        assert_eq!(tally.stats().simulated, 6);
+        // narrowing keeps the tally attached
+        let n = h.narrowed(1);
+        assert_eq!(n.width(), 1);
+        n.eval(&ctx, &scheds[0]);
+        assert_eq!(tally.stats().hits, 3);
     }
 
     #[test]

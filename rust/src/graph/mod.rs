@@ -7,6 +7,7 @@
 
 pub mod models;
 pub mod ops;
+pub mod shard;
 
 pub use ops::{EltKind, OpKind, PoolKind};
 

@@ -1,0 +1,240 @@
+//! Shard analysis: partition a graph's complex operators into
+//! independently tunable shards (paper §4.2 + ROADMAP "multi-graph
+//! sharding").
+//!
+//! §4.2 constraint 3 makes each complex operator's layout decision
+//! independent, so per-op tuning runs are already side-effect-free —
+//! what couples two ops is *propagation reachability*: op A's output
+//! sequence is replicated down its single-consumer element-wise chain
+//! (the fused tail, Figs. 6–7), and op B's input conversion may be
+//! absorbed by an element-wise producer on that same chain (Fig. 5b).
+//! When A's chain reaches a tensor B reads, the two decisions touch
+//! the same element-wise nodes; the analysis keeps such ops in one
+//! shard so their tuning stays sequential in topological order (§6),
+//! while ops separated by a **non-propagatable boundary** — a direct
+//! complex→complex edge (constraint 3 inserts a conversion there), a
+//! non-element-wise op (pool, reshape, softmax, …), or a
+//! multi-consumer fan-out (which stops the chain walk) — always land
+//! in different shards and may tune concurrently.
+//!
+//! The orchestrator ([`crate::autotune::orchestrator`]) schedules the
+//! resulting groups over one shared engine; because the partition is a
+//! pure function of the graph, it never depends on thread count.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId};
+use crate::propagate::eltwise_chain;
+
+/// The independence groups of a graph's complex ops: a partition —
+/// every complex op appears in exactly one group — in topological
+/// order (groups ordered by their first member; members in graph
+/// order).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub groups: Vec<Vec<NodeId>>,
+}
+
+impl ShardPlan {
+    /// Total complex ops covered by the partition.
+    pub fn n_ops(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+fn find(parent: &mut [usize], mut i: usize) -> usize {
+    while parent[i] != i {
+        parent[i] = parent[parent[i]];
+        i = parent[i];
+    }
+    i
+}
+
+fn union(parent: &mut [usize], a: usize, b: usize) {
+    let (ra, rb) = (find(parent, a), find(parent, b));
+    if ra != rb {
+        // root at the smaller index so group identity is stable
+        let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        parent[hi] = lo;
+    }
+}
+
+/// Compute the independence groups of `graph`'s complex operators.
+pub fn analyze(graph: &Graph) -> ShardPlan {
+    let complex = graph.complex_nodes();
+    let mut parent: Vec<usize> = (0..complex.len()).collect();
+    for (i, &a) in complex.iter().enumerate() {
+        // Tensors written by propagatable element-wise nodes below `a`
+        // — exactly the nodes a's output sequence is replicated onto.
+        // a's own output is deliberately NOT in this set: a direct
+        // complex→complex edge is a conversion boundary, not a
+        // propagation path.
+        let chain = eltwise_chain(graph, graph.node(a).output);
+        if chain.is_empty() {
+            continue;
+        }
+        let reach: Vec<usize> =
+            chain.iter().map(|&c| graph.node(c).output).collect();
+        for (j, &b) in complex.iter().enumerate() {
+            if i != j && graph.node(b).inputs.iter().any(|t| reach.contains(t)) {
+                union(&mut parent, i, j);
+            }
+        }
+    }
+    let mut by_root: HashMap<usize, Vec<NodeId>> = HashMap::new();
+    let mut order: Vec<usize> = Vec::new();
+    for (i, &n) in complex.iter().enumerate() {
+        let r = find(&mut parent, i);
+        if !by_root.contains_key(&r) {
+            order.push(r);
+        }
+        by_root.entry(r).or_default().push(n);
+    }
+    ShardPlan {
+        groups: order.into_iter().map(|r| by_root.remove(&r).unwrap()).collect(),
+    }
+}
+
+/// Pack independence groups into at most `shards` scheduling units:
+/// `0` keeps one unit per group (auto), otherwise groups are assigned
+/// greedily — in topological order, each to the currently lightest
+/// unit (ties to the lowest index) — so the packing is balanced by op
+/// count and deterministic. Groups are never split: the §6 sequential
+/// order inside a group is preserved.
+pub fn pack(plan: &ShardPlan, shards: usize) -> Vec<Vec<NodeId>> {
+    if shards == 0 || shards >= plan.groups.len() {
+        return plan.groups.clone();
+    }
+    let mut out: Vec<Vec<NodeId>> = vec![Vec::new(); shards.max(1)];
+    for g in &plan.groups {
+        let lightest = (0..out.len())
+            .min_by_key(|&i| (out[i].len(), i))
+            .expect("at least one unit");
+        out[lightest].extend(g.iter().copied());
+    }
+    out.retain(|u| !u.is_empty());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn covered(plan: &ShardPlan, graph: &Graph) -> bool {
+        let mut all: Vec<NodeId> = plan.groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let mut complex = graph.complex_nodes();
+        complex.sort_unstable();
+        all == complex
+    }
+
+    #[test]
+    fn partition_covers_every_model() {
+        for g in [
+            models::case_study(),
+            models::prop_subgraph(7),
+            models::prop_subgraph(14),
+            models::resnet18(1),
+            models::mobilenet_v2(1),
+            models::bert_tiny(),
+        ] {
+            let plan = analyze(&g);
+            assert!(covered(&plan, &g), "{}: bad partition", g.name);
+            assert_eq!(plan.n_ops(), g.complex_nodes().len());
+        }
+    }
+
+    #[test]
+    fn direct_complex_edge_is_a_boundary() {
+        // prop_subgraph: pad -> c3x3 -> c1x1, the two convs adjacent
+        // with no element-wise op between them — constraint 3 inserts a
+        // conversion there, so they tune independently.
+        let g = models::prop_subgraph(7);
+        let plan = analyze(&g);
+        assert_eq!(plan.groups.len(), 2);
+        assert!(plan.groups.iter().all(|grp| grp.len() == 1));
+    }
+
+    #[test]
+    fn pool_boundary_isolates_resnet_stem() {
+        // conv1's chain (bias, relu) ends at the maxpool — nothing
+        // downstream may share its shard.
+        let g = models::resnet18(1);
+        let plan = analyze(&g);
+        let conv1 = g.complex_nodes()[0];
+        let stem = plan
+            .groups
+            .iter()
+            .find(|grp| grp.contains(&conv1))
+            .expect("conv1 covered");
+        assert_eq!(stem.as_slice(), &[conv1][..], "stem group {stem:?}");
+        assert!(plan.groups.len() > 1, "resnet18 must shard");
+    }
+
+    #[test]
+    fn eltwise_chain_merges_coupled_convs() {
+        // s0b1.c2 -> bias -> add -> relu -> s1b0.down: the downsample
+        // conv consumes the residual relu directly (no pad between),
+        // so propagation crosses the element-wise chain and the two
+        // convs share a shard. s0b0.c1 and s0b0.c2, by contrast, are
+        // separated by c2's padding op (shape changes stop the chain)
+        // and must stay apart.
+        let g = models::resnet18(1);
+        let plan = analyze(&g);
+        let by_name = |name: &str| {
+            g.nodes.iter().find(|n| n.name == name).map(|n| n.id).unwrap()
+        };
+        let (c2, down) = (by_name("s0b1.c2"), by_name("s1b0.down"));
+        let grp = plan.groups.iter().find(|grp| grp.contains(&c2)).unwrap();
+        assert!(grp.contains(&down), "c2/down split across {grp:?}");
+        let (a, b) = (by_name("s0b0.c1"), by_name("s0b0.c2"));
+        let ga = plan.groups.iter().position(|grp| grp.contains(&a)).unwrap();
+        let gb = plan.groups.iter().position(|grp| grp.contains(&b)).unwrap();
+        assert_ne!(ga, gb, "padding boundary must split c1/c2");
+    }
+
+    #[test]
+    fn reshape_boundary_splits_bert_attention() {
+        // k-projection feeds the scores matmul through a reshape —
+        // a non-propagatable boundary.
+        let g = models::bert_tiny();
+        let plan = analyze(&g);
+        let by_name = |name: &str| {
+            g.nodes.iter().find(|n| n.name == name).map(|n| n.id).unwrap()
+        };
+        let (k, scores) = (by_name("l0.k"), by_name("l0.scores"));
+        let gk = plan.groups.iter().position(|grp| grp.contains(&k)).unwrap();
+        let gs =
+            plan.groups.iter().position(|grp| grp.contains(&scores)).unwrap();
+        assert_ne!(gk, gs, "reshape boundary must split k/scores");
+        // while q feeds scores through a bias chain — same shard
+        let q = by_name("l0.q");
+        let gq = plan.groups.iter().position(|grp| grp.contains(&q)).unwrap();
+        assert_eq!(gq, gs, "q couples to scores through its bias chain");
+    }
+
+    #[test]
+    fn pack_balances_and_preserves_coverage() {
+        let g = models::resnet18(1);
+        let plan = analyze(&g);
+        let n_ops = plan.n_ops();
+        for k in [0usize, 1, 2, 3, 7, 64] {
+            let units = pack(&plan, k);
+            if k > 0 {
+                assert!(units.len() <= k.max(1));
+            }
+            let mut all: Vec<NodeId> =
+                units.iter().flatten().copied().collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), n_ops, "pack({k}) lost or duplicated ops");
+        }
+        // balanced within one group's weight
+        let units = pack(&plan, 3);
+        let max = units.iter().map(|u| u.len()).max().unwrap();
+        let min = units.iter().map(|u| u.len()).min().unwrap();
+        let biggest_group = plan.groups.iter().map(|g| g.len()).max().unwrap();
+        assert!(max - min <= biggest_group, "pack imbalance {min}..{max}");
+    }
+}

@@ -28,7 +28,11 @@
 //!   layout/loop tuning templates, and the two-stage cross-exploration
 //!   joint tuner (Fig. 8); the joint stage can speculatively evaluate
 //!   K layout proposals per PPO step (`TuneOptions::speculation`) with
-//!   a deterministic seed-split and ordered reduction.
+//!   a deterministic seed-split and ordered reduction. Graph-level
+//!   tuning goes through the sharded orchestrator
+//!   (`autotune::orchestrator`): §4.2 shard analysis
+//!   (`graph::shard`), fair-share engine handles, adaptive budget
+//!   reallocation, and the `tune_graphs` multi-workload front end.
 //! * [`engine`] — the parallel candidate-evaluation engine: a scoped
 //!   worker pool that batches the `lower → featurize → predict →
 //!   simulate` pipeline across cores, with cross-round memoization of

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 
-use alt::autotune::tuner::{tune_graph, tune_op};
+use alt::autotune::tuner::{tune_graph, tune_graphs, tune_op};
 use alt::bench::figures;
 use alt::bench::harness::Table;
 use alt::config::Config;
@@ -42,7 +42,10 @@ fn usage() -> ! {
         "usage: alt <tune|graph|sim|propagate|run|figures> [args]
   alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
            [--threads N] [--speculation K] [--memo_cap N]
+           [--shards N(1=sequential,0=auto)] [--budget_realloc true|false]
            [--config f.conf] [--set k=v,...] [--op N]
+           (--workload a,b,c tunes a whole fleet via the sharded
+            multi-workload scheduler)
   alt graph --workload mv2
   alt sim --workload bt [--hw gpu]
   alt propagate --workload case_study [--budget N]
@@ -104,8 +107,45 @@ fn main() {
     match cmd.as_str() {
         "tune" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
-            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
+            if wname.contains(',') && cfg.get("op").is_some() {
+                eprintln!("--op is not supported with a workload fleet");
+                std::process::exit(2);
+            }
+            if wname.contains(',') {
+                // fleet tuning: every workload's shards share one
+                // scheduler and engine. Auto-shard unless the user
+                // pinned a shard count explicitly (the advertised
+                // default for the fleet path).
+                let mut opts = opts;
+                if cfg.get("shards").is_none() {
+                    opts.shards = 0;
+                }
+                let graphs: Vec<Graph> = wname
+                    .split(',')
+                    .map(|n| {
+                        workload(n.trim())
+                            .unwrap_or_else(|| panic!("unknown workload {n}"))
+                    })
+                    .collect();
+                let results = tune_graphs(&graphs, &hw, &opts);
+                let mut t = Table::new(
+                    "fleet tuning",
+                    &["network", "ms", "measurements", "shards", "overshoot"],
+                );
+                for (g, r) in graphs.iter().zip(&results) {
+                    t.row(&[
+                        g.name.clone(),
+                        format!("{:.4}", r.report.latency_ms()),
+                        r.measurements.to_string(),
+                        r.shards.to_string(),
+                        r.budget_overshoot.to_string(),
+                    ]);
+                }
+                t.print();
+                return;
+            }
+            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             if let Some(op) = cfg.get("op") {
                 let idx: usize = op.parse().expect("--op index");
                 let node = g.complex_nodes()[idx];

@@ -50,7 +50,7 @@ pub enum PropMode {
 }
 
 /// Layout decision for one complex operator (instantiated template).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ComplexDecision {
     pub node: NodeId,
     /// Output tensor sequence (basic primitives only).

@@ -1,0 +1,341 @@
+//! Sharded graph-tuning orchestrator invariants:
+//!
+//! 1. shard partitions cover every complex op exactly once and never
+//!    merge ops separated by a non-propagatable boundary;
+//! 2. `shards = 1` (the default) reproduces the pre-refactor serial
+//!    `tune_graph` bit-for-bit — pinned against a reimplementation of
+//!    the historical loop (per-op `tune_op_with` walk with the fixed
+//!    `budget / n_ops` split, then one whole-graph simulation);
+//! 3. for a fixed `(seed, shards)` pair, sharded runs are bit-identical
+//!    across thread counts, and `budget_realloc = false` sharded runs
+//!    reproduce the sequential results exactly;
+//! 4. the budget overshoot forced by the per-op floor is surfaced, and
+//!    the adaptive scheduler never grants past the graph budget;
+//! 5. engine stats are delta-based and compose (op ⊂ graph).
+
+use std::collections::HashMap;
+
+use alt::autotune::orchestrator::{
+    tune_graph, tune_graph_with, tune_graphs, GraphTuneResult, PER_OP_FLOOR,
+};
+use alt::autotune::tuner::{tune_op_with, TuneOptions};
+use alt::autotune::OpTuner;
+use alt::engine::Engine;
+use alt::graph::{models, shard, Graph};
+use alt::loops::LoopSchedule;
+use alt::propagate::propagate;
+use alt::sim::netsim::simulate_graph_with;
+use alt::sim::HwProfile;
+
+fn opts(budget: usize, shards: usize, realloc: bool) -> TuneOptions {
+    TuneOptions {
+        budget,
+        seed: 5,
+        shards,
+        budget_realloc: realloc,
+        ..Default::default()
+    }
+}
+
+fn assert_graphs_identical(a: &GraphTuneResult, la: &str, b: &GraphTuneResult, lb: &str) {
+    assert_eq!(
+        a.report.latency_ms().to_bits(),
+        b.report.latency_ms().to_bits(),
+        "end-to-end latency diverged: {la} {} vs {lb} {}",
+        a.report.latency_ms(),
+        b.report.latency_ms()
+    );
+    assert_eq!(a.measurements, b.measurements, "{la}/{lb}: measurements");
+    assert_eq!(a.rounds, b.rounds, "{la}/{lb}: rounds");
+    assert_eq!(a.decisions, b.decisions, "{la}/{lb}: decisions");
+    assert_eq!(a.scheds, b.scheds, "{la}/{lb}: schedules");
+    assert_eq!(a.ops.len(), b.ops.len());
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.node, y.node, "{la}/{lb}: op order");
+        assert_eq!(x.best_ms.to_bits(), y.best_ms.to_bits(), "{la}/{lb}: op best");
+        assert_eq!(x.history.len(), y.history.len(), "{la}/{lb}: trace length");
+        for (p, q) in x.history.iter().zip(&y.history) {
+            assert_eq!(p.to_bits(), q.to_bits(), "{la}/{lb}: trace diverged");
+        }
+    }
+}
+
+/// The pre-refactor `tune_graph`, reimplemented verbatim: sequential
+/// per-op walk with the one-off `budget / n_ops` floored split, one
+/// shared engine, final whole-graph simulation.
+fn legacy_tune_graph(
+    graph: &Graph,
+    hw: &HwProfile,
+    opts: &TuneOptions,
+) -> (Vec<alt::propagate::ComplexDecision>, HashMap<usize, LoopSchedule>, f64, usize, usize)
+{
+    let engine = Engine::new(opts.threads);
+    let complex = graph.complex_nodes();
+    let per_op = (opts.budget / complex.len().max(1)).max(128);
+    let mut decisions = Vec::new();
+    let mut scheds = HashMap::new();
+    let mut measurements = 0;
+    let mut rounds = 0;
+    for &node in &complex {
+        let mut o = opts.clone();
+        o.budget = per_op;
+        let r = tune_op_with(graph, node, hw, &o, &engine);
+        measurements += r.measurements;
+        rounds += r.rounds;
+        scheds.insert(node, r.sched);
+        decisions.push(r.decision);
+    }
+    let prop = propagate(graph, &decisions, opts.mode);
+    let report = simulate_graph_with(graph, &prop, &scheds, hw, &engine);
+    (decisions, scheds, report.latency_ms(), measurements, rounds)
+}
+
+/// Acceptance pin: `shards = 1` is bit-for-bit the historical serial
+/// path on the §7.3 models.
+#[test]
+fn sequential_mode_matches_the_pre_refactor_serial_path() {
+    let hw = HwProfile::intel();
+    for (g, budget) in
+        [(models::case_study(), 60), (models::prop_subgraph(7), 40)]
+    {
+        let o = opts(budget, 1, true);
+        let (decisions, scheds, latency, measurements, rounds) =
+            legacy_tune_graph(&g, &hw, &o);
+        let r = tune_graph(&g, &hw, &o);
+        assert_eq!(r.shards, 1);
+        assert_eq!(r.decisions, decisions, "{}: decisions", g.name);
+        assert_eq!(r.scheds, scheds, "{}: schedules", g.name);
+        assert_eq!(
+            r.report.latency_ms().to_bits(),
+            latency.to_bits(),
+            "{}: latency",
+            g.name
+        );
+        assert_eq!(r.measurements, measurements, "{}: measurements", g.name);
+        assert_eq!(r.rounds, rounds, "{}: rounds", g.name);
+    }
+}
+
+/// Property: every shard partition covers every complex op exactly
+/// once, for the analysis and for every packing width.
+#[test]
+fn shard_partitions_cover_complex_ops_exactly_once() {
+    for g in [
+        models::case_study(),
+        models::prop_subgraph(7),
+        models::resnet18(1),
+        models::mobilenet_v2(1),
+        models::bert_tiny(),
+        models::resnet3d_18(1),
+    ] {
+        let mut expect = g.complex_nodes();
+        expect.sort_unstable();
+        let plan = shard::analyze(&g);
+        for k in [0usize, 1, 2, 3, 5, 100] {
+            let units = shard::pack(&plan, k);
+            let mut got: Vec<usize> =
+                units.iter().flatten().copied().collect();
+            got.sort_unstable();
+            assert_eq!(got, expect, "{} pack({k}): not a partition", g.name);
+        }
+    }
+}
+
+/// Property: ops separated by a non-propagatable boundary never share
+/// a shard — a direct complex→complex edge must split (constraint 3
+/// inserts a conversion there; there is no element-wise chain to
+/// propagate through).
+#[test]
+fn shards_never_merge_across_non_propagatable_boundaries() {
+    for g in [
+        models::prop_subgraph(7),
+        models::prop_subgraph(14),
+        models::resnet18(1),
+        models::bert_tiny(),
+    ] {
+        let plan = shard::analyze(&g);
+        let group_of = |n: usize| {
+            plan.groups.iter().position(|grp| grp.contains(&n)).unwrap()
+        };
+        for node in &g.nodes {
+            if !node.is_complex() {
+                continue;
+            }
+            for &consumer in &g.consumers(node.output) {
+                if g.node(consumer).is_complex() {
+                    assert_ne!(
+                        group_of(node.id),
+                        group_of(consumer),
+                        "{}: direct edge {} -> {} merged",
+                        g.name,
+                        node.name,
+                        g.node(consumer).name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance pin: a fixed `(seed, shards)` pair is bit-identical
+/// across thread counts, with and without adaptive reallocation.
+#[test]
+fn sharded_tuning_bit_identical_across_thread_counts() {
+    let g = models::prop_subgraph(14);
+    let hw = HwProfile::intel();
+    for (shards, realloc) in [(0usize, true), (0, false), (2, true)] {
+        let mut a = opts(480, shards, realloc);
+        a.threads = 1;
+        let mut b = a.clone();
+        b.threads = 4;
+        let ra = tune_graph(&g, &hw, &a);
+        let rb = tune_graph(&g, &hw, &b);
+        assert!(ra.shards > 1, "expected a sharded run");
+        assert_graphs_identical(
+            &ra,
+            &format!("shards={shards},threads=1"),
+            &rb,
+            &format!("shards={shards},threads=4"),
+        );
+    }
+}
+
+/// Without reallocation, sharding is a pure throughput knob: the
+/// sharded results reproduce the sequential results bit-for-bit.
+#[test]
+fn sharded_without_realloc_matches_sequential() {
+    let g = models::prop_subgraph(7);
+    let hw = HwProfile::intel();
+    let seq = tune_graph(&g, &hw, &opts(300, 1, false));
+    let sharded = tune_graph(&g, &hw, &opts(300, 0, false));
+    assert!(sharded.shards > 1);
+    assert_graphs_identical(&seq, "sequential", &sharded, "sharded");
+}
+
+/// The multi-workload front end with `budget_realloc = false` matches
+/// per-graph sequential tuning result-for-result.
+#[test]
+fn multi_workload_front_end_matches_per_graph_tuning() {
+    let graphs = vec![models::case_study(), models::prop_subgraph(7)];
+    let hw = HwProfile::arm();
+    let fleet = tune_graphs(&graphs, &hw, &opts(150, 0, false));
+    assert_eq!(fleet.len(), 2);
+    for (g, r) in graphs.iter().zip(&fleet) {
+        let solo = tune_graph(g, &hw, &opts(150, 1, false));
+        assert_graphs_identical(r, &format!("fleet:{}", g.name), &solo, "solo");
+    }
+    // adaptive fleet tuning also runs and keeps the partition sane
+    let adaptive = tune_graphs(&graphs, &hw, &opts(400, 0, true));
+    for (g, r) in graphs.iter().zip(&adaptive) {
+        assert_eq!(r.decisions.len(), g.complex_nodes().len());
+        assert!(r.report.latency_ms() > 0.0);
+    }
+}
+
+/// Satellite: the silent floor overshoot is surfaced, and adaptive
+/// grants are clamped to the graph budget.
+#[test]
+fn budget_overshoot_is_reported_and_clamped() {
+    let hw = HwProfile::intel();
+    // legacy mode on a multi-op graph with a starvation budget: the
+    // floor forces 2 * 128 measurements against budget 40
+    let g = models::prop_subgraph(7);
+    let r = tune_graph(&g, &hw, &opts(40, 1, true));
+    assert!(r.measurements >= 2 * PER_OP_FLOOR);
+    assert_eq!(r.budget_overshoot, r.measurements - 40);
+    assert!(r.budget_overshoot > 0, "floor overshoot must be surfaced");
+
+    // adaptive mode with headroom: floors guaranteed, grants clamped —
+    // total stays within one in-flight round per op of the budget
+    let budget = 512;
+    let ra = tune_graph(&g, &hw, &opts(budget, 0, true));
+    assert!(ra.measurements >= 2 * PER_OP_FLOOR);
+    let per_round_slack = 2 * 8; // 2 ops x (top_k + exploration + sketch)
+    assert!(
+        ra.measurements <= budget + per_round_slack,
+        "adaptive overshoot: {} vs budget {budget}",
+        ra.measurements
+    );
+    assert_eq!(ra.budget_overshoot, ra.measurements.saturating_sub(budget));
+}
+
+/// Satellite: engine stats are delta-based — a warm shared engine does
+/// not leak its prior counters into the next run's report — and per-op
+/// stats compose into the per-graph total.
+#[test]
+fn engine_stats_are_delta_based_and_compose() {
+    let g = models::prop_subgraph(7);
+    let hw = HwProfile::intel();
+    let o = opts(40, 1, true);
+    let engine = Engine::new(2);
+
+    // warm the engine with unrelated work
+    let conv = g.complex_nodes()[0];
+    let mut warm_o = o.clone();
+    warm_o.budget = 32;
+    tune_op_with(&g, conv, &hw, &warm_o, &engine);
+    let warm = engine.stats();
+    assert!(warm.misses > 0, "warm-up must touch the engine");
+
+    // per-op delta accounting (the old asymmetry: tune_op_with was
+    // delta-based, tune_graph reported absolute counters)
+    let s0 = engine.stats();
+    let op_r = tune_op_with(&g, conv, &hw, &warm_o, &engine);
+    assert_eq!(op_r.engine, engine.stats().since(&s0), "op stats not a delta");
+
+    // per-graph delta accounting on the same warm engine
+    let s1 = engine.stats();
+    let r = tune_graph_with(&g, &hw, &o, &engine);
+    assert_eq!(r.engine, engine.stats().since(&s1), "graph stats not a delta");
+    assert!(
+        r.engine.misses < engine.stats().misses,
+        "graph stats must exclude the warm-up counters"
+    );
+
+    // composition: op tallies are contained in the graph total
+    let op_sum = r
+        .ops
+        .iter()
+        .fold(alt::engine::EngineStats::default(), |acc, x| acc.merged(&x.engine));
+    assert!(op_sum.hits <= r.engine.hits);
+    assert!(op_sum.misses <= r.engine.misses);
+    assert!(op_sum.simulated <= r.engine.simulated);
+    assert!(op_sum.misses > 0 && r.engine.hits > 0);
+}
+
+/// The resumable per-op tuner: one uninterrupted advance and the same
+/// total budget split across several grant/advance slices walk the
+/// same trajectory bit for bit.
+#[test]
+fn op_tuner_slicing_is_invisible_to_the_trajectory() {
+    let g = models::case_study();
+    let conv = g.complex_nodes()[0];
+    let hw = HwProfile::intel();
+    let o = TuneOptions { budget: PER_OP_FLOOR, seed: 5, ..Default::default() };
+
+    let engine_a = Engine::new(2);
+    let mut a = OpTuner::new(&g, conv, &hw, &o);
+    a.grant(96);
+    a.advance(engine_a.handle());
+    let ra = a.finish();
+
+    let engine_b = Engine::new(2);
+    let mut b = OpTuner::new(&g, conv, &hw, &o);
+    b.advance(engine_b.handle()); // floor slice
+    b.grant(40);
+    b.advance(engine_b.handle()); // first grant
+    b.grant(56);
+    b.advance(engine_b.handle()); // second grant
+    let rb = b.finish();
+
+    assert_eq!(ra.best_ms.to_bits(), rb.best_ms.to_bits());
+    assert_eq!(ra.measurements, rb.measurements);
+    assert_eq!(ra.rounds, rb.rounds);
+    assert_eq!(ra.sched, rb.sched);
+    assert_eq!(ra.decision, rb.decision);
+    assert_eq!(ra.history.len(), rb.history.len());
+    for (x, y) in ra.history.iter().zip(&rb.history) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(ra.engine, rb.engine, "per-op tallies must agree too");
+}

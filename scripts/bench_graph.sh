@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the graph-orchestrator bench and capture the sequential vs
+# sharded vs adaptive throughput report (graphs/sec at several thread
+# counts, sharded==sequential parity, thread-count determinism,
+# adaptive end-to-end latency parity) as BENCH_graph.json.
+#
+# Usage: scripts/bench_graph.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_graph.json}"
+
+# cargo runs bench binaries with cwd = package root (rust/), so hand
+# the bench an absolute output path (relative args anchor at the
+# workspace root; absolute args pass through untouched)
+case "$out" in
+  /*) abs="$out" ;;
+  *) abs="$PWD/$out" ;;
+esac
+BENCH_GRAPH_JSON="$abs" cargo bench --bench graph
+
+echo
+echo "== $abs =="
+cat "$abs"
