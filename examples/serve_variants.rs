@@ -1,23 +1,46 @@
-//! Serving-style driver: a minimal request loop over the compiled
-//! artifacts. The L3 coordinator owns a registry of executables (one
-//! per layout variant), routes a stream of synthetic requests to the
-//! variant the tuner ranked best, and reports latency percentiles +
-//! throughput — demonstrating the runtime as a long-lived service
-//! component rather than a one-shot benchmark.
+//! Serving-style driver: a minimal request loop over compiled layout
+//! variants. The L3 coordinator owns a registry of executables (one
+//! per variant) behind the backend-agnostic [`Backend`] trait, routes
+//! a stream of synthetic requests to each variant, and reports latency
+//! percentiles + throughput — demonstrating the runtime as a
+//! long-lived service component rather than a one-shot benchmark.
+//!
+//! By default the zero-dependency native interpreter serves the
+//! requests (compiled variants of the case-study conv and the GMM
+//! pair); with `--features pjrt` and built artifacts, set
+//! `ALT_SERVE_BACKEND=pjrt` to serve the AOT HLO artifacts instead.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_variants -- 40
+//! cargo run --release --example serve_variants -- 40
 //! ```
 
 use std::time::Instant;
 
 use alt::bench::harness::Table;
-use alt::runtime::{random_input, Runtime};
+use alt::runtime::variants::{native_runtime, Scale};
+use alt::runtime::{random_input, Backend};
+use alt::sim::HwProfile;
 
 fn percentiles(times: &mut [f64]) -> (f64, f64, f64) {
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     let n = times.len();
     (times[n / 2], times[n * 9 / 10], times[n - 1])
+}
+
+fn backend() -> Box<dyn Backend> {
+    #[cfg(feature = "pjrt")]
+    if std::env::var("ALT_SERVE_BACKEND").as_deref() == Ok("pjrt") {
+        match alt::runtime::Runtime::new("artifacts") {
+            Ok(rt) => return Box::new(rt),
+            Err(e) => {
+                eprintln!("pjrt backend unavailable ({e}); using native");
+            }
+        }
+    }
+    let hw = HwProfile::intel();
+    let rt = native_runtime(Scale::Full, &hw, 0)
+        .unwrap_or_else(|e| panic!("native runtime: {e}"));
+    Box::new(rt)
 }
 
 fn main() {
@@ -26,48 +49,34 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(40);
 
-    let rt = match Runtime::new("artifacts") {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("artifacts not built ({e}); run `make artifacts`");
-            std::process::exit(1);
-        }
-    };
-    println!("platform: {}", rt.platform());
+    let rt = backend();
+    println!("backend: {} ({})", rt.backend_name(), rt.platform());
 
-    // registry: the three GMM/case variants the build produced
-    let variant_names = ["gmm_store_at", "gmm_tiled", "case_nhwo"];
     let mut table = Table::new(
         &format!("serve {n_requests} requests per variant"),
         &["variant", "p50 ms", "p90 ms", "max ms", "req/s"],
     );
-    for name in variant_names {
-        let Some(_) = rt.spec(name) else {
-            println!("skipping {name} (not in manifest)");
-            continue;
-        };
-        let exe = rt.load(name).expect("load");
-        let inputs: Vec<Vec<f32>> = exe
-            .spec
-            .inputs
+    for name in rt.entries() {
+        // weights/bias generated once per variant; only the first
+        // input (the activation) varies per request
+        let specs = rt.input_specs(&name).expect("specs");
+        let mut inputs: Vec<Vec<f32>> = specs
             .iter()
             .enumerate()
             .map(|(i, s)| random_input(s, 1 + i as u64))
             .collect();
-        let _ = exe.run(&inputs).expect("warmup");
+        let _ = rt.execute_with(&name, &inputs).expect("warmup");
         let mut times = Vec::with_capacity(n_requests);
         let t0 = Instant::now();
         for req in 0..n_requests {
-            // vary the first input per request (fresh activation)
-            let mut ins = inputs.clone();
-            ins[0] = random_input(&exe.spec.inputs[0], 1000 + req as u64);
-            let stats = exe.run(&ins).expect("run");
+            inputs[0] = random_input(&specs[0], 1000 + req as u64);
+            let stats = rt.execute_with(&name, &inputs).expect("run");
             times.push(stats.latency_ms);
         }
         let wall = t0.elapsed().as_secs_f64();
         let (p50, p90, max) = percentiles(&mut times);
         table.row(&[
-            name.into(),
+            name,
             format!("{p50:.3}"),
             format!("{p90:.3}"),
             format!("{max:.3}"),

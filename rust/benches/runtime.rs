@@ -1,0 +1,96 @@
+//! Bench: native runtime cross-check — execute the full-scale §7.3.3
+//! case-study layout variants on the host and compare the measured
+//! latency ranking against the simulated device's preference order
+//! (the real-host validation leg, tier-1 since the native backend).
+//!
+//! Reports per-variant native latency, sim-vs-native Spearman, the
+//! tolerance-aware rank-agreement flag, cross-variant numeric
+//! agreement, and thread-count determinism of native execution.
+//!
+//! Results go to `BENCH_runtime.json` (override with
+//! `BENCH_RUNTIME_JSON`); `scripts/bench_runtime.sh` wraps this and CI
+//! enforces the hard floors (rank agreement on multi-core runners,
+//! numerics, determinism) while the Spearman value only warns.
+
+use alt::runtime::variants::{case_executables, cross_check, Scale};
+use alt::sim::HwProfile;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let hw = HwProfile::intel();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // thread-count determinism of native execution (bit-level)
+    let mut thread_outputs: Vec<Vec<u32>> = Vec::new();
+    for threads in [1usize, 2, cores.max(2)] {
+        let exes = case_executables(Scale::Full, &hw, threads)
+            .unwrap_or_else(|e| panic!("compile: {e}"));
+        let tiled = exes
+            .iter()
+            .find(|e| e.name() == "case_tiled")
+            .expect("case_tiled");
+        let inputs = tiled.seeded_inputs(17);
+        let (_, out) = tiled.run_with_output(&inputs).unwrap();
+        thread_outputs.push(bits(&out));
+    }
+    let deterministic = thread_outputs.iter().all(|o| *o == thread_outputs[0]);
+
+    let check = cross_check(Scale::Full, &hw, 0, 3, 17)
+        .unwrap_or_else(|e| panic!("cross-check: {e}"));
+
+    println!("== native runtime cross-check (full scale, {} threads, {cores} cores) ==", check.threads);
+    for (i, name) in check.names.iter().enumerate() {
+        println!(
+            "{name:>20}: sim {:>9.4} ms | native {:>9.3} ms",
+            check.sim_ms[i], check.native_ms[i]
+        );
+    }
+    println!("spearman(sim, native):  {:.3}", check.spearman);
+    println!("rank agreement:         {}", check.rank_agreement());
+    println!("best agrees:            {}", check.best_agrees);
+    println!("numerics agree:         {}", check.numerics_ok);
+    println!("thread determinism:     {deterministic}");
+    for (a, b) in &check.strong_inversions {
+        println!("  strong inversion: sim prefers {a} over {b}, native disagrees");
+    }
+
+    let variants: Vec<String> = check
+        .names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            format!(
+                "    {{\"name\": \"{name}\", \"sim_ms\": {:.6}, \
+                 \"native_ms\": {:.6}}}",
+                check.sim_ms[i], check.native_ms[i]
+            )
+        })
+        .collect();
+    let path = std::env::var("BENCH_RUNTIME_JSON")
+        .unwrap_or_else(|_| "BENCH_runtime.json".to_string());
+    let json = format!(
+        "{{\n  \"cores\": {cores},\n  \"threads\": {},\n  \
+         \"variants\": [\n{}\n  ],\n  \
+         \"spearman\": {:.4},\n  \
+         \"rank_agreement\": {},\n  \
+         \"best_agrees\": {},\n  \
+         \"numerics_ok\": {},\n  \
+         \"deterministic\": {}\n}}\n",
+        check.threads,
+        variants.join(",\n"),
+        check.spearman,
+        check.rank_agreement(),
+        check.best_agrees,
+        check.numerics_ok,
+        deterministic,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("runtime report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -303,7 +303,10 @@ impl LoopTuning {
             .map(|(_, pred)| *pred)
             .enumerate()
             .collect();
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // nan_last_cmp: a single NaN cost-model prediction must not
+        // panic the whole tune, and must rank last (total_cmp alone
+        // would rank a sign-negative NaN first) so it is never measured
+        scored.sort_by(|a, b| crate::util::stats::nan_last_cmp(a.1, b.1));
         let entries: Vec<std::sync::Arc<crate::engine::EvalEntry>> =
             evaluated.into_iter().map(|(e, _)| e).collect();
 

@@ -222,7 +222,8 @@ pub fn ansor_like(
                 (i, cost.predict(&prog))
             })
             .collect();
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // NaN-safe, NaN predictions rank last
+        scored.sort_by(|a, b| crate::util::stats::nan_last_cmp(a.1, b.1));
         for &(i, _) in scored.iter().take(top_k.min(budget - used)) {
             let sched = space.decode(&cands[i]);
             let prog = lower_complex(

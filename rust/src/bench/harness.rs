@@ -12,8 +12,7 @@ pub fn time_fn<F: FnMut()>(mut f: F, n: usize) -> f64 {
         f();
         times.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[times.len() / 2]
+    crate::util::stats::median(&mut times)
 }
 
 /// Wall-clock stopwatch with named laps (profiling aid for §Perf).

@@ -88,7 +88,9 @@ fn best_split_on(
 ) -> Option<(f64, f64)> {
     let mut pairs: Vec<(f64, f64)> =
         idx.iter().map(|&i| (xs[i][feat], resid[i])).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // total_cmp: deterministic total order, never panics on NaN (a NaN
+    // feature's placement is irrelevant to the split search)
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     let n = pairs.len();
     let total: f64 = pairs.iter().map(|p| p.1).sum();
     let mut left_sum = 0.0;

@@ -114,7 +114,8 @@ impl CostModel {
             .enumerate()
             .map(|(i, p)| (i, self.predict(p)))
             .collect();
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // NaN-safe, NaN predictions rank last
+        scored.sort_by(|a, b| crate::util::stats::nan_last_cmp(a.1, b.1));
         scored.into_iter().map(|(i, _)| i).collect()
     }
 }

@@ -40,8 +40,11 @@
 //!   handles for nested per-proposal sub-batches.
 //! * [`baselines`] — Ansor-like, AutoTVM-like, FlexTensor-like and
 //!   vendor-library-like comparators.
-//! * [`runtime`] — PJRT executor for the AOT HLO artifacts produced by
-//!   the Python build layer (real-host validation leg).
+//! * [`runtime`] — pluggable execution backends (real-host validation
+//!   leg): a zero-dependency native interpreter that executes generated
+//!   tensor programs on host `f32` buffers (always on, cross-checks
+//!   simulator rankings in tier-1), plus the PJRT executor for the AOT
+//!   HLO artifacts produced by the Python build layer (`pjrt` feature).
 //! * [`bench`] — the figure/table harnesses shared by `cargo bench`,
 //!   the `figures` binary and the examples.
 

@@ -5,7 +5,10 @@
 //!   graph    — print a workload's computational graph
 //!   sim      — simulate a network under default layouts/schedules
 //!   propagate— show the layout-propagation result of a tuned network
-//!   run      — execute an AOT HLO artifact on the PJRT CPU runtime
+//!   run      — execute a compiled layout variant for real: the native
+//!              interpreter backend by default (no features, no
+//!              artifacts), or the PJRT CPU runtime over AOT HLO
+//!              artifacts with `--backend pjrt` (`pjrt` feature)
 //!   figures  — regenerate a paper table/figure (also: `figures` binary)
 //!
 //! Configuration: `--config file.conf` (key = value, see
@@ -49,7 +52,10 @@ fn usage() -> ! {
   alt graph --workload mv2
   alt sim --workload bt [--hw gpu]
   alt propagate --workload case_study [--budget N]
-  alt run --artifact model [--dir artifacts] [--iters N]
+  alt run [--backend native|pjrt] [--artifact case_tiled] [--iters N]
+          [--scale full|small] [--threads N] [--seed S]
+          (--backend pjrt additionally takes --dir artifacts and needs
+           the `pjrt` feature; native is the default and needs nothing)
   alt figures <fig1|fig9|fig10|fig11|fig12|table2|table3|motivating|observations|all> [--full]"
     );
     std::process::exit(2);
@@ -234,32 +240,63 @@ fn main() {
                 );
             }
         }
-        #[cfg(feature = "pjrt")]
         "run" => {
-            let dir = cfg.get("dir").unwrap_or("artifacts");
-            let name = cfg.get("artifact").unwrap_or("model");
+            use alt::runtime::Backend;
+            let backend = cfg.get("backend").unwrap_or("native");
             let iters = cfg.get_usize("iters", 5);
-            let rt = alt::runtime::Runtime::new(dir)
-                .unwrap_or_else(|e| panic!("runtime: {e}"));
-            println!("platform: {}", rt.platform());
-            let exe = rt.load(name).unwrap_or_else(|e| panic!("load: {e}"));
-            let inputs: Vec<Vec<f32>> = exe
-                .spec
-                .inputs
-                .iter()
-                .enumerate()
-                .map(|(i, s)| alt::runtime::random_input(s, 7 + i as u64))
-                .collect();
-            let ms = exe.bench(&inputs, iters).unwrap_or_else(|e| panic!("{e}"));
-            println!("{name}: median {ms:.3} ms over {iters} runs");
-        }
-        #[cfg(not(feature = "pjrt"))]
-        "run" => {
-            eprintln!(
-                "`alt run` needs the PJRT runtime: rebuild with \
-                 `--features pjrt` (requires the xla crate)"
-            );
-            std::process::exit(2);
+            let seed = cfg.get_u64("seed", 7);
+            match backend {
+                "native" => {
+                    let scale = alt::runtime::variants::Scale::from_name(
+                        cfg.get("scale").unwrap_or("full"),
+                    )
+                    .unwrap_or_else(|| panic!("--scale must be small|full"));
+                    let threads = cfg.get_usize("threads", 0);
+                    let rt = alt::runtime::variants::native_runtime(
+                        scale, &hw, threads,
+                    )
+                    .unwrap_or_else(|e| panic!("native runtime: {e}"));
+                    println!("platform: {}", rt.platform());
+                    let name =
+                        cfg.get("artifact").unwrap_or("case_tiled");
+                    let ms = rt
+                        .bench_variant(name, seed, iters)
+                        .unwrap_or_else(|e| {
+                            panic!("{e} (have: {:?})", rt.entries())
+                        });
+                    println!("{name}: median {ms:.3} ms over {iters} runs");
+                }
+                "pjrt" => {
+                    #[cfg(feature = "pjrt")]
+                    {
+                        let dir = cfg.get("dir").unwrap_or("artifacts");
+                        let name = cfg.get("artifact").unwrap_or("model");
+                        let rt = alt::runtime::Runtime::new(dir)
+                            .unwrap_or_else(|e| panic!("runtime: {e}"));
+                        println!("platform: {}", Backend::platform(&rt));
+                        let ms = rt
+                            .bench_variant(name, seed, iters)
+                            .unwrap_or_else(|e| panic!("{e}"));
+                        println!(
+                            "{name}: median {ms:.3} ms over {iters} runs"
+                        );
+                    }
+                    #[cfg(not(feature = "pjrt"))]
+                    {
+                        eprintln!(
+                            "`alt run --backend pjrt` needs the PJRT \
+                             runtime: rebuild with `--features pjrt` \
+                             (requires the xla crate); the default \
+                             `--backend native` works without it"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+                other => {
+                    eprintln!("unknown backend '{other}' (native|pjrt)");
+                    std::process::exit(2);
+                }
+            }
         }
         "figures" => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");

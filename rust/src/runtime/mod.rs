@@ -1,19 +1,29 @@
-//! PJRT runtime: load and execute the AOT HLO artifacts.
+//! Runtime backends: execute compiled layout variants for real.
 //!
-//! This is the real-host validation leg of the three-layer stack: the
-//! Python build layer (`python/compile/aot.py`) lowers each L2 graph
-//! variant to HLO *text* once; this module loads those artifacts via the
-//! `xla` crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file` →
-//! `compile` → `execute`) and times them, so the layout rankings the
-//! simulated device produces can be cross-checked against genuine
-//! execution on the host CPU. Python is never on this path.
+//! This is the real-host validation leg of the three-layer stack. The
+//! layout rankings the simulated device produces are only credible if
+//! genuine execution agrees, so the runtime exposes a pluggable
+//! [`Backend`] trait with two implementations:
 //!
-//! The `xla`-backed half ([`Executable`], [`Runtime`]) is gated behind
-//! the `pjrt` cargo feature: the crate must build with zero external
-//! dependencies in offline environments, so enabling `pjrt` requires
-//! adding the `xla` crate to `Cargo.toml` by hand. Manifest/spec
-//! parsing and deterministic input generation are always available
-//! (they are pure std and unit-tested offline).
+//! * [`native`] — a zero-dependency interpreter that executes the
+//!   *generated tensor programs* (codegen's loop nest + storage access
+//!   expressions) directly on host `f32` buffers, honoring each
+//!   operand's layout sequence, the fused elementwise tail and the
+//!   `parallel` loop annotations (`std::thread` scoped workers). It is
+//!   always compiled, so tier-1 tests cross-check simulator rankings
+//!   against real execution offline ([`variants::cross_check`]).
+//! * `pjrt` (cargo feature `pjrt`) — the original XLA-backed client:
+//!   the Python build layer (`python/compile/aot.py`) lowers each L2
+//!   graph variant to HLO text once; [`Runtime`] loads those artifacts
+//!   via the `xla` crate and times them. Enabling the feature requires
+//!   adding the `xla` crate to `Cargo.toml` by hand (it cannot be
+//!   fetched in offline build environments).
+//!
+//! Manifest/spec parsing and deterministic input generation are pure
+//! std and shared by both backends.
+
+pub mod native;
+pub mod variants;
 
 use std::path::Path;
 
@@ -47,7 +57,9 @@ fn parse_spec(s: &str) -> Result<TensorSpec> {
     let (dtype, rest) = s
         .split_once('[')
         .ok_or_else(|| err!("bad tensor spec '{s}'"))?;
-    let dims = rest.trim_end_matches(']');
+    let dims = rest
+        .strip_suffix(']')
+        .ok_or_else(|| err!("bad tensor spec '{s}': missing ']'"))?;
     let shape = if dims.is_empty() {
         vec![]
     } else {
@@ -55,20 +67,22 @@ fn parse_spec(s: &str) -> Result<TensorSpec> {
             .map(|d| {
                 d.trim()
                     .parse::<usize>()
-                    .map_err(|e| Error::msg(e).context("dim"))
+                    .map_err(|e| err!("bad dim '{d}' in spec '{s}': {e}"))
             })
             .collect::<Result<Vec<_>>>()?
     };
     Ok(TensorSpec { dtype: dtype.to_string(), shape })
 }
 
-/// Read the artifact manifest.
-pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
-    let path = dir.join("manifest.txt");
-    let text = std::fs::read_to_string(&path)
-        .map_err(|e| Error::msg(e).context(format!("reading {}", path.display())))?;
-    let mut out = Vec::new();
+/// Parse manifest text (`name \t file \t in_specs \t out_specs` lines).
+/// Tolerates CRLF line endings and trailing `;` in spec lists; rejects
+/// duplicate artifact names and malformed dims.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut out: Vec<ArtifactSpec> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
     for line in text.lines() {
+        // `str::lines` splits on \n; strip the \r of CRLF files.
+        let line = line.strip_suffix('\r').unwrap_or(line);
         if line.trim().is_empty() {
             continue;
         }
@@ -79,14 +93,26 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
         let parse_list = |s: &str| -> Result<Vec<TensorSpec>> {
             s.split(';').filter(|p| !p.is_empty()).map(parse_spec).collect()
         };
+        let name = cols[0].to_string();
+        if !seen.insert(name.clone()) {
+            bail!("duplicate artifact '{name}' in manifest");
+        }
         out.push(ArtifactSpec {
-            name: cols[0].to_string(),
+            name,
             file: cols[1].to_string(),
             inputs: parse_list(cols[2])?,
             outputs: parse_list(cols[3])?,
         });
     }
     Ok(out)
+}
+
+/// Read the artifact manifest from `dir/manifest.txt`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::msg(e).context(format!("reading {}", path.display())))?;
+    parse_manifest(&text)
 }
 
 /// Result of one timed execution.
@@ -104,6 +130,57 @@ pub fn random_input(spec: &TensorSpec, seed: u64) -> Vec<f32> {
     (0..spec.elements())
         .map(|_| (rng.uniform() as f32 - 0.5) * 0.2)
         .collect()
+}
+
+/// Deterministic seeded inputs for a spec list — input `i` is seeded
+/// with `seed + i`. The one seeding convention every backend shares,
+/// so the same `(variant, seed)` means the same data on native and
+/// PJRT alike.
+pub fn seeded_inputs(specs: &[TensorSpec], seed: u64) -> Vec<Vec<f32>> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| random_input(s, seed + i as u64))
+        .collect()
+}
+
+/// A runtime backend: a registry of compiled layout variants that can
+/// execute requests for real (as opposed to predicting them). Both the
+/// native interpreter and the PJRT client implement this, so serving
+/// drivers and the cross-check harness are backend-agnostic.
+pub trait Backend {
+    /// Short backend id (`"native"`, `"pjrt"`).
+    fn backend_name(&self) -> &'static str;
+
+    /// Human description of the execution substrate.
+    fn platform(&self) -> String;
+
+    /// Names of the loadable variants, sorted.
+    fn entries(&self) -> Vec<String>;
+
+    /// Whether `variant` is available.
+    fn has(&self, variant: &str) -> bool {
+        self.entries().iter().any(|e| e == variant)
+    }
+
+    /// Logical input specs of one variant — what
+    /// [`execute_with`](Self::execute_with) expects, in order.
+    fn input_specs(&self, variant: &str) -> Result<Vec<TensorSpec>>;
+
+    /// Execute one variant with caller-provided inputs matching
+    /// [`input_specs`](Self::input_specs) — the serving request path:
+    /// generate (or receive) inputs once, vary only what changes per
+    /// request.
+    fn execute_with(&self, variant: &str, inputs: &[Vec<f32>]) -> Result<RunStats>;
+
+    /// Execute one variant with deterministic seeded inputs.
+    fn execute(&self, variant: &str, seed: u64) -> Result<RunStats> {
+        let inputs = seeded_inputs(&self.input_specs(variant)?, seed);
+        self.execute_with(variant, &inputs)
+    }
+
+    /// Median-of-`iters` latency (ms) of one variant, seeded inputs.
+    fn bench_variant(&self, variant: &str, seed: u64, iters: usize) -> Result<f64>;
 }
 
 #[cfg(feature = "pjrt")]
@@ -167,8 +244,7 @@ mod pjrt {
             for _ in 0..n {
                 times.push(self.run(inputs)?.latency_ms);
             }
-            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            Ok(times[times.len() / 2])
+            Ok(crate::util::stats::median(&mut times))
         }
     }
 
@@ -226,10 +302,53 @@ mod pjrt {
             Ok(Executable { spec, exe })
         }
     }
+
+    impl Backend for Runtime {
+        fn backend_name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn platform(&self) -> String {
+            Runtime::platform(self)
+        }
+
+        fn entries(&self) -> Vec<String> {
+            Runtime::entries(self)
+        }
+
+        fn input_specs(&self, variant: &str) -> Result<Vec<TensorSpec>> {
+            Ok(self
+                .spec(variant)
+                .ok_or_else(|| err!("unknown artifact '{variant}'"))?
+                .inputs
+                .clone())
+        }
+
+        fn execute_with(
+            &self,
+            variant: &str,
+            inputs: &[Vec<f32>],
+        ) -> Result<RunStats> {
+            self.load(variant)?.run(inputs)
+        }
+
+        fn bench_variant(
+            &self,
+            variant: &str,
+            seed: u64,
+            iters: usize,
+        ) -> Result<f64> {
+            let exe = self.load(variant)?;
+            let inputs = seeded_inputs(&exe.spec.inputs, seed);
+            exe.bench(&inputs, iters.max(1))
+        }
+    }
 }
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
+
+pub use native::{NativeExecutable, NativeRuntime};
 
 #[cfg(test)]
 mod tests {
@@ -244,6 +363,59 @@ mod tests {
         let scalar = parse_spec("float32[]").unwrap();
         assert_eq!(scalar.elements(), 1);
         assert!(parse_spec("garbage").is_err());
+    }
+
+    #[test]
+    fn parse_spec_rejects_malformed_dims() {
+        assert!(parse_spec("float32[1,x,3]").is_err());
+        assert!(parse_spec("float32[1,-2]").is_err());
+        assert!(parse_spec("float32[1,2").is_err()); // missing ]
+        assert!(parse_spec("float32[1,2]junk").is_err());
+        assert!(parse_spec("float32[1,,2]").is_err());
+    }
+
+    #[test]
+    fn manifest_parses_basic_and_trailing_semicolon() {
+        let text = "model\tmodel.hlo\tfloat32[2,3];float32[3,4];\tfloat32[2,4]\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "model");
+        // trailing ';' must not create a phantom empty spec
+        assert_eq!(m[0].inputs.len(), 2);
+        assert_eq!(m[0].outputs.len(), 1);
+    }
+
+    #[test]
+    fn manifest_tolerates_crlf_lines() {
+        let text = "a\ta.hlo\tfloat32[4]\tfloat32[4]\r\nb\tb.hlo\tfloat32[2,2]\tfloat32[2,2]\r\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        // the \r must not leak into the last spec's dims
+        assert_eq!(m[0].outputs[0].shape, vec![4]);
+        assert_eq!(m[1].name, "b");
+    }
+
+    #[test]
+    fn manifest_rejects_duplicate_names() {
+        let text = "m\tm1.hlo\tfloat32[4]\tfloat32[4]\nm\tm2.hlo\tfloat32[4]\tfloat32[4]\n";
+        let err = parse_manifest(text).unwrap_err();
+        assert!(format!("{err}").contains("duplicate artifact 'm'"));
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_rows() {
+        // wrong column count
+        assert!(parse_manifest("just three\tcols\there\n").is_err());
+        // malformed dims inside a spec list
+        assert!(
+            parse_manifest("m\tm.hlo\tfloat32[1,oops]\tfloat32[4]\n").is_err()
+        );
+    }
+
+    #[test]
+    fn manifest_skips_blank_lines() {
+        let text = "\n\nm\tm.hlo\tfloat32[4]\tfloat32[4]\n\n";
+        assert_eq!(parse_manifest(text).unwrap().len(), 1);
     }
 
     #[test]

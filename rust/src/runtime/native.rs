@@ -1,0 +1,933 @@
+//! Native interpreter backend: execute generated tensor programs on
+//! host `f32` buffers with zero external dependencies.
+//!
+//! [`NativeExecutable::compile`] takes the same inputs as the simulator
+//! path — a graph, one complex node plus its fused elementwise tail, a
+//! [`LayoutAssignment`] and a [`LoopSchedule`] — lowers them through
+//! [`lower_complex`] and *executes the resulting [`Program`] for real*:
+//!
+//! * every operand buffer is packed into its layout sequence's storage
+//!   format ([`LayoutTransform::repack`]), so the interpreter reads and
+//!   writes through the exact storage access expressions codegen
+//!   emitted — the same expressions the simulator samples;
+//! * the loop nest runs output-element-major: for each spatial
+//!   coordinate the reduction loops accumulate in nest order, then the
+//!   fused elementwise tail (bias/ReLU/…, `compute_at` fusion) applies
+//!   in registers and the final tensor is written once. Per-element
+//!   accumulation order equals the nest's reduction order, so results
+//!   are bit-for-bit independent of how the spatial space is chunked;
+//! * `parallel`-annotated programs fan spatial chunks across
+//!   `std::thread::scope` workers (the same scoped-pool pattern as
+//!   [`crate::engine`]); programs without a `parallel` annotation run
+//!   on one thread regardless of `--threads`, so the schedule knob has
+//!   a real execution-time effect. Outputs are bit-identical across
+//!   thread counts.
+//!
+//! Access expressions are compiled once to a small stack bytecode
+//! ([`Code`]), with the spatial-only part of each address hoisted out
+//! of the reduction loop, so the timed loop does data movement and
+//! multiply-adds rather than `Arc` tree walks.
+//!
+//! Reported latency covers execution only; packing/unpacking is the
+//! job of conversion operators and is charged separately by the cost
+//! model (see `conversion_terms` in the tuner).
+//!
+//! Unsupported (returns an error at compile): transposed convolutions
+//! (zero-expanded inputs) and `store_at`-packed operands.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::codegen::{lower_complex, LayoutAssignment, Program, TensorAccess};
+use crate::error::Result;
+use crate::expr::{Const, Expr};
+use crate::graph::{EltKind, Graph, NodeId, OpKind};
+use crate::layout::{LayoutTransform, Primitive};
+use crate::loops::{Annotation, LoopKind, LoopSchedule};
+use crate::tensor::TensorId;
+use crate::{bail, err};
+
+use super::{Backend, RunStats, TensorSpec};
+
+/// One bytecode step of a compiled index expression.
+#[derive(Clone, Debug)]
+enum Step {
+    Var(usize),
+    Const(i64),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+}
+
+/// A compiled index expression: postfix steps over an `i64` stack.
+/// Matches [`Expr::eval`] exactly (euclidean div/mod).
+#[derive(Clone, Debug)]
+struct Code {
+    steps: Vec<Step>,
+}
+
+impl Code {
+    fn compile(e: &Expr) -> Self {
+        let mut steps = Vec::new();
+        fn push(e: &Expr, out: &mut Vec<Step>) {
+            match e {
+                Expr::Var(i) => out.push(Step::Var(*i)),
+                Expr::Const(c) => out.push(Step::Const(*c)),
+                Expr::Add(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Add);
+                }
+                Expr::Sub(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Sub);
+                }
+                Expr::Mul(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Mul);
+                }
+                Expr::Div(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Div);
+                }
+                Expr::Mod(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Mod);
+                }
+                Expr::Min(a, b) => {
+                    push(a, out);
+                    push(b, out);
+                    out.push(Step::Min);
+                }
+            }
+        }
+        push(e, &mut steps);
+        Self { steps }
+    }
+
+    fn eval(&self, env: &[i64], stack: &mut Vec<i64>) -> i64 {
+        stack.clear();
+        for s in &self.steps {
+            match s {
+                Step::Var(i) => stack.push(env[*i]),
+                Step::Const(c) => stack.push(*c),
+                op => {
+                    let b = stack.pop().expect("code underflow");
+                    let a = stack.pop().expect("code underflow");
+                    stack.push(match op {
+                        Step::Add => a + b,
+                        Step::Sub => a - b,
+                        Step::Mul => a * b,
+                        Step::Div => a.div_euclid(b),
+                        Step::Mod => a.rem_euclid(b),
+                        Step::Min => a.min(b),
+                        _ => unreachable!(),
+                    });
+                }
+            }
+        }
+        stack.pop().expect("empty code")
+    }
+}
+
+/// Row-major strides of a storage shape.
+fn strides_of(shape: &[i64]) -> Vec<i64> {
+    let mut strides = vec![1i64; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    strides
+}
+
+/// Flat-address expression of an access (sum of dim-index * stride).
+fn flat_expr(acc: &TensorAccess) -> Expr {
+    Expr::flatten(&acc.idx, &acc.storage_shape)
+}
+
+/// A MAC operand read with the spatial-only address part hoisted:
+/// `addr = base(spatial env) + red(full env)`.
+#[derive(Clone, Debug)]
+struct MacRead {
+    buf: usize,
+    base: Code,
+    red: Code,
+    has_red: bool,
+}
+
+impl MacRead {
+    fn build(buf: usize, acc: &TensorAccess, red_vars: &BTreeSet<usize>) -> Self {
+        let strides = strides_of(&acc.storage_shape);
+        let mut base = Const(0);
+        let mut red = Const(0);
+        for (idx, &s) in acc.idx.iter().zip(&strides) {
+            let term = Expr::mul(idx.clone(), Const(s));
+            if idx.vars().iter().any(|v| red_vars.contains(v)) {
+                red = Expr::add(red, term);
+            } else {
+                base = Expr::add(base, term);
+            }
+        }
+        let has_red = !matches!(red, Const(0));
+        Self { buf, base: Code::compile(&base), red: Code::compile(&red), has_red }
+    }
+}
+
+/// How a fused elementwise stage combines its operands.
+#[derive(Clone, Copy, Debug)]
+enum TailKind {
+    Sum,
+    Product,
+    Relu,
+    Relu6,
+    Sigmoid,
+    Gelu,
+    Tanh,
+    Identity,
+}
+
+#[derive(Clone, Debug)]
+enum TailOperand {
+    /// The running value of the fusion chain (the complex op's result
+    /// flowing through the tail in registers).
+    Chain,
+    /// A read of an external operand at its storage address.
+    Read { buf: usize, addr: Code },
+}
+
+#[derive(Clone, Debug)]
+struct TailStage {
+    kind: TailKind,
+    operands: Vec<TailOperand>,
+}
+
+impl TailStage {
+    #[inline]
+    fn apply(
+        &self,
+        chain: f32,
+        bufs: &[Vec<f32>],
+        env: &[i64],
+        stack: &mut Vec<i64>,
+    ) -> f32 {
+        let val = |op: &TailOperand| -> f32 {
+            match op {
+                TailOperand::Chain => chain,
+                TailOperand::Read { buf, addr } => {
+                    bufs[*buf][addr.eval(env, stack) as usize]
+                }
+            }
+        };
+        match self.kind {
+            TailKind::Sum => {
+                let mut s = val(&self.operands[0]);
+                for op in &self.operands[1..] {
+                    s += val(op);
+                }
+                s
+            }
+            TailKind::Product => {
+                let mut p = val(&self.operands[0]);
+                for op in &self.operands[1..] {
+                    p *= val(op);
+                }
+                p
+            }
+            TailKind::Relu => val(&self.operands[0]).max(0.0),
+            TailKind::Relu6 => val(&self.operands[0]).clamp(0.0, 6.0),
+            TailKind::Sigmoid => {
+                let x = val(&self.operands[0]);
+                1.0 / (1.0 + (-x).exp())
+            }
+            TailKind::Gelu => {
+                let x = val(&self.operands[0]);
+                0.5 * x
+                    * (1.0
+                        + (0.797_884_6_f32 * (x + 0.044_715 * x * x * x))
+                            .tanh())
+            }
+            TailKind::Tanh => val(&self.operands[0]).tanh(),
+            TailKind::Identity => val(&self.operands[0]),
+        }
+    }
+}
+
+/// One logical input the caller must provide, plus its packing recipe.
+#[derive(Debug)]
+struct InputBuf {
+    tensor: TensorId,
+    name: String,
+    /// Logical row-major shape the caller provides data in.
+    shape: Vec<i64>,
+    elements: usize,
+    transform: LayoutTransform,
+    identity: bool,
+}
+
+/// Forward mapping logical index → storage flat address, used to fold
+/// the executed storage buffer back to a logical row-major output.
+#[derive(Debug)]
+struct UnpackPlan {
+    logical_shape: Vec<i64>,
+    logical_len: usize,
+    /// One code per storage dim, over logical-dim vars `0..rank`.
+    dims: Vec<Code>,
+    storage_strides: Vec<i64>,
+}
+
+/// A compiled tensor-program variant, ready to execute on the host.
+#[derive(Debug)]
+pub struct NativeExecutable {
+    name: String,
+    program: Program,
+    threads: usize,
+    env_len: usize,
+    /// (loop var, extent) of spatial loops, nest order.
+    spatial: Vec<(usize, i64)>,
+    /// (loop var, extent) of reduction loops, nest order.
+    reduction: Vec<(usize, i64)>,
+    spatial_total: u64,
+    red_total: u64,
+    inputs: Vec<InputBuf>,
+    lhs: MacRead,
+    rhs: MacRead,
+    tail: Vec<TailStage>,
+    write: Code,
+    out_len: usize,
+    unpack: UnpackPlan,
+    /// Product of `parallel`-annotated spatial loop extents (1 when
+    /// the schedule grants no parallelism).
+    par_extent: u64,
+}
+
+fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+impl NativeExecutable {
+    /// Lower `node` (+ fused tail) under `layouts`/`sched` and compile
+    /// the resulting program for host execution. `threads == 0` means
+    /// all available cores; threads only apply to `parallel`-annotated
+    /// programs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile(
+        name: &str,
+        graph: &Graph,
+        node_id: NodeId,
+        fused_tail: &[NodeId],
+        layouts: &LayoutAssignment,
+        sched: &LoopSchedule,
+        simd_lanes: i64,
+        threads: usize,
+    ) -> Result<Self> {
+        let node = graph.node(node_id);
+        match &node.kind {
+            OpKind::Conv { transposed: true, .. } => {
+                bail!("{name}: transposed convs are not supported by the native backend")
+            }
+            OpKind::Conv { .. } | OpKind::Matmul | OpKind::Dense => {}
+            other => bail!("{name}: not a complex op: {other:?}"),
+        }
+        if let Some(&w) = node.inputs.get(1) {
+            let seq = layouts.get(w);
+            if seq.prims.iter().any(|p| {
+                matches!(p, Primitive::StoreAt { .. } | Primitive::DecoupleAt { .. })
+            }) {
+                bail!("{name}: store_at-packed operands are not supported by the native backend");
+            }
+        }
+
+        let program =
+            lower_complex(graph, node_id, layouts, sched, fused_tail, simd_lanes);
+
+        // Loop variable tables (nest order). build_nest allocates var
+        // ids in push order, but derive everything from the loop list.
+        let env_len = program
+            .loops
+            .iter()
+            .map(|l| l.var + 1)
+            .max()
+            .ok_or_else(|| err!("{name}: empty loop nest"))?;
+        let spatial: Vec<(usize, i64)> = program
+            .loops
+            .iter()
+            .filter(|l| l.kind == LoopKind::Spatial)
+            .map(|l| (l.var, l.extent))
+            .collect();
+        let reduction: Vec<(usize, i64)> = program
+            .loops
+            .iter()
+            .filter(|l| l.kind == LoopKind::Reduction)
+            .map(|l| (l.var, l.extent))
+            .collect();
+        let red_vars: BTreeSet<usize> = reduction.iter().map(|&(v, _)| v).collect();
+        let spatial_total: u64 =
+            spatial.iter().map(|&(_, e)| e as u64).product();
+        let red_total: u64 = reduction.iter().map(|&(_, e)| e as u64).product();
+
+        // Access layout (the lower_complex contract):
+        //   [0] complex-op output (the write iff no fused tail)
+        //   [1] lhs operand, [2] rhs operand
+        //   [3..] fused-tail external reads, then the final write.
+        let accs = &program.accesses;
+        if accs.len() < 3 {
+            bail!("{name}: program has {} accesses, want >= 3", accs.len());
+        }
+        let write_idx = if fused_tail.is_empty() { 0 } else { accs.len() - 1 };
+        if !accs[write_idx].is_write {
+            bail!("{name}: unexpected write-access placement");
+        }
+        if accs[1].is_write || accs[2].is_write {
+            bail!("{name}: unexpected operand write");
+        }
+        if accs[1].tensor != node.inputs[0] || accs[2].tensor != node.inputs[1] {
+            bail!("{name}: operand accesses do not match node inputs");
+        }
+        let spatial_only = |acc: &TensorAccess| -> bool {
+            acc.idx
+                .iter()
+                .all(|e| e.vars().iter().all(|v| !red_vars.contains(v)))
+        };
+        if !spatial_only(&accs[write_idx]) {
+            bail!("{name}: write access depends on reduction vars");
+        }
+
+        // Input buffers, keyed by tensor, in first-appearance order.
+        let mut inputs: Vec<InputBuf> = Vec::new();
+        let mut buf_of = |t: TensorId, acc: &TensorAccess| -> Result<usize> {
+            if let Some(i) = inputs.iter().position(|b| b.tensor == t) {
+                return Ok(i);
+            }
+            let ten = graph.tensor(t);
+            let seq = layouts.get_for(node_id, t);
+            let tf = LayoutTransform::new(ten.shape.clone(), &seq);
+            if tf.final_shape() != acc.storage_shape.as_slice() {
+                bail!(
+                    "{name}: storage shape mismatch for {}: {:?} vs {:?}",
+                    ten.name,
+                    tf.final_shape(),
+                    acc.storage_shape
+                );
+            }
+            inputs.push(InputBuf {
+                tensor: t,
+                name: ten.name.clone(),
+                shape: ten.shape.clone(),
+                elements: ten.elements() as usize,
+                identity: seq.is_identity(),
+                transform: tf,
+            });
+            Ok(inputs.len() - 1)
+        };
+
+        let lhs_buf = buf_of(node.inputs[0], &accs[1])?;
+        let rhs_buf = buf_of(node.inputs[1], &accs[2])?;
+        let lhs = MacRead::build(lhs_buf, &accs[1], &red_vars);
+        let rhs = MacRead::build(rhs_buf, &accs[2], &red_vars);
+
+        // Fused tail: replay lower_complex's operand walk so external
+        // reads line up with accesses[3..] (store_at operands, which
+        // lower_complex would skip, were rejected above).
+        let mut next_acc = 3usize;
+        let tail_end = if fused_tail.is_empty() { 3 } else { accs.len() - 1 };
+        let mut tail: Vec<TailStage> = Vec::new();
+        for &tid in fused_tail {
+            let tnode = graph.node(tid);
+            let kind = match &tnode.kind {
+                OpKind::BiasAdd => TailKind::Sum,
+                OpKind::Eltwise { kind, .. } => match kind {
+                    EltKind::Add => TailKind::Sum,
+                    EltKind::Mul => TailKind::Product,
+                    EltKind::Relu => TailKind::Relu,
+                    EltKind::Relu6 => TailKind::Relu6,
+                    EltKind::Sigmoid => TailKind::Sigmoid,
+                    EltKind::Gelu => TailKind::Gelu,
+                    EltKind::Tanh => TailKind::Tanh,
+                    EltKind::Identity => TailKind::Identity,
+                },
+                other => bail!(
+                    "{name}: unsupported fused tail op {other:?} in {}",
+                    tnode.name
+                ),
+            };
+            let mut operands = Vec::new();
+            for &inp in &tnode.inputs {
+                let prod = graph.tensor(inp).producer;
+                let is_chain = prod == Some(node_id)
+                    || prod.map(|p| fused_tail.contains(&p)).unwrap_or(false);
+                if is_chain {
+                    operands.push(TailOperand::Chain);
+                    continue;
+                }
+                if next_acc >= tail_end {
+                    bail!("{name}: ran out of tail accesses for {}", tnode.name);
+                }
+                let acc = &accs[next_acc];
+                if acc.tensor != inp {
+                    bail!(
+                        "{name}: tail access order mismatch (t{} vs t{})",
+                        acc.tensor,
+                        inp
+                    );
+                }
+                if !spatial_only(acc) {
+                    bail!("{name}: tail read depends on reduction vars");
+                }
+                let buf = buf_of(inp, acc)?;
+                operands.push(TailOperand::Read {
+                    buf,
+                    addr: Code::compile(&flat_expr(acc)),
+                });
+                next_acc += 1;
+            }
+            tail.push(TailStage { kind, operands });
+        }
+        if next_acc != tail_end {
+            bail!(
+                "{name}: {} tail accesses left unconsumed",
+                tail_end - next_acc
+            );
+        }
+
+        // Final write + logical unpack plan.
+        let write_acc = &accs[write_idx];
+        let out_len: i64 = write_acc.storage_shape.iter().product();
+        if out_len <= 0 || out_len as u64 > u32::MAX as u64 {
+            bail!("{name}: output storage of {out_len} elements out of range");
+        }
+        let fin = if let Some(&last) = fused_tail.last() {
+            graph.node(last).output
+        } else {
+            node.output
+        };
+        let fin_t = graph.tensor(fin);
+        let fin_tf = LayoutTransform::new(fin_t.shape.clone(), &layouts.get(fin));
+        if fin_tf.final_shape() != write_acc.storage_shape.as_slice() {
+            bail!("{name}: output storage shape mismatch");
+        }
+        let logical_acc: Vec<crate::layout::DimAccess> = (0..fin_t.rank())
+            .map(|d| crate::layout::DimAccess::Simple(Expr::Var(d)))
+            .collect();
+        let unpack = UnpackPlan {
+            logical_shape: fin_t.shape.clone(),
+            logical_len: fin_t.elements() as usize,
+            dims: fin_tf
+                .rewrite_access(&logical_acc)
+                .iter()
+                .map(|a| Code::compile(&a.to_expr()))
+                .collect(),
+            storage_strides: strides_of(&write_acc.storage_shape),
+        };
+
+        // Parallel width granted by the schedule: the product of the
+        // `parallel`-annotated spatial loop extents — the same quantity
+        // the simulator's scaling model caps speedup at, so native
+        // execution and simulation honor the annotation identically.
+        let par_extent: u64 = program
+            .loops
+            .iter()
+            .filter(|l| l.ann == Annotation::Parallel && l.kind == LoopKind::Spatial)
+            .map(|l| l.extent as u64)
+            .product();
+
+        Ok(Self {
+            name: name.to_string(),
+            threads: resolve_threads(threads),
+            env_len,
+            spatial,
+            reduction,
+            spatial_total,
+            red_total,
+            inputs,
+            lhs,
+            rhs,
+            tail,
+            write: Code::compile(&flat_expr(write_acc)),
+            out_len: out_len as usize,
+            unpack,
+            par_extent,
+            program,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The lowered program this executable runs (what the simulator
+    /// scores — the cross-check compares both on the same object).
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether this program carries a live `parallel` annotation (and
+    /// therefore actually fans out across threads).
+    pub fn is_parallel(&self) -> bool {
+        self.par_extent > 1
+    }
+
+    /// Logical input specs, in the order [`run`](Self::run) expects.
+    pub fn input_specs(&self) -> Vec<TensorSpec> {
+        self.inputs
+            .iter()
+            .map(|b| TensorSpec {
+                dtype: "float32".into(),
+                shape: b.shape.iter().map(|&d| d as usize).collect(),
+            })
+            .collect()
+    }
+
+    /// Deterministic seeded inputs matching [`input_specs`](Self::input_specs).
+    pub fn seeded_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
+        super::seeded_inputs(&self.input_specs(), seed)
+    }
+
+    /// Execute with logical row-major `f32` inputs; returns stats only.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<RunStats> {
+        self.run_with_output(inputs).map(|(stats, _)| stats)
+    }
+
+    /// Execute and also return the full logical row-major output.
+    pub fn run_with_output(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, Vec<f32>)> {
+        let packed = self.pack_inputs(inputs)?;
+        Ok(self.run_packed(&packed))
+    }
+
+    /// Validate logical inputs and pack each into its operand's
+    /// storage layout (untimed: this is the conversion-op /
+    /// offline-weight-repack job, charged separately by the cost
+    /// model).
+    fn pack_inputs(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: want {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut packed: Vec<Vec<f32>> = Vec::with_capacity(inputs.len());
+        for (data, buf) in inputs.iter().zip(&self.inputs) {
+            if data.len() != buf.elements {
+                bail!(
+                    "{}: input {} has {} elements, want {}",
+                    self.name,
+                    buf.name,
+                    data.len(),
+                    buf.elements
+                );
+            }
+            packed.push(if buf.identity {
+                data.clone()
+            } else {
+                buf.transform.repack(data, &buf.shape, 0.0)
+            });
+        }
+        Ok(packed)
+    }
+
+    /// Timed execution over already-packed storage buffers.
+    fn run_packed(&self, packed: &[Vec<f32>]) -> (RunStats, Vec<f32>) {
+        let t0 = Instant::now();
+        let storage = self.execute(packed);
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let out = self.unpack(&storage);
+        let sample = out.iter().take(8).copied().collect();
+        (RunStats { latency_ms, output_elems: out.len(), sample }, out)
+    }
+
+    /// Median-of-n timed runs (first run excluded as warmup). Inputs
+    /// are packed once and reused across iterations.
+    pub fn bench(&self, inputs: &[Vec<f32>], n: usize) -> Result<f64> {
+        self.bench_with_output(inputs, n).map(|(ms, _)| ms)
+    }
+
+    /// [`bench`](Self::bench) that also returns the warmup run's
+    /// logical output, so callers checking numerics *and* timing (the
+    /// cross-check harness) execute no extra full runs.
+    pub fn bench_with_output(
+        &self,
+        inputs: &[Vec<f32>],
+        n: usize,
+    ) -> Result<(f64, Vec<f32>)> {
+        let packed = self.pack_inputs(inputs)?;
+        let (_, out) = self.run_packed(&packed); // warmup + numerics
+        let mut times = Vec::with_capacity(n.max(1));
+        for _ in 0..n.max(1) {
+            times.push(self.run_packed(&packed).0.latency_ms);
+        }
+        Ok((crate::util::stats::median(&mut times), out))
+    }
+
+    /// Execute the program over packed storage buffers, producing the
+    /// final tensor's storage buffer.
+    fn execute(&self, bufs: &[Vec<f32>]) -> Vec<f32> {
+        let total = self.spatial_total;
+        // Honor the `parallel` annotation the way the simulator does:
+        // the schedule grants at most `par_extent` parallel units, the
+        // host at most `threads`.
+        let workers = (self.threads as u64)
+            .min(self.par_extent)
+            .min(total)
+            .max(1) as usize;
+        let mut storage = vec![0f32; self.out_len];
+        if workers <= 1 {
+            self.exec_range(bufs, 0, total, |a, v| storage[a as usize] = v);
+            return storage;
+        }
+        // Workers emit (address, value) pairs merged by one serial
+        // scatter: O(out_len) extra work inside the timed region, a
+        // deliberate trade for safe disjoint-write parallelism. It is
+        // bounded by the output size — two orders of magnitude below
+        // the MAC loop for every shipped variant — so it cannot
+        // meaningfully compress a parallel variant's measured edge.
+        let chunk = total.div_ceil(workers as u64);
+        let parts: Vec<Vec<(u32, f32)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers as u64)
+                .map(|w| {
+                    let lo = (w * chunk).min(total);
+                    let hi = ((w + 1) * chunk).min(total);
+                    s.spawn(move || {
+                        let mut part =
+                            Vec::with_capacity((hi - lo) as usize);
+                        self.exec_range(bufs, lo, hi, |a, v| {
+                            part.push((a, v));
+                        });
+                        part
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        });
+        // Chunks own disjoint spatial coordinates, so each address is
+        // written by exactly one worker; scatter in worker order.
+        for part in parts {
+            for (a, v) in part {
+                storage[a as usize] = v;
+            }
+        }
+        storage
+    }
+
+    /// Execute spatial iterations `[lo, hi)` of the flattened spatial
+    /// space (nest order, last spatial loop least significant),
+    /// emitting one `(storage address, value)` per output element.
+    fn exec_range<F: FnMut(u32, f32)>(
+        &self,
+        bufs: &[Vec<f32>],
+        lo: u64,
+        hi: u64,
+        mut emit: F,
+    ) {
+        let mut env = vec![0i64; self.env_len];
+        let mut stack: Vec<i64> = Vec::with_capacity(16);
+        // decode `lo` into the spatial odometer
+        let mut rem = lo;
+        for &(v, e) in self.spatial.iter().rev() {
+            env[v] = (rem % e as u64) as i64;
+            rem /= e as u64;
+        }
+        let lhs_buf = &bufs[self.lhs.buf];
+        let rhs_buf = &bufs[self.rhs.buf];
+        for _ in lo..hi {
+            // spatial-invariant address parts, hoisted
+            let lhs_base = self.lhs.base.eval(&env, &mut stack);
+            let rhs_base = self.rhs.base.eval(&env, &mut stack);
+            // reduction loops, nest order (all red vars start at 0 and
+            // wrap back to 0 after red_total steps)
+            let mut acc = 0f32;
+            if self.lhs.has_red || self.rhs.has_red {
+                for _ in 0..self.red_total {
+                    let a = lhs_buf
+                        [(lhs_base + self.lhs.red.eval(&env, &mut stack)) as usize];
+                    let b = rhs_buf
+                        [(rhs_base + self.rhs.red.eval(&env, &mut stack)) as usize];
+                    acc += a * b;
+                    for &(v, e) in self.reduction.iter().rev() {
+                        env[v] += 1;
+                        if env[v] < e {
+                            break;
+                        }
+                        env[v] = 0;
+                    }
+                }
+            } else {
+                // degenerate: both operands spatial-only
+                let a = lhs_buf[lhs_base as usize];
+                let b = rhs_buf[rhs_base as usize];
+                acc = a * b * self.red_total as f32;
+            }
+            // fused elementwise tail, in registers
+            let mut v = acc;
+            for stage in &self.tail {
+                v = stage.apply(v, bufs, &env, &mut stack);
+            }
+            let addr = self.write.eval(&env, &mut stack);
+            emit(addr as u32, v);
+            // advance the spatial odometer
+            for &(sv, e) in self.spatial.iter().rev() {
+                env[sv] += 1;
+                if env[sv] < e {
+                    break;
+                }
+                env[sv] = 0;
+            }
+        }
+    }
+
+    /// Fold the executed storage buffer back to logical row-major.
+    fn unpack(&self, storage: &[f32]) -> Vec<f32> {
+        let u = &self.unpack;
+        let rank = u.logical_shape.len();
+        let mut out = vec![0f32; u.logical_len];
+        let mut idx = vec![0i64; rank];
+        let mut stack: Vec<i64> = Vec::with_capacity(16);
+        for (flat, slot) in out.iter_mut().enumerate() {
+            let mut rem = flat as i64;
+            for d in (0..rank).rev() {
+                idx[d] = rem % u.logical_shape[d];
+                rem /= u.logical_shape[d];
+            }
+            let mut saddr = 0i64;
+            for (code, &stride) in u.dims.iter().zip(&u.storage_strides) {
+                saddr += code.eval(&idx, &mut stack) * stride;
+            }
+            *slot = storage[saddr as usize];
+        }
+        out
+    }
+}
+
+/// A registry of compiled native variants — the [`Backend`] the
+/// serving drivers and `alt run --backend native` use.
+pub struct NativeRuntime {
+    entries: Vec<NativeExecutable>,
+}
+
+impl NativeRuntime {
+    /// Build from compiled executables (sorted by name).
+    pub fn from_executables(mut exes: Vec<NativeExecutable>) -> Self {
+        exes.sort_by(|a, b| a.name.cmp(&b.name));
+        Self { entries: exes }
+    }
+
+    pub fn load(&self, name: &str) -> Result<&NativeExecutable> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| err!("unknown native variant '{name}'"))
+    }
+}
+
+impl Backend for NativeRuntime {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        let threads =
+            self.entries.iter().map(|e| e.threads).max().unwrap_or(1);
+        format!("native host interpreter ({threads} threads)")
+    }
+
+    fn entries(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    fn input_specs(&self, variant: &str) -> Result<Vec<TensorSpec>> {
+        Ok(self.load(variant)?.input_specs())
+    }
+
+    fn execute_with(&self, variant: &str, inputs: &[Vec<f32>]) -> Result<RunStats> {
+        self.load(variant)?.run(inputs)
+    }
+
+    fn bench_variant(&self, variant: &str, seed: u64, iters: usize) -> Result<f64> {
+        let exe = self.load(variant)?;
+        exe.bench(&exe.seeded_inputs(seed), iters.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn tiny_dense_identity_matches_hand_matmul() {
+        // x [2,3] = 1..6, w [3,2] = 1..6 -> [[22,28],[49,64]], +bias
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["M", "K"], &[2, 3]);
+        b.dense("fc", x, 2);
+        let g = b.finish();
+        let dense = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[2, 2], &[3]);
+        let exe = NativeExecutable::compile(
+            "gmm_golden",
+            &g,
+            dense,
+            &[dense + 1],
+            &layouts,
+            &sched,
+            16,
+            1,
+        )
+        .unwrap();
+        let xs: Vec<f32> = (1..=6).map(|v| v as f32).collect();
+        let ws: Vec<f32> = (1..=6).map(|v| v as f32).collect();
+        let bias = vec![0.5f32, -1.0];
+        let (stats, out) = exe.run_with_output(&[xs, ws, bias]).unwrap();
+        assert_eq!(stats.output_elems, 4);
+        assert_eq!(out, vec![22.5, 27.0, 49.5, 63.0]);
+    }
+
+    #[test]
+    fn non_complex_node_is_rejected() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["N", "K"], &[2, 4]);
+        let _ = b.relu("r", x);
+        let g = b.finish();
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[2, 4], &[1]);
+        assert!(NativeExecutable::compile(
+            "bad", &g, 0, &[], &layouts, &sched, 16, 1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn input_size_mismatch_is_an_error() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["M", "K"], &[2, 3]);
+        b.dense("fc", x, 2);
+        let g = b.finish();
+        let dense = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[2, 2], &[3]);
+        let exe = NativeExecutable::compile(
+            "gmm", &g, dense, &[dense + 1], &layouts, &sched, 16, 1,
+        )
+        .unwrap();
+        assert!(exe.run(&[vec![0.0; 5], vec![0.0; 6], vec![0.0; 2]]).is_err());
+        assert!(exe.run(&[vec![0.0; 6]]).is_err());
+    }
+}

@@ -1,0 +1,427 @@
+//! Case-study layout variants + the sim-vs-native cross-check harness.
+//!
+//! The §7.3.3 case study compares storage layouts for the ResNet-18
+//! layer-1 convolution (+ fused bias/ReLU): vendor-style NHWO and NOHW
+//! baselines against ALT's jointly tuned tiled configuration (layout
+//! tiling + vectorize/parallel/unroll loop annotations, optionally
+//! with the `unfold` overlapped input tiling of Eq. (1)). This module
+//! builds those variants as *native executables* so the ranking the
+//! simulated device produces can be cross-checked against genuine host
+//! execution — the real-host validation leg of the stack, now tier-1.
+//!
+//! Two scales share one variant vocabulary: [`Scale::Full`] is the
+//! paper's layer (230²×3 pre-padded input → 112²×64), used by `alt run
+//! --backend native` and the runtime bench; [`Scale::Small`] is a
+//! proportionally shrunk copy that keeps `cargo test` fast.
+//!
+//! [`cross_check`] executes every case variant natively, simulates the
+//! same lowered programs on a *host-matched* profile (cores clamped to
+//! the executor's thread count), and reports Spearman correlation plus
+//! a tolerance-aware rank-agreement verdict: the orders agree when no
+//! pair the simulator separates by ≥2× is inverted by ≥25% natively,
+//! and the natively fastest variant is in the simulator's top group.
+
+use crate::codegen::LayoutAssignment;
+use crate::error::Result;
+use crate::graph::{Graph, GraphBuilder, NodeId};
+use crate::layout::{LayoutSeq, Primitive};
+use crate::loops::LoopSchedule;
+use crate::sim::{simulate_program, HwProfile};
+use crate::util::stats::spearman;
+
+use super::native::{NativeExecutable, NativeRuntime};
+
+/// Problem size of the case-study variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Shrunk copy for tier-1 tests (28²×16 output, 3×3×8 reduction).
+    Small,
+    /// The paper's layer (112²×64 output, 7×7×3 reduction).
+    Full,
+}
+
+impl Scale {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Scale::Small),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+
+    /// (pre-padded input H/W, in-channels, out-channels, kernel, stride,
+    /// layout tiles ht/wt/ot)
+    fn params(self) -> (i64, i64, i64, i64, i64, i64, i64, i64) {
+        match self {
+            Scale::Small => (30, 8, 16, 3, 1, 4, 4, 8),
+            Scale::Full => (230, 3, 64, 7, 2, 4, 16, 16),
+        }
+    }
+}
+
+/// The case-study graph at one scale: a pre-padded conv + fused
+/// bias/ReLU (node ids: conv 0, bias 1, relu 2).
+pub fn case_graph(scale: Scale) -> Graph {
+    let (h, ci, o, k, s, ..) = scale.params();
+    let mut b = GraphBuilder::new(match scale {
+        Scale::Small => "case_study_small",
+        Scale::Full => "case_study_native",
+    });
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, h, h, ci]);
+    b.conv_bias_relu("conv1", x, o, k, s, 0);
+    b.finish()
+}
+
+/// One named layout/schedule point of the case study.
+struct VariantDef {
+    name: &'static str,
+    layouts: LayoutAssignment,
+    sched: LoopSchedule,
+}
+
+fn out_tensors(g: &Graph, node: NodeId, fused: &[NodeId]) -> Vec<usize> {
+    std::iter::once(g.node(node).output)
+        .chain(fused.iter().map(|&f| g.node(f).output))
+        .collect()
+}
+
+fn case_variant_defs(scale: Scale, g: &Graph) -> Vec<VariantDef> {
+    let (_, ci, o, k, s, ht, wt, ot) = scale.params();
+    let conv = g.complex_nodes()[0];
+    let node = g.node(conv);
+    let x = node.inputs[0];
+    let fused = [conv + 1, conv + 2];
+    let outs = out_tensors(g, conv, &fused);
+    let out_shape = g.tensor(node.output).shape.clone();
+    let (hh, ww) = (out_shape[1], out_shape[2]);
+    let red = vec![ci, k, k];
+
+    // NHWO: the logical channels-last layout, untiled serial loops.
+    let nhwo = VariantDef {
+        name: "case_nhwo",
+        layouts: LayoutAssignment::identity(g),
+        sched: LoopSchedule::identity(&out_shape, &red),
+    };
+
+    // NOHW: channels-first activations (input and output), untiled.
+    let nohw = {
+        let mut layouts = LayoutAssignment::identity(g);
+        let mut seq = LayoutSeq::new();
+        seq.push(Primitive::reorder(&[0, 3, 1, 2]));
+        for &t in &outs {
+            layouts.set(t, seq.clone());
+        }
+        layouts.set(x, seq.clone());
+        VariantDef {
+            name: "case_nohw",
+            layouts,
+            sched: LoopSchedule::identity(&[1, o, hh, ww], &red),
+        }
+    };
+
+    // ALT tiled: N (H/ht) (W/wt) (O/ot) ht wt ot output storage with
+    // the tuned loop annotations (vectorize innermost tile, parallel
+    // block loops, unrolled reduction tiles).
+    let tiled_seq = {
+        let mut seq = LayoutSeq::new();
+        seq.push(Primitive::split(1, &[hh / ht, ht]))
+            .push(Primitive::split(3, &[ww / wt, wt]))
+            .push(Primitive::split(5, &[o / ot, ot]))
+            .push(Primitive::reorder(&[0, 1, 3, 5, 2, 4, 6]));
+        seq
+    };
+    let tiled_sched = LoopSchedule {
+        spatial_tiles: vec![1, 1, 1, 1, ht, wt, ot],
+        reduction_tiles: red.clone(),
+        inner_perm: (0..7).collect(),
+        vectorize: true,
+        parallel: 4,
+        unroll: 8,
+        fuse_eltwise: true,
+    };
+    let tiled = {
+        let mut layouts = LayoutAssignment::identity(g);
+        for &t in &outs {
+            layouts.set(t, tiled_seq.clone());
+        }
+        VariantDef { name: "case_tiled", layouts, sched: tiled_sched.clone() }
+    };
+
+    // ALT tiled + Eq. (1) overlapped input tiling: unfold H and W so
+    // each output tile reads one contiguous input block.
+    let tiled_unfold = {
+        let mut layouts = LayoutAssignment::identity(g);
+        for &t in &outs {
+            layouts.set(t, tiled_seq.clone());
+        }
+        let mut xs = LayoutSeq::new();
+        xs.push(Primitive::unfold(1, s * (ht - 1) + k, s * ht))
+            .push(Primitive::unfold(3, s * (wt - 1) + k, s * wt));
+        layouts.set(x, xs);
+        VariantDef { name: "case_tiled_unfold", layouts, sched: tiled_sched }
+    };
+
+    vec![nhwo, nohw, tiled, tiled_unfold]
+}
+
+/// Compile the case-study variants (`case_nhwo`, `case_nohw`,
+/// `case_tiled`, `case_tiled_unfold`) at one scale.
+pub fn case_executables(
+    scale: Scale,
+    hw: &HwProfile,
+    threads: usize,
+) -> Result<Vec<NativeExecutable>> {
+    let g = case_graph(scale);
+    let conv = g.complex_nodes()[0];
+    let fused = [conv + 1, conv + 2];
+    case_variant_defs(scale, &g)
+        .into_iter()
+        .map(|v| {
+            NativeExecutable::compile(
+                v.name,
+                &g,
+                conv,
+                &fused,
+                &v.layouts,
+                &v.sched,
+                hw.simd_lanes,
+                threads,
+            )
+        })
+        .collect()
+}
+
+/// A small GMM (dense + fused bias) pair: identity layout vs tiled
+/// M/N-blocked output storage.
+fn gmm_executables(hw: &HwProfile, threads: usize) -> Result<Vec<NativeExecutable>> {
+    let (m, kk, n) = (64i64, 32i64, 48i64);
+    let mut b = GraphBuilder::new("gmm_native");
+    let x = b.input("x", &["M", "K"], &[m, kk]);
+    b.dense("fc", x, n);
+    let g = b.finish();
+    let dense = g.complex_nodes()[0];
+    let fused = [dense + 1];
+    let outs = out_tensors(&g, dense, &fused);
+
+    let plain = NativeExecutable::compile(
+        "gmm",
+        &g,
+        dense,
+        &fused,
+        &LayoutAssignment::identity(&g),
+        &LoopSchedule::identity(&[m, n], &[kk]),
+        hw.simd_lanes,
+        threads,
+    )?;
+
+    let (mt, nt) = (8i64, 16i64);
+    let mut layouts = LayoutAssignment::identity(&g);
+    let mut seq = LayoutSeq::new();
+    seq.push(Primitive::split(0, &[m / mt, mt]))
+        .push(Primitive::split(2, &[n / nt, nt]))
+        .push(Primitive::reorder(&[0, 2, 1, 3]));
+    for &t in &outs {
+        layouts.set(t, seq.clone());
+    }
+    let sched = LoopSchedule {
+        spatial_tiles: vec![1, 1, mt, nt],
+        reduction_tiles: vec![kk],
+        inner_perm: (0..4).collect(),
+        vectorize: true,
+        parallel: 2,
+        unroll: 0,
+        fuse_eltwise: true,
+    };
+    let tiled = NativeExecutable::compile(
+        "gmm_tiled",
+        &g,
+        dense,
+        &fused,
+        &layouts,
+        &sched,
+        hw.simd_lanes,
+        threads,
+    )?;
+    Ok(vec![plain, tiled])
+}
+
+/// The full native registry (case-study + GMM variants) behind
+/// `alt run --backend native` and the serving example.
+pub fn native_runtime(
+    scale: Scale,
+    hw: &HwProfile,
+    threads: usize,
+) -> Result<NativeRuntime> {
+    let mut exes = case_executables(scale, hw, threads)?;
+    exes.extend(gmm_executables(hw, threads)?);
+    Ok(NativeRuntime::from_executables(exes))
+}
+
+/// A simulated profile matched to the actual host execution width:
+/// parallel speedup in the simulator is clamped to the threads the
+/// native executor really uses, so rankings are apples-to-apples.
+pub fn host_profile(base: &HwProfile, threads: usize) -> HwProfile {
+    let t = threads.max(1);
+    let mut hw = base.clone();
+    hw.cores = t as i64;
+    hw.bw_saturation_cores = hw.bw_saturation_cores.min(t as f64);
+    hw
+}
+
+/// Result of one sim-vs-native cross-check over the case variants.
+#[derive(Clone, Debug)]
+pub struct CrossCheck {
+    pub threads: usize,
+    pub names: Vec<String>,
+    /// Simulated latency on the host-matched profile, per variant.
+    pub sim_ms: Vec<f64>,
+    /// Measured native latency (median of `reps`), per variant.
+    pub native_ms: Vec<f64>,
+    /// Spearman rank correlation between the two latency vectors.
+    pub spearman: f64,
+    /// Pairs the simulator separates by ≥2× whose order native
+    /// execution inverts by ≥25% (sim-preferred name first).
+    pub strong_inversions: Vec<(String, String)>,
+    /// The natively fastest variant is within 1.5× of the simulator's
+    /// best.
+    pub best_agrees: bool,
+    /// All variants computed the same output values (the layouts are
+    /// pure storage transforms, so the math must not change).
+    pub numerics_ok: bool,
+}
+
+impl CrossCheck {
+    /// Tolerance-aware rank agreement: no strong inversions and the
+    /// native winner sits in the simulator's top group.
+    pub fn rank_agreement(&self) -> bool {
+        self.strong_inversions.is_empty() && self.best_agrees
+    }
+}
+
+/// Execute every case-study variant natively and compare the measured
+/// latency ranking against the simulator's preference order on the
+/// same lowered programs. `threads == 0` uses all available cores;
+/// `reps` is the per-variant measurement count (median taken).
+pub fn cross_check(
+    scale: Scale,
+    hw: &HwProfile,
+    threads: usize,
+    reps: usize,
+    seed: u64,
+) -> Result<CrossCheck> {
+    let exes = case_executables(scale, hw, threads)?;
+    let threads = exes.iter().map(|e| e.threads()).max().unwrap_or(1);
+    let sim_hw = host_profile(hw, threads);
+
+    let names: Vec<String> = exes.iter().map(|e| e.name().to_string()).collect();
+    let sim_ms: Vec<f64> = exes
+        .iter()
+        .map(|e| simulate_program(e.program(), &sim_hw).latency_ms)
+        .collect();
+
+    // Same logical inputs for every variant (they share one graph).
+    // Each variant's warmup run doubles as its numerics check, so no
+    // execution is wasted.
+    let inputs = exes[0].seeded_inputs(seed);
+    let mut numerics_ok = true;
+    let mut reference: Option<Vec<f32>> = None;
+    let mut native_ms = Vec::with_capacity(exes.len());
+    for exe in &exes {
+        let (ms, out) = exe.bench_with_output(&inputs, reps.max(1))?;
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                let close = r.len() == out.len()
+                    && r.iter().zip(&out).all(|(a, b)| {
+                        (a - b).abs() <= 1e-5 * (1.0 + a.abs())
+                    });
+                if !close {
+                    numerics_ok = false;
+                }
+            }
+        }
+        native_ms.push(ms);
+    }
+
+    let spear = spearman(&sim_ms, &native_ms);
+    let mut strong_inversions = Vec::new();
+    for i in 0..names.len() {
+        for j in 0..names.len() {
+            if i == j {
+                continue;
+            }
+            // simulator strongly prefers i; native strongly disagrees
+            if sim_ms[i] * 2.0 <= sim_ms[j]
+                && native_ms[i] >= native_ms[j] * 1.25
+            {
+                strong_inversions.push((names[i].clone(), names[j].clone()));
+            }
+        }
+    }
+    let arg_min = |xs: &[f64]| -> usize {
+        xs.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    };
+    let sim_best = sim_ms[arg_min(&sim_ms)];
+    let best_agrees = sim_ms[arg_min(&native_ms)] <= 1.5 * sim_best;
+
+    Ok(CrossCheck {
+        threads,
+        names,
+        sim_ms,
+        native_ms,
+        spearman: spear,
+        strong_inversions,
+        best_agrees,
+        numerics_ok,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_case_graph_shapes() {
+        let g = case_graph(Scale::Small);
+        let conv = g.complex_nodes()[0];
+        assert_eq!(g.tensor(g.node(conv).output).shape, vec![1, 28, 28, 16]);
+        // conv + bias + relu, no pad node (input arrives pre-padded)
+        assert_eq!(g.nodes.len(), 3);
+    }
+
+    #[test]
+    fn registry_compiles_all_variants() {
+        let hw = HwProfile::intel();
+        let rt = native_runtime(Scale::Small, &hw, 1).unwrap();
+        use crate::runtime::Backend;
+        let entries = rt.entries();
+        for required in [
+            "case_nhwo",
+            "case_nohw",
+            "case_tiled",
+            "case_tiled_unfold",
+            "gmm",
+            "gmm_tiled",
+        ] {
+            assert!(
+                entries.iter().any(|e| e == required),
+                "missing variant {required}; have {entries:?}"
+            );
+        }
+        assert!(rt.load("nonexistent").is_err());
+    }
+
+    #[test]
+    fn host_profile_clamps_cores() {
+        let hw = HwProfile::intel();
+        let h2 = host_profile(&hw, 2);
+        assert_eq!(h2.cores, 2);
+        assert!(h2.bw_saturation_cores <= 2.0);
+        let h0 = host_profile(&hw, 0);
+        assert_eq!(h0.cores, 1);
+    }
+}

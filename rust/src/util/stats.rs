@@ -1,12 +1,21 @@
 //! Tiny statistics helpers used by benches and the tuner's reporting.
 
 /// Online mean/min/max accumulator.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Summary {
     pub n: usize,
     pub sum: f64,
     pub min: f64,
     pub max: f64,
+}
+
+/// `Default` must agree with [`Summary::new`]: a derived default would
+/// start min/max at `0.0` and silently report `min = 0` for any
+/// all-positive sample pushed into a defaulted accumulator.
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Summary {
@@ -54,14 +63,52 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
     pearson(&rx, &ry)
 }
 
+/// Fractional ranks with ties averaged (the standard Spearman
+/// treatment: quantized latencies tie often, and assigning ties
+/// arbitrary consecutive ranks biases the correlation). NaN-safe via
+/// `total_cmp` (never panics; NaN placement follows the total order).
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; xs.len()];
-    for (rank, &i) in idx.iter().enumerate() {
-        r[i] = rank as f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
     }
     r
+}
+
+/// True median of a sample (NaN-safe ordering: never panics). Even
+/// sample sizes average the two middle values; empty input is NaN.
+pub fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        (xs[n / 2 - 1] + xs[n / 2]) / 2.0
+    }
+}
+
+/// Total order with every NaN ranked *last* regardless of sign bit.
+/// `f64::total_cmp` alone puts sign-negative NaNs (what x86 invalid
+/// ops actually produce) before `-inf` — fatal for "sort scores
+/// ascending, measure the best" loops, where a garbage prediction
+/// would win the ranking. This is the comparator every score/latency
+/// sort in the tuner uses.
+pub fn nan_last_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    a.is_nan().cmp(&b.is_nan()).then_with(|| a.total_cmp(&b))
 }
 
 #[cfg(test)]
@@ -94,5 +141,67 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         let ys = [1.0, 8.0, 27.0, 64.0];
         assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_default_matches_new() {
+        // regression: the derived Default used to start min/max at 0.0
+        let mut s = Summary::default();
+        assert!(s.min.is_infinite() && s.min > 0.0);
+        assert!(s.max.is_infinite() && s.max < 0.0);
+        s.push(5.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.n, 1);
+    }
+
+    #[test]
+    fn ranks_average_ties() {
+        // [10, 20, 20, 30] -> ranks [0, 1.5, 1.5, 3]
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![0.0, 1.5, 1.5, 3.0]);
+        // perfect anti-monotone with a tie must be exactly -1
+        let s = spearman(&[1.0, 2.0, 2.0, 3.0], &[3.0, 2.0, 2.0, 1.0]);
+        assert!((s + 1.0).abs() < 1e-12, "spearman with ties: {s}");
+    }
+
+    #[test]
+    fn ranks_are_nan_safe() {
+        // must not panic; NaNs sort last
+        let r = ranks(&[f64::NAN, 1.0, 2.0]);
+        assert_eq!(r[1], 0.0);
+        assert_eq!(r[2], 1.0);
+        assert_eq!(r[0], 2.0);
+    }
+
+    #[test]
+    fn median_even_and_odd() {
+        let mut odd = [3.0, 1.0, 2.0];
+        assert_eq!(median(&mut odd), 2.0);
+        let mut even = [4.0, 1.0, 3.0, 2.0];
+        // the old `times[n/2]` bug would report 3.0 here
+        assert_eq!(median(&mut even), 2.5);
+        let mut empty: [f64; 0] = [];
+        assert!(median(&mut empty).is_nan());
+        // f64::NAN is a positive NaN -> sorts last under total_cmp
+        let mut with_nan = [1.0, f64::NAN, 3.0];
+        assert_eq!(median(&mut with_nan), 3.0);
+    }
+
+    #[test]
+    fn nan_last_cmp_ranks_every_nan_last() {
+        use std::cmp::Ordering;
+        let neg_nan = -f64::NAN; // sign-negative NaN (x86 invalid-op default)
+        assert!(neg_nan.is_nan() && neg_nan.is_sign_negative());
+        // total_cmp alone would put neg_nan FIRST; nan_last_cmp must not
+        assert_eq!(nan_last_cmp(neg_nan, f64::NEG_INFINITY), Ordering::Greater);
+        assert_eq!(nan_last_cmp(f64::NAN, 1e300), Ordering::Greater);
+        assert_eq!(nan_last_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(nan_last_cmp(2.0, 2.0), Ordering::Equal);
+        // sorting scores with a NaN keeps real candidates in front
+        let mut xs = [3.0, neg_nan, 1.0, f64::NAN, 2.0];
+        xs.sort_by(|a, b| nan_last_cmp(*a, *b));
+        assert_eq!(&xs[..3], &[1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan() && xs[4].is_nan());
     }
 }

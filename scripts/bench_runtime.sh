@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the native-runtime cross-check bench and capture the report
+# (native exec ms per variant, sim-vs-native Spearman, rank-agreement
+# flag, cross-variant numerics, thread-count determinism) as
+# BENCH_runtime.json.
+#
+# Usage: scripts/bench_runtime.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_runtime.json}"
+
+# cargo runs bench binaries with cwd = package root (rust/), so hand
+# the bench an absolute output path (relative args anchor at the
+# workspace root; absolute args pass through untouched)
+case "$out" in
+  /*) abs="$out" ;;
+  *) abs="$PWD/$out" ;;
+esac
+BENCH_RUNTIME_JSON="$abs" cargo bench --bench runtime
+
+echo
+echo "== $abs =="
+cat "$abs"
