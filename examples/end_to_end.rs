@@ -19,7 +19,8 @@
 
 use std::collections::HashMap;
 
-use alt::autotune::tuner::{tune_graph, TuneOptions};
+use alt::api::Session;
+use alt::autotune::TuneOptions;
 use alt::bench::harness::Table;
 use alt::graph::models;
 use alt::propagate::{propagate, PropMode};
@@ -39,13 +40,20 @@ fn main() {
         &format!("end-to-end tuning ({}, budget {budget})", hw.name),
         &["network", "vendor ms", "ALT-OL ms", "ALT-WP ms", "ALT ms", "ALT speedup"],
     );
-    for g in [models::resnet18(1), models::mobilenet_v2(1)] {
+    for name in ["resnet18", "mobilenet_v2"] {
+        let g = models::by_name(name).unwrap();
         // vendor-style fixed build
         let prop = propagate(&g, &[], PropMode::Alt);
         let vendor = simulate_graph(&g, &prop, &HashMap::new(), &hw).latency_ms();
         let run = |mode: PropMode| -> f64 {
             let opts = TuneOptions { budget, mode, seed: 42, ..Default::default() };
-            tune_graph(&g, &hw, &opts).report.latency_ms()
+            Session::new(g.clone())
+                .with_profile(hw.clone())
+                .with_options(opts)
+                .tune()
+                .report()
+                .expect("tune() carries a report")
+                .latency_ms()
         };
         let ol = run(PropMode::LoopOnly);
         let wp = run(PropMode::WithoutFusionProp);
@@ -60,6 +68,45 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---------- phase 1b: whole-model native execution ----------------
+    // The Session pipeline end-to-end: tune bert_tiny, compile it for
+    // the native backend (weights packed once), run the entire
+    // transformer on host buffers, and round-trip the tuned plan
+    // through disk without re-tuning.
+    println!("\n== whole-model native execution (Session pipeline) ==");
+    let session = Session::for_model("bert_tiny")
+        .unwrap()
+        .with_profile(hw.clone())
+        .with_options(TuneOptions { budget, seed: 42, shards: 0, ..Default::default() });
+    let tuned = session.tune();
+    let model = tuned.compile().unwrap_or_else(|e| panic!("compile: {e}"));
+    let inputs = model.seeded_inputs(100);
+    let (stats, out) = model.run_with_output(&inputs).expect("run bert_tiny");
+    println!(
+        "bert_tiny: sim {:.3} ms | native {:.3} ms | {} outputs | \
+         {} nests + {} simple ops | {} repacks/run | {}/{} weights packed",
+        tuned.report().unwrap().latency_ms(),
+        stats.latency_ms,
+        out.len(),
+        model.complex_steps(),
+        model.simple_steps(),
+        model.repacks_per_run(),
+        model.weights_packed(),
+        model.weights_total(),
+    );
+    let dir = "target/end_to_end_plan";
+    model.save(dir).expect("save plan");
+    let reloaded = Session::load(dir)
+        .expect("load plan")
+        .compile()
+        .expect("recompile");
+    let (_, again) = reloaded.run_with_output(&inputs).expect("run reloaded");
+    if out.iter().zip(&again).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        eprintln!("save/load round trip changed the outputs");
+        std::process::exit(1);
+    }
+    println!("save/load round trip -> {dir}: outputs bit-identical, no re-tuning");
 
     // ---------- phase 2: real execution on the native backend ---------
     println!("\n== native runtime cross-check (real host CPU) ==");

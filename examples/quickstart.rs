@@ -1,49 +1,37 @@
-//! Quickstart: tune one convolution jointly (layouts + loops) and
-//! compare against the untuned default and a loop-only baseline.
+//! Quickstart: the whole ALT pipeline in one chain — tune a workload
+//! jointly (layouts + loops), compile it for the native backend, and
+//! run it end-to-end on real host buffers.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use alt::autotune::tuner::{tune_op, TuneOptions};
-use alt::codegen::{lower_complex, LayoutAssignment};
-use alt::graph::models;
-use alt::loops::LoopSchedule;
-use alt::propagate::PropMode;
-use alt::sim::{simulate_program, HwProfile};
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::sim::HwProfile;
 
 fn main() {
-    // The paper's case-study workload: ResNet-18's first layer
-    // (pad -> C2D(O=64, k=7, s=2) -> bias -> ReLU on a 224x224 image).
-    let g = models::case_study();
-    let conv = g.complex_nodes()[0];
-    let hw = HwProfile::intel();
+    let session = Session::for_model("case_study")
+        .unwrap()
+        .with_profile(HwProfile::intel())
+        .with_options(TuneOptions { budget: 120, seed: 42, ..Default::default() });
 
-    // Untuned: default NHWO layout, no tiling, scalar loops.
-    let layouts = LayoutAssignment::identity(&g);
-    let sched = LoopSchedule::identity(&[1, 112, 112, 64], &[3, 7, 7]);
-    let p = lower_complex(&g, conv, &layouts, &sched, &[], hw.simd_lanes);
-    let base = simulate_program(&p, &hw);
-    println!("untuned:          {:.4} ms", base.latency_ms);
+    let tuned = session.tune(); // joint layout + loop search
+    let sim_ms = tuned.report().unwrap().latency_ms();
+    println!("tuned (simulated):  {sim_ms:.4} ms end-to-end");
+    println!("searched layout:    {:?}", tuned.plan().ops[0].decision.out_seq.prims);
 
-    // Loop-only tuning (what Ansor-style systems do).
-    let mut lo = TuneOptions { budget: 120, ..Default::default() };
-    lo.mode = PropMode::LoopOnly;
-    let loop_only = tune_op(&g, conv, &hw, &lo);
-    println!("loop-only tuned:  {:.4} ms", loop_only.best_ms);
-
-    // Joint layout + loop tuning (ALT).
-    let opts = TuneOptions { budget: 120, ..Default::default() };
-    let joint = tune_op(&g, conv, &hw, &opts);
-    println!("ALT joint tuned:  {:.4} ms", joint.best_ms);
+    let model = tuned.compile().expect("compile"); // weights packed once
+    let (stats, out) = model.run_with_output(&model.seeded_inputs(7)).expect("run");
     println!(
-        "speedup vs untuned {:.1}x, vs loop-only {:.2}x",
-        base.latency_ms / joint.best_ms,
-        loop_only.best_ms / joint.best_ms
+        "native execution:   {:.3} ms for {} output values ({} repacks/run)",
+        stats.latency_ms,
+        out.len(),
+        model.repacks_per_run()
     );
-    println!("\nsearched output layout primitives:");
-    for prim in &joint.decision.out_seq.prims {
-        println!("  {prim:?}");
-    }
-    println!("searched loop schedule: {:?}", joint.sched);
+
+    model.save("target/quickstart_plan").expect("save");
+    let reloaded = Session::load("target/quickstart_plan").expect("load");
+    let again = reloaded.compile().expect("recompile").run(&model.seeded_inputs(7));
+    println!("saved + reloaded:   {:.3} ms (no re-tuning)", again.unwrap().latency_ms);
 }

@@ -4,6 +4,9 @@
 //! a stream of synthetic requests to each variant, and reports latency
 //! percentiles + throughput — demonstrating the runtime as a
 //! long-lived service component rather than a one-shot benchmark.
+//! A second loop serves *whole models* compiled through the Session
+//! pipeline (`api::CompiledModel`), the multi-op successor of the
+//! per-variant path.
 //!
 //! By default the zero-dependency native interpreter serves the
 //! requests (compiled variants of the case-study conv and the GMM
@@ -16,6 +19,7 @@
 
 use std::time::Instant;
 
+use alt::api::Session;
 use alt::bench::harness::Table;
 use alt::runtime::variants::{native_runtime, Scale};
 use alt::runtime::{random_input, Backend};
@@ -84,4 +88,37 @@ fn main() {
         ]);
     }
     table.print();
+
+    // ---- whole-model serving over the Session pipeline ----
+    let mut t2 = Table::new(
+        &format!("serve {n_requests} whole-model requests"),
+        &["model", "p50 ms", "p90 ms", "max ms", "inf/s", "repacks"],
+    );
+    for name in ["resnet18_small", "bert_tiny"] {
+        let model = Session::for_model(name)
+            .unwrap()
+            .baseline() // identity plan: serving path, no tuning spend
+            .compile()
+            .unwrap_or_else(|e| panic!("compile {name}: {e}"));
+        let specs = model.input_specs();
+        let mut inputs = model.seeded_inputs(1);
+        let _ = model.run(&inputs).expect("warmup");
+        let mut times = Vec::with_capacity(n_requests);
+        let t0 = Instant::now();
+        for req in 0..n_requests {
+            inputs[0] = random_input(&specs[0], 1000 + req as u64);
+            times.push(model.run(&inputs).expect("run").latency_ms);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (p50, p90, max) = percentiles(&mut times);
+        t2.row(&[
+            name.into(),
+            format!("{p50:.3}"),
+            format!("{p90:.3}"),
+            format!("{max:.3}"),
+            format!("{:.1}", n_requests as f64 / wall),
+            model.repacks_per_run().to_string(),
+        ]);
+    }
+    t2.print();
 }

@@ -40,11 +40,10 @@ fn opts(threads: usize, shards: usize, realloc: bool) -> TuneOptions {
 }
 
 fn fleet() -> Vec<Graph> {
-    vec![
-        models::case_study(),
-        models::prop_subgraph(7),
-        models::prop_subgraph(14),
-    ]
+    ["case_study", "subgraph1", "subgraph2"]
+        .iter()
+        .map(|n| models::by_name(n).expect("zoo workload"))
+        .collect()
 }
 
 /// Bit-level equality of everything the determinism contract covers.

@@ -1,0 +1,159 @@
+//! Bench: end-to-end graph serving through the Session pipeline —
+//! tune → compile → run whole models on the native backend.
+//!
+//! For each serving workload (resnet18 at Small scale, bert_tiny) the
+//! bench tunes once, compiles once (constant weights packed into their
+//! tuned layouts at compile time), then measures end-to-end graph
+//! inferences/sec, the per-inference repack count, and how quickly the
+//! one-off compile-time weight packing amortizes against per-run
+//! execution. Hard invariants checked on any machine: multi-op native
+//! execution is bit-identical across thread counts, and the save/load
+//! round trip reproduces the same outputs without re-tuning.
+//!
+//! Results go to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`);
+//! `scripts/bench_serve.sh` wraps this and CI enforces the hard floors
+//! (determinism, round trip) while throughput only warns — shared
+//! runners are too noisy for a required timing gate.
+
+use std::time::Instant;
+
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::sim::HwProfile;
+
+const BUDGET: usize = 200;
+const REQUESTS: usize = 8;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn session(name: &str, threads: usize) -> Session {
+    Session::for_model(name)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .with_profile(HwProfile::intel())
+        .with_options(TuneOptions {
+            budget: BUDGET,
+            seed: 17,
+            shards: 0,
+            ..Default::default()
+        })
+        .with_exec_threads(threads)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut rows: Vec<String> = Vec::new();
+    let mut deterministic = true;
+    let mut roundtrip_ok = true;
+
+    println!("== whole-model serving (Session pipeline, budget {BUDGET}, {cores} cores) ==");
+    for name in ["resnet18_small", "bert_tiny"] {
+        let t_tune = Instant::now();
+        let tuned = session(name, 0).tune();
+        let tune_s = t_tune.elapsed().as_secs_f64();
+        let sim_ms = tuned.report().expect("tuned").latency_ms();
+
+        let model = tuned.compile().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let inputs = model.seeded_inputs(33);
+
+        // serving loop: median per-inference latency + throughput
+        let (_, reference) = model.run_with_output(&inputs).unwrap(); // warmup
+        let mut times = Vec::with_capacity(REQUESTS);
+        let t0 = Instant::now();
+        for _ in 0..REQUESTS {
+            times.push(model.run(&inputs).unwrap().latency_ms);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let native_ms = alt::util::stats::median(&mut times);
+        let inf_per_sec = REQUESTS as f64 / wall;
+
+        // compile-time weight packing amortization: packing is paid
+        // once; this is how many inferences until the one-off cost is
+        // below 1% of cumulative execution time
+        let amortize_runs = if native_ms > 0.0 {
+            (model.packing_ms() / (0.01 * native_ms)).ceil()
+        } else {
+            0.0
+        };
+
+        // hard floor 1: thread-count determinism of whole-model runs
+        for threads in [1usize, 2] {
+            let m = session(name, threads)
+                .plan_with(
+                    tuned.plan().decisions(),
+                    tuned.plan().scheds(),
+                )
+                .unwrap()
+                .compile()
+                .unwrap();
+            let (_, out) = m.run_with_output(&inputs).unwrap();
+            if bits(&out) != bits(&reference) {
+                deterministic = false;
+                eprintln!("{name}: threads={threads} diverged");
+            }
+        }
+
+        // hard floor 2: save/load round trip, no re-tuning
+        let dir = std::env::temp_dir()
+            .join(format!("alt_bench_serve_{}_{name}", std::process::id()));
+        model.save(&dir).unwrap();
+        let reloaded = Session::load(&dir)
+            .and_then(|t| t.compile())
+            .unwrap_or_else(|e| panic!("{name} reload: {e}"));
+        let (_, out) = reloaded.run_with_output(&inputs).unwrap();
+        if bits(&out) != bits(&reference) {
+            roundtrip_ok = false;
+            eprintln!("{name}: save/load round trip diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+
+        println!(
+            "{name:>15}: tune {tune_s:>6.1} s | sim {sim_ms:>8.3} ms | \
+             native {native_ms:>8.3} ms ({inf_per_sec:.1} inf/s) | \
+             {} nests + {} simple | {} repacks/run | \
+             {}/{} weights packed in {:.1} ms (amortized in {amortize_runs:.0} runs)",
+            model.complex_steps(),
+            model.simple_steps(),
+            model.repacks_per_run(),
+            model.weights_packed(),
+            model.weights_total(),
+            model.packing_ms(),
+        );
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"tune_s\": {tune_s:.3}, \
+             \"sim_ms\": {sim_ms:.4}, \"native_ms\": {native_ms:.4}, \
+             \"inf_per_sec\": {inf_per_sec:.3}, \
+             \"complex_steps\": {}, \"simple_steps\": {}, \
+             \"repacks_per_run\": {}, \"weights_packed\": {}, \
+             \"weights_total\": {}, \"packing_ms\": {:.3}, \
+             \"compile_ms\": {:.3}, \"amortize_runs\": {amortize_runs:.0}}}",
+            model.complex_steps(),
+            model.simple_steps(),
+            model.repacks_per_run(),
+            model.weights_packed(),
+            model.weights_total(),
+            model.packing_ms(),
+            model.compile_ms(),
+        ));
+    }
+
+    println!("thread determinism:   {deterministic}");
+    println!("save/load roundtrip:  {roundtrip_ok}");
+
+    let path = std::env::var("BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let json = format!(
+        "{{\n  \"cores\": {cores},\n  \"budget\": {BUDGET},\n  \
+         \"requests\": {REQUESTS},\n  \"models\": [\n{}\n  ],\n  \
+         \"deterministic\": {deterministic},\n  \
+         \"roundtrip_ok\": {roundtrip_ok}\n}}\n",
+        rows.join(",\n"),
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("serve report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

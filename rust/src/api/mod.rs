@@ -1,0 +1,342 @@
+//! The unified staged-pipeline API: tune → compile → run one graph
+//! end-to-end on the native backend, with durable artifacts.
+//!
+//! ```text
+//!   Session::new(graph)            builder: profile, TuneOptions,
+//!     │                            execution threads, weight seed
+//!     ▼ .tune()
+//!   TunedGraph                     serializable tuned plan: per-op
+//!     │                            layout decision + loop schedule
+//!     ▼ .compile()
+//!   CompiledModel                  lowered nests, weights packed once,
+//!     │                            repacks only where layouts disagree
+//!     ▼ .run(inputs)               whole-model native execution
+//!   (RunStats, output)
+//!
+//!   CompiledModel::save(dir)  ⇄  Session::load(dir)
+//! ```
+//!
+//! The stages correspond to ALT's architecture: `tune` runs the joint
+//! layout/loop search (the sharded graph orchestrator), `compile`
+//! lowers every complex operator with its chosen decisions and builds
+//! a topological multi-op execution plan for the native backend, and
+//! `run` executes the whole model on host buffers. `save`/`load`
+//! round-trip the plan (plus an extended artifact manifest) through a
+//! directory, so tuning results survive the process: a loaded session
+//! compiles to a model producing bit-identical outputs without
+//! spending a single new measurement.
+
+pub mod model;
+pub mod plan;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::autotune::{tune_graph, GraphTuneResult, TuneOptions};
+use crate::error::Result;
+use crate::graph::{models, Graph, NodeId};
+use crate::loops::LoopSchedule;
+use crate::propagate::ComplexDecision;
+use crate::sim::netsim::GraphReport;
+use crate::sim::HwProfile;
+use crate::{bail, err};
+
+pub use model::CompiledModel;
+pub use plan::{OpPlan, TunedPlan};
+
+/// Default seed the compiled model's constant weights are drawn from.
+pub const DEFAULT_WEIGHT_SEED: u64 = 1000;
+
+/// The pipeline entry point: one graph plus everything `tune` needs.
+pub struct Session {
+    graph: Graph,
+    hw: HwProfile,
+    opts: TuneOptions,
+    exec_threads: usize,
+    weight_seed: u64,
+}
+
+impl Session {
+    /// A session over `graph` with the default Intel profile and
+    /// default [`TuneOptions`].
+    pub fn new(graph: Graph) -> Self {
+        Self {
+            graph,
+            hw: HwProfile::intel(),
+            opts: TuneOptions::default(),
+            exec_threads: 0,
+            weight_seed: DEFAULT_WEIGHT_SEED,
+        }
+    }
+
+    /// A session over a model-zoo workload
+    /// ([`crate::graph::models::by_name`]).
+    pub fn for_model(name: &str) -> Result<Self> {
+        let graph = models::by_name(name)
+            .ok_or_else(|| err!("unknown workload '{name}'"))?;
+        Ok(Self::new(graph))
+    }
+
+    /// Tune on this simulated hardware profile.
+    pub fn with_profile(mut self, hw: HwProfile) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Tune with these options (budget, seed, shards, mode, …).
+    pub fn with_options(mut self, opts: TuneOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Native-execution threads for the compiled model (0 = all cores;
+    /// a pure throughput knob — outputs are bit-identical at any
+    /// value).
+    pub fn with_exec_threads(mut self, threads: usize) -> Self {
+        self.exec_threads = threads;
+        self
+    }
+
+    /// Seed the compiled model's constant weights are drawn from.
+    pub fn with_weight_seed(mut self, seed: u64) -> Self {
+        self.weight_seed = seed;
+        self
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn plan_from(&self, ops: Vec<OpPlan>) -> TunedPlan {
+        TunedPlan {
+            model: self.graph.name.clone(),
+            hw: self.hw.name.to_string(),
+            mode: self.opts.mode,
+            seed: self.opts.seed,
+            weight_seed: self.weight_seed,
+            threads: self.exec_threads,
+            ops,
+        }
+    }
+
+    /// Stage 1: run the joint layout/loop search over the whole graph
+    /// (the sharded orchestrator) and wrap the result as a durable
+    /// tuned plan.
+    pub fn tune(&self) -> TunedGraph {
+        let result = tune_graph(&self.graph, &self.hw, &self.opts);
+        let ops = result
+            .ops
+            .iter()
+            .map(|o| OpPlan {
+                node: o.node,
+                decision: o.decision.clone(),
+                sched: o.sched.clone(),
+            })
+            .collect();
+        TunedGraph {
+            graph: self.graph.clone(),
+            hw: self.hw.clone(),
+            plan: self.plan_from(ops),
+            result: Some(result),
+        }
+    }
+
+    /// An untuned plan: identity layouts, identity schedules — the
+    /// vendor-style baseline, and the cheapest way to exercise
+    /// `compile`/`run` without spending measurements.
+    pub fn baseline(&self) -> TunedGraph {
+        TunedGraph {
+            graph: self.graph.clone(),
+            hw: self.hw.clone(),
+            plan: self.plan_from(Vec::new()),
+            result: None,
+        }
+    }
+
+    /// A hand-authored plan from explicit per-op decisions and/or loop
+    /// schedules (ops absent from both fall back to identity at
+    /// compile time) — the layout-lab path.
+    pub fn plan_with(
+        &self,
+        decisions: Vec<ComplexDecision>,
+        scheds: HashMap<NodeId, LoopSchedule>,
+    ) -> Result<TunedGraph> {
+        let complex = self.graph.complex_nodes();
+        let mut by_node: HashMap<NodeId, ComplexDecision> =
+            decisions.into_iter().map(|d| (d.node, d)).collect();
+        let mut scheds = scheds;
+        // one propagation over every provided decision (topo order) —
+        // the same pass compile_model will run; a node's nest dims
+        // depend only on its own output layout, so fallback identity
+        // schedules computed here match the compile-time fallbacks
+        let ordered: Vec<ComplexDecision> = complex
+            .iter()
+            .filter_map(|n| by_node.get(n).cloned())
+            .collect();
+        let prop =
+            crate::propagate::propagate(&self.graph, &ordered, self.opts.mode);
+        let mut ops = Vec::new();
+        for node in &complex {
+            let dec = by_node.remove(node);
+            let sched = scheds.remove(node);
+            if dec.is_none() && sched.is_none() {
+                continue;
+            }
+            ops.push(OpPlan {
+                node: *node,
+                decision: dec.unwrap_or_else(|| ComplexDecision {
+                    node: *node,
+                    ..Default::default()
+                }),
+                sched: sched.unwrap_or_else(|| {
+                    let (sp, rd) = crate::autotune::tuner::nest_dims(
+                        &self.graph,
+                        *node,
+                        &prop,
+                    );
+                    LoopSchedule::identity(&sp, &rd)
+                }),
+            });
+        }
+        if let Some((&node, _)) = by_node.iter().next() {
+            bail!("decision for node {node}, which is not a complex op");
+        }
+        if let Some((&node, _)) = scheds.iter().next() {
+            bail!("schedule for node {node}, which is not a complex op");
+        }
+        let plan = self.plan_from(ops);
+        plan.validate_against(&self.graph)?;
+        Ok(TunedGraph {
+            graph: self.graph.clone(),
+            hw: self.hw.clone(),
+            plan,
+            result: None,
+        })
+    }
+
+    /// Restore a tuned graph from a directory written by
+    /// [`CompiledModel::save`] — the graph is rebuilt from the model
+    /// zoo, the plan is parsed and spec-checked against the manifest,
+    /// and no re-tuning happens.
+    pub fn load(dir: impl AsRef<Path>) -> Result<TunedGraph> {
+        let (plan, graph) = plan::load_plan(dir.as_ref())?;
+        let hw = HwProfile::by_name(&plan.hw)
+            .ok_or_else(|| err!("unknown hw profile '{}' in plan", plan.hw))?;
+        Ok(TunedGraph { graph, hw, plan, result: None })
+    }
+}
+
+/// Stage-2 input: a graph plus its (possibly loaded) tuned plan.
+pub struct TunedGraph {
+    graph: Graph,
+    hw: HwProfile,
+    plan: TunedPlan,
+    result: Option<GraphTuneResult>,
+}
+
+impl TunedGraph {
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn hw(&self) -> &HwProfile {
+        &self.hw
+    }
+
+    /// The serializable tuned plan.
+    pub fn plan(&self) -> &TunedPlan {
+        &self.plan
+    }
+
+    /// The full tuning result (None when the plan was loaded or
+    /// hand-authored).
+    pub fn result(&self) -> Option<&GraphTuneResult> {
+        self.result.as_ref()
+    }
+
+    /// The simulated end-to-end report, when tuning ran.
+    pub fn report(&self) -> Option<&GraphReport> {
+        self.result.as_ref().map(|r| &r.report)
+    }
+
+    /// Override the native execution thread count (pure throughput).
+    pub fn with_exec_threads(mut self, threads: usize) -> Self {
+        self.plan.threads = threads;
+        self
+    }
+
+    /// Stage 2: lower every complex op with its tuned decisions, pack
+    /// the constant weights once, and build the topological multi-op
+    /// execution plan for the native backend.
+    pub fn compile(&self) -> Result<CompiledModel> {
+        model::compile_model(&self.graph, &self.hw, &self.plan)
+    }
+
+    /// Persist the plan without compiling first (equivalent to
+    /// [`CompiledModel::save`]).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        plan::save_plan(dir.as_ref(), &self.plan, &self.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::layout::{LayoutSeq, Primitive};
+
+    /// Tiny conv+bias+relu graph (pre-padded input) for fast compile
+    /// tests.
+    fn tiny_graph() -> Graph {
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", &["N", "H", "W", "I"], &[1, 6, 6, 2]);
+        b.conv_bias_relu("c", x, 3, 3, 1, 0);
+        b.finish()
+    }
+
+    #[test]
+    fn baseline_compiles_and_runs() {
+        let s = Session::new(tiny_graph()).with_exec_threads(1);
+        let model = s.baseline().compile().unwrap();
+        assert_eq!(model.complex_steps(), 1);
+        assert_eq!(model.conversions(), 0);
+        let inputs = model.seeded_inputs(3);
+        let (stats, out) = model.run_with_output(&inputs).unwrap();
+        assert_eq!(stats.output_elems, 4 * 4 * 3);
+        assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn plan_with_accepts_layouts_and_rejects_non_complex() {
+        let s = Session::new(tiny_graph());
+        let mut out_seq = LayoutSeq::new();
+        out_seq
+            .push(Primitive::split(3, &[1, 3]))
+            .push(Primitive::reorder(&[0, 3, 1, 2, 4]));
+        let conv = s.graph().complex_nodes()[0];
+        let dec = ComplexDecision { node: conv, out_seq, ..Default::default() };
+        let tuned = s.plan_with(vec![dec.clone()], HashMap::new()).unwrap();
+        assert_eq!(tuned.plan().ops.len(), 1);
+        let model = tuned.compile().unwrap();
+        // identity-plan output must match the laid-out plan's output
+        let base = s.baseline().compile().unwrap();
+        let inputs = model.seeded_inputs(5);
+        let a = model.run_with_output(&inputs).unwrap().1;
+        let b = base.run_with_output(&inputs).unwrap().1;
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "layouts must be pure storage transforms"
+        );
+
+        // node 1 is the bias op — not complex, so the plan is rejected
+        let bad = ComplexDecision { node: 1, ..Default::default() };
+        assert!(s.plan_with(vec![bad], HashMap::new()).is_err());
+    }
+
+    #[test]
+    fn for_model_resolves_zoo_names() {
+        assert!(Session::for_model("case_study").is_ok());
+        assert!(Session::for_model("nope").is_err());
+    }
+}

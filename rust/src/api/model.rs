@@ -1,0 +1,914 @@
+//! Whole-model compilation and native execution.
+//!
+//! [`CompiledModel`] turns a tuned plan into a topological execution
+//! plan for the native backend and runs the *entire* graph on host
+//! `f32` buffers — the multi-op successor of the single-op
+//! [`NativeExecutable`] path:
+//!
+//! * every complex operator (+ its fused elementwise tail) is lowered
+//!   once, at compile time, with its tuned layout decision and loop
+//!   schedule;
+//! * constant weights are generated from the plan's `weight_seed` and
+//!   packed into their tuned storage layouts **once at compile time**
+//!   (the paper's free offline weight transform);
+//! * inter-op buffers stay in their producers' storage layouts and are
+//!   fed straight into downstream nests — a layout repack (Fig. 5a
+//!   conversion) is materialized only on edges where the consumer's
+//!   read layout disagrees with the allocation layout, and simple
+//!   (non-complex) operators absorb their output layouts in their own
+//!   write pass (Fig. 5b);
+//! * freed intermediate buffers return to a capacity pool and are
+//!   recycled by later steps, so a run's allocation churn is bounded
+//!   by the live set, not the node count.
+//!
+//! Execution is deterministic: complex nests inherit the interpreter's
+//! bit-identical-across-thread-counts guarantee, and every simple
+//! operator (pooling, softmax, layer-norm, padding, reductions,
+//! element-wise) is evaluated in a fixed serial order.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::graph::{EltKind, Graph, NodeId, OpKind, PoolKind};
+use crate::layout::{LayoutSeq, LayoutTransform};
+use crate::loops::LoopSchedule;
+use crate::propagate::propagate;
+use crate::runtime::{
+    random_input, seeded_inputs, NativeExecutable, RunStats, TensorSpec,
+};
+use crate::sim::HwProfile;
+use crate::tensor::{Role, TensorId};
+use crate::{bail, err};
+
+use super::plan::{input_specs_of, output_spec_of, save_plan, TunedPlan};
+
+/// How a complex step's operand slot is fed.
+enum Operand {
+    /// A live buffer in its allocation layout (the producer wrote it
+    /// in exactly the layout this nest reads — no repack).
+    Tensor(TensorId),
+    /// The output of a preceding [`Step::Convert`] (Fig. 5a).
+    Converted(usize),
+    /// A compile-time constant (packed weight).
+    Const(usize),
+}
+
+/// A Fig. 5a layout conversion materialized on one edge.
+struct ConvertStep {
+    tensor: TensorId,
+    slot: usize,
+    logical_shape: Vec<i64>,
+    /// `None` when the source buffer is already logical row-major.
+    from: Option<LayoutTransform>,
+    to: LayoutTransform,
+}
+
+/// One lowered complex nest (+ fused tail).
+struct ComplexStep {
+    exe: NativeExecutable,
+    operands: Vec<Operand>,
+    /// Tensor whose storage buffer the nest writes.
+    out: TensorId,
+}
+
+/// Where a simple (interpreted) operator reads one input.
+enum SimpleSrc {
+    /// Live buffer; unpacked to logical through the transform when the
+    /// allocation layout is non-identity.
+    Tensor(TensorId, Option<LayoutTransform>),
+    /// Compile-time constant held in logical row-major form.
+    Const(usize),
+}
+
+/// One interpreted operator (everything that is not a complex nest).
+struct SimpleStep {
+    node: NodeId,
+    srcs: Vec<SimpleSrc>,
+    out: TensorId,
+    /// Pack the logical result into the output's allocation layout in
+    /// the same write pass (an absorbed conversion, Fig. 5b).
+    pack: Option<LayoutTransform>,
+}
+
+enum Step {
+    Convert(ConvertStep),
+    // boxed: a lowered executable is much larger than the other
+    // variants, and plans hold one Step per node
+    Complex(Box<ComplexStep>),
+    Simple(SimpleStep),
+}
+
+/// A whole model compiled for the native backend.
+pub struct CompiledModel {
+    graph: Graph,
+    plan: TunedPlan,
+    steps: Vec<Step>,
+    /// Compile-time constants: packed weights (complex operands) and
+    /// logical weights (simple-op operands).
+    consts: Vec<Vec<f32>>,
+    n_conv_slots: usize,
+    input_ids: Vec<TensorId>,
+    output_id: TensorId,
+    output_unpack: Option<LayoutTransform>,
+    /// Tensor buffers whose last use is step `i` (recycled after it).
+    dies: Vec<Vec<TensorId>>,
+    /// Conversion slots whose last use is step `i`.
+    conv_dies: Vec<Vec<usize>>,
+    complex_steps: usize,
+    simple_steps: usize,
+    conversions: usize,
+    boundary_repacks: usize,
+    weights_total: usize,
+    weights_packed: usize,
+    packing_ms: f64,
+    compile_ms: f64,
+}
+
+/// Deterministic logical weight data for tensor `t` (shared convention
+/// with the runtime's seeded inputs: one stream per tensor id).
+pub fn weight_data(graph: &Graph, t: TensorId, weight_seed: u64) -> Vec<f32> {
+    let ten = graph.tensor(t);
+    let spec = TensorSpec {
+        dtype: "float32".into(),
+        shape: ten.shape.iter().map(|&d| d as usize).collect(),
+    };
+    random_input(&spec, weight_seed.wrapping_add(t as u64))
+}
+
+pub(crate) fn compile_model(
+    graph: &Graph,
+    hw: &HwProfile,
+    plan: &TunedPlan,
+) -> Result<CompiledModel> {
+    let t0 = Instant::now();
+    plan.validate_against(graph)?;
+    let decisions = plan.decisions();
+    let scheds = plan.scheds();
+    let prop = propagate(graph, &decisions, plan.mode);
+
+    let input_ids: Vec<TensorId> = graph
+        .tensors
+        .iter()
+        .filter(|t| t.role == Role::Input)
+        .map(|t| t.id)
+        .collect();
+    for &t in &input_ids {
+        if !prop.layouts.get(t).is_identity() {
+            bail!(
+                "graph input {} carries a non-identity allocation layout",
+                graph.tensor(t).name
+            );
+        }
+    }
+    let output_id = graph
+        .nodes
+        .last()
+        .ok_or_else(|| err!("{}: empty graph", graph.name))?
+        .output;
+
+    let mut steps: Vec<Step> = Vec::new();
+    let mut consts: Vec<Vec<f32>> = Vec::new();
+    let mut const_key: HashMap<(TensorId, LayoutSeq), usize> = HashMap::new();
+    let mut n_conv_slots = 0usize;
+    let (mut conversions, mut boundary_repacks) = (0usize, 0usize);
+    let (mut weights_total, mut weights_packed) = (0usize, 0usize);
+    let mut packing_ms = 0.0f64;
+
+    // Fusion groups may overlap at residual joins: two complex ops'
+    // chains share the `add → …` suffix (the propagation pass — and
+    // the simulator, which merely double-counts the cheap tail —
+    // tolerate this). Execution must compute every fused node exactly
+    // once, so the LAST claimant in topological order owns each node:
+    // chains that merge walk identically afterwards, so the owned
+    // nodes of any chain form a prefix, earlier claimants truncate
+    // their tails before the shared suffix, and their nests then
+    // materialize exactly the tensor the owner's join reads.
+    let mut tail_owner: HashMap<NodeId, NodeId> = HashMap::new();
+    for node in &graph.nodes {
+        if let Some(tail) = prop.fused_tails.get(&node.id) {
+            for &t in tail {
+                tail_owner.insert(t, node.id);
+            }
+        }
+    }
+
+    for node in &graph.nodes {
+        if prop.fused_nodes.contains(&node.id) {
+            continue; // computed inside the owning complex nest
+        }
+        match &node.kind {
+            OpKind::Conv { .. } | OpKind::Matmul | OpKind::Dense => {
+                let mut tail = prop
+                    .fused_tails
+                    .get(&node.id)
+                    .cloned()
+                    .unwrap_or_default();
+                if let Some(cut) = tail
+                    .iter()
+                    .position(|t| tail_owner.get(t) != Some(&node.id))
+                {
+                    tail.truncate(cut);
+                }
+                let sched = scheds.get(&node.id).cloned().unwrap_or_else(|| {
+                    let (sp, rd) =
+                        crate::autotune::tuner::nest_dims(graph, node.id, &prop);
+                    LoopSchedule::identity(&sp, &rd)
+                });
+                let exe = NativeExecutable::compile(
+                    &node.name,
+                    graph,
+                    node.id,
+                    &tail,
+                    &prop.layouts,
+                    &sched,
+                    hw.simd_lanes,
+                    plan.threads,
+                )
+                .map_err(|e| {
+                    e.context(format!(
+                        "compiling node {} ({}) of {}",
+                        node.id, node.name, graph.name
+                    ))
+                })?;
+                let out = exe.written_tensor();
+                let mut operands = Vec::new();
+                for (i, &t) in exe.operand_tensors().iter().enumerate() {
+                    let ten = graph.tensor(t);
+                    let read = prop.layouts.get_for(node.id, t);
+                    if ten.role == Role::Weight {
+                        let key = (t, read.clone());
+                        let slot = match const_key.get(&key) {
+                            Some(&s) => s,
+                            None => {
+                                let tp = Instant::now();
+                                let packed = exe.pack_operand(
+                                    i,
+                                    &weight_data(graph, t, plan.weight_seed),
+                                )?;
+                                packing_ms += tp.elapsed().as_secs_f64() * 1e3;
+                                // both counters count unique constants,
+                                // so packed/total is a true ratio
+                                weights_total += 1;
+                                if !read.is_identity() {
+                                    weights_packed += 1;
+                                }
+                                consts.push(packed);
+                                const_key.insert(key, consts.len() - 1);
+                                consts.len() - 1
+                            }
+                        };
+                        operands.push(Operand::Const(slot));
+                    } else {
+                        let alloc = prop.layouts.get(t);
+                        if read == alloc {
+                            operands.push(Operand::Tensor(t));
+                        } else {
+                            // a conversion operator sits on this edge
+                            let slot = n_conv_slots;
+                            n_conv_slots += 1;
+                            conversions += 1;
+                            steps.push(Step::Convert(ConvertStep {
+                                tensor: t,
+                                slot,
+                                logical_shape: ten.shape.clone(),
+                                from: (!alloc.is_identity()).then(|| {
+                                    LayoutTransform::new(ten.shape.clone(), &alloc)
+                                }),
+                                to: LayoutTransform::new(ten.shape.clone(), &read),
+                            }));
+                            operands.push(Operand::Converted(slot));
+                        }
+                    }
+                }
+                steps.push(Step::Complex(Box::new(ComplexStep {
+                    exe,
+                    operands,
+                    out,
+                })));
+            }
+            OpKind::LayoutConvert => {
+                bail!("{}: standalone LayoutConvert nodes are unsupported", node.name)
+            }
+            _ => {
+                let mut srcs = Vec::new();
+                for &t in &node.inputs {
+                    let ten = graph.tensor(t);
+                    if ten.role == Role::Weight {
+                        let key = (t, LayoutSeq::new());
+                        let slot = match const_key.get(&key) {
+                            Some(&s) => s,
+                            None => {
+                                // logical (identity-layout) constant
+                                weights_total += 1;
+                                consts.push(weight_data(graph, t, plan.weight_seed));
+                                const_key.insert(key, consts.len() - 1);
+                                consts.len() - 1
+                            }
+                        };
+                        srcs.push(SimpleSrc::Const(slot));
+                    } else {
+                        let alloc = prop.layouts.get(t);
+                        let tf = if alloc.is_identity() {
+                            None
+                        } else {
+                            boundary_repacks += 1;
+                            Some(LayoutTransform::new(ten.shape.clone(), &alloc))
+                        };
+                        srcs.push(SimpleSrc::Tensor(t, tf));
+                    }
+                }
+                let oalloc = prop.layouts.get(node.output);
+                let pack = if oalloc.is_identity() {
+                    None
+                } else {
+                    boundary_repacks += 1;
+                    Some(LayoutTransform::new(
+                        graph.tensor(node.output).shape.clone(),
+                        &oalloc,
+                    ))
+                };
+                steps.push(Step::Simple(SimpleStep {
+                    node: node.id,
+                    srcs,
+                    out: node.output,
+                    pack,
+                }));
+            }
+        }
+    }
+
+    // ---- liveness: recycle buffers after their last reading step ----
+    let mut last_use: HashMap<TensorId, usize> = HashMap::new();
+    let mut conv_last: HashMap<usize, usize> = HashMap::new();
+    for (si, step) in steps.iter().enumerate() {
+        match step {
+            Step::Convert(c) => {
+                last_use.insert(c.tensor, si);
+            }
+            Step::Complex(cs) => {
+                for o in &cs.operands {
+                    match o {
+                        Operand::Tensor(t) => {
+                            last_use.insert(*t, si);
+                        }
+                        Operand::Converted(s) => {
+                            conv_last.insert(*s, si);
+                        }
+                        Operand::Const(_) => {}
+                    }
+                }
+            }
+            Step::Simple(ss) => {
+                for s in &ss.srcs {
+                    if let SimpleSrc::Tensor(t, _) = s {
+                        last_use.insert(*t, si);
+                    }
+                }
+            }
+        }
+    }
+    let mut dies = vec![Vec::new(); steps.len()];
+    for (&t, &si) in &last_use {
+        if t != output_id {
+            dies[si].push(t);
+        }
+    }
+    for d in dies.iter_mut() {
+        d.sort_unstable();
+    }
+    let mut conv_dies = vec![Vec::new(); steps.len()];
+    for (&s, &si) in &conv_last {
+        conv_dies[si].push(s);
+    }
+    for d in conv_dies.iter_mut() {
+        d.sort_unstable();
+    }
+
+    let out_seq = prop.layouts.get(output_id);
+    let output_unpack = (!out_seq.is_identity()).then(|| {
+        LayoutTransform::new(graph.tensor(output_id).shape.clone(), &out_seq)
+    });
+
+    let complex_steps =
+        steps.iter().filter(|s| matches!(s, Step::Complex(_))).count();
+    let simple_steps =
+        steps.iter().filter(|s| matches!(s, Step::Simple(_))).count();
+
+    Ok(CompiledModel {
+        graph: graph.clone(),
+        plan: plan.clone(),
+        steps,
+        consts,
+        n_conv_slots,
+        input_ids,
+        output_id,
+        output_unpack,
+        dies,
+        conv_dies,
+        complex_steps,
+        simple_steps,
+        conversions,
+        boundary_repacks,
+        weights_total,
+        weights_packed,
+        packing_ms,
+        compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Take a zeroed buffer of `n` elements, recycling pooled capacity.
+fn take(pool: &mut Vec<Vec<f32>>, n: usize) -> Vec<f32> {
+    let mut b = pool.pop().unwrap_or_default();
+    b.clear();
+    b.resize(n, 0f32);
+    b
+}
+
+/// Row-major strides of a shape.
+fn strides_of(shape: &[i64]) -> Vec<i64> {
+    let mut s = vec![1i64; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Visit every multi-index of `extents` in row-major order.
+fn for_each_index(extents: &[i64], mut f: impl FnMut(&[i64])) {
+    let total: i64 = extents.iter().product();
+    let mut idx = vec![0i64; extents.len()];
+    for _ in 0..total {
+        f(&idx);
+        for d in (0..extents.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < extents[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Unary elementwise scalar — the same definitions the native nest's
+/// fused tail uses, so fused and unfused evaluation agree.
+fn elt_unary(kind: EltKind, x: f32) -> f32 {
+    match kind {
+        EltKind::Relu => x.max(0.0),
+        EltKind::Relu6 => x.clamp(0.0, 6.0),
+        EltKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        EltKind::Gelu => {
+            0.5 * x * (1.0 + (0.797_884_6_f32 * (x + 0.044_715 * x * x * x)).tanh())
+        }
+        EltKind::Tanh => x.tanh(),
+        EltKind::Identity => x,
+        EltKind::Add | EltKind::Mul => x,
+    }
+}
+
+/// Evaluate one simple operator on logical row-major inputs.
+fn interp_simple(
+    graph: &Graph,
+    node: NodeId,
+    ins: &[&[f32]],
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<Vec<f32>> {
+    let n = graph.node(node);
+    let out_shape = graph.tensor(n.output).shape.clone();
+    let out_len: i64 = out_shape.iter().product();
+    match &n.kind {
+        OpKind::Eltwise { kind, arity } => {
+            if ins.len() != *arity {
+                bail!("{}: arity {} vs {} inputs", n.name, arity, ins.len());
+            }
+            let mut out = take(pool, out_len as usize);
+            match kind {
+                EltKind::Add => {
+                    out.copy_from_slice(ins[0]);
+                    for src in &ins[1..] {
+                        for (o, v) in out.iter_mut().zip(*src) {
+                            *o += v;
+                        }
+                    }
+                }
+                EltKind::Mul => {
+                    out.copy_from_slice(ins[0]);
+                    for src in &ins[1..] {
+                        for (o, v) in out.iter_mut().zip(*src) {
+                            *o *= v;
+                        }
+                    }
+                }
+                k => {
+                    for (o, &v) in out.iter_mut().zip(ins[0]) {
+                        *o = elt_unary(*k, v);
+                    }
+                }
+            }
+            Ok(out)
+        }
+        OpKind::BiasAdd => {
+            let c = *out_shape.last().unwrap() as usize;
+            let mut out = take(pool, out_len as usize);
+            for (i, (o, &v)) in out.iter_mut().zip(ins[0]).enumerate() {
+                *o = v + ins[1][i % c];
+            }
+            Ok(out)
+        }
+        OpKind::PadOp { before, .. } => {
+            let in_shape = &graph.tensor(n.inputs[0]).shape;
+            let ostr = strides_of(&out_shape);
+            let mut out = take(pool, out_len as usize);
+            let x = ins[0];
+            let mut flat = 0usize;
+            for_each_index(in_shape, |idx| {
+                let mut off = 0i64;
+                for (d, &i) in idx.iter().enumerate() {
+                    off += (i + before[d]) * ostr[d];
+                }
+                out[off as usize] = x[flat];
+                flat += 1;
+            });
+            Ok(out)
+        }
+        OpKind::Pool { kind, kernel, stride } => {
+            let in_shape = &graph.tensor(n.inputs[0]).shape;
+            let sp = kernel.len();
+            let xstr = strides_of(in_shape);
+            let rank = out_shape.len();
+            let mut out = take(pool, out_len as usize);
+            let x = ins[0];
+            let mut oc = vec![0i64; rank];
+            let kelems = kernel.iter().product::<i64>() as f32;
+            for (flat, slot) in out.iter_mut().enumerate() {
+                let mut rem = flat as i64;
+                for d in (0..rank).rev() {
+                    oc[d] = rem % out_shape[d];
+                    rem /= out_shape[d];
+                }
+                let base = oc[0] * xstr[0] + oc[rank - 1] * xstr[rank - 1];
+                let mut acc = match kind {
+                    PoolKind::Max => f32::NEG_INFINITY,
+                    PoolKind::Avg => 0.0,
+                };
+                for_each_index(kernel, |k| {
+                    let mut off = base;
+                    for d in 0..sp {
+                        off += (oc[1 + d] * stride[d] + k[d]) * xstr[1 + d];
+                    }
+                    let v = x[off as usize];
+                    match kind {
+                        PoolKind::Max => acc = acc.max(v),
+                        PoolKind::Avg => acc += v,
+                    }
+                });
+                *slot = match kind {
+                    PoolKind::Max => acc,
+                    PoolKind::Avg => acc / kelems,
+                };
+            }
+            Ok(out)
+        }
+        OpKind::Softmax { axis } => {
+            line_op(ins[0], &out_shape, *axis, pool, |line, out| {
+                let mut m = f32::NEG_INFINITY;
+                for &v in line.iter() {
+                    m = m.max(v);
+                }
+                let mut sum = 0.0f32;
+                for (o, &v) in out.iter_mut().zip(line.iter()) {
+                    *o = (v - m).exp();
+                    sum += *o;
+                }
+                for o in out.iter_mut() {
+                    *o /= sum;
+                }
+            })
+        }
+        OpKind::LayerNorm { axis } => {
+            line_op(ins[0], &out_shape, *axis, pool, |line, out| {
+                let m = line.len() as f32;
+                let mean = line.iter().sum::<f32>() / m;
+                let var =
+                    line.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / m;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                for (o, &v) in out.iter_mut().zip(line.iter()) {
+                    *o = (v - mean) * inv;
+                }
+            })
+        }
+        OpKind::Reduce { keep_last } => {
+            let in_shape = &graph.tensor(n.inputs[0]).shape;
+            let batch = in_shape[0] as usize;
+            let c = *in_shape.last().unwrap() as usize;
+            let per_batch = ins[0].len() / batch;
+            let mut out = take(pool, out_len as usize);
+            if *keep_last {
+                let mid = (per_batch / c) as f32;
+                for (i, &v) in ins[0].iter().enumerate() {
+                    out[(i / per_batch) * c + i % c] += v;
+                }
+                for o in out.iter_mut() {
+                    *o /= mid;
+                }
+            } else {
+                for (i, &v) in ins[0].iter().enumerate() {
+                    out[i / per_batch] += v;
+                }
+                for o in out.iter_mut() {
+                    *o /= per_batch as f32;
+                }
+            }
+            Ok(out)
+        }
+        OpKind::Reshape { .. } => {
+            let mut out = take(pool, out_len as usize);
+            out.copy_from_slice(ins[0]);
+            Ok(out)
+        }
+        other => bail!("{}: unsupported simple op {other:?}", n.name),
+    }
+}
+
+/// Apply `f` to every 1-d line along `axis` of a row-major tensor.
+fn line_op(
+    x: &[f32],
+    shape: &[i64],
+    axis: usize,
+    pool: &mut Vec<Vec<f32>>,
+    mut f: impl FnMut(&[f32], &mut [f32]),
+) -> Result<Vec<f32>> {
+    if axis >= shape.len() {
+        bail!("axis {axis} out of range for shape {shape:?}");
+    }
+    let strides = strides_of(shape);
+    let m = shape[axis] as usize;
+    let sa = strides[axis] as usize;
+    let mut out = take(pool, x.len());
+    let mut outer_shape = shape.to_vec();
+    outer_shape.remove(axis);
+    let mut outer_strides = strides.clone();
+    outer_strides.remove(axis);
+    let mut line = vec![0f32; m];
+    let mut res = vec![0f32; m];
+    for_each_index(&outer_shape, |idx| {
+        let mut base = 0i64;
+        for (d, &i) in idx.iter().enumerate() {
+            base += i * outer_strides[d];
+        }
+        let base = base as usize;
+        for (j, l) in line.iter_mut().enumerate() {
+            *l = x[base + j * sa];
+        }
+        f(&line, &mut res);
+        for (j, &r) in res.iter().enumerate() {
+            out[base + j * sa] = r;
+        }
+    });
+    Ok(out)
+}
+
+impl CompiledModel {
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The durable plan this model was compiled from.
+    pub fn plan(&self) -> &TunedPlan {
+        &self.plan
+    }
+
+    /// Logical input specs (the graph's `Role::Input` tensors, id
+    /// order) — what [`run`](Self::run) expects.
+    pub fn input_specs(&self) -> Vec<TensorSpec> {
+        input_specs_of(&self.graph)
+    }
+
+    /// Logical output spec (the final node's tensor).
+    pub fn output_spec(&self) -> TensorSpec {
+        output_spec_of(&self.graph)
+    }
+
+    /// Deterministic seeded inputs matching [`input_specs`](Self::input_specs).
+    pub fn seeded_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
+        seeded_inputs(&self.input_specs(), seed)
+    }
+
+    /// Persist the plan + extended manifest into `dir`
+    /// (`Session::load` restores it without re-tuning).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        save_plan(dir.as_ref(), &self.plan, &self.graph)
+    }
+
+    /// Execute the whole model; returns stats only.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<RunStats> {
+        self.run_with_output(inputs).map(|(s, _)| s)
+    }
+
+    /// Execute the whole model, returning the logical row-major output.
+    pub fn run_with_output(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, Vec<f32>)> {
+        let specs = self.input_specs();
+        if inputs.len() != specs.len() {
+            bail!(
+                "{}: want {} inputs, got {}",
+                self.graph.name,
+                specs.len(),
+                inputs.len()
+            );
+        }
+        for ((data, spec), &t) in
+            inputs.iter().zip(&specs).zip(&self.input_ids)
+        {
+            if data.len() != spec.elements() {
+                bail!(
+                    "{}: input {} has {} elements, want {}",
+                    self.graph.name,
+                    self.graph.tensor(t).name,
+                    data.len(),
+                    spec.elements()
+                );
+            }
+        }
+        let mut bufs: Vec<Option<Vec<f32>>> = vec![None; self.graph.tensors.len()];
+        for (&t, data) in self.input_ids.iter().zip(inputs) {
+            bufs[t] = Some(data.clone());
+        }
+        let mut convs: Vec<Option<Vec<f32>>> = vec![None; self.n_conv_slots];
+        let mut pool: Vec<Vec<f32>> = Vec::new();
+
+        let t0 = Instant::now();
+        for (si, step) in self.steps.iter().enumerate() {
+            match step {
+                Step::Convert(c) => {
+                    let src = bufs[c.tensor]
+                        .as_deref()
+                        .ok_or_else(|| err!("convert: t{} not live", c.tensor))?;
+                    let logical_owned;
+                    let logical: &[f32] = match &c.from {
+                        None => src,
+                        Some(tf) => {
+                            logical_owned = tf.unpack(src, &c.logical_shape);
+                            &logical_owned
+                        }
+                    };
+                    convs[c.slot] =
+                        Some(c.to.repack(logical, &c.logical_shape, 0.0));
+                }
+                Step::Complex(cs) => {
+                    let mut out_buf = pool.pop().unwrap_or_default();
+                    {
+                        // liveness is computed from these very steps, so a
+                        // missing buffer is a plan-construction bug
+                        let refs: Vec<&[f32]> = cs
+                            .operands
+                            .iter()
+                            .map(|o| match o {
+                                Operand::Tensor(t) => bufs[*t]
+                                    .as_deref()
+                                    .expect("operand buffer live"),
+                                Operand::Converted(s) => convs[*s]
+                                    .as_deref()
+                                    .expect("conversion buffer live"),
+                                Operand::Const(k) => self.consts[*k].as_slice(),
+                            })
+                            .collect();
+                        cs.exe.run_storage_into(&refs, &mut out_buf)?;
+                    }
+                    if let Some(old) = bufs[cs.out].replace(out_buf) {
+                        pool.push(old);
+                    }
+                }
+                Step::Simple(ss) => {
+                    let stored = {
+                        let ins: Vec<Cow<[f32]>> = ss
+                            .srcs
+                            .iter()
+                            .map(|s| match s {
+                                SimpleSrc::Const(k) => {
+                                    Cow::Borrowed(self.consts[*k].as_slice())
+                                }
+                                SimpleSrc::Tensor(t, tf) => {
+                                    let buf = bufs[*t]
+                                        .as_deref()
+                                        .expect("input buffer live");
+                                    match tf {
+                                        None => Cow::Borrowed(buf),
+                                        Some(tf) => Cow::Owned(tf.unpack(
+                                            buf,
+                                            &self.graph.tensor(*t).shape,
+                                        )),
+                                    }
+                                }
+                            })
+                            .collect();
+                        let slices: Vec<&[f32]> =
+                            ins.iter().map(|c| c.as_ref()).collect();
+                        let logical =
+                            interp_simple(&self.graph, ss.node, &slices, &mut pool)?;
+                        match &ss.pack {
+                            None => logical,
+                            Some(tf) => {
+                                let packed = tf.repack(
+                                    &logical,
+                                    &self.graph.tensor(ss.out).shape,
+                                    0.0,
+                                );
+                                pool.push(logical);
+                                packed
+                            }
+                        }
+                    };
+                    if let Some(old) = bufs[ss.out].replace(stored) {
+                        pool.push(old);
+                    }
+                }
+            }
+            for &d in &self.dies[si] {
+                if let Some(b) = bufs[d].take() {
+                    pool.push(b);
+                }
+            }
+            for &s in &self.conv_dies[si] {
+                if let Some(b) = convs[s].take() {
+                    pool.push(b);
+                }
+            }
+        }
+        let storage = bufs[self.output_id]
+            .take()
+            .ok_or_else(|| err!("{}: output never produced", self.graph.name))?;
+        let out = match &self.output_unpack {
+            None => storage,
+            Some(tf) => {
+                tf.unpack(&storage, &self.graph.tensor(self.output_id).shape)
+            }
+        };
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sample = out.iter().take(8).copied().collect();
+        Ok((RunStats { latency_ms, output_elems: out.len(), sample }, out))
+    }
+
+    /// Median-of-`n` timed runs (first run excluded as warmup).
+    pub fn bench(&self, inputs: &[Vec<f32>], n: usize) -> Result<f64> {
+        let _ = self.run(inputs)?;
+        let mut times = Vec::with_capacity(n.max(1));
+        for _ in 0..n.max(1) {
+            times.push(self.run(inputs)?.latency_ms);
+        }
+        Ok(crate::util::stats::median(&mut times))
+    }
+
+    // ---- compile-time accounting (the serving bench's metrics) ----
+
+    /// Complex nests in the execution plan.
+    pub fn complex_steps(&self) -> usize {
+        self.complex_steps
+    }
+
+    /// Interpreted simple operators in the execution plan.
+    pub fn simple_steps(&self) -> usize {
+        self.simple_steps
+    }
+
+    /// Fig. 5a conversion steps executed per inference.
+    pub fn conversions(&self) -> usize {
+        self.conversions
+    }
+
+    /// Non-identity unpack/pack passes at simple-op boundaries per
+    /// inference (absorbed conversions, Fig. 5b).
+    pub fn boundary_repacks(&self) -> usize {
+        self.boundary_repacks
+    }
+
+    /// Total runtime layout repacks per inference.
+    pub fn repacks_per_run(&self) -> usize {
+        self.conversions + self.boundary_repacks
+    }
+
+    /// Unique constant weight buffers materialized at compile time,
+    /// and how many of those were packed into a non-identity layout
+    /// (the amortized offline transform).
+    pub fn weights_total(&self) -> usize {
+        self.weights_total
+    }
+
+    pub fn weights_packed(&self) -> usize {
+        self.weights_packed
+    }
+
+    /// Wall-clock spent packing weights at compile time.
+    pub fn packing_ms(&self) -> f64 {
+        self.packing_ms
+    }
+
+    /// Total compile wall-clock (lowering + weight packing).
+    pub fn compile_ms(&self) -> f64 {
+        self.compile_ms
+    }
+}

@@ -1,0 +1,604 @@
+//! Durable tuned plans: the serializable output of `Session::tune`.
+//!
+//! A [`TunedPlan`] is everything needed to rebuild a compiled model
+//! without re-tuning: the model-zoo name, the hardware profile, the
+//! propagation mode, the weight seed, and — per complex operator — the
+//! layout decision (three primitive sequences) plus the loop schedule.
+//! The format is a line-based `key = value` text (the same family as
+//! `config/mod.rs`) with one `[op N]` section per tuned operator, so
+//! plans diff cleanly and survive hand edits.
+//!
+//! `save` writes the plan next to an *extended manifest*
+//! (`manifest.txt`, the same tab-separated `name \t file \t in_specs
+//! \t out_specs` format the PJRT artifact directory uses, parsed by
+//! [`crate::runtime::parse_manifest`]), so a plan directory is
+//! self-describing: the manifest row carries the model's logical input
+//! and output tensor specs and names the plan file as its artifact.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::graph::{Graph, NodeId};
+use crate::layout::{LayoutSeq, Primitive};
+use crate::loops::LoopSchedule;
+use crate::propagate::{ComplexDecision, PropMode};
+use crate::runtime::TensorSpec;
+use crate::tensor::Role;
+use crate::{bail, err};
+
+/// One complex operator's tuned outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpPlan {
+    pub node: NodeId,
+    pub decision: ComplexDecision,
+    pub sched: LoopSchedule,
+}
+
+/// The serializable tuned plan for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedPlan {
+    /// Model-zoo name ([`crate::graph::models::by_name`] key) — how
+    /// `Session::load` rebuilds the graph.
+    pub model: String,
+    /// Hardware profile name ([`crate::sim::HwProfile::by_name`] key).
+    pub hw: String,
+    /// Propagation mode the decisions were tuned under.
+    pub mode: PropMode,
+    /// Tuning seed (informational; compilation does not re-tune).
+    pub seed: u64,
+    /// Seed the compiled model's constant weights are drawn from.
+    pub weight_seed: u64,
+    /// Native execution threads (0 = all cores; a pure throughput
+    /// knob — outputs are bit-identical at any value).
+    pub threads: usize,
+    pub ops: Vec<OpPlan>,
+}
+
+
+fn fmt_prim(p: &Primitive) -> String {
+    match p {
+        Primitive::Split { dim, factors } => {
+            let fs: Vec<String> = factors.iter().map(|f| f.to_string()).collect();
+            format!("split({dim},{})", fs.join(","))
+        }
+        Primitive::Reorder { perm } => {
+            let ps: Vec<String> = perm.iter().map(|p| p.to_string()).collect();
+            format!("reorder({})", ps.join(","))
+        }
+        Primitive::Fuse { dim, count } => format!("fuse({dim},{count})"),
+        Primitive::Unfold { dim, size, stride } => {
+            format!("unfold({dim},{size},{stride})")
+        }
+        Primitive::Pad { dim, before, after } => {
+            format!("pad({dim},{before},{after})")
+        }
+        Primitive::StoreAt { other, dim } => format!("store_at({other},{dim})"),
+        Primitive::Fold { dim, size, stride } => {
+            format!("fold({dim},{size},{stride})")
+        }
+        Primitive::Unpad { dim, before, after } => {
+            format!("unpad({dim},{before},{after})")
+        }
+        Primitive::DecoupleAt { other, dim } => {
+            format!("decouple_at({other},{dim})")
+        }
+    }
+}
+
+fn parse_prim(s: &str) -> Result<Primitive> {
+    let (name, rest) = s
+        .split_once('(')
+        .ok_or_else(|| err!("bad primitive '{s}': missing '('"))?;
+    let args = rest
+        .strip_suffix(')')
+        .ok_or_else(|| err!("bad primitive '{s}': missing ')'"))?;
+    let ints = |want_at_least: usize| -> Result<Vec<i64>> {
+        let v: Vec<i64> = args
+            .split(',')
+            .map(|a| {
+                a.trim()
+                    .parse::<i64>()
+                    .map_err(|e| err!("bad arg '{a}' in '{s}': {e}"))
+            })
+            .collect::<Result<_>>()?;
+        if v.len() < want_at_least {
+            bail!("primitive '{s}' wants >= {want_at_least} args");
+        }
+        Ok(v)
+    };
+    let exact = |n: usize| -> Result<Vec<i64>> {
+        let v = ints(n)?;
+        if v.len() != n {
+            bail!("primitive '{s}' wants {n} args, got {}", v.len());
+        }
+        Ok(v)
+    };
+    let usz = |v: i64| -> Result<usize> {
+        usize::try_from(v).map_err(|_| err!("negative index in '{s}'"))
+    };
+    Ok(match name {
+        "split" => {
+            let v = ints(2)?;
+            Primitive::Split { dim: usz(v[0])?, factors: v[1..].to_vec() }
+        }
+        "reorder" => {
+            let v = ints(1)?;
+            Primitive::Reorder {
+                perm: v.into_iter().map(usz).collect::<Result<_>>()?,
+            }
+        }
+        "fuse" => {
+            let v = exact(2)?;
+            Primitive::Fuse { dim: usz(v[0])?, count: usz(v[1])? }
+        }
+        "unfold" => {
+            let v = exact(3)?;
+            Primitive::Unfold { dim: usz(v[0])?, size: v[1], stride: v[2] }
+        }
+        "pad" => {
+            let v = exact(3)?;
+            Primitive::Pad { dim: usz(v[0])?, before: v[1], after: v[2] }
+        }
+        "store_at" => {
+            let v = exact(2)?;
+            Primitive::StoreAt { other: usz(v[0])?, dim: usz(v[1])? }
+        }
+        "fold" => {
+            let v = exact(3)?;
+            Primitive::Fold { dim: usz(v[0])?, size: v[1], stride: v[2] }
+        }
+        "unpad" => {
+            let v = exact(3)?;
+            Primitive::Unpad { dim: usz(v[0])?, before: v[1], after: v[2] }
+        }
+        "decouple_at" => {
+            let v = exact(2)?;
+            Primitive::DecoupleAt { other: usz(v[0])?, dim: usz(v[1])? }
+        }
+        other => bail!("unknown primitive '{other}' in '{s}'"),
+    })
+}
+
+fn fmt_seq(seq: &LayoutSeq) -> String {
+    if seq.is_identity() {
+        return "-".into();
+    }
+    seq.prims.iter().map(fmt_prim).collect::<Vec<_>>().join(";")
+}
+
+fn parse_seq(s: &str) -> Result<LayoutSeq> {
+    let s = s.trim();
+    if s == "-" || s.is_empty() {
+        return Ok(LayoutSeq::new());
+    }
+    let prims = s
+        .split(';')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| parse_prim(p.trim()))
+        .collect::<Result<_>>()?;
+    Ok(LayoutSeq { prims })
+}
+
+fn fmt_list<T: std::fmt::Display>(v: &[T]) -> String {
+    if v.is_empty() {
+        return "-".into();
+    }
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    let s = s.trim();
+    if s == "-" || s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|a| a.trim().parse::<T>().map_err(|e| err!("bad list item '{a}': {e}")))
+        .collect()
+}
+
+fn parse_bool(s: &str) -> Result<bool> {
+    match s.trim() {
+        "true" | "1" => Ok(true),
+        "false" | "0" => Ok(false),
+        other => bail!("bad bool '{other}'"),
+    }
+}
+
+impl TunedPlan {
+    /// Render the plan as its durable text form.
+    pub fn serialize(&self) -> String {
+        let mut out = String::from("# ALT tuned plan v1\n");
+        out.push_str(&format!("model = {}\n", self.model));
+        out.push_str(&format!("hw = {}\n", self.hw));
+        out.push_str(&format!("mode = {}\n", self.mode.name()));
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str(&format!("weight_seed = {}\n", self.weight_seed));
+        out.push_str(&format!("threads = {}\n", self.threads));
+        for op in &self.ops {
+            out.push_str(&format!("\n[op {}]\n", op.node));
+            out.push_str(&format!("out_seq = {}\n", fmt_seq(&op.decision.out_seq)));
+            out.push_str(&format!("in_seq = {}\n", fmt_seq(&op.decision.in_seq)));
+            out.push_str(&format!("w_seq = {}\n", fmt_seq(&op.decision.w_seq)));
+            let s = &op.sched;
+            out.push_str(&format!(
+                "spatial_tiles = {}\n",
+                fmt_list(&s.spatial_tiles)
+            ));
+            out.push_str(&format!(
+                "reduction_tiles = {}\n",
+                fmt_list(&s.reduction_tiles)
+            ));
+            out.push_str(&format!("inner_perm = {}\n", fmt_list(&s.inner_perm)));
+            out.push_str(&format!("vectorize = {}\n", s.vectorize));
+            out.push_str(&format!("parallel = {}\n", s.parallel));
+            out.push_str(&format!("unroll = {}\n", s.unroll));
+            out.push_str(&format!("fuse_eltwise = {}\n", s.fuse_eltwise));
+        }
+        out
+    }
+
+    /// Parse a plan from its text form.
+    pub fn parse(text: &str) -> Result<TunedPlan> {
+        let mut plan = TunedPlan {
+            model: String::new(),
+            hw: String::new(),
+            mode: PropMode::Alt,
+            seed: 0,
+            weight_seed: 0,
+            threads: 0,
+            ops: Vec::new(),
+        };
+        let mut cur: Option<OpPlan> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let loc = |e: crate::error::Error| e.context(format!("plan line {}", ln + 1));
+            if let Some(section) = line.strip_prefix('[') {
+                let section = section
+                    .strip_suffix(']')
+                    .ok_or_else(|| err!("plan line {}: missing ']'", ln + 1))?;
+                let node = section
+                    .strip_prefix("op ")
+                    .ok_or_else(|| err!("plan line {}: unknown section '[{section}]'", ln + 1))?
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|e| err!("plan line {}: bad op id: {e}", ln + 1))?;
+                if let Some(op) = cur.take() {
+                    plan.ops.push(op);
+                }
+                cur = Some(OpPlan {
+                    node,
+                    decision: ComplexDecision { node, ..Default::default() },
+                    sched: LoopSchedule::identity(&[], &[]),
+                });
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err!("plan line {}: expected key = value", ln + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            match (&mut cur, k) {
+                (None, "model") => plan.model = v.to_string(),
+                (None, "hw") => plan.hw = v.to_string(),
+                (None, "mode") => {
+                    plan.mode = PropMode::from_name(v).ok_or_else(|| {
+                        err!("plan line {}: unknown mode '{v}'", ln + 1)
+                    })?
+                }
+                (None, "seed") => plan.seed = v.parse().map_err(|e| err!("plan line {}: seed: {e}", ln + 1))?,
+                (None, "weight_seed") => {
+                    plan.weight_seed =
+                        v.parse().map_err(|e| err!("plan line {}: weight_seed: {e}", ln + 1))?
+                }
+                (None, "threads") => {
+                    plan.threads =
+                        v.parse().map_err(|e| err!("plan line {}: threads: {e}", ln + 1))?
+                }
+                (Some(op), "out_seq") => op.decision.out_seq = parse_seq(v).map_err(loc)?,
+                (Some(op), "in_seq") => op.decision.in_seq = parse_seq(v).map_err(loc)?,
+                (Some(op), "w_seq") => op.decision.w_seq = parse_seq(v).map_err(loc)?,
+                (Some(op), "spatial_tiles") => {
+                    op.sched.spatial_tiles = parse_list(v).map_err(loc)?
+                }
+                (Some(op), "reduction_tiles") => {
+                    op.sched.reduction_tiles = parse_list(v).map_err(loc)?
+                }
+                (Some(op), "inner_perm") => {
+                    op.sched.inner_perm = parse_list(v).map_err(loc)?
+                }
+                (Some(op), "vectorize") => {
+                    op.sched.vectorize = parse_bool(v).map_err(loc)?
+                }
+                (Some(op), "parallel") => {
+                    op.sched.parallel =
+                        v.parse().map_err(|e| err!("plan line {}: parallel: {e}", ln + 1))?
+                }
+                (Some(op), "unroll") => {
+                    op.sched.unroll =
+                        v.parse().map_err(|e| err!("plan line {}: unroll: {e}", ln + 1))?
+                }
+                (Some(op), "fuse_eltwise") => {
+                    op.sched.fuse_eltwise = parse_bool(v).map_err(loc)?
+                }
+                (_, other) => bail!("plan line {}: unknown key '{other}'", ln + 1),
+            }
+        }
+        if let Some(op) = cur.take() {
+            plan.ops.push(op);
+        }
+        if plan.model.is_empty() {
+            bail!("plan is missing the 'model' key");
+        }
+        if plan.hw.is_empty() {
+            bail!("plan is missing the 'hw' key");
+        }
+        Ok(plan)
+    }
+
+    /// Check the plan against a concrete graph: every op id must be a
+    /// complex node, named at most once.
+    pub fn validate_against(&self, graph: &Graph) -> Result<()> {
+        let complex = graph.complex_nodes();
+        let mut seen = std::collections::HashSet::new();
+        for op in &self.ops {
+            if !complex.contains(&op.node) {
+                bail!(
+                    "plan op {} is not a complex node of {}",
+                    op.node,
+                    graph.name
+                );
+            }
+            if !seen.insert(op.node) {
+                bail!("plan names op {} twice", op.node);
+            }
+            if op.decision.node != op.node {
+                bail!("plan op {} carries decision for {}", op.node, op.decision.node);
+            }
+        }
+        Ok(())
+    }
+
+    /// Decisions in plan order (what `propagate` consumes).
+    pub fn decisions(&self) -> Vec<ComplexDecision> {
+        self.ops.iter().map(|o| o.decision.clone()).collect()
+    }
+
+    /// Node → schedule map (what the graph simulator consumes).
+    pub fn scheds(&self) -> HashMap<NodeId, LoopSchedule> {
+        self.ops.iter().map(|o| (o.node, o.sched.clone())).collect()
+    }
+}
+
+/// Logical input specs of a graph (its `Role::Input` tensors, id order)
+/// — the inputs `CompiledModel::run` expects.
+pub(crate) fn input_specs_of(graph: &Graph) -> Vec<TensorSpec> {
+    graph
+        .tensors
+        .iter()
+        .filter(|t| t.role == Role::Input)
+        .map(|t| TensorSpec {
+            dtype: "float32".into(),
+            shape: t.shape.iter().map(|&d| d as usize).collect(),
+        })
+        .collect()
+}
+
+/// Logical output spec of a graph (its last node's output).
+pub(crate) fn output_spec_of(graph: &Graph) -> TensorSpec {
+    let out = graph.nodes.last().expect("empty graph").output;
+    TensorSpec {
+        dtype: "float32".into(),
+        shape: graph.tensor(out).shape.iter().map(|&d| d as usize).collect(),
+    }
+}
+
+fn fmt_specs(specs: &[TensorSpec]) -> String {
+    specs
+        .iter()
+        .map(|s| {
+            let dims: Vec<String> = s.shape.iter().map(|d| d.to_string()).collect();
+            format!("{}[{}]", s.dtype, dims.join(","))
+        })
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Name of the plan file inside a saved directory.
+pub const PLAN_FILE: &str = "plan.txt";
+
+/// Write `plan.txt` + the extended `manifest.txt` into `dir`.
+pub(crate) fn save_plan(dir: &Path, plan: &TunedPlan, graph: &Graph) -> Result<()> {
+    // fail at save time, not at load time: a plan whose model the zoo
+    // cannot rebuild would persist fine but never restore, silently
+    // stranding the tuning spend
+    if crate::graph::models::by_name(&plan.model).is_none() {
+        bail!(
+            "model '{}' is not in the model zoo (graph::models::by_name), \
+             so a saved plan could never be loaded back",
+            plan.model
+        );
+    }
+    std::fs::create_dir_all(dir)
+        .map_err(|e| err!("creating {}: {e}", dir.display()))?;
+    let plan_path = dir.join(PLAN_FILE);
+    std::fs::write(&plan_path, plan.serialize())
+        .map_err(|e| err!("writing {}: {e}", plan_path.display()))?;
+    let manifest = format!(
+        "{}\t{}\t{}\t{}\n",
+        plan.model,
+        PLAN_FILE,
+        fmt_specs(&input_specs_of(graph)),
+        fmt_specs(&[output_spec_of(graph)]),
+    );
+    let mpath = dir.join("manifest.txt");
+    std::fs::write(&mpath, manifest)
+        .map_err(|e| err!("writing {}: {e}", mpath.display()))?;
+    Ok(())
+}
+
+/// Read a plan directory back: manifest + plan file, spec-checked.
+pub(crate) fn load_plan(dir: &Path) -> Result<(TunedPlan, Graph)> {
+    let entries = crate::runtime::read_manifest(dir)?;
+    let entry = entries
+        .first()
+        .ok_or_else(|| err!("{}: empty manifest", dir.display()))?;
+    let plan_path = dir.join(&entry.file);
+    let text = std::fs::read_to_string(&plan_path)
+        .map_err(|e| err!("reading {}: {e}", plan_path.display()))?;
+    let plan = TunedPlan::parse(&text)
+        .map_err(|e| e.context(format!("parsing {}", plan_path.display())))?;
+    if plan.model != entry.name {
+        bail!(
+            "manifest names '{}' but the plan was tuned for '{}'",
+            entry.name,
+            plan.model
+        );
+    }
+    let graph = crate::graph::models::by_name(&plan.model).ok_or_else(|| {
+        err!(
+            "plan model '{}' is not in the model zoo (graph::models::by_name)",
+            plan.model
+        )
+    })?;
+    plan.validate_against(&graph)?;
+    // the manifest's specs must match the rebuilt graph (defends
+    // against a zoo definition drifting under a saved plan)
+    let want_in = fmt_specs(&input_specs_of(&graph));
+    let got_in = fmt_specs(&entry.inputs);
+    if want_in != got_in {
+        bail!("manifest input specs {got_in} do not match {} ({want_in})", plan.model);
+    }
+    let want_out = fmt_specs(&[output_spec_of(&graph)]);
+    let got_out = fmt_specs(&entry.outputs);
+    if want_out != got_out {
+        bail!("manifest output specs {got_out} do not match {} ({want_out})", plan.model);
+    }
+    Ok((plan, graph))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn sample_plan() -> TunedPlan {
+        let mut out_seq = LayoutSeq::new();
+        out_seq
+            .push(Primitive::split(3, &[4, 16]))
+            .push(Primitive::reorder(&[0, 1, 2, 3, 4]));
+        let mut in_seq = LayoutSeq::new();
+        in_seq.push(Primitive::unfold(1, 9, 8));
+        TunedPlan {
+            model: "case_study".into(),
+            hw: "intel".into(),
+            mode: PropMode::Alt,
+            seed: 42,
+            weight_seed: 7,
+            threads: 0,
+            ops: vec![OpPlan {
+                node: 1,
+                decision: ComplexDecision {
+                    node: 1,
+                    out_seq,
+                    in_seq,
+                    w_seq: LayoutSeq::new(),
+                },
+                sched: LoopSchedule {
+                    spatial_tiles: vec![1, 4, 4, 16],
+                    reduction_tiles: vec![3, 7, 7],
+                    inner_perm: vec![0, 1, 2, 3],
+                    vectorize: true,
+                    parallel: 2,
+                    unroll: 8,
+                    fuse_eltwise: true,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn plan_text_roundtrips_exactly() {
+        let plan = sample_plan();
+        let text = plan.serialize();
+        let parsed = TunedPlan::parse(&text).unwrap();
+        assert_eq!(parsed, plan);
+        // serialize(parse(serialize(p))) is byte-identical
+        assert_eq!(parsed.serialize(), text);
+    }
+
+    #[test]
+    fn every_primitive_spelling_roundtrips() {
+        let prims = vec![
+            Primitive::split(2, &[3, 5, 7]),
+            Primitive::reorder(&[1, 0]),
+            Primitive::fuse(0, 2),
+            Primitive::unfold(1, 9, 8),
+            Primitive::pad(3, 1, 2),
+            Primitive::StoreAt { other: 11, dim: 0 },
+            Primitive::Fold { dim: 1, size: 9, stride: 8 },
+            Primitive::Unpad { dim: 3, before: 1, after: 2 },
+            Primitive::DecoupleAt { other: 11, dim: 0 },
+        ];
+        for p in prims {
+            let s = fmt_prim(&p);
+            assert_eq!(parse_prim(&s).unwrap(), p, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TunedPlan::parse("nonsense").is_err());
+        assert!(TunedPlan::parse("model = x\n").is_err()); // no hw
+        assert!(
+            TunedPlan::parse("model = x\nhw = intel\nmode = bogus\n").is_err()
+        );
+        // op-scoped key outside a section
+        assert!(
+            TunedPlan::parse("model = x\nhw = intel\nout_seq = -\n").is_err()
+        );
+        assert!(parse_prim("split(oops)").is_err());
+        assert!(parse_prim("warp(1,2)").is_err());
+        assert!(parse_seq("split(1,2);;").is_ok(), "empty segments tolerated");
+    }
+
+    #[test]
+    fn validate_against_checks_node_ids() {
+        let g = models::case_study();
+        let mut plan = sample_plan();
+        assert!(plan.validate_against(&g).is_ok());
+        plan.ops[0].node = 0; // the pad node, not complex
+        plan.ops[0].decision.node = 0;
+        assert!(plan.validate_against(&g).is_err());
+    }
+
+    #[test]
+    fn save_rejects_non_zoo_models() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_nonzoo_{}", std::process::id()));
+        let mut plan = sample_plan();
+        plan.model = "not_a_zoo_member".into();
+        let g = models::case_study();
+        let err = save_plan(&dir, &plan, &g).unwrap_err();
+        assert!(format!("{err}").contains("model zoo"), "{err}");
+        assert!(!dir.exists(), "nothing must be written on rejection");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_test_{}", std::process::id()));
+        let g = models::case_study();
+        let plan = sample_plan();
+        save_plan(&dir, &plan, &g).unwrap();
+        let (loaded, graph) = load_plan(&dir).unwrap();
+        assert_eq!(loaded, plan);
+        assert_eq!(graph.name, "case_study");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -413,8 +413,10 @@ impl LoopTuning {
 }
 
 /// Storage spatial dims + reduction dims for a node under a propagation
-/// result (the loop space depends on the *output layout*, §5.2).
-fn nest_dims(
+/// result (the loop space depends on the *output layout*, §5.2). Shared
+/// with the Session API, which needs the same dims to build identity
+/// schedules for ops a plan leaves untuned.
+pub(crate) fn nest_dims(
     graph: &Graph,
     node: NodeId,
     prop: &PropagationResult,

@@ -289,24 +289,26 @@ pub fn fig9(scale: &Scale) -> Vec<Table> {
     tables
 }
 
-/// The five end-to-end networks (scaled variants used when `quick`).
+/// The five end-to-end networks (scaled variants used when `quick`),
+/// resolved through the shared model zoo.
 fn fig10_networks(quick: bool) -> Vec<Graph> {
-    if quick {
-        vec![
-            models::resnet18(1),
-            models::mobilenet_v2(1),
-            models::bert_tiny(),
-        ]
+    let names: &[&str] = if quick {
+        &["resnet18", "mobilenet_v2", "bert_tiny"]
     } else {
-        vec![
-            models::resnet18(1),
-            models::resnet18(16), // the paper's b16 row (intel/gpu)
-            models::mobilenet_v2(1),
-            models::bert_base(),
-            models::bert_tiny(),
-            models::resnet3d_18(1),
+        // "resnet18-b16" is the paper's b16 row (intel/gpu)
+        &[
+            "resnet18",
+            "resnet18-b16",
+            "mobilenet_v2",
+            "bert_base",
+            "bert_tiny",
+            "resnet3d_18",
         ]
-    }
+    };
+    names
+        .iter()
+        .map(|n| models::by_name(n).expect("zoo workload"))
+        .collect()
 }
 
 /// Fig. 10: end-to-end latency + speedup over the vendor (Torch-like)

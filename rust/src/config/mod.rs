@@ -68,20 +68,28 @@ impl Config {
         }
     }
 
+    /// Runtime backend the launcher executes on (`alt run`): `native`
+    /// (the default — zero dependencies) or `pjrt` (feature-gated).
+    pub fn backend(&self) -> &str {
+        self.get("backend").unwrap_or("native")
+    }
+
+    /// Directory tuned plans are saved to (`alt tune --save`) and
+    /// loaded from (`alt run --load`). `None` (the default) keeps the
+    /// historical behavior: nothing is persisted.
+    pub fn save_dir(&self) -> Option<&str> {
+        self.get("save_dir")
+    }
+
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
     /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`, `shards`,
     /// `budget_realloc`).
     pub fn tune_options(&self) -> Result<TuneOptions, String> {
         let d = TuneOptions::default();
-        let mode = match self.get("mode").unwrap_or("alt") {
-            "alt" => PropMode::Alt,
-            "alt-wp" | "wp" => PropMode::WithoutFusionProp,
-            "alt-ol" | "ol" | "loop-only" => PropMode::LoopOnly,
-            "alt-fp" | "fp" => PropMode::ForwardShare,
-            "alt-bp" | "bp" => PropMode::BackwardShare,
-            other => return Err(format!("unknown mode '{other}'")),
-        };
+        let mode_str = self.get("mode").unwrap_or("alt");
+        let mode = PropMode::from_name(mode_str)
+            .ok_or_else(|| format!("unknown mode '{mode_str}'"))?;
         Ok(TuneOptions {
             budget: self.get_usize("budget", d.budget),
             joint_frac: self.get_f64("joint_frac", d.joint_frac),
@@ -201,6 +209,31 @@ mod tests {
         assert_eq!(o.shards, 3);
         assert!(!o.budget_realloc);
         assert_eq!(o.budget, 640);
+    }
+
+    #[test]
+    fn backend_and_save_dir_keys_parse() {
+        let c = Config::parse("backend = pjrt\nsave_dir = plans/r18\n").unwrap();
+        assert_eq!(c.backend(), "pjrt");
+        assert_eq!(c.save_dir(), Some("plans/r18"));
+        // defaults preserve current behavior: native backend, no
+        // persistence — and they must not disturb tune_options
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.backend(), "native");
+        assert_eq!(d.save_dir(), None);
+        assert!(d.tune_options().is_ok());
+    }
+
+    #[test]
+    fn display_round_trips_backend_and_save_dir() {
+        let mut c = Config::default();
+        c.set("backend", "native");
+        c.set("save_dir", "out/plan");
+        c.set("budget", "64");
+        let reparsed = Config::parse(&format!("{c}")).unwrap();
+        assert_eq!(reparsed.backend(), "native");
+        assert_eq!(reparsed.save_dir(), Some("out/plan"));
+        assert_eq!(reparsed.tune_options().unwrap().budget, 64);
     }
 
     #[test]

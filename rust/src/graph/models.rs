@@ -6,6 +6,44 @@
 use crate::graph::{EltKind, Graph, GraphBuilder, OpKind, PoolKind};
 use crate::util::Rng;
 
+/// The model zoo: every workload name the launcher, the figure
+/// harnesses and the serving plans accept, with its aliases. This is
+/// the single name→graph mapping — `main.rs`, the figures binary, the
+/// bench harness and `api::Session::load` all resolve through it, and
+/// a saved plan's `model` key must be one of the canonical names.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "resnet18" | "r18" => Some(resnet18(1)),
+        "resnet18-b16" => Some(resnet18(16)),
+        "resnet18_small" | "r18s" => Some(resnet18_small()),
+        "mobilenet_v2" | "mv2" => Some(mobilenet_v2(1)),
+        "bert_base" | "bb" => Some(bert_base()),
+        "bert_tiny" | "bt" => Some(bert_tiny()),
+        "resnet3d_18" | "r3d" => Some(resnet3d_18(1)),
+        "case_study" | "case" => Some(case_study()),
+        "case_study_small" | "cs" => Some(case_study_small()),
+        "subgraph1" => Some(prop_subgraph(7)),
+        "subgraph2" => Some(prop_subgraph(14)),
+        _ => None,
+    }
+}
+
+/// Canonical zoo names (the strings a graph's `name` field carries, so
+/// `by_name(g.name)` round-trips for every zoo member).
+pub const MODEL_NAMES: [&str; 11] = [
+    "resnet18",
+    "resnet18-b16",
+    "resnet18_small",
+    "mobilenet_v2",
+    "bert_base",
+    "bert_tiny",
+    "resnet3d_18",
+    "case_study",
+    "case_study_small",
+    "subgraph1",
+    "subgraph2",
+];
+
 /// ResNet-18 (image, NHWI 224²). `batch` is the paper's b1/b16 knob.
 pub fn resnet18(batch: i64) -> Graph {
     let name =
@@ -47,6 +85,54 @@ pub fn resnet18(batch: i64) -> Graph {
     }
     t = b.op("gap", OpKind::Reduce { keep_last: true }, &[t]);
     b.dense("fc", t, 1000);
+    b.finish()
+}
+
+/// ResNet-18 at "Small" scale: the full 18-layer topology (stem conv,
+/// max-pool, four residual stages with downsample shortcuts, global
+/// average pool, classifier) on a 56² input with quarter-width
+/// channels. Small enough that the whole network *executes* on the
+/// native interpreter backend in well under a second, so the Session
+/// tune→compile→run pipeline can be exercised end-to-end in tier-1
+/// tests and the serving bench.
+pub fn resnet18_small() -> Graph {
+    let mut b = GraphBuilder::new("resnet18_small");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 56, 56, 3]);
+    let mut t = b.conv_bias_relu("conv1", x, 16, 7, 2, 3);
+    // maxpool with pad 1 (28 -> 14)
+    let pooled_pad = b.op(
+        "pool1.pad",
+        OpKind::PadOp { before: vec![0, 1, 1, 0], after: vec![0, 1, 1, 0] },
+        &[t],
+    );
+    t = b.op(
+        "pool1",
+        OpKind::Pool { kind: PoolKind::Max, kernel: vec![3, 3], stride: vec![2, 2] },
+        &[pooled_pad],
+    );
+    let stages: [(i64, i64, usize); 4] =
+        [(16, 1, 2), (32, 2, 2), (64, 2, 2), (128, 2, 2)];
+    for (si, (ch, first_stride, blocks)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let stride = if blk == 0 { *first_stride } else { 1 };
+            let name = format!("s{si}b{blk}");
+            let shortcut = if stride != 1
+                || b.graph.tensor(t).shape.last() != Some(ch)
+            {
+                b.conv2d(&format!("{name}.down"), t, *ch, 1, stride, 0)
+            } else {
+                t
+            };
+            let c1 = b.conv_bias_relu(&format!("{name}.c1"), t, *ch, 3, stride, 1);
+            let c2 = b.conv2d(&format!("{name}.c2"), c1, *ch, 3, 1, 1);
+            let bias = b.weight(&format!("{name}.c2.b"), &["O"], &[*ch]);
+            let c2b = b.op(&format!("{name}.c2.bias"), OpKind::BiasAdd, &[c2, bias]);
+            let sum = b.add(&format!("{name}.add"), c2b, shortcut);
+            t = b.relu(&format!("{name}.relu"), sum);
+        }
+    }
+    t = b.op("gap", OpKind::Reduce { keep_last: true }, &[t]);
+    b.dense("fc", t, 100);
     b.finish()
 }
 
@@ -233,6 +319,18 @@ pub fn case_study() -> Graph {
     b.finish()
 }
 
+/// The case study at the runtime's Small scale (pre-padded 30²×8 input
+/// → 28²×16, 3×3 kernel — the same problem size
+/// `runtime::variants::case_graph(Scale::Small)` compiles): one
+/// complex op, sub-millisecond native runs, so it is the zoo's
+/// cheapest save/load round-trip workload.
+pub fn case_study_small() -> Graph {
+    let mut b = GraphBuilder::new("case_study_small");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 30, 30, 8]);
+    b.conv_bias_relu("conv1", x, 16, 3, 1, 0);
+    b.finish()
+}
+
 /// §7.3.1 propagation-overhead subgraphs: padding(1) -> C2D(3x3, s=1)
 /// -> C2D(1x1, s=1). `hw` is 7 (subgraph#1) or 14 (subgraph#2);
 /// channels 512, and subgraph#2's last conv emits 2048.
@@ -401,6 +499,33 @@ mod tests {
         // final fc output is 1000-wide
         let last = g.nodes.last().unwrap();
         assert_eq!(*g.tensor(last.output).shape.last().unwrap(), 1000);
+    }
+
+    #[test]
+    fn resnet18_small_structure() {
+        let g = resnet18_small();
+        // same topology as resnet18: stem + 8 blocks x 2 convs + 3
+        // downsamples + fc
+        assert_eq!(g.complex_nodes().len(), resnet18(1).complex_nodes().len());
+        let last = g.nodes.last().unwrap();
+        assert_eq!(*g.tensor(last.output).shape.last().unwrap(), 100);
+        // small enough to execute natively in tests
+        assert!(g.total_flops() < 0.1e9, "flops {}", g.total_flops());
+    }
+
+    #[test]
+    fn by_name_covers_the_zoo_and_roundtrips_names() {
+        for name in MODEL_NAMES {
+            let g = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(g.name, name, "canonical name must round-trip");
+        }
+        // aliases resolve to the same graphs
+        for (alias, canon) in
+            [("r18", "resnet18"), ("bt", "bert_tiny"), ("r18s", "resnet18_small")]
+        {
+            assert_eq!(by_name(alias).unwrap().name, canon);
+        }
+        assert!(by_name("nope").is_none());
     }
 
     #[test]

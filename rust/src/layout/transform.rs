@@ -99,6 +99,47 @@ impl LayoutTransform {
         }
         out
     }
+
+    /// Inverse of [`repack`](Self::repack): fold a storage buffer back
+    /// to row-major over the original shape. Padding slots (positions
+    /// whose backward coordinates fall outside the original shape) are
+    /// skipped; `unfold` overlap duplicates all map to the same logical
+    /// element and carry the same value, so writer order is irrelevant.
+    /// This is the runtime job of reading a laid-out buffer at a layout
+    /// boundary (the multi-op execution plan's repack steps).
+    pub fn unpack(&self, data: &[f32], orig_shape: &[i64]) -> Vec<f32> {
+        let new_shape = self.final_shape();
+        let total: i64 = new_shape.iter().product();
+        assert_eq!(data.len() as i64, total, "data/shape mismatch");
+        let vars: Vec<Expr> = (0..new_shape.len()).map(Expr::Var).collect();
+        let back = self.backward(&vars);
+        let logical: i64 = orig_shape.iter().product();
+        let mut out = vec![0f32; logical as usize];
+        let mut idx = vec![0i64; new_shape.len()];
+        for flat in 0..total {
+            let mut rem = flat;
+            for d in (0..new_shape.len()).rev() {
+                idx[d] = rem % new_shape[d];
+                rem /= new_shape[d];
+            }
+            let mut ok = true;
+            let mut off = 0i64;
+            let mut stride = 1i64;
+            for d in (0..orig_shape.len()).rev() {
+                let v = back[d].eval(&idx);
+                if v < 0 || v >= orig_shape[d] {
+                    ok = false;
+                    break;
+                }
+                off += v * stride;
+                stride *= orig_shape[d];
+            }
+            if ok {
+                out[off as usize] = data[flat as usize];
+            }
+        }
+        out
+    }
 }
 
 /// Shape rule for one primitive (Table 1 "Transformed Shape" column plus
@@ -366,6 +407,31 @@ mod tests {
 
     fn seq(prims: Vec<Primitive>) -> LayoutSeq {
         LayoutSeq { prims }
+    }
+
+    #[test]
+    fn unpack_inverts_repack() {
+        // bijective basic sequence: split + reorder
+        let s = seq(vec![
+            Primitive::split(1, &[4, 2]),
+            Primitive::reorder(&[0, 2, 1, 3]),
+        ]);
+        let shape = [3i64, 8];
+        let data: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        let tf = LayoutTransform::new(shape.to_vec(), &s);
+        let packed = tf.repack(&data, &shape, 0.0);
+        assert_eq!(tf.unpack(&packed, &shape), data);
+
+        // data-expanding sequence: unfold duplicates + pad fills
+        let s2 = seq(vec![
+            Primitive::unfold(0, 3, 2),
+            Primitive::pad(1, 1, 2),
+        ]);
+        let shape2 = [5i64];
+        let d2 = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let tf2 = LayoutTransform::new(shape2.to_vec(), &s2);
+        let packed2 = tf2.repack(&d2, &shape2, -9.0);
+        assert_eq!(tf2.unpack(&packed2, &shape2), d2);
     }
 
     /// The paper's first §4.1.1 example: NOHW -> N (O/ot) H W ot.

@@ -47,7 +47,15 @@
 //!   HLO artifacts produced by the Python build layer (`pjrt` feature).
 //! * [`bench`] — the figure/table harnesses shared by `cargo bench`,
 //!   the `figures` binary and the examples.
+//! * [`api`] — the unified staged pipeline over all of the above:
+//!   `Session::new(graph).tune()` → `TunedGraph::compile()` →
+//!   `CompiledModel::run(inputs)` executes a whole model natively
+//!   (weights packed once at compile time, inter-op buffers reused,
+//!   repacks only where producer/consumer layouts disagree), and
+//!   `CompiledModel::save(dir)` / `Session::load(dir)` make tuning
+//!   durable across processes.
 
+pub mod api;
 pub mod autotune;
 pub mod baselines;
 pub mod bench;
@@ -66,6 +74,7 @@ pub mod sim;
 pub mod tensor;
 pub mod util;
 
+pub use api::Session;
 pub use error::Error;
 
 /// Crate-wide result alias.

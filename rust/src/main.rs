@@ -1,14 +1,17 @@
 //! `alt` — the ALT compiler/auto-tuner launcher (Layer-3 leader).
 //!
 //! Subcommands:
-//!   tune     — joint layout+loop tuning of a network or single op
+//!   tune     — joint layout+loop tuning of a network or single op,
+//!              through the staged Session pipeline; `--save DIR`
+//!              compiles the winner and persists the tuned plan
 //!   graph    — print a workload's computational graph
 //!   sim      — simulate a network under default layouts/schedules
 //!   propagate— show the layout-propagation result of a tuned network
-//!   run      — execute a compiled layout variant for real: the native
-//!              interpreter backend by default (no features, no
-//!              artifacts), or the PJRT CPU runtime over AOT HLO
-//!              artifacts with `--backend pjrt` (`pjrt` feature)
+//!   run      — execute for real on the native backend: `--load DIR`
+//!              runs a whole saved model end-to-end (no re-tuning);
+//!              otherwise a compiled layout variant (the native
+//!              interpreter by default, or the PJRT CPU runtime over
+//!              AOT HLO artifacts with `--backend pjrt`)
 //!   figures  — regenerate a paper table/figure (also: `figures` binary)
 //!
 //! Configuration: `--config file.conf` (key = value, see
@@ -16,29 +19,16 @@
 
 use std::collections::HashMap;
 
+use alt::api::Session;
 use alt::autotune::tuner::{tune_graph, tune_graphs, tune_op};
 use alt::bench::figures;
 use alt::bench::harness::Table;
 use alt::config::Config;
-use alt::graph::{models, Graph};
+use alt::graph::models;
+use alt::graph::Graph;
 use alt::propagate::{propagate, PropMode};
 use alt::sim::netsim::simulate_graph;
 use alt::sim::HwProfile;
-
-fn workload(name: &str) -> Option<Graph> {
-    match name {
-        "resnet18" | "r18" => Some(models::resnet18(1)),
-        "resnet18-b16" => Some(models::resnet18(16)),
-        "mobilenet_v2" | "mv2" => Some(models::mobilenet_v2(1)),
-        "bert_base" | "bb" => Some(models::bert_base()),
-        "bert_tiny" | "bt" => Some(models::bert_tiny()),
-        "resnet3d_18" | "r3d" => Some(models::resnet3d_18(1)),
-        "case_study" | "case" => Some(models::case_study()),
-        "subgraph1" => Some(models::prop_subgraph(7)),
-        "subgraph2" => Some(models::prop_subgraph(14)),
-        _ => None,
-    }
-}
 
 fn usage() -> ! {
     eprintln!(
@@ -46,12 +36,15 @@ fn usage() -> ! {
   alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
            [--threads N] [--speculation K] [--memo_cap N]
            [--shards N(1=sequential,0=auto)] [--budget_realloc true|false]
-           [--config f.conf] [--set k=v,...] [--op N]
+           [--save DIR] [--config f.conf] [--set k=v,...] [--op N]
            (--workload a,b,c tunes a whole fleet via the sharded
-            multi-workload scheduler)
+            multi-workload scheduler; --save compiles the tuned model
+            and writes the durable plan + manifest into DIR)
   alt graph --workload mv2
   alt sim --workload bt [--hw gpu]
   alt propagate --workload case_study [--budget N]
+  alt run --load DIR [--iters N] [--seed S] [--threads N]
+          (whole-model native execution of a saved tuned plan)
   alt run [--backend native|pjrt] [--artifact case_tiled] [--iters N]
           [--scale full|small] [--threads N] [--seed S]
           (--backend pjrt additionally takes --dir artifacts and needs
@@ -130,7 +123,7 @@ fn main() {
                 let graphs: Vec<Graph> = wname
                     .split(',')
                     .map(|n| {
-                        workload(n.trim())
+                        models::by_name(n.trim())
                             .unwrap_or_else(|| panic!("unknown workload {n}"))
                     })
                     .collect();
@@ -151,7 +144,7 @@ fn main() {
                 t.print();
                 return;
             }
-            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             if let Some(op) = cfg.get("op") {
                 let idx: usize = op.parse().expect("--op index");
                 let node = g.complex_nodes()[idx];
@@ -172,10 +165,16 @@ fn main() {
                     println!("tuning curve -> {path}");
                 }
             } else {
-                let r = tune_graph(&g, &hw, &opts);
+                // the staged pipeline: tune → (optionally) compile+save
+                let session = Session::new(g)
+                    .with_profile(hw.clone())
+                    .with_options(opts)
+                    .with_exec_threads(cfg.get_usize("exec_threads", 0));
+                let tuned = session.tune();
+                let r = tuned.result().expect("tune() carries its result");
                 println!(
                     "tuned {} on {}: {:.4} ms end-to-end ({} measurements)",
-                    g.name,
+                    tuned.graph().name,
                     hw.name,
                     r.report.latency_ms(),
                     r.measurements
@@ -189,11 +188,26 @@ fn main() {
                     ]);
                 }
                 t.print();
+                if let Some(dir) = cfg.get("save").or_else(|| cfg.save_dir()) {
+                    let model = tuned
+                        .compile()
+                        .unwrap_or_else(|e| panic!("compile: {e}"));
+                    model
+                        .save(dir)
+                        .unwrap_or_else(|e| panic!("save {dir}: {e}"));
+                    println!(
+                        "compiled ({} nests, {} weights packed, {:.1} ms) \
+                         and saved tuned plan + manifest -> {dir}",
+                        model.complex_steps(),
+                        model.weights_packed(),
+                        model.compile_ms()
+                    );
+                }
             }
         }
         "graph" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
-            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             println!(
                 "{}: {} nodes, {} tensors, {} complex ops, {:.2} GFLOPs",
                 g.name,
@@ -208,7 +222,7 @@ fn main() {
         }
         "sim" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
-            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             let prop = propagate(&g, &[], PropMode::Alt);
             let rep = simulate_graph(&g, &prop, &HashMap::new(), &hw);
             println!(
@@ -221,7 +235,7 @@ fn main() {
         }
         "propagate" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
-            let g = workload(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
+            let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
             let r = tune_graph(&g, &hw, &opts);
             let prop = propagate(&g, &r.decisions, opts.mode);
@@ -242,9 +256,46 @@ fn main() {
         }
         "run" => {
             use alt::runtime::Backend;
-            let backend = cfg.get("backend").unwrap_or("native");
+            let backend = cfg.backend();
             let iters = cfg.get_usize("iters", 5);
             let seed = cfg.get_u64("seed", 7);
+            // whole-model execution of a saved tuned plan (no
+            // re-tuning). Only an explicit --load triggers this path:
+            // a config file's `save_dir` must not hijack variant runs
+            // that pass --backend/--artifact.
+            if let Some(dir) = cfg.get("load") {
+                let mut tuned = Session::load(dir)
+                    .unwrap_or_else(|e| panic!("load {dir}: {e}"));
+                // --threads overrides the plan's saved execution width
+                // (pure throughput; the plan's value is kept otherwise)
+                if cfg.get("threads").is_some() {
+                    tuned = tuned.with_exec_threads(cfg.get_usize("threads", 0));
+                }
+                let model = tuned
+                    .compile()
+                    .unwrap_or_else(|e| panic!("compile: {e}"));
+                println!(
+                    "{}: {} complex nests + {} simple ops, {} repacks/run, \
+                     {}/{} weights packed at compile ({:.1} ms)",
+                    model.graph().name,
+                    model.complex_steps(),
+                    model.simple_steps(),
+                    model.repacks_per_run(),
+                    model.weights_packed(),
+                    model.weights_total(),
+                    model.packing_ms()
+                );
+                let inputs = model.seeded_inputs(seed);
+                let ms = model
+                    .bench(&inputs, iters)
+                    .unwrap_or_else(|e| panic!("run: {e}"));
+                println!(
+                    "end-to-end native: median {ms:.3} ms over {iters} runs \
+                     ({:.1} inf/s)",
+                    1e3 / ms
+                );
+                return;
+            }
             match backend {
                 "native" => {
                     let scale = alt::runtime::variants::Scale::from_name(

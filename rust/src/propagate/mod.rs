@@ -49,6 +49,33 @@ pub enum PropMode {
     BackwardShare,
 }
 
+impl PropMode {
+    /// Canonical short name — the spelling config files and saved
+    /// plans write.
+    pub fn name(self) -> &'static str {
+        match self {
+            PropMode::Alt => "alt",
+            PropMode::WithoutFusionProp => "wp",
+            PropMode::LoopOnly => "ol",
+            PropMode::ForwardShare => "fp",
+            PropMode::BackwardShare => "bp",
+        }
+    }
+
+    /// Parse any accepted spelling (the single name↔mode table the
+    /// config parser and the plan parser both use).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "alt" => Some(PropMode::Alt),
+            "alt-wp" | "wp" => Some(PropMode::WithoutFusionProp),
+            "alt-ol" | "ol" | "loop-only" => Some(PropMode::LoopOnly),
+            "alt-fp" | "fp" => Some(PropMode::ForwardShare),
+            "alt-bp" | "bp" => Some(PropMode::BackwardShare),
+            _ => None,
+        }
+    }
+}
+
 /// Layout decision for one complex operator (instantiated template).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ComplexDecision {
@@ -278,6 +305,25 @@ mod tests {
         s.push(Primitive::split(3, &[4, 16]))
             .push(Primitive::reorder(&[0, 1, 2, 3, 4]));
         s
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [
+            PropMode::Alt,
+            PropMode::WithoutFusionProp,
+            PropMode::LoopOnly,
+            PropMode::ForwardShare,
+            PropMode::BackwardShare,
+        ] {
+            assert_eq!(PropMode::from_name(m.name()), Some(m));
+            // the config parser's long spellings resolve too
+            assert_eq!(
+                PropMode::from_name(&format!("alt-{}", m.name())),
+                if m == PropMode::Alt { None } else { Some(m) }
+            );
+        }
+        assert!(PropMode::from_name("bogus").is_none());
     }
 
     #[test]

@@ -212,7 +212,7 @@ impl TailStage {
     fn apply(
         &self,
         chain: f32,
-        bufs: &[Vec<f32>],
+        bufs: &[&[f32]],
         env: &[i64],
         stack: &mut Vec<i64>,
     ) -> f32 {
@@ -266,6 +266,9 @@ struct InputBuf {
     /// Logical row-major shape the caller provides data in.
     shape: Vec<i64>,
     elements: usize,
+    /// Storage elements after the layout sequence (what
+    /// [`NativeExecutable::run_storage_into`] expects for this slot).
+    packed_len: usize,
     transform: LayoutTransform,
     identity: bool,
 }
@@ -300,6 +303,9 @@ pub struct NativeExecutable {
     tail: Vec<TailStage>,
     write: Code,
     out_len: usize,
+    /// Tensor whose storage buffer the nest writes (the last fused
+    /// node's output, or the complex op's own output without a tail).
+    written: TensorId,
     unpack: UnpackPlan,
     /// Product of `parallel`-annotated spatial loop extents (1 when
     /// the schedule grants no parallelism).
@@ -424,6 +430,7 @@ impl NativeExecutable {
                 name: ten.name.clone(),
                 shape: ten.shape.clone(),
                 elements: ten.elements() as usize,
+                packed_len: tf.final_shape().iter().product::<i64>() as usize,
                 identity: seq.is_identity(),
                 transform: tf,
             });
@@ -554,6 +561,7 @@ impl NativeExecutable {
             tail,
             write: Code::compile(&flat_expr(write_acc)),
             out_len: out_len as usize,
+            written: fin,
             unpack,
             par_extent,
             program,
@@ -594,6 +602,100 @@ impl NativeExecutable {
     /// Deterministic seeded inputs matching [`input_specs`](Self::input_specs).
     pub fn seeded_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
         super::seeded_inputs(&self.input_specs(), seed)
+    }
+
+    // ---- storage-level entry points (the multi-op execution plan) ----
+    //
+    // A whole-model plan keeps inter-op buffers in their *storage*
+    // layouts and feeds them straight back into downstream nests, so it
+    // bypasses the logical pack/unpack round trip `run` performs per
+    // call. The methods below expose the operand contract: which tensor
+    // each slot reads, how long its packed buffer must be, how to pack
+    // one logical operand (weights, at compile time), and an execute
+    // that takes pre-packed buffers and leaves the result packed.
+
+    /// Tensor each operand slot reads, in the order
+    /// [`run_storage_into`](Self::run_storage_into) expects
+    /// (first-appearance order: lhs, rhs, then fused-tail reads).
+    pub fn operand_tensors(&self) -> Vec<TensorId> {
+        self.inputs.iter().map(|b| b.tensor).collect()
+    }
+
+    /// Packed storage length of operand slot `i`.
+    pub fn operand_storage_len(&self, i: usize) -> usize {
+        self.inputs[i].packed_len
+    }
+
+    /// Pack one logical row-major operand into slot `i`'s storage
+    /// layout (identity layouts copy through).
+    pub fn pack_operand(&self, i: usize, data: &[f32]) -> Result<Vec<f32>> {
+        let buf = self
+            .inputs
+            .get(i)
+            .ok_or_else(|| err!("{}: no operand slot {i}", self.name))?;
+        if data.len() != buf.elements {
+            bail!(
+                "{}: operand {} has {} elements, want {}",
+                self.name,
+                buf.name,
+                data.len(),
+                buf.elements
+            );
+        }
+        Ok(if buf.identity {
+            data.to_vec()
+        } else {
+            buf.transform.repack(data, &buf.shape, 0.0)
+        })
+    }
+
+    /// Tensor whose storage buffer the nest writes (the fused chain's
+    /// final output).
+    pub fn written_tensor(&self) -> TensorId {
+        self.written
+    }
+
+    /// Length of the produced storage buffer.
+    pub fn output_storage_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Execute over already-packed storage buffers, writing the output
+    /// tensor's *storage* buffer into `out` (cleared and resized — pass
+    /// a recycled buffer to reuse its capacity).
+    pub fn run_storage_into(
+        &self,
+        bufs: &[&[f32]],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if bufs.len() != self.inputs.len() {
+            bail!(
+                "{}: want {} packed operands, got {}",
+                self.name,
+                self.inputs.len(),
+                bufs.len()
+            );
+        }
+        for (data, buf) in bufs.iter().zip(&self.inputs) {
+            if data.len() != buf.packed_len {
+                bail!(
+                    "{}: packed operand {} has {} elements, want {}",
+                    self.name,
+                    buf.name,
+                    data.len(),
+                    buf.packed_len
+                );
+            }
+        }
+        self.execute_into(bufs, out);
+        Ok(())
+    }
+
+    /// Fold a storage buffer produced by
+    /// [`run_storage_into`](Self::run_storage_into) back to the logical
+    /// row-major output.
+    pub fn unpack_storage(&self, storage: &[f32]) -> Vec<f32> {
+        self.unpack(storage)
     }
 
     /// Execute with logical row-major `f32` inputs; returns stats only.
@@ -645,8 +747,10 @@ impl NativeExecutable {
 
     /// Timed execution over already-packed storage buffers.
     fn run_packed(&self, packed: &[Vec<f32>]) -> (RunStats, Vec<f32>) {
+        let refs: Vec<&[f32]> = packed.iter().map(|v| v.as_slice()).collect();
         let t0 = Instant::now();
-        let storage = self.execute(packed);
+        let mut storage = Vec::new();
+        self.execute_into(&refs, &mut storage);
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let out = self.unpack(&storage);
@@ -678,8 +782,9 @@ impl NativeExecutable {
     }
 
     /// Execute the program over packed storage buffers, producing the
-    /// final tensor's storage buffer.
-    fn execute(&self, bufs: &[Vec<f32>]) -> Vec<f32> {
+    /// final tensor's storage buffer in `storage` (cleared + zeroed, so
+    /// recycled buffers are safe).
+    fn execute_into(&self, bufs: &[&[f32]], storage: &mut Vec<f32>) {
         let total = self.spatial_total;
         // Honor the `parallel` annotation the way the simulator does:
         // the schedule grants at most `par_extent` parallel units, the
@@ -688,10 +793,11 @@ impl NativeExecutable {
             .min(self.par_extent)
             .min(total)
             .max(1) as usize;
-        let mut storage = vec![0f32; self.out_len];
+        storage.clear();
+        storage.resize(self.out_len, 0f32);
         if workers <= 1 {
             self.exec_range(bufs, 0, total, |a, v| storage[a as usize] = v);
-            return storage;
+            return;
         }
         // Workers emit (address, value) pairs merged by one serial
         // scatter: O(out_len) extra work inside the timed region, a
@@ -724,7 +830,6 @@ impl NativeExecutable {
                 storage[a as usize] = v;
             }
         }
-        storage
     }
 
     /// Execute spatial iterations `[lo, hi)` of the flattened spatial
@@ -732,7 +837,7 @@ impl NativeExecutable {
     /// emitting one `(storage address, value)` per output element.
     fn exec_range<F: FnMut(u32, f32)>(
         &self,
-        bufs: &[Vec<f32>],
+        bufs: &[&[f32]],
         lo: u64,
         hi: u64,
         mut emit: F,

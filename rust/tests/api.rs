@@ -1,0 +1,285 @@
+//! Session pipeline integration: tune → compile → run one graph
+//! end-to-end on the native backend, with durable artifacts.
+//!
+//! Pinned properties:
+//! * a tiny graph's whole-model native execution matches a handwritten
+//!   reference (bit-exact under identity schedules; tight tolerance
+//!   under tuned schedules, whose reduction tiling may reassociate the
+//!   f32 accumulation),
+//! * the save/load round trip is bit-identical — same plan text, same
+//!   outputs — and spends no new measurements,
+//! * multi-op native execution is bit-identical across thread counts,
+//! * the acceptance workloads (resnet18 at Small scale, bert_tiny) run
+//!   end-to-end through `Session::tune().compile().run()`.
+
+use std::collections::HashMap;
+
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::graph::{Graph, GraphBuilder};
+use alt::loops::LoopSchedule;
+use alt::sim::HwProfile;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn opts(budget: usize) -> TuneOptions {
+    TuneOptions { budget, seed: 9, shards: 0, ..Default::default() }
+}
+
+/// Tiny two-conv chain a handwritten reference can evaluate exactly:
+/// x[1,8,8,2] -> conv(4,k3) -> bias -> relu -> conv(3,k1).
+fn two_conv_chain() -> Graph {
+    let mut b = GraphBuilder::new("tiny_chain");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 8, 8, 2]);
+    let y = b.conv_bias_relu("c1", x, 4, 3, 1, 0); // pre-padded: pad 0
+    b.conv2d("c2", y, 3, 1, 1, 0);
+    b.finish()
+}
+
+/// NHWC conv reference with the nest's reduction order (ri, kh, kw).
+#[allow(clippy::too_many_arguments)]
+fn ref_conv(
+    x: &[f32],
+    w: &[f32],
+    h: usize,
+    ci: usize,
+    o: usize,
+    k: usize,
+) -> Vec<f32> {
+    let oh = h - k + 1;
+    let mut out = vec![0f32; oh * oh * o];
+    for y in 0..oh {
+        for xx in 0..oh {
+            for oc in 0..o {
+                let mut acc = 0f32;
+                for ri in 0..ci {
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            acc += x[((y + kh) * h + xx + kw) * ci + ri]
+                                * w[((kh * k + kw) * ci + ri) * o + oc];
+                        }
+                    }
+                }
+                out[(y * oh + xx) * o + oc] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Handwritten whole-graph reference for [`two_conv_chain`].
+/// Tensor ids: x=0, c1.w=1, c1.out=2, c1.b=3, bias.out=4, relu.out=5,
+/// c2.w=6, c2.out=7.
+fn ref_chain(g: &Graph, inputs: &[Vec<f32>], weight_seed: u64) -> Vec<f32> {
+    let w = |t: usize| alt::api::model::weight_data(g, t, weight_seed);
+    let (w1, b1, w2) = (w(1), w(3), w(6));
+    let c1 = ref_conv(&inputs[0], &w1, 8, 2, 4, 3); // -> 6x6x4
+    let act: Vec<f32> = c1
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (v + b1[i % 4]).max(0.0))
+        .collect();
+    ref_conv(&act, &w2, 6, 4, 3, 1) // 1x1 conv -> 6x6x3
+}
+
+#[test]
+fn untuned_pipeline_matches_handwritten_reference_exactly() {
+    let session =
+        Session::new(two_conv_chain()).with_exec_threads(1).with_weight_seed(55);
+    let model = session.baseline().compile().unwrap();
+    let inputs = model.seeded_inputs(3);
+    let (stats, got) = model.run_with_output(&inputs).unwrap();
+    assert_eq!(stats.output_elems, 6 * 6 * 3);
+    let want = ref_chain(model.graph(), &inputs, 55);
+    assert_eq!(bits(&got), bits(&want), "identity plan must be bit-exact");
+}
+
+#[test]
+fn tuned_pipeline_matches_reference_within_reassociation_tolerance() {
+    let session = Session::new(two_conv_chain())
+        .with_options(opts(300))
+        .with_weight_seed(55)
+        .with_exec_threads(2);
+    let tuned = session.tune();
+    assert_eq!(tuned.plan().ops.len(), 2, "both convs tuned");
+    let model = tuned.compile().unwrap();
+    let inputs = model.seeded_inputs(3);
+    let (_, got) = model.run_with_output(&inputs).unwrap();
+    let want = ref_chain(model.graph(), &inputs, 55);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn save_load_roundtrip_is_bit_identical() {
+    let session = Session::for_model("case_study_small")
+        .unwrap()
+        .with_options(opts(150))
+        .with_exec_threads(2);
+    let tuned = session.tune();
+    let model = tuned.compile().unwrap();
+    let inputs = model.seeded_inputs(12);
+    let (_, original) = model.run_with_output(&inputs).unwrap();
+
+    let dir = std::env::temp_dir()
+        .join(format!("alt_api_roundtrip_{}", std::process::id()));
+    model.save(&dir).unwrap();
+
+    let reloaded = Session::load(&dir).unwrap();
+    assert_eq!(reloaded.plan(), tuned.plan(), "plan survives the disk trip");
+    assert!(reloaded.result().is_none(), "no re-tuning on load");
+    let again = reloaded.compile().unwrap();
+    let (_, out) = again.run_with_output(&inputs).unwrap();
+    assert_eq!(bits(&original), bits(&out), "outputs must be bit-identical");
+
+    // the re-saved plan file is byte-identical too
+    let first = std::fs::read_to_string(dir.join("plan.txt")).unwrap();
+    let dir2 = std::env::temp_dir()
+        .join(format!("alt_api_roundtrip2_{}", std::process::id()));
+    again.save(&dir2).unwrap();
+    let second = std::fs::read_to_string(dir2.join("plan.txt")).unwrap();
+    assert_eq!(first, second);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn load_rejects_tampered_manifests() {
+    let tuned = Session::for_model("case_study_small").unwrap().baseline();
+    let dir = std::env::temp_dir()
+        .join(format!("alt_api_tamper_{}", std::process::id()));
+    tuned.save(&dir).unwrap();
+    // wrong model name in the manifest row
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        manifest.replace("case_study_small", "bert_tiny"),
+    )
+    .unwrap();
+    assert!(Session::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_op_execution_bit_identical_across_thread_counts() {
+    // hand-authored parallel schedules (tiles 1 ⇒ full-extent outer
+    // loops, first two annotated parallel) so thread counts genuinely
+    // fan the nests across workers — no tuning spend needed
+    let mut outs: Vec<Vec<u32>> = Vec::new();
+    let mut inputs: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 2, 3] {
+        let session = Session::for_model("resnet18_small")
+            .unwrap()
+            .with_exec_threads(threads);
+        let g = session.graph();
+        let mut scheds = HashMap::new();
+        for &c in &g.complex_nodes() {
+            let out_shape = g.tensor(g.node(c).output).shape.clone();
+            let mut s = LoopSchedule::identity(&out_shape, &[1]);
+            s.spatial_tiles = vec![1; out_shape.len()];
+            s.parallel = 2;
+            s.vectorize = true;
+            scheds.insert(c, s);
+        }
+        let model = session
+            .plan_with(Vec::new(), scheds)
+            .unwrap()
+            .compile()
+            .unwrap();
+        if inputs.is_empty() {
+            inputs = model.seeded_inputs(21);
+        }
+        let (_, out) = model.run_with_output(&inputs).unwrap();
+        outs.push(bits(&out));
+    }
+    assert_eq!(outs[0], outs[1], "threads=1 vs threads=2");
+    assert_eq!(outs[0], outs[2], "threads=1 vs threads=3");
+}
+
+#[test]
+fn acceptance_resnet18_small_and_bert_tiny_end_to_end() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let session = Session::for_model(name)
+            .unwrap()
+            .with_profile(HwProfile::intel())
+            .with_options(opts(200));
+        let model = session
+            .tune()
+            .compile()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let inputs = model.seeded_inputs(5);
+        let (stats, out) = model
+            .run_with_output(&inputs)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec = model.output_spec();
+        assert_eq!(stats.output_elems, spec.elements(), "{name} output size");
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "{name} produced non-finite values"
+        );
+        assert!(
+            out.iter().any(|v| *v != 0.0),
+            "{name} produced an all-zero output"
+        );
+        // deterministic for a fixed seed
+        let (_, again) = model.run_with_output(&inputs).unwrap();
+        assert_eq!(bits(&out), bits(&again), "{name} re-run must be identical");
+        // every complex op became a native nest (nothing silently
+        // skipped), and weights were packed at compile time
+        assert_eq!(
+            model.complex_steps(),
+            model.graph().complex_nodes().len(),
+            "{name}"
+        );
+        assert!(model.weights_total() > 0, "{name} has constant weights");
+    }
+}
+
+#[test]
+fn simple_ops_match_hand_computation() {
+    // pad -> maxpool -> global-average-pool on a hand-checkable input;
+    // the whole model is interpreted (no complex op)
+    use alt::graph::{OpKind, PoolKind};
+    let mut b = GraphBuilder::new("simple_ops");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 2, 2, 1]);
+    let p = b.op(
+        "pad",
+        OpKind::PadOp { before: vec![0, 1, 1, 0], after: vec![0, 1, 1, 0] },
+        &[x],
+    );
+    let pooled = b.op(
+        "pool",
+        OpKind::Pool { kind: PoolKind::Max, kernel: vec![2, 2], stride: vec![2, 2] },
+        &[p],
+    );
+    let _ = b.op("gap", OpKind::Reduce { keep_last: true }, &[pooled]);
+    let g = b.finish();
+    let model = Session::new(g).baseline().compile().unwrap();
+    let x = vec![1.0f32, -2.0, 3.0, 4.0];
+    let (_, out) = model.run_with_output(&[x]).unwrap();
+    // padded 4x4; 2x2/2 maxpool -> [1, 0, 3, 4]; mean = 2.0
+    assert_eq!(out, vec![2.0]);
+}
+
+#[test]
+fn config_knobs_do_not_change_tuning() {
+    // `backend`/`save_dir` are launcher-level knobs: their presence
+    // must not perturb TuneOptions parsing
+    let with = alt::config::Config::parse(
+        "budget = 64\nbackend = native\nsave_dir = /tmp/x\n",
+    )
+    .unwrap();
+    let without = alt::config::Config::parse("budget = 64\n").unwrap();
+    let a = with.tune_options().unwrap();
+    let b = without.tune_options().unwrap();
+    assert_eq!(a.budget, b.budget);
+    assert_eq!(a.seed, b.seed);
+    assert_eq!(a.shards, b.shards);
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Run the whole-model serving bench (Session tune -> compile -> run on
+# the native backend) and capture the report (end-to-end graph
+# inferences/sec, per-inference repack count, compile-time
+# weight-packing amortization, thread-count determinism, save/load
+# round trip) as BENCH_serve.json.
+#
+# Usage: scripts/bench_serve.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_serve.json}"
+
+# cargo runs bench binaries with cwd = package root (rust/), so hand
+# the bench an absolute output path (relative args anchor at the
+# workspace root; absolute args pass through untouched)
+case "$out" in
+  /*) abs="$out" ;;
+  *) abs="$PWD/$out" ;;
+esac
+BENCH_SERVE_JSON="$abs" cargo bench --bench serve
+
+echo
+echo "== $abs =="
+cat "$abs"
