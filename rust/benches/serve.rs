@@ -4,25 +4,39 @@
 //! For each serving workload (resnet18 at Small scale, bert_tiny) the
 //! bench tunes once, compiles once (constant weights packed into their
 //! tuned layouts at compile time), then measures end-to-end graph
-//! inferences/sec, the per-inference repack count, and how quickly the
-//! one-off compile-time weight packing amortizes against per-run
-//! execution. Hard invariants checked on any machine: multi-op native
-//! execution is bit-identical across thread counts, and the save/load
-//! round trip reproduces the same outputs without re-tuning.
+//! inferences/sec, a per-phase breakdown (nest exec vs repack vs
+//! boundary pack/unpack vs simple-op ms), and the within-run speedup of
+//! the compiled fast path over the retained bytecode interpreter
+//! (`ExecMode::Bytecode`), which doubles as a bit-identity oracle.
+//! Hard invariants checked on any machine: multi-op native execution is
+//! bit-identical across thread counts AND across executor modes, and
+//! the save/load round trip reproduces the same outputs without
+//! re-tuning. A dedicated fusion demo forces a Fig. 5a conversion onto
+//! resnet18_small's stem conv and checks the fast path fuses it into
+//! the nest's read-side gather (repack copy eliminated) bit-exactly.
 //!
 //! Results go to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`);
 //! `scripts/bench_serve.sh` wraps this and CI enforces the hard floors
-//! (determinism, round trip) while throughput only warns — shared
-//! runners are too noisy for a required timing gate.
+//! (determinism, round trip, fast-vs-interpreter ratio, fusion) while
+//! absolute throughput only warns — shared runners are too noisy for a
+//! required absolute-timing gate, but the within-run ratio is immune to
+//! machine speed.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use alt::api::Session;
 use alt::autotune::TuneOptions;
+use alt::layout::{LayoutSeq, Primitive};
+use alt::propagate::ComplexDecision;
+use alt::runtime::ExecMode;
 use alt::sim::HwProfile;
 
 const BUDGET: usize = 200;
 const REQUESTS: usize = 8;
+/// Bytecode-interpreter requests for the within-run ratio (fewer: the
+/// interpreted path is the slow one being measured against).
+const INTERP_REQUESTS: usize = 3;
 
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
@@ -41,6 +55,38 @@ fn session(name: &str, threads: usize) -> Session {
         .with_exec_threads(threads)
 }
 
+/// Force a conversion operator onto resnet18_small's stem conv input
+/// (the graph input allocates identity, so a non-identity read layout
+/// guarantees a Fig. 5a repack edge) and report whether the fast path
+/// fused it away bit-exactly.
+fn fusion_demo() -> String {
+    let s = session("resnet18_small", 1);
+    let conv1 = s.graph().complex_nodes()[0];
+    let mut in_seq = LayoutSeq::new();
+    in_seq.push(Primitive::reorder(&[0, 3, 1, 2])); // NHWC -> NCHW read
+    let dec = ComplexDecision { node: conv1, in_seq, ..Default::default() };
+    let tuned = s
+        .plan_with(vec![dec], HashMap::new())
+        .unwrap_or_else(|e| panic!("fusion plan: {e}"));
+    let mut model = tuned.compile().unwrap_or_else(|e| panic!("{e}"));
+    let conversions = model.conversions();
+    let fused = model.fused_repacks();
+    let materialized = model.materialized_repacks();
+    let inputs = model.seeded_inputs(5);
+    let (_, a) = model.run_with_output(&inputs).unwrap();
+    model.set_exec_mode(ExecMode::Bytecode);
+    let (_, b) = model.run_with_output(&inputs).unwrap();
+    let identical = bits(&a) == bits(&b);
+    println!(
+        "fusion demo (resnet18_small stem): {conversions} conversions, \
+         {fused} fused / {materialized} materialized, identical {identical}"
+    );
+    format!(
+        "{{\"conversions\": {conversions}, \"fused\": {fused}, \
+         \"materialized\": {materialized}, \"identical\": {identical}}}"
+    )
+}
+
 fn main() {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -56,19 +102,50 @@ fn main() {
         let tune_s = t_tune.elapsed().as_secs_f64();
         let sim_ms = tuned.report().expect("tuned").latency_ms();
 
-        let model = tuned.compile().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut model =
+            tuned.compile().unwrap_or_else(|e| panic!("{name}: {e}"));
         let inputs = model.seeded_inputs(33);
 
-        // serving loop: median per-inference latency + throughput
+        // serving loop: median per-inference latency + throughput,
+        // with the per-phase breakdown from the same profiled runs
         let (_, reference) = model.run_with_output(&inputs).unwrap(); // warmup
         let mut times = Vec::with_capacity(REQUESTS);
+        let (mut nest, mut repack, mut boundary, mut simple) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
         let t0 = Instant::now();
         for _ in 0..REQUESTS {
-            times.push(model.run(&inputs).unwrap().latency_ms);
+            let (stats, ph, _) = model.run_profiled(&inputs).unwrap();
+            times.push(stats.latency_ms);
+            nest.push(ph.nest_ms);
+            repack.push(ph.repack_ms);
+            boundary.push(ph.boundary_ms);
+            simple.push(ph.simple_ms);
         }
         let wall = t0.elapsed().as_secs_f64();
         let native_ms = alt::util::stats::median(&mut times);
         let inf_per_sec = REQUESTS as f64 / wall;
+        let nest_ms = alt::util::stats::median(&mut nest);
+        let repack_ms = alt::util::stats::median(&mut repack);
+        let boundary_ms = alt::util::stats::median(&mut boundary);
+        let simple_ms = alt::util::stats::median(&mut simple);
+
+        // within-run fast-vs-interpreter ratio on the SAME compiled
+        // model: flip the executor mode, re-measure, flip back. The
+        // interpreter run is also the fast path's bit-identity oracle.
+        model.set_exec_mode(ExecMode::Bytecode);
+        let (_, interp_out) = model.run_with_output(&inputs).unwrap(); // warmup
+        let fastpath_identical = bits(&interp_out) == bits(&reference);
+        if !fastpath_identical {
+            eprintln!("{name}: fast path diverged from bytecode oracle");
+        }
+        let mut itimes = Vec::with_capacity(INTERP_REQUESTS);
+        for _ in 0..INTERP_REQUESTS {
+            itimes.push(model.run(&inputs).unwrap().latency_ms);
+        }
+        let interp_ms = alt::util::stats::median(&mut itimes);
+        model.set_exec_mode(ExecMode::Fast);
+        let fast_vs_interp =
+            if native_ms > 0.0 { interp_ms / native_ms } else { 0.0 };
 
         // compile-time weight packing amortization: packing is paid
         // once; this is how many inferences until the one-off cost is
@@ -112,12 +189,16 @@ fn main() {
 
         println!(
             "{name:>15}: tune {tune_s:>6.1} s | sim {sim_ms:>8.3} ms | \
-             native {native_ms:>8.3} ms ({inf_per_sec:.1} inf/s) | \
-             {} nests + {} simple | {} repacks/run | \
+             native {native_ms:>8.3} ms ({inf_per_sec:.1} inf/s, \
+             {fast_vs_interp:.1}x vs interp {interp_ms:.3} ms) | \
+             phases nest {nest_ms:.3} + repack {repack_ms:.3} + \
+             boundary {boundary_ms:.3} + simple {simple_ms:.3} ms | \
+             {} nests + {} simple | {} fused + {} materialized repacks/run | \
              {}/{} weights packed in {:.1} ms (amortized in {amortize_runs:.0} runs)",
             model.complex_steps(),
             model.simple_steps(),
-            model.repacks_per_run(),
+            model.fused_repacks(),
+            model.materialized_repacks(),
             model.weights_packed(),
             model.weights_total(),
             model.packing_ms(),
@@ -125,20 +206,32 @@ fn main() {
         rows.push(format!(
             "    {{\"name\": \"{name}\", \"tune_s\": {tune_s:.3}, \
              \"sim_ms\": {sim_ms:.4}, \"native_ms\": {native_ms:.4}, \
+             \"interp_ms\": {interp_ms:.4}, \
+             \"fast_vs_interp\": {fast_vs_interp:.3}, \
+             \"fastpath_identical\": {fastpath_identical}, \
+             \"all_fast_paths\": {}, \
              \"inf_per_sec\": {inf_per_sec:.3}, \
+             \"nest_ms\": {nest_ms:.4}, \"repack_ms\": {repack_ms:.4}, \
+             \"boundary_ms\": {boundary_ms:.4}, \"simple_ms\": {simple_ms:.4}, \
              \"complex_steps\": {}, \"simple_steps\": {}, \
-             \"repacks_per_run\": {}, \"weights_packed\": {}, \
+             \"repacks_per_run\": {}, \"repacks_fused\": {}, \
+             \"repacks_materialized\": {}, \"weights_packed\": {}, \
              \"weights_total\": {}, \"packing_ms\": {:.3}, \
              \"compile_ms\": {:.3}, \"amortize_runs\": {amortize_runs:.0}}}",
+            model.all_fast_paths(),
             model.complex_steps(),
             model.simple_steps(),
             model.repacks_per_run(),
+            model.fused_repacks(),
+            model.materialized_repacks(),
             model.weights_packed(),
             model.weights_total(),
             model.packing_ms(),
             model.compile_ms(),
         ));
     }
+
+    let fusion = fusion_demo();
 
     println!("thread determinism:   {deterministic}");
     println!("save/load roundtrip:  {roundtrip_ok}");
@@ -147,7 +240,9 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_serve.json".to_string());
     let json = format!(
         "{{\n  \"cores\": {cores},\n  \"budget\": {BUDGET},\n  \
-         \"requests\": {REQUESTS},\n  \"models\": [\n{}\n  ],\n  \
+         \"requests\": {REQUESTS},\n  \
+         \"interp_requests\": {INTERP_REQUESTS},\n  \"models\": [\n{}\n  ],\n  \
+         \"fusion_demo\": {fusion},\n  \
          \"deterministic\": {deterministic},\n  \
          \"roundtrip_ok\": {roundtrip_ok}\n}}\n",
         rows.join(",\n"),

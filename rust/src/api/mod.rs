@@ -41,7 +41,7 @@ use crate::sim::netsim::GraphReport;
 use crate::sim::HwProfile;
 use crate::{bail, err};
 
-pub use model::CompiledModel;
+pub use model::{CompiledModel, PhaseBreakdown};
 pub use plan::{OpPlan, TunedPlan};
 
 /// Default seed the compiled model's constant weights are drawn from.

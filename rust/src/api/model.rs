@@ -37,7 +37,8 @@ use crate::layout::{LayoutSeq, LayoutTransform};
 use crate::loops::LoopSchedule;
 use crate::propagate::propagate;
 use crate::runtime::{
-    random_input, seeded_inputs, NativeExecutable, RunStats, TensorSpec,
+    random_input, seeded_inputs, ExecMode, ExecScratch, NativeExecutable,
+    OperandView, RunStats, TensorSpec,
 };
 use crate::sim::HwProfile;
 use crate::tensor::{Role, TensorId};
@@ -56,7 +57,11 @@ enum Operand {
     Const(usize),
 }
 
-/// A Fig. 5a layout conversion materialized on one edge.
+/// A Fig. 5a layout conversion on one edge. In [`ExecMode::Fast`] the
+/// edge is *fused*: the consumer nest reads the producer's buffer
+/// through the precompiled gather map and this step is skipped; in
+/// [`ExecMode::Bytecode`] the repack materializes here element by
+/// element (the pre-fusion reference path).
 struct ConvertStep {
     tensor: TensorId,
     slot: usize,
@@ -64,6 +69,38 @@ struct ConvertStep {
     /// `None` when the source buffer is already logical row-major.
     from: Option<LayoutTransform>,
     to: LayoutTransform,
+}
+
+/// A boundary unpack/pack edge at a simple operator: the
+/// expression-level transform (the bytecode reference path) plus its
+/// index map precompiled at model-compile time (the fast path's
+/// straight indexed copy; `-1` entries read/fill `0.0`).
+struct BoundaryMap {
+    tf: LayoutTransform,
+    map: Vec<i64>,
+}
+
+impl BoundaryMap {
+    /// Storage → logical edge (`map[logical] = storage addr`).
+    fn unpack_edge(shape: &[i64], tf: LayoutTransform) -> Self {
+        let map = tf.unpack_map(shape);
+        Self { tf, map }
+    }
+
+    /// Logical → storage edge (`map[storage] = logical addr`).
+    fn pack_edge(shape: &[i64], tf: LayoutTransform) -> Self {
+        let map = tf.pack_map(shape);
+        Self { tf, map }
+    }
+}
+
+/// Indexed copy through a boundary map into a pooled buffer.
+fn apply_map(map: &[i64], src: &[f32], mut out: Vec<f32>) -> Vec<f32> {
+    out.clear();
+    out.extend(
+        map.iter().map(|&m| if m < 0 { 0.0 } else { src[m as usize] }),
+    );
+    out
 }
 
 /// One lowered complex nest (+ fused tail).
@@ -76,9 +113,9 @@ struct ComplexStep {
 
 /// Where a simple (interpreted) operator reads one input.
 enum SimpleSrc {
-    /// Live buffer; unpacked to logical through the transform when the
-    /// allocation layout is non-identity.
-    Tensor(TensorId, Option<LayoutTransform>),
+    /// Live buffer; unpacked to logical through the boundary map when
+    /// the allocation layout is non-identity.
+    Tensor(TensorId, Option<BoundaryMap>),
     /// Compile-time constant held in logical row-major form.
     Const(usize),
 }
@@ -90,7 +127,7 @@ struct SimpleStep {
     out: TensorId,
     /// Pack the logical result into the output's allocation layout in
     /// the same write pass (an absorbed conversion, Fig. 5b).
-    pack: Option<LayoutTransform>,
+    pack: Option<BoundaryMap>,
 }
 
 enum Step {
@@ -110,9 +147,15 @@ pub struct CompiledModel {
     /// logical weights (simple-op operands).
     consts: Vec<Vec<f32>>,
     n_conv_slots: usize,
+    /// Per conversion slot: the source tensor the fused gather reads.
+    conv_tensor: Vec<TensorId>,
+    /// Per conversion slot: composed gather map (consumer storage index
+    /// → producer storage index, `-1` → `0.0`), built once at compile.
+    conv_gathers: Vec<Vec<i64>>,
     input_ids: Vec<TensorId>,
     output_id: TensorId,
-    output_unpack: Option<LayoutTransform>,
+    output_unpack: Option<BoundaryMap>,
+    mode: ExecMode,
     /// Tensor buffers whose last use is step `i` (recycled after it).
     dies: Vec<Vec<TensorId>>,
     /// Conversion slots whose last use is step `i`.
@@ -173,6 +216,8 @@ pub(crate) fn compile_model(
     let mut consts: Vec<Vec<f32>> = Vec::new();
     let mut const_key: HashMap<(TensorId, LayoutSeq), usize> = HashMap::new();
     let mut n_conv_slots = 0usize;
+    let mut conv_tensor: Vec<TensorId> = Vec::new();
+    let mut conv_gathers: Vec<Vec<i64>> = Vec::new();
     let (mut conversions, mut boundary_repacks) = (0usize, 0usize);
     let (mut weights_total, mut weights_packed) = (0usize, 0usize);
     let mut packing_ms = 0.0f64;
@@ -270,14 +315,41 @@ pub(crate) fn compile_model(
                             let slot = n_conv_slots;
                             n_conv_slots += 1;
                             conversions += 1;
+                            let from = (!alloc.is_identity()).then(|| {
+                                LayoutTransform::new(ten.shape.clone(), &alloc)
+                            });
+                            let to =
+                                LayoutTransform::new(ten.shape.clone(), &read);
+                            // Compose unpack∘pack into one gather map:
+                            // consumer-read storage index → producer
+                            // storage index (-1 reads as the repack's
+                            // 0.0 fill). The consumer nest reads the
+                            // producer buffer through it directly, so
+                            // the Fig. 5a copy disappears in Fast mode.
+                            let pm = to.pack_map(&ten.shape);
+                            let gather: Vec<i64> = match &from {
+                                None => pm,
+                                Some(f) => {
+                                    let um = f.unpack_map(&ten.shape);
+                                    pm.iter()
+                                        .map(|&l| {
+                                            if l < 0 {
+                                                -1
+                                            } else {
+                                                um[l as usize]
+                                            }
+                                        })
+                                        .collect()
+                                }
+                            };
+                            conv_tensor.push(t);
+                            conv_gathers.push(gather);
                             steps.push(Step::Convert(ConvertStep {
                                 tensor: t,
                                 slot,
                                 logical_shape: ten.shape.clone(),
-                                from: (!alloc.is_identity()).then(|| {
-                                    LayoutTransform::new(ten.shape.clone(), &alloc)
-                                }),
-                                to: LayoutTransform::new(ten.shape.clone(), &read),
+                                from,
+                                to,
                             }));
                             operands.push(Operand::Converted(slot));
                         }
@@ -315,7 +387,10 @@ pub(crate) fn compile_model(
                             None
                         } else {
                             boundary_repacks += 1;
-                            Some(LayoutTransform::new(ten.shape.clone(), &alloc))
+                            Some(BoundaryMap::unpack_edge(
+                                &ten.shape,
+                                LayoutTransform::new(ten.shape.clone(), &alloc),
+                            ))
                         };
                         srcs.push(SimpleSrc::Tensor(t, tf));
                     }
@@ -325,9 +400,10 @@ pub(crate) fn compile_model(
                     None
                 } else {
                     boundary_repacks += 1;
-                    Some(LayoutTransform::new(
-                        graph.tensor(node.output).shape.clone(),
-                        &oalloc,
+                    let oshape = graph.tensor(node.output).shape.clone();
+                    Some(BoundaryMap::pack_edge(
+                        &oshape,
+                        LayoutTransform::new(oshape.clone(), &oalloc),
                     ))
                 };
                 steps.push(Step::Simple(SimpleStep {
@@ -356,6 +432,13 @@ pub(crate) fn compile_model(
                         }
                         Operand::Converted(s) => {
                             conv_last.insert(*s, si);
+                            // In Fast mode the conversion is fused: the
+                            // nest reads the *source* buffer through
+                            // the gather map here, so the source must
+                            // stay live through this step (covers both
+                            // modes — this index is past the Convert
+                            // step's).
+                            last_use.insert(conv_tensor[*s], si);
                         }
                         Operand::Const(_) => {}
                     }
@@ -389,7 +472,11 @@ pub(crate) fn compile_model(
 
     let out_seq = prop.layouts.get(output_id);
     let output_unpack = (!out_seq.is_identity()).then(|| {
-        LayoutTransform::new(graph.tensor(output_id).shape.clone(), &out_seq)
+        let shape = graph.tensor(output_id).shape.clone();
+        BoundaryMap::unpack_edge(
+            &shape,
+            LayoutTransform::new(shape.clone(), &out_seq),
+        )
     });
 
     let complex_steps =
@@ -403,9 +490,12 @@ pub(crate) fn compile_model(
         steps,
         consts,
         n_conv_slots,
+        conv_tensor,
+        conv_gathers,
         input_ids,
         output_id,
         output_unpack,
+        mode: ExecMode::Fast,
         dies,
         conv_dies,
         complex_steps,
@@ -425,6 +515,33 @@ fn take(pool: &mut Vec<Vec<f32>>, n: usize) -> Vec<f32> {
     b.clear();
     b.resize(n, 0f32);
     b
+}
+
+/// Reusable per-run execution state: the buffer pool plus every scratch
+/// vector the step loop and the simple-op interpreter would otherwise
+/// allocate per call (nest env/stack, pooling coordinates, line-op
+/// line/result buffers).
+#[derive(Default)]
+struct RunScratch {
+    exec: ExecScratch,
+    pool: Vec<Vec<f32>>,
+    idx: Vec<i64>,
+    line: Vec<f32>,
+    res: Vec<f32>,
+}
+
+/// Per-phase wall-clock breakdown of one inference (milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBreakdown {
+    /// Complex nest execution (including fused gather reads).
+    pub nest_ms: f64,
+    /// Materialized Fig. 5a conversion steps (zero in Fast mode, where
+    /// conversions fuse into consumer read streams).
+    pub repack_ms: f64,
+    /// Simple-op boundary unpack/pack passes + the final output unpack.
+    pub boundary_ms: f64,
+    /// Simple-op compute (interpreted, logical row-major).
+    pub simple_ms: f64,
 }
 
 /// Row-major strides of a shape.
@@ -473,8 +590,9 @@ fn interp_simple(
     graph: &Graph,
     node: NodeId,
     ins: &[&[f32]],
-    pool: &mut Vec<Vec<f32>>,
+    sc: &mut RunScratch,
 ) -> Result<Vec<f32>> {
+    let RunScratch { pool, idx, line, res, .. } = sc;
     let n = graph.node(node);
     let out_shape = graph.tensor(n.output).shape.clone();
     let out_len: i64 = out_shape.iter().product();
@@ -540,7 +658,9 @@ fn interp_simple(
             let rank = out_shape.len();
             let mut out = take(pool, out_len as usize);
             let x = ins[0];
-            let mut oc = vec![0i64; rank];
+            let oc = &mut *idx;
+            oc.clear();
+            oc.resize(rank, 0);
             let kelems = kernel.iter().product::<i64>() as f32;
             for (flat, slot) in out.iter_mut().enumerate() {
                 let mut rem = flat as i64;
@@ -572,7 +692,7 @@ fn interp_simple(
             Ok(out)
         }
         OpKind::Softmax { axis } => {
-            line_op(ins[0], &out_shape, *axis, pool, |line, out| {
+            line_op(ins[0], &out_shape, *axis, pool, line, res, |line, out| {
                 let mut m = f32::NEG_INFINITY;
                 for &v in line.iter() {
                     m = m.max(v);
@@ -588,7 +708,7 @@ fn interp_simple(
             })
         }
         OpKind::LayerNorm { axis } => {
-            line_op(ins[0], &out_shape, *axis, pool, |line, out| {
+            line_op(ins[0], &out_shape, *axis, pool, line, res, |line, out| {
                 let m = line.len() as f32;
                 let mean = line.iter().sum::<f32>() / m;
                 let var =
@@ -633,11 +753,15 @@ fn interp_simple(
 }
 
 /// Apply `f` to every 1-d line along `axis` of a row-major tensor.
+/// `line`/`res` are caller-provided scratch (resized here) so repeated
+/// runs allocate nothing per call.
 fn line_op(
     x: &[f32],
     shape: &[i64],
     axis: usize,
     pool: &mut Vec<Vec<f32>>,
+    line: &mut Vec<f32>,
+    res: &mut Vec<f32>,
     mut f: impl FnMut(&[f32], &mut [f32]),
 ) -> Result<Vec<f32>> {
     if axis >= shape.len() {
@@ -651,8 +775,10 @@ fn line_op(
     outer_shape.remove(axis);
     let mut outer_strides = strides.clone();
     outer_strides.remove(axis);
-    let mut line = vec![0f32; m];
-    let mut res = vec![0f32; m];
+    line.clear();
+    line.resize(m, 0f32);
+    res.clear();
+    res.resize(m, 0f32);
     for_each_index(&outer_shape, |idx| {
         let mut base = 0i64;
         for (d, &i) in idx.iter().enumerate() {
@@ -662,7 +788,7 @@ fn line_op(
         for (j, l) in line.iter_mut().enumerate() {
             *l = x[base + j * sa];
         }
-        f(&line, &mut res);
+        f(line, res);
         for (j, &r) in res.iter().enumerate() {
             out[base + j * sa] = r;
         }
@@ -712,6 +838,15 @@ impl CompiledModel {
         &self,
         inputs: &[Vec<f32>],
     ) -> Result<(RunStats, Vec<f32>)> {
+        self.run_profiled(inputs).map(|(s, _, o)| (s, o))
+    }
+
+    /// [`run_with_output`](Self::run_with_output) that also reports the
+    /// per-phase wall-clock breakdown of the inference.
+    pub fn run_profiled(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, PhaseBreakdown, Vec<f32>)> {
         let specs = self.input_specs();
         if inputs.len() != specs.len() {
             bail!(
@@ -734,123 +869,226 @@ impl CompiledModel {
                 );
             }
         }
+        let fast = self.mode == ExecMode::Fast;
         let mut bufs: Vec<Option<Vec<f32>>> = vec![None; self.graph.tensors.len()];
         for (&t, data) in self.input_ids.iter().zip(inputs) {
             bufs[t] = Some(data.clone());
         }
         let mut convs: Vec<Option<Vec<f32>>> = vec![None; self.n_conv_slots];
-        let mut pool: Vec<Vec<f32>> = Vec::new();
+        let mut scratch = RunScratch::default();
+        let mut phases = PhaseBreakdown::default();
 
         let t0 = Instant::now();
         for (si, step) in self.steps.iter().enumerate() {
             match step {
                 Step::Convert(c) => {
-                    let src = bufs[c.tensor]
-                        .as_deref()
-                        .ok_or_else(|| err!("convert: t{} not live", c.tensor))?;
-                    let logical_owned;
-                    let logical: &[f32] = match &c.from {
-                        None => src,
-                        Some(tf) => {
-                            logical_owned = tf.unpack(src, &c.logical_shape);
-                            &logical_owned
-                        }
-                    };
-                    convs[c.slot] =
-                        Some(c.to.repack(logical, &c.logical_shape, 0.0));
+                    // Fast mode fuses this edge: the consumer nest
+                    // reads the source buffer through the precompiled
+                    // gather map, so nothing materializes here.
+                    if !fast {
+                        let tp = Instant::now();
+                        let src = bufs[c.tensor].as_deref().ok_or_else(
+                            || err!("convert: t{} not live", c.tensor),
+                        )?;
+                        let logical_owned;
+                        let logical: &[f32] = match &c.from {
+                            None => src,
+                            Some(tf) => {
+                                logical_owned = tf.unpack(src, &c.logical_shape);
+                                &logical_owned
+                            }
+                        };
+                        convs[c.slot] =
+                            Some(c.to.repack(logical, &c.logical_shape, 0.0));
+                        phases.repack_ms += tp.elapsed().as_secs_f64() * 1e3;
+                    }
                 }
                 Step::Complex(cs) => {
-                    let mut out_buf = pool.pop().unwrap_or_default();
+                    let tp = Instant::now();
+                    let mut out_buf = scratch.pool.pop().unwrap_or_default();
                     {
                         // liveness is computed from these very steps, so a
                         // missing buffer is a plan-construction bug
-                        let refs: Vec<&[f32]> = cs
+                        let views: Vec<OperandView> = cs
                             .operands
                             .iter()
                             .map(|o| match o {
-                                Operand::Tensor(t) => bufs[*t]
-                                    .as_deref()
-                                    .expect("operand buffer live"),
-                                Operand::Converted(s) => convs[*s]
-                                    .as_deref()
-                                    .expect("conversion buffer live"),
-                                Operand::Const(k) => self.consts[*k].as_slice(),
-                            })
-                            .collect();
-                        cs.exe.run_storage_into(&refs, &mut out_buf)?;
-                    }
-                    if let Some(old) = bufs[cs.out].replace(out_buf) {
-                        pool.push(old);
-                    }
-                }
-                Step::Simple(ss) => {
-                    let stored = {
-                        let ins: Vec<Cow<[f32]>> = ss
-                            .srcs
-                            .iter()
-                            .map(|s| match s {
-                                SimpleSrc::Const(k) => {
-                                    Cow::Borrowed(self.consts[*k].as_slice())
-                                }
-                                SimpleSrc::Tensor(t, tf) => {
-                                    let buf = bufs[*t]
+                                Operand::Tensor(t) => OperandView::direct(
+                                    bufs[*t]
                                         .as_deref()
-                                        .expect("input buffer live");
-                                    match tf {
-                                        None => Cow::Borrowed(buf),
-                                        Some(tf) => Cow::Owned(tf.unpack(
-                                            buf,
-                                            &self.graph.tensor(*t).shape,
-                                        )),
+                                        .expect("operand buffer live"),
+                                ),
+                                Operand::Converted(s) => {
+                                    if fast {
+                                        OperandView {
+                                            data: bufs[self.conv_tensor[*s]]
+                                                .as_deref()
+                                                .expect("conversion source live"),
+                                            gather: Some(&self.conv_gathers[*s]),
+                                        }
+                                    } else {
+                                        OperandView::direct(
+                                            convs[*s]
+                                                .as_deref()
+                                                .expect("conversion buffer live"),
+                                        )
                                     }
                                 }
+                                Operand::Const(k) => OperandView::direct(
+                                    self.consts[*k].as_slice(),
+                                ),
                             })
                             .collect();
+                        cs.exe.run_storage_views_into(
+                            &views,
+                            &mut out_buf,
+                            &mut scratch.exec,
+                        )?;
+                    }
+                    if let Some(old) = bufs[cs.out].replace(out_buf) {
+                        scratch.pool.push(old);
+                    }
+                    phases.nest_ms += tp.elapsed().as_secs_f64() * 1e3;
+                }
+                Step::Simple(ss) => {
+                    let tb = Instant::now();
+                    let ins: Vec<Cow<[f32]>> = ss
+                        .srcs
+                        .iter()
+                        .map(|s| match s {
+                            SimpleSrc::Const(k) => {
+                                Cow::Borrowed(self.consts[*k].as_slice())
+                            }
+                            SimpleSrc::Tensor(t, tf) => {
+                                let buf = bufs[*t]
+                                    .as_deref()
+                                    .expect("input buffer live");
+                                match tf {
+                                    None => Cow::Borrowed(buf),
+                                    Some(bm) => Cow::Owned(if fast {
+                                        apply_map(
+                                            &bm.map,
+                                            buf,
+                                            scratch
+                                                .pool
+                                                .pop()
+                                                .unwrap_or_default(),
+                                        )
+                                    } else {
+                                        bm.tf.unpack(
+                                            buf,
+                                            &self.graph.tensor(*t).shape,
+                                        )
+                                    }),
+                                }
+                            }
+                        })
+                        .collect();
+                    phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
+                    let ti = Instant::now();
+                    let logical = {
                         let slices: Vec<&[f32]> =
                             ins.iter().map(|c| c.as_ref()).collect();
-                        let logical =
-                            interp_simple(&self.graph, ss.node, &slices, &mut pool)?;
-                        match &ss.pack {
-                            None => logical,
-                            Some(tf) => {
-                                let packed = tf.repack(
+                        interp_simple(
+                            &self.graph,
+                            ss.node,
+                            &slices,
+                            &mut scratch,
+                        )?
+                    };
+                    phases.simple_ms += ti.elapsed().as_secs_f64() * 1e3;
+                    for c in ins {
+                        if let Cow::Owned(v) = c {
+                            scratch.pool.push(v);
+                        }
+                    }
+                    let tb = Instant::now();
+                    let stored = match &ss.pack {
+                        None => logical,
+                        Some(bm) => {
+                            let packed = if fast {
+                                apply_map(
+                                    &bm.map,
+                                    &logical,
+                                    scratch.pool.pop().unwrap_or_default(),
+                                )
+                            } else {
+                                bm.tf.repack(
                                     &logical,
                                     &self.graph.tensor(ss.out).shape,
                                     0.0,
-                                );
-                                pool.push(logical);
-                                packed
-                            }
+                                )
+                            };
+                            scratch.pool.push(logical);
+                            packed
                         }
                     };
+                    phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
                     if let Some(old) = bufs[ss.out].replace(stored) {
-                        pool.push(old);
+                        scratch.pool.push(old);
                     }
                 }
             }
             for &d in &self.dies[si] {
                 if let Some(b) = bufs[d].take() {
-                    pool.push(b);
+                    scratch.pool.push(b);
                 }
             }
             for &s in &self.conv_dies[si] {
                 if let Some(b) = convs[s].take() {
-                    pool.push(b);
+                    scratch.pool.push(b);
                 }
             }
         }
         let storage = bufs[self.output_id]
             .take()
             .ok_or_else(|| err!("{}: output never produced", self.graph.name))?;
+        let tb = Instant::now();
         let out = match &self.output_unpack {
             None => storage,
-            Some(tf) => {
-                tf.unpack(&storage, &self.graph.tensor(self.output_id).shape)
+            Some(bm) => {
+                if fast {
+                    apply_map(&bm.map, &storage, Vec::new())
+                } else {
+                    bm.tf.unpack(
+                        &storage,
+                        &self.graph.tensor(self.output_id).shape,
+                    )
+                }
             }
         };
+        phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
         let sample = out.iter().take(8).copied().collect();
-        Ok((RunStats { latency_ms, output_elems: out.len(), sample }, out))
+        Ok((RunStats { latency_ms, output_elems: out.len(), sample }, phases, out))
+    }
+
+    /// Select the executor for every step of the plan. `Fast` (the
+    /// default) runs strided address streams, fuses Fig. 5a conversion
+    /// edges into consumer gather reads, and applies boundary edges as
+    /// precompiled index maps; `Bytecode` forces the reference
+    /// interpreter with materialized repacks everywhere — the genuine
+    /// pre-fast-path execution, used as the within-run baseline.
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+        for step in self.steps.iter_mut() {
+            if let Step::Complex(cs) = step {
+                cs.exe.set_exec_mode(mode);
+            }
+        }
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Whether every complex nest in the plan compiled a strided fast
+    /// plan (none fell back to bytecode).
+    pub fn all_fast_paths(&self) -> bool {
+        self.steps.iter().all(|s| match s {
+            Step::Complex(cs) => cs.exe.has_fast_path(),
+            _ => true,
+        })
     }
 
     /// Median-of-`n` timed runs (first run excluded as warmup).
@@ -886,9 +1124,25 @@ impl CompiledModel {
         self.boundary_repacks
     }
 
-    /// Total runtime layout repacks per inference.
+    /// Total runtime layout repack edges per inference (fused or not).
     pub fn repacks_per_run(&self) -> usize {
         self.conversions + self.boundary_repacks
+    }
+
+    /// Fig. 5a conversion edges eliminated by read-side fusion in the
+    /// current execution mode (every conversion edge has exactly one
+    /// complex consumer by construction, so Fast mode fuses them all).
+    pub fn fused_repacks(&self) -> usize {
+        if self.mode == ExecMode::Fast {
+            self.conversions
+        } else {
+            0
+        }
+    }
+
+    /// Repack edges still materialized as buffer copies per inference.
+    pub fn materialized_repacks(&self) -> usize {
+        self.repacks_per_run() - self.fused_repacks()
     }
 
     /// Unique constant weight buffers materialized at compile time,

@@ -140,6 +140,82 @@ impl LayoutTransform {
         }
         out
     }
+
+    /// Lower this transform to a gather index map: entry `flat` of the
+    /// result is the row-major *logical* offset the storage slot `flat`
+    /// reads from, or `-1` for padding slots (which [`repack`] fills
+    /// with the fill value). Applying the map element-by-element is
+    /// exactly `repack` — built once at compile time so the per-run
+    /// conversion is a strided gather instead of expression evaluation.
+    pub fn pack_map(&self, orig_shape: &[i64]) -> Vec<i64> {
+        let new_shape = self.final_shape();
+        let total: i64 = new_shape.iter().product();
+        let vars: Vec<Expr> = (0..new_shape.len()).map(Expr::Var).collect();
+        let back = self.backward(&vars);
+        let mut map = vec![-1i64; total as usize];
+        let mut idx = vec![0i64; new_shape.len()];
+        for flat in 0..total {
+            let mut rem = flat;
+            for d in (0..new_shape.len()).rev() {
+                idx[d] = rem % new_shape[d];
+                rem /= new_shape[d];
+            }
+            let mut ok = true;
+            let mut off = 0i64;
+            let mut stride = 1i64;
+            for d in (0..orig_shape.len()).rev() {
+                let v = back[d].eval(&idx);
+                if v < 0 || v >= orig_shape[d] {
+                    ok = false;
+                    break;
+                }
+                off += v * stride;
+                stride *= orig_shape[d];
+            }
+            if ok {
+                map[flat as usize] = off;
+            }
+        }
+        map
+    }
+
+    /// Lower the *inverse* direction to a gather map: entry `logical`
+    /// is the storage slot [`unpack`] would read logical element
+    /// `logical` from, or `-1` when no storage slot covers it (unpack
+    /// leaves those at 0.0). Matches `unpack` exactly, including its
+    /// last-writer-wins resolution of `unfold` overlap duplicates.
+    pub fn unpack_map(&self, orig_shape: &[i64]) -> Vec<i64> {
+        let new_shape = self.final_shape();
+        let total: i64 = new_shape.iter().product();
+        let vars: Vec<Expr> = (0..new_shape.len()).map(Expr::Var).collect();
+        let back = self.backward(&vars);
+        let logical: i64 = orig_shape.iter().product();
+        let mut map = vec![-1i64; logical as usize];
+        let mut idx = vec![0i64; new_shape.len()];
+        for flat in 0..total {
+            let mut rem = flat;
+            for d in (0..new_shape.len()).rev() {
+                idx[d] = rem % new_shape[d];
+                rem /= new_shape[d];
+            }
+            let mut ok = true;
+            let mut off = 0i64;
+            let mut stride = 1i64;
+            for d in (0..orig_shape.len()).rev() {
+                let v = back[d].eval(&idx);
+                if v < 0 || v >= orig_shape[d] {
+                    ok = false;
+                    break;
+                }
+                off += v * stride;
+                stride *= orig_shape[d];
+            }
+            if ok {
+                map[off as usize] = flat;
+            }
+        }
+        map
+    }
 }
 
 /// Shape rule for one primitive (Table 1 "Transformed Shape" column plus
@@ -617,6 +693,61 @@ mod tests {
             s.apply_shape(&[n, h, w, o]),
             vec![1, 28, 7, 4, 4, 16, 16]
         );
+    }
+
+    /// Applying `pack_map`/`unpack_map` element-by-element must equal
+    /// `repack`/`unpack` — the maps are their compiled form.
+    #[test]
+    fn gather_maps_match_repack_and_unpack() {
+        let cases: Vec<(Vec<i64>, LayoutSeq)> = vec![
+            // bijective: split + reorder
+            (
+                vec![3, 8],
+                seq(vec![
+                    Primitive::split(1, &[4, 2]),
+                    Primitive::reorder(&[0, 2, 1, 3]),
+                ]),
+            ),
+            // expanding: unfold (overlap duplicates) + pad (fill)
+            (vec![5], seq(vec![
+                Primitive::unfold(0, 3, 2),
+                Primitive::pad(1, 1, 2),
+            ])),
+            // ragged unfold (right-aligned last tile)
+            (vec![7], seq(vec![Primitive::unfold(0, 3, 2)])),
+            // mixed: split/reorder/fuse
+            (
+                vec![3, 8, 6],
+                seq(vec![
+                    Primitive::split(1, &[2, 4]),
+                    Primitive::reorder(&[0, 3, 1, 2]),
+                    Primitive::fuse(2, 2),
+                ]),
+            ),
+        ];
+        for (shape, s) in cases {
+            let tf = LayoutTransform::new(shape.clone(), &s);
+            let total: i64 = shape.iter().product();
+            let data: Vec<f32> = (0..total).map(|x| x as f32 + 1.0).collect();
+            let fill = -7.0f32;
+
+            let want_packed = tf.repack(&data, &shape, fill);
+            let pm = tf.pack_map(&shape);
+            let got_packed: Vec<f32> = pm
+                .iter()
+                .map(|&src| if src < 0 { fill } else { data[src as usize] })
+                .collect();
+            assert_eq!(got_packed, want_packed, "pack_map vs repack");
+
+            let storage = tf.repack(&data, &shape, 0.0);
+            let want_logical = tf.unpack(&storage, &shape);
+            let um = tf.unpack_map(&shape);
+            let got_logical: Vec<f32> = um
+                .iter()
+                .map(|&src| if src < 0 { 0.0 } else { storage[src as usize] })
+                .collect();
+            assert_eq!(got_logical, want_logical, "unpack_map vs unpack");
+        }
     }
 
     #[test]

@@ -348,7 +348,9 @@ mod pjrt {
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
 
-pub use native::{NativeExecutable, NativeRuntime};
+pub use native::{
+    ExecMode, ExecScratch, NativeExecutable, NativeRuntime, OperandView,
+};
 
 #[cfg(test)]
 mod tests {

@@ -28,6 +28,22 @@
 //! of the reduction loop, so the timed loop does data movement and
 //! multiply-adds rather than `Arc` tree walks.
 //!
+//! On top of the bytecode, `compile` additionally lowers every access
+//! expression to a strided *address stream* ([`Stream`]): an affine
+//! recurrence over the loop odometer (constant + per-loop-variable
+//! stride), with non-affine sub-terms (unfold/pad clamps, div/mod of
+//! split dims) precomputed into index tables over exactly the loop
+//! variables they mention. The reduction loop then advances addresses
+//! by constant bumps instead of re-evaluating bytecode per MAC, and
+//! the innermost MAC runs as an unrolled dot-product over the longest
+//! trailing run of reduction levels whose per-step address delta is
+//! constant for both operands. Accumulation order is exactly the
+//! nest's reduction order in every mode, so fast-path outputs are
+//! bit-identical to the bytecode interpreter (kept as the reference
+//! oracle behind [`ExecMode::Bytecode`]). When any expression resists
+//! the decomposition (a table would exceed its size cap), the whole
+//! executable stays on bytecode permanently.
+//!
 //! Reported latency covers execution only; packing/unpacking is the
 //! job of conversion operators and is charged separately by the cost
 //! model (see `conversion_terms` in the tuner).
@@ -137,6 +153,220 @@ impl Code {
     }
 }
 
+/// Which executor a compiled nest runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Strided address streams + unrolled dot-product MAC loops (the
+    /// default; falls back to bytecode when no fast plan compiled).
+    #[default]
+    Fast,
+    /// The stack-bytecode interpreter — the reference oracle the fast
+    /// path is golden-tested against, and the baseline the serving
+    /// bench's within-run speedup ratio is measured over.
+    Bytecode,
+}
+
+/// A read-only operand slot: raw storage, optionally redirected through
+/// a precompiled gather map (a Fig. 5a repack fused into this nest's
+/// read side — entry `i` is the source index storage slot `i` reads, or
+/// `-1` for a padding slot that reads as `0.0`).
+#[derive(Clone, Copy)]
+pub struct OperandView<'a> {
+    pub data: &'a [f32],
+    pub gather: Option<&'a [i64]>,
+}
+
+impl<'a> OperandView<'a> {
+    pub fn direct(data: &'a [f32]) -> Self {
+        Self { data, gather: None }
+    }
+
+    /// Length of the storage layout this view presents to the nest.
+    fn view_len(&self) -> usize {
+        match self.gather {
+            None => self.data.len(),
+            Some(g) => g.len(),
+        }
+    }
+
+    #[inline]
+    fn ld(&self, i: usize) -> f32 {
+        match self.gather {
+            None => self.data[i],
+            Some(g) => {
+                let s = g[i];
+                if s < 0 {
+                    0.0
+                } else {
+                    self.data[s as usize]
+                }
+            }
+        }
+    }
+}
+
+/// Reusable per-worker execution scratch (loop env, bytecode stack,
+/// table cursors) — hoisted out of the per-chunk hot path so repeated
+/// runs allocate nothing.
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    env: Vec<i64>,
+    stack: Vec<i64>,
+    tcur: Vec<i64>,
+}
+
+/// Hard cap on one index table's entry count (the non-affine fallback
+/// stays a compile-time artifact, never a memory hazard).
+const TABLE_CAP: i64 = 1 << 22;
+
+/// Largest spatial space the compile-time write-injectivity proof will
+/// enumerate; beyond it the parallel path keeps the staged-scatter
+/// fallback rather than spending unbounded compile time.
+const INJECTIVITY_CAP: u64 = 1 << 22;
+
+/// A non-affine sub-term lowered to a lookup table over exactly the
+/// loop variables it mentions (mixed-radix index over their extents).
+#[derive(Clone, Debug)]
+struct StreamTable {
+    /// Mentioned loop variables, ascending.
+    vars: Vec<usize>,
+    /// Stride of each variable into `values` (mixed radix).
+    radix: Vec<i64>,
+    /// Precomputed term values, pre-scaled by the term's constant
+    /// multiplier.
+    values: Vec<i64>,
+}
+
+impl StreamTable {
+    #[inline]
+    fn index_of(&self, env: &[i64]) -> i64 {
+        let mut idx = 0i64;
+        for (v, r) in self.vars.iter().zip(&self.radix) {
+            idx += env[*v] * r;
+        }
+        idx
+    }
+}
+
+/// Affine-plus-tables decomposition of an index expression:
+/// `value(env) = c0 + Σ_v coeff[v]·env[v] + Σ_t values_t[idx_t(env)]`.
+/// Semantically equal to [`Expr::eval`] on every in-extent env (pinned
+/// by the randomized property tests below).
+#[derive(Clone, Debug)]
+struct Stream {
+    c0: i64,
+    coeff: Vec<i64>,
+    tables: Vec<StreamTable>,
+}
+
+impl Stream {
+    /// Decompose `e` over loop variables with the given per-var
+    /// extents. `None` when a non-affine sub-term's table would exceed
+    /// [`TABLE_CAP`] (or mentions a var without a known extent).
+    fn analyze(e: &Expr, extents: &[i64]) -> Option<Self> {
+        let mut s = Self {
+            c0: 0,
+            coeff: vec![0i64; extents.len()],
+            tables: Vec::new(),
+        };
+        if decompose(e, 1, extents, &mut s) {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Affine part only (tables excluded) — the cursor initialization.
+    #[inline]
+    fn affine_eval(&self, env: &[i64]) -> i64 {
+        let mut v = self.c0;
+        for (c, x) in self.coeff.iter().zip(env) {
+            v += c * x;
+        }
+        v
+    }
+
+    /// Full value, tables included.
+    #[inline]
+    fn eval(&self, env: &[i64]) -> i64 {
+        let mut v = self.affine_eval(env);
+        for t in &self.tables {
+            v += t.values[t.index_of(env) as usize];
+        }
+        v
+    }
+}
+
+/// Accumulate `k · e` into `out`. Affine structure (vars, constants,
+/// add/sub, multiplication by var-free factors) distributes exactly;
+/// anything else becomes a table over its mentioned variables.
+fn decompose(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
+    if e.vars().is_empty() {
+        out.c0 += k * e.eval(&[]);
+        return true;
+    }
+    match e {
+        Expr::Var(i) => {
+            out.coeff[*i] += k;
+            true
+        }
+        Expr::Add(a, b) => {
+            decompose(a, k, extents, out) && decompose(b, k, extents, out)
+        }
+        Expr::Sub(a, b) => {
+            decompose(a, k, extents, out) && decompose(b, -k, extents, out)
+        }
+        Expr::Mul(a, b) => {
+            if a.vars().is_empty() {
+                decompose(b, k * a.eval(&[]), extents, out)
+            } else if b.vars().is_empty() {
+                decompose(a, k * b.eval(&[]), extents, out)
+            } else {
+                tabulate(e, k, extents, out)
+            }
+        }
+        Expr::Div(..) | Expr::Mod(..) | Expr::Min(..) => {
+            tabulate(e, k, extents, out)
+        }
+        // Const is var-free, handled above
+        Expr::Const(_) => unreachable!("const has no vars"),
+    }
+}
+
+/// Lower `k · e` to a lookup table over the variables `e` mentions.
+fn tabulate(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
+    let vars: Vec<usize> = e.vars().into_iter().collect();
+    let mut exts = Vec::with_capacity(vars.len());
+    let mut size = 1i64;
+    for &v in &vars {
+        let ext = match extents.get(v) {
+            Some(&x) if x >= 1 => x,
+            _ => return false,
+        };
+        size = size.saturating_mul(ext);
+        exts.push(ext);
+    }
+    if size > TABLE_CAP {
+        return false;
+    }
+    let mut radix = vec![1i64; vars.len()];
+    for j in (0..vars.len().saturating_sub(1)).rev() {
+        radix[j] = radix[j + 1] * exts[j + 1];
+    }
+    let mut env = vec![0i64; extents.len()];
+    let mut values = vec![0i64; size as usize];
+    for (flat, slot) in values.iter_mut().enumerate() {
+        let mut rem = flat as i64;
+        for j in (0..vars.len()).rev() {
+            env[vars[j]] = rem % exts[j];
+            rem /= exts[j];
+        }
+        *slot = k * e.eval(&env);
+    }
+    out.tables.push(StreamTable { vars, radix, values });
+    true
+}
+
 /// Row-major strides of a storage shape.
 fn strides_of(shape: &[i64]) -> Vec<i64> {
     let mut strides = vec![1i64; shape.len()];
@@ -161,21 +391,237 @@ struct MacRead {
     has_red: bool,
 }
 
+/// Split a flat access into its spatial-only base and the
+/// reduction-varying remainder (per-dim terms; a term goes to the red
+/// part when its dim's index mentions any reduction var).
+fn split_access(acc: &TensorAccess, red_vars: &BTreeSet<usize>) -> (Expr, Expr) {
+    let strides = strides_of(&acc.storage_shape);
+    let mut base = Const(0);
+    let mut red = Const(0);
+    for (idx, &s) in acc.idx.iter().zip(&strides) {
+        let term = Expr::mul(idx.clone(), Const(s));
+        if idx.vars().iter().any(|v| red_vars.contains(v)) {
+            red = Expr::add(red, term);
+        } else {
+            base = Expr::add(base, term);
+        }
+    }
+    (base, red)
+}
+
 impl MacRead {
     fn build(buf: usize, acc: &TensorAccess, red_vars: &BTreeSet<usize>) -> Self {
-        let strides = strides_of(&acc.storage_shape);
-        let mut base = Const(0);
-        let mut red = Const(0);
-        for (idx, &s) in acc.idx.iter().zip(&strides) {
-            let term = Expr::mul(idx.clone(), Const(s));
-            if idx.vars().iter().any(|v| red_vars.contains(v)) {
-                red = Expr::add(red, term);
-            } else {
-                base = Expr::add(base, term);
-            }
-        }
+        let (base, red) = split_access(acc, red_vars);
         let has_red = !matches!(red, Const(0));
         Self { buf, base: Code::compile(&base), red: Code::compile(&red), has_red }
+    }
+}
+
+/// The compiled fast plan of one nest: every access expression lowered
+/// to an address stream, plus the reduction-odometer bump schedule and
+/// the trailing contiguous run the inner dot-product covers.
+#[derive(Debug)]
+struct FastNest {
+    lhs_base: Stream,
+    rhs_base: Stream,
+    /// Reduction-varying address parts (cursor-advanced by `*_bump`).
+    lhs_red: Stream,
+    rhs_red: Stream,
+    write: Stream,
+    /// Per tail stage, per operand: spatial address stream (`None` for
+    /// the chain value flowing through in registers).
+    tails: Vec<Vec<Option<Stream>>>,
+    /// Steps of the trailing contiguous run (product of the trailing
+    /// reduction-level extents whose per-step address delta is the
+    /// innermost stride for both operands); ≥ 1, divides `red_total`.
+    run_len: u64,
+    lhs_stride: i64,
+    rhs_stride: i64,
+    /// Reduction levels above the run (nest order).
+    outer: Vec<(usize, i64)>,
+    /// Cursor bump applied when outer level `li` increments by one
+    /// (deeper outer levels wrap from extent−1 to 0; run-level odometer
+    /// digits stay 0 — the run is walked by stride arithmetic instead).
+    lhs_bump: Vec<i64>,
+    rhs_bump: Vec<i64>,
+    /// Table-index cursor bumps: per outer level, one bump per table
+    /// (lhs tables first, then rhs — the `ExecScratch::tcur` layout).
+    tbl_bump: Vec<Vec<i64>>,
+}
+
+impl FastNest {
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        extents: &[i64],
+        reduction: &[(usize, i64)],
+        lhs_base_e: &Expr,
+        lhs_red_e: &Expr,
+        rhs_base_e: &Expr,
+        rhs_red_e: &Expr,
+        write_e: &Expr,
+        tail_exprs: &[Vec<Option<Expr>>],
+    ) -> Option<Self> {
+        let lhs_base = Stream::analyze(lhs_base_e, extents)?;
+        let rhs_base = Stream::analyze(rhs_base_e, extents)?;
+        let lhs_red = Stream::analyze(lhs_red_e, extents)?;
+        let rhs_red = Stream::analyze(rhs_red_e, extents)?;
+        let write = Stream::analyze(write_e, extents)?;
+        let mut tails = Vec::with_capacity(tail_exprs.len());
+        for stage in tail_exprs {
+            let mut ops = Vec::with_capacity(stage.len());
+            for e in stage {
+                ops.push(match e {
+                    None => None,
+                    Some(e) => Some(Stream::analyze(e, extents)?),
+                });
+            }
+            tails.push(ops);
+        }
+
+        // Trailing contiguous run: grow K from the innermost level out
+        // while (a) no table of either red stream mentions a run var —
+        // gathered terms must stay constant across the run — and (b)
+        // the per-step bump at every run level equals the innermost
+        // stride for both operands, so run addresses form an exact
+        // arithmetic progression.
+        let r = reduction.len();
+        let table_vars: BTreeSet<usize> = lhs_red
+            .tables
+            .iter()
+            .chain(&rhs_red.tables)
+            .flat_map(|t| t.vars.iter().copied())
+            .collect();
+        let mut k = 0usize;
+        'grow: while k < r {
+            let li = r - 1 - k;
+            let (v, _) = reduction[li];
+            if table_vars.contains(&v) {
+                break;
+            }
+            for s in [&lhs_red, &rhs_red] {
+                let d = s.coeff[reduction[r - 1].0];
+                let mut bump = s.coeff[v];
+                for &(vj, ej) in &reduction[li + 1..] {
+                    bump -= s.coeff[vj] * (ej - 1);
+                }
+                if bump != d {
+                    break 'grow;
+                }
+            }
+            k += 1;
+        }
+        let run_len: u64 = reduction[r - k..]
+            .iter()
+            .map(|&(_, e)| e as u64)
+            .product::<u64>()
+            .max(1);
+        let (lhs_stride, rhs_stride) = if k > 0 {
+            let vin = reduction[r - 1].0;
+            (lhs_red.coeff[vin], rhs_red.coeff[vin])
+        } else {
+            (0, 0)
+        };
+        let outer: Vec<(usize, i64)> = reduction[..r - k].to_vec();
+
+        // Bump schedule per cursor channel: incrementing outer level
+        // `li` adds coeff(v_li) while every deeper *outer* level wraps
+        // from extent−1 back to 0 (run levels never leave 0).
+        let bumps_for = |cv: &dyn Fn(usize) -> i64| -> Vec<i64> {
+            (0..outer.len())
+                .map(|li| {
+                    let mut b = cv(outer[li].0);
+                    for &(vj, ej) in &outer[li + 1..] {
+                        b -= cv(vj) * (ej - 1);
+                    }
+                    b
+                })
+                .collect()
+        };
+        let lhs_bump = bumps_for(&|v| lhs_red.coeff[v]);
+        let rhs_bump = bumps_for(&|v| rhs_red.coeff[v]);
+        let tbl_coeff = |t: &StreamTable, v: usize| -> i64 {
+            t.vars
+                .iter()
+                .position(|&tv| tv == v)
+                .map(|j| t.radix[j])
+                .unwrap_or(0)
+        };
+        let tbl_bump: Vec<Vec<i64>> = (0..outer.len())
+            .map(|li| {
+                lhs_red
+                    .tables
+                    .iter()
+                    .chain(&rhs_red.tables)
+                    .map(|t| {
+                        let mut b = tbl_coeff(t, outer[li].0);
+                        for &(vj, ej) in &outer[li + 1..] {
+                            b -= tbl_coeff(t, vj) * (ej - 1);
+                        }
+                        b
+                    })
+                    .collect()
+            })
+            .collect();
+
+        Some(Self {
+            lhs_base,
+            rhs_base,
+            lhs_red,
+            rhs_red,
+            write,
+            tails,
+            run_len,
+            lhs_stride,
+            rhs_stride,
+            outer,
+            lhs_bump,
+            rhs_bump,
+            tbl_bump,
+        })
+    }
+}
+
+/// Inner dot-product over one contiguous run: both addresses advance by
+/// a constant stride per step. The stride-1/no-gather specialization is
+/// a 4×-unrolled slice walk with a single accumulator — the exact
+/// accumulation order of the interpreter (element by element, in nest
+/// order), so results stay bit-identical; the win is dropping per-MAC
+/// bytecode dispatch, not reassociation.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dot(
+    lhs: OperandView,
+    rhs: OperandView,
+    la: i64,
+    ra: i64,
+    sl: i64,
+    sr: i64,
+    n: u64,
+    acc: &mut f32,
+) {
+    if sl == 1 && sr == 1 && lhs.gather.is_none() && rhs.gather.is_none() {
+        let n = n as usize;
+        let xs = &lhs.data[la as usize..la as usize + n];
+        let ys = &rhs.data[ra as usize..ra as usize + n];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            *acc += xs[i] * ys[i];
+            *acc += xs[i + 1] * ys[i + 1];
+            *acc += xs[i + 2] * ys[i + 2];
+            *acc += xs[i + 3] * ys[i + 3];
+            i += 4;
+        }
+        while i < n {
+            *acc += xs[i] * ys[i];
+            i += 1;
+        }
+    } else {
+        let (mut la, mut ra) = (la, ra);
+        for _ in 0..n {
+            *acc += lhs.ld(la as usize) * rhs.ld(ra as usize);
+            la += sl;
+            ra += sr;
+        }
     }
 }
 
@@ -208,53 +654,81 @@ struct TailStage {
 }
 
 impl TailStage {
+    /// Combine operand values (fetched by index through `val`) per the
+    /// stage's kind — shared by the bytecode and stream executors so
+    /// both paths apply the exact same `f32` operations in the exact
+    /// same order.
     #[inline]
-    fn apply(
-        &self,
-        chain: f32,
-        bufs: &[&[f32]],
-        env: &[i64],
-        stack: &mut Vec<i64>,
-    ) -> f32 {
-        let val = |op: &TailOperand| -> f32 {
-            match op {
-                TailOperand::Chain => chain,
-                TailOperand::Read { buf, addr } => {
-                    bufs[*buf][addr.eval(env, stack) as usize]
-                }
-            }
-        };
+    fn combine(&self, mut val: impl FnMut(usize) -> f32) -> f32 {
         match self.kind {
             TailKind::Sum => {
-                let mut s = val(&self.operands[0]);
-                for op in &self.operands[1..] {
-                    s += val(op);
+                let mut s = val(0);
+                for i in 1..self.operands.len() {
+                    s += val(i);
                 }
                 s
             }
             TailKind::Product => {
-                let mut p = val(&self.operands[0]);
-                for op in &self.operands[1..] {
-                    p *= val(op);
+                let mut p = val(0);
+                for i in 1..self.operands.len() {
+                    p *= val(i);
                 }
                 p
             }
-            TailKind::Relu => val(&self.operands[0]).max(0.0),
-            TailKind::Relu6 => val(&self.operands[0]).clamp(0.0, 6.0),
+            TailKind::Relu => val(0).max(0.0),
+            TailKind::Relu6 => val(0).clamp(0.0, 6.0),
             TailKind::Sigmoid => {
-                let x = val(&self.operands[0]);
+                let x = val(0);
                 1.0 / (1.0 + (-x).exp())
             }
             TailKind::Gelu => {
-                let x = val(&self.operands[0]);
+                let x = val(0);
                 0.5 * x
                     * (1.0
                         + (0.797_884_6_f32 * (x + 0.044_715 * x * x * x))
                             .tanh())
             }
-            TailKind::Tanh => val(&self.operands[0]).tanh(),
-            TailKind::Identity => val(&self.operands[0]),
+            TailKind::Tanh => val(0).tanh(),
+            TailKind::Identity => val(0),
         }
+    }
+
+    #[inline]
+    fn apply(
+        &self,
+        chain: f32,
+        bufs: &[OperandView],
+        env: &[i64],
+        stack: &mut Vec<i64>,
+    ) -> f32 {
+        self.combine(|i| match &self.operands[i] {
+            TailOperand::Chain => chain,
+            TailOperand::Read { buf, addr } => {
+                bufs[*buf].ld(addr.eval(env, stack) as usize)
+            }
+        })
+    }
+
+    /// Fast-path variant: operand addresses come from precompiled
+    /// streams (index-aligned with `operands`; `None` for the chain
+    /// value flowing through in registers).
+    #[inline]
+    fn apply_streams(
+        &self,
+        chain: f32,
+        bufs: &[OperandView],
+        env: &[i64],
+        streams: &[Option<Stream>],
+    ) -> f32 {
+        self.combine(|i| match (&self.operands[i], &streams[i]) {
+            (TailOperand::Chain, _) => chain,
+            (TailOperand::Read { buf, .. }, Some(s)) => {
+                bufs[*buf].ld(s.eval(env) as usize)
+            }
+            (TailOperand::Read { .. }, None) => {
+                unreachable!("tail read without a compiled stream")
+            }
+        })
     }
 }
 
@@ -282,6 +756,10 @@ struct UnpackPlan {
     /// One code per storage dim, over logical-dim vars `0..rank`.
     dims: Vec<Code>,
     storage_strides: Vec<i64>,
+    /// Precompiled storage address per logical element — the gather map
+    /// [`ExecMode::Fast`] unpacks through instead of re-evaluating
+    /// `dims` bytecode per element on every run.
+    map: Vec<i64>,
 }
 
 /// A compiled tensor-program variant, ready to execute on the host.
@@ -310,7 +788,28 @@ pub struct NativeExecutable {
     /// Product of `parallel`-annotated spatial loop extents (1 when
     /// the schedule grants no parallelism).
     par_extent: u64,
+    /// Strided fast plan (`None` when some access resisted the
+    /// affine-plus-tables decomposition — the nest stays on bytecode).
+    fast: Option<FastNest>,
+    /// Which executor runs (Fast is only effective when `fast` is
+    /// `Some`; Bytecode always forces the interpreter).
+    mode: ExecMode,
+    /// Compile-time proof that the write map is injective and
+    /// in-bounds over the spatial space, enabling the direct-write
+    /// parallel path (workers share the output buffer instead of
+    /// staging `(addr, value)` pairs for a serial scatter).
+    write_direct: bool,
 }
+
+/// Shared output pointer for the injective direct-write parallel path.
+///
+/// Safety: `compile` proved every spatial point writes a distinct
+/// in-bounds slot (`write_direct`), and workers own disjoint spatial
+/// chunks, so no two threads ever write the same element.
+#[derive(Clone, Copy)]
+struct SharedOut(*mut f32);
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
 
 fn resolve_threads(threads: usize) -> usize {
     if threads > 0 {
@@ -448,6 +947,7 @@ impl NativeExecutable {
         let mut next_acc = 3usize;
         let tail_end = if fused_tail.is_empty() { 3 } else { accs.len() - 1 };
         let mut tail: Vec<TailStage> = Vec::new();
+        let mut tail_exprs: Vec<Vec<Option<Expr>>> = Vec::new();
         for &tid in fused_tail {
             let tnode = graph.node(tid);
             let kind = match &tnode.kind {
@@ -468,12 +968,14 @@ impl NativeExecutable {
                 ),
             };
             let mut operands = Vec::new();
+            let mut op_exprs: Vec<Option<Expr>> = Vec::new();
             for &inp in &tnode.inputs {
                 let prod = graph.tensor(inp).producer;
                 let is_chain = prod == Some(node_id)
                     || prod.map(|p| fused_tail.contains(&p)).unwrap_or(false);
                 if is_chain {
                     operands.push(TailOperand::Chain);
+                    op_exprs.push(None);
                     continue;
                 }
                 if next_acc >= tail_end {
@@ -491,13 +993,16 @@ impl NativeExecutable {
                     bail!("{name}: tail read depends on reduction vars");
                 }
                 let buf = buf_of(inp, acc)?;
+                let e = flat_expr(acc);
                 operands.push(TailOperand::Read {
                     buf,
-                    addr: Code::compile(&flat_expr(acc)),
+                    addr: Code::compile(&e),
                 });
+                op_exprs.push(Some(e));
                 next_acc += 1;
             }
             tail.push(TailStage { kind, operands });
+            tail_exprs.push(op_exprs);
         }
         if next_acc != tail_end {
             bail!(
@@ -509,7 +1014,7 @@ impl NativeExecutable {
         // Final write + logical unpack plan.
         let write_acc = &accs[write_idx];
         let out_len: i64 = write_acc.storage_shape.iter().product();
-        if out_len <= 0 || out_len as u64 > u32::MAX as u64 {
+        if out_len <= 0 {
             bail!("{name}: output storage of {out_len} elements out of range");
         }
         let fin = if let Some(&last) = fused_tail.last() {
@@ -525,15 +1030,39 @@ impl NativeExecutable {
         let logical_acc: Vec<crate::layout::DimAccess> = (0..fin_t.rank())
             .map(|d| crate::layout::DimAccess::Simple(Expr::Var(d)))
             .collect();
+        let dims: Vec<Code> = fin_tf
+            .rewrite_access(&logical_acc)
+            .iter()
+            .map(|a| Code::compile(&a.to_expr()))
+            .collect();
+        let storage_strides = strides_of(&write_acc.storage_shape);
+        // Precompute the logical→storage gather map once; fast-mode
+        // unpacking is then a straight indexed copy.
+        let logical_len = fin_t.elements() as usize;
+        let rank = fin_t.rank();
+        let mut map = vec![0i64; logical_len];
+        {
+            let mut idx = vec![0i64; rank];
+            let mut stack: Vec<i64> = Vec::with_capacity(16);
+            for (flat, slot) in map.iter_mut().enumerate() {
+                let mut rem = flat as i64;
+                for d in (0..rank).rev() {
+                    idx[d] = rem % fin_t.shape[d];
+                    rem /= fin_t.shape[d];
+                }
+                let mut saddr = 0i64;
+                for (code, &stride) in dims.iter().zip(&storage_strides) {
+                    saddr += code.eval(&idx, &mut stack) * stride;
+                }
+                *slot = saddr;
+            }
+        }
         let unpack = UnpackPlan {
             logical_shape: fin_t.shape.clone(),
-            logical_len: fin_t.elements() as usize,
-            dims: fin_tf
-                .rewrite_access(&logical_acc)
-                .iter()
-                .map(|a| Code::compile(&a.to_expr()))
-                .collect(),
-            storage_strides: strides_of(&write_acc.storage_shape),
+            logical_len,
+            dims,
+            storage_strides,
+            map,
         };
 
         // Parallel width granted by the schedule: the product of the
@@ -547,6 +1076,56 @@ impl NativeExecutable {
             .map(|l| l.extent as u64)
             .product();
 
+        // Strided fast plan: lower every access to an address stream
+        // over the loop odometer. Any access that resists (a non-affine
+        // sub-term whose table would blow TABLE_CAP) leaves the whole
+        // nest on bytecode permanently.
+        let mut var_extents = vec![0i64; env_len];
+        for l in &program.loops {
+            var_extents[l.var] = l.extent;
+        }
+        let (lhs_base_e, lhs_red_e) = split_access(&accs[1], &red_vars);
+        let (rhs_base_e, rhs_red_e) = split_access(&accs[2], &red_vars);
+        let write_e = flat_expr(write_acc);
+        let fast = FastNest::build(
+            &var_extents,
+            &reduction,
+            &lhs_base_e,
+            &lhs_red_e,
+            &rhs_base_e,
+            &rhs_red_e,
+            &write_e,
+            &tail_exprs,
+        );
+
+        // Write-map injectivity proof: when every spatial point writes
+        // a distinct in-bounds address, parallel workers can write the
+        // shared output buffer directly (no staged scatter).
+        let write = Code::compile(&write_e);
+        let mut write_direct = false;
+        if spatial_total <= INJECTIVITY_CAP {
+            let mut env = vec![0i64; env_len];
+            let mut stack: Vec<i64> = Vec::with_capacity(16);
+            let mut seen = vec![false; out_len as usize];
+            let mut ok = true;
+            for _ in 0..spatial_total {
+                let a = write.eval(&env, &mut stack);
+                if a < 0 || a >= out_len || seen[a as usize] {
+                    ok = false;
+                    break;
+                }
+                seen[a as usize] = true;
+                for &(v, e) in spatial.iter().rev() {
+                    env[v] += 1;
+                    if env[v] < e {
+                        break;
+                    }
+                    env[v] = 0;
+                }
+            }
+            write_direct = ok;
+        }
+
         Ok(Self {
             name: name.to_string(),
             threads: resolve_threads(threads),
@@ -559,11 +1138,14 @@ impl NativeExecutable {
             lhs,
             rhs,
             tail,
-            write: Code::compile(&flat_expr(write_acc)),
+            write,
             out_len: out_len as usize,
             written: fin,
             unpack,
             par_extent,
+            fast,
+            mode: ExecMode::Fast,
+            write_direct,
             program,
         })
     }
@@ -580,6 +1162,30 @@ impl NativeExecutable {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Select the executor. `Fast` (the default) runs the strided
+    /// address-stream plan when one compiled, falling back to bytecode
+    /// otherwise; `Bytecode` always forces the reference interpreter
+    /// (the oracle the fast path is golden-tested against).
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Whether the strided fast plan compiled for this nest (i.e. every
+    /// access expression decomposed into an address stream).
+    pub fn has_fast_path(&self) -> bool {
+        self.fast.is_some()
+    }
+
+    /// Whether the compile-time injectivity proof enables direct
+    /// shared-buffer writes on the parallel path.
+    pub fn writes_direct(&self) -> bool {
+        self.write_direct
     }
 
     /// Whether this program carries a live `parallel` annotation (and
@@ -668,26 +1274,43 @@ impl NativeExecutable {
         bufs: &[&[f32]],
         out: &mut Vec<f32>,
     ) -> Result<()> {
-        if bufs.len() != self.inputs.len() {
+        let views: Vec<OperandView> =
+            bufs.iter().map(|b| OperandView::direct(b)).collect();
+        let mut scratch = ExecScratch::default();
+        self.run_storage_views_into(&views, out, &mut scratch)
+    }
+
+    /// [`run_storage_into`](Self::run_storage_into) over operand
+    /// *views*: each slot is raw storage or storage redirected through
+    /// a precompiled gather map (a fused Fig. 5a repack edge), and the
+    /// caller supplies reusable execution scratch so repeated runs
+    /// allocate nothing.
+    pub fn run_storage_views_into(
+        &self,
+        ops: &[OperandView],
+        out: &mut Vec<f32>,
+        scratch: &mut ExecScratch,
+    ) -> Result<()> {
+        if ops.len() != self.inputs.len() {
             bail!(
                 "{}: want {} packed operands, got {}",
                 self.name,
                 self.inputs.len(),
-                bufs.len()
+                ops.len()
             );
         }
-        for (data, buf) in bufs.iter().zip(&self.inputs) {
-            if data.len() != buf.packed_len {
+        for (view, buf) in ops.iter().zip(&self.inputs) {
+            if view.view_len() != buf.packed_len {
                 bail!(
                     "{}: packed operand {} has {} elements, want {}",
                     self.name,
                     buf.name,
-                    data.len(),
+                    view.view_len(),
                     buf.packed_len
                 );
             }
         }
-        self.execute_into(bufs, out);
+        self.execute_into(ops, out, scratch);
         Ok(())
     }
 
@@ -747,10 +1370,12 @@ impl NativeExecutable {
 
     /// Timed execution over already-packed storage buffers.
     fn run_packed(&self, packed: &[Vec<f32>]) -> (RunStats, Vec<f32>) {
-        let refs: Vec<&[f32]> = packed.iter().map(|v| v.as_slice()).collect();
+        let views: Vec<OperandView> =
+            packed.iter().map(|v| OperandView::direct(v)).collect();
+        let mut scratch = ExecScratch::default();
         let t0 = Instant::now();
         let mut storage = Vec::new();
-        self.execute_into(&refs, &mut storage);
+        self.execute_into(&views, &mut storage, &mut scratch);
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let out = self.unpack(&storage);
@@ -781,10 +1406,15 @@ impl NativeExecutable {
         Ok((crate::util::stats::median(&mut times), out))
     }
 
-    /// Execute the program over packed storage buffers, producing the
+    /// Execute the program over packed operand views, producing the
     /// final tensor's storage buffer in `storage` (cleared + zeroed, so
     /// recycled buffers are safe).
-    fn execute_into(&self, bufs: &[&[f32]], storage: &mut Vec<f32>) {
+    fn execute_into(
+        &self,
+        bufs: &[OperandView],
+        storage: &mut Vec<f32>,
+        scratch: &mut ExecScratch,
+    ) {
         let total = self.spatial_total;
         // Honor the `parallel` annotation the way the simulator does:
         // the schedule grants at most `par_extent` parallel units, the
@@ -796,25 +1426,46 @@ impl NativeExecutable {
         storage.clear();
         storage.resize(self.out_len, 0f32);
         if workers <= 1 {
-            self.exec_range(bufs, 0, total, |a, v| storage[a as usize] = v);
+            self.exec_range(bufs, 0, total, scratch, |a, v| storage[a] = v);
             return;
         }
-        // Workers emit (address, value) pairs merged by one serial
-        // scatter: O(out_len) extra work inside the timed region, a
-        // deliberate trade for safe disjoint-write parallelism. It is
-        // bounded by the output size — two orders of magnitude below
-        // the MAC loop for every shipped variant — so it cannot
-        // meaningfully compress a parallel variant's measured edge.
         let chunk = total.div_ceil(workers as u64);
-        let parts: Vec<Vec<(u32, f32)>> = std::thread::scope(|s| {
+        if self.write_direct {
+            // Injective in-bounds write map (proved at compile): each
+            // spatial chunk writes a disjoint set of output slots, so
+            // workers write the shared buffer in place — no staged
+            // `(addr, value)` pairs, no serial scatter.
+            let out = SharedOut(storage.as_mut_ptr());
+            std::thread::scope(|s| {
+                for w in 0..workers as u64 {
+                    let lo = (w * chunk).min(total);
+                    let hi = ((w + 1) * chunk).min(total);
+                    s.spawn(move || {
+                        let mut scratch = ExecScratch::default();
+                        self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
+                            // SAFETY: see SharedOut — addresses are
+                            // in-bounds and disjoint across workers.
+                            unsafe { *out.0.add(a) = v }
+                        });
+                    });
+                }
+            });
+            return;
+        }
+        // Fallback (write map not proved injective, e.g. beyond the
+        // enumeration cap): workers emit (address, value) pairs merged
+        // by one serial scatter — O(out_len) extra work, bounded by the
+        // output size.
+        let parts: Vec<Vec<(usize, f32)>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers as u64)
                 .map(|w| {
                     let lo = (w * chunk).min(total);
                     let hi = ((w + 1) * chunk).min(total);
                     s.spawn(move || {
+                        let mut scratch = ExecScratch::default();
                         let mut part =
                             Vec::with_capacity((hi - lo) as usize);
-                        self.exec_range(bufs, lo, hi, |a, v| {
+                        self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
                             part.push((a, v));
                         });
                         part
@@ -827,7 +1478,7 @@ impl NativeExecutable {
         // written by exactly one worker; scatter in worker order.
         for part in parts {
             for (a, v) in part {
-                storage[a as usize] = v;
+                storage[a] = v;
             }
         }
     }
@@ -835,36 +1486,58 @@ impl NativeExecutable {
     /// Execute spatial iterations `[lo, hi)` of the flattened spatial
     /// space (nest order, last spatial loop least significant),
     /// emitting one `(storage address, value)` per output element.
-    fn exec_range<F: FnMut(u32, f32)>(
+    fn exec_range<F: FnMut(usize, f32)>(
         &self,
-        bufs: &[&[f32]],
+        bufs: &[OperandView],
         lo: u64,
         hi: u64,
+        scratch: &mut ExecScratch,
+        emit: F,
+    ) {
+        match (&self.fast, self.mode) {
+            (Some(fast), ExecMode::Fast) => {
+                self.exec_range_fast(fast, bufs, lo, hi, scratch, emit)
+            }
+            _ => self.exec_range_bytecode(bufs, lo, hi, scratch, emit),
+        }
+    }
+
+    /// The stack-bytecode interpreter: re-evaluates the reduction
+    /// address codes per MAC. Kept as the reference oracle
+    /// ([`ExecMode::Bytecode`]) and the fallback when no fast plan
+    /// compiled.
+    fn exec_range_bytecode<F: FnMut(usize, f32)>(
+        &self,
+        bufs: &[OperandView],
+        lo: u64,
+        hi: u64,
+        scratch: &mut ExecScratch,
         mut emit: F,
     ) {
-        let mut env = vec![0i64; self.env_len];
-        let mut stack: Vec<i64> = Vec::with_capacity(16);
+        let ExecScratch { env, stack, .. } = scratch;
+        env.clear();
+        env.resize(self.env_len, 0);
         // decode `lo` into the spatial odometer
         let mut rem = lo;
         for &(v, e) in self.spatial.iter().rev() {
             env[v] = (rem % e as u64) as i64;
             rem /= e as u64;
         }
-        let lhs_buf = &bufs[self.lhs.buf];
-        let rhs_buf = &bufs[self.rhs.buf];
+        let lhs_view = bufs[self.lhs.buf];
+        let rhs_view = bufs[self.rhs.buf];
         for _ in lo..hi {
             // spatial-invariant address parts, hoisted
-            let lhs_base = self.lhs.base.eval(&env, &mut stack);
-            let rhs_base = self.rhs.base.eval(&env, &mut stack);
+            let lhs_base = self.lhs.base.eval(env, stack);
+            let rhs_base = self.rhs.base.eval(env, stack);
             // reduction loops, nest order (all red vars start at 0 and
             // wrap back to 0 after red_total steps)
             let mut acc = 0f32;
             if self.lhs.has_red || self.rhs.has_red {
                 for _ in 0..self.red_total {
-                    let a = lhs_buf
-                        [(lhs_base + self.lhs.red.eval(&env, &mut stack)) as usize];
-                    let b = rhs_buf
-                        [(rhs_base + self.rhs.red.eval(&env, &mut stack)) as usize];
+                    let a = lhs_view
+                        .ld((lhs_base + self.lhs.red.eval(env, stack)) as usize);
+                    let b = rhs_view
+                        .ld((rhs_base + self.rhs.red.eval(env, stack)) as usize);
                     acc += a * b;
                     for &(v, e) in self.reduction.iter().rev() {
                         env[v] += 1;
@@ -876,17 +1549,123 @@ impl NativeExecutable {
                 }
             } else {
                 // degenerate: both operands spatial-only
-                let a = lhs_buf[lhs_base as usize];
-                let b = rhs_buf[rhs_base as usize];
+                let a = lhs_view.ld(lhs_base as usize);
+                let b = rhs_view.ld(rhs_base as usize);
                 acc = a * b * self.red_total as f32;
             }
             // fused elementwise tail, in registers
             let mut v = acc;
             for stage in &self.tail {
-                v = stage.apply(v, bufs, &env, &mut stack);
+                v = stage.apply(v, bufs, env, stack);
             }
-            let addr = self.write.eval(&env, &mut stack);
-            emit(addr as u32, v);
+            let addr = self.write.eval(env, stack);
+            emit(addr as usize, v);
+            // advance the spatial odometer
+            for &(sv, e) in self.spatial.iter().rev() {
+                env[sv] += 1;
+                if env[sv] < e {
+                    break;
+                }
+                env[sv] = 0;
+            }
+        }
+    }
+
+    /// The strided executor: per spatial point, reduction addresses are
+    /// cursors advanced by precomputed bumps as the outer reduction
+    /// odometer turns, and the trailing contiguous run is an unrolled
+    /// dot-product. Accumulation order is identical to the bytecode
+    /// interpreter (nest order, one accumulator), so outputs are
+    /// bit-identical.
+    fn exec_range_fast<F: FnMut(usize, f32)>(
+        &self,
+        fast: &FastNest,
+        bufs: &[OperandView],
+        lo: u64,
+        hi: u64,
+        scratch: &mut ExecScratch,
+        mut emit: F,
+    ) {
+        let ExecScratch { env, tcur, .. } = scratch;
+        env.clear();
+        env.resize(self.env_len, 0);
+        let n_lt = fast.lhs_red.tables.len();
+        let n_tbl = n_lt + fast.rhs_red.tables.len();
+        tcur.clear();
+        tcur.resize(n_tbl, 0);
+        // decode `lo` into the spatial odometer
+        let mut rem = lo;
+        for &(v, e) in self.spatial.iter().rev() {
+            env[v] = (rem % e as u64) as i64;
+            rem /= e as u64;
+        }
+        let lhs_view = bufs[self.lhs.buf];
+        let rhs_view = bufs[self.rhs.buf];
+        let runs = self.red_total / fast.run_len;
+        for _ in lo..hi {
+            let mut acc = 0f32;
+            if self.lhs.has_red || self.rhs.has_red {
+                // cursors at the spatial point (all red vars are 0)
+                let mut lc =
+                    fast.lhs_base.eval(env) + fast.lhs_red.affine_eval(env);
+                let mut rc =
+                    fast.rhs_base.eval(env) + fast.rhs_red.affine_eval(env);
+                for (j, t) in fast.lhs_red.tables.iter().enumerate() {
+                    tcur[j] = t.index_of(env);
+                }
+                for (j, t) in fast.rhs_red.tables.iter().enumerate() {
+                    tcur[n_lt + j] = t.index_of(env);
+                }
+                for _ in 0..runs {
+                    let mut la = lc;
+                    for (j, t) in fast.lhs_red.tables.iter().enumerate() {
+                        la += t.values[tcur[j] as usize];
+                    }
+                    let mut ra = rc;
+                    for (j, t) in fast.rhs_red.tables.iter().enumerate() {
+                        ra += t.values[tcur[n_lt + j] as usize];
+                    }
+                    dot(
+                        lhs_view,
+                        rhs_view,
+                        la,
+                        ra,
+                        fast.lhs_stride,
+                        fast.rhs_stride,
+                        fast.run_len,
+                        &mut acc,
+                    );
+                    // advance the outer reduction odometer one notch
+                    // (after the final run every level wraps back to 0,
+                    // leaving env clean for the tail/write evals)
+                    for (li, &(v, e)) in fast.outer.iter().enumerate().rev()
+                    {
+                        env[v] += 1;
+                        if env[v] < e {
+                            lc += fast.lhs_bump[li];
+                            rc += fast.rhs_bump[li];
+                            for (j, b) in
+                                fast.tbl_bump[li].iter().enumerate()
+                            {
+                                tcur[j] += b;
+                            }
+                            break;
+                        }
+                        env[v] = 0;
+                    }
+                }
+            } else {
+                // degenerate: both operands spatial-only
+                let a = lhs_view.ld(fast.lhs_base.eval(env) as usize);
+                let b = rhs_view.ld(fast.rhs_base.eval(env) as usize);
+                acc = a * b * self.red_total as f32;
+            }
+            // fused elementwise tail, in registers
+            let mut v = acc;
+            for (stage, streams) in self.tail.iter().zip(&fast.tails) {
+                v = stage.apply_streams(v, bufs, env, streams);
+            }
+            emit(fast.write.eval(env) as usize, v);
             // advance the spatial odometer
             for &(sv, e) in self.spatial.iter().rev() {
                 env[sv] += 1;
@@ -901,6 +1680,10 @@ impl NativeExecutable {
     /// Fold the executed storage buffer back to logical row-major.
     fn unpack(&self, storage: &[f32]) -> Vec<f32> {
         let u = &self.unpack;
+        if self.mode == ExecMode::Fast {
+            // precompiled gather map: one indexed copy per element
+            return u.map.iter().map(|&a| storage[a as usize]).collect();
+        }
         let rank = u.logical_shape.len();
         let mut out = vec![0f32; u.logical_len];
         let mut idx = vec![0i64; rank];
@@ -1003,6 +1786,133 @@ mod tests {
         let (stats, out) = exe.run_with_output(&[xs, ws, bias]).unwrap();
         assert_eq!(stats.output_elems, 4);
         assert_eq!(out, vec![22.5, 27.0, 49.5, 63.0]);
+    }
+
+    /// Random access-like expression over `nvars` loop vars. Div/Mod
+    /// divisors are positive constants (mirroring split/unfold codegen;
+    /// `Expr::eval` debug-asserts on zero divisors).
+    fn rand_expr(rng: &mut crate::util::rng::Rng, depth: usize, nvars: usize) -> Expr {
+        if depth == 0 || rng.below(4) == 0 {
+            return if rng.below(2) == 0 {
+                Expr::Var(rng.below(nvars))
+            } else {
+                Const(rng.below(7) as i64 - 3)
+            };
+        }
+        let a = rand_expr(rng, depth - 1, nvars);
+        let b = rand_expr(rng, depth - 1, nvars);
+        match rng.below(6) {
+            0 => Expr::add(a, b),
+            1 => Expr::sub(a, b),
+            2 => Expr::mul(a, b),
+            3 => Expr::div(a, Const(1 + rng.below(7) as i64)),
+            4 => Expr::rem(a, Const(1 + rng.below(7) as i64)),
+            _ => Expr::min(a, b),
+        }
+    }
+
+    #[test]
+    fn stream_analyzer_agrees_with_expr_and_code_eval() {
+        let extents = [3i64, 4, 2, 5];
+        let total: i64 = extents.iter().product();
+        let mut rng = crate::util::rng::Rng::new(0xA17);
+        let mut analyzed = 0usize;
+        let mut stack: Vec<i64> = Vec::new();
+        let mut env = vec![0i64; extents.len()];
+        for _ in 0..300 {
+            let e = rand_expr(&mut rng, 3, extents.len());
+            let s = match Stream::analyze(&e, &extents) {
+                Some(s) => s,
+                None => continue,
+            };
+            analyzed += 1;
+            let code = Code::compile(&e);
+            for flat in 0..total {
+                let mut rem = flat;
+                for d in (0..extents.len()).rev() {
+                    env[d] = rem % extents[d];
+                    rem /= extents[d];
+                }
+                let want = e.eval(&env);
+                assert_eq!(s.eval(&env), want, "stream vs expr: {e:?} @ {env:?}");
+                assert_eq!(
+                    code.eval(&env, &mut stack),
+                    want,
+                    "code vs expr: {e:?} @ {env:?}"
+                );
+            }
+        }
+        assert!(analyzed > 100, "only {analyzed}/300 exprs analyzed");
+    }
+
+    #[test]
+    fn stream_tabulates_pad_clamp_and_split_idioms() {
+        // min(v0, 3) — the pad-clamp shape; (v0*4+v1) div/mod — the
+        // split-dim recombination shape (non-affine over two vars).
+        let extents = [6i64, 4];
+        let clamp = Expr::min(Expr::Var(0), Const(3));
+        let recomb = Expr::add(
+            Expr::mul(
+                Expr::div(
+                    Expr::add(Expr::mul(Expr::Var(0), Const(4)), Expr::Var(1)),
+                    Const(3),
+                ),
+                Const(7),
+            ),
+            Expr::rem(Expr::Var(0), Const(2)),
+        );
+        for e in [clamp, recomb] {
+            let s = Stream::analyze(&e, &extents).expect("analyzable");
+            assert!(!s.tables.is_empty(), "{e:?} should need a table");
+            for a in 0..extents[0] {
+                for b in 0..extents[1] {
+                    let env = [a, b];
+                    assert_eq!(s.eval(&env), e.eval(&env), "{e:?} @ {env:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analyzer_rejects_oversized_tables() {
+        // v0*v1 over extents whose product exceeds TABLE_CAP
+        let big = [TABLE_CAP / 2, 3];
+        let e = Expr::mul(Expr::Var(0), Expr::Var(1));
+        assert!(Stream::analyze(&e, &big).is_none());
+        // affine exprs are immune to the cap
+        let aff = Expr::add(Expr::mul(Expr::Var(0), Const(9)), Expr::Var(1));
+        assert!(Stream::analyze(&aff, &big).is_some());
+    }
+
+    #[test]
+    fn fast_path_matches_bytecode_on_tiny_dense() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &["M", "K"], &[2, 3]);
+        b.dense("fc", x, 2);
+        let g = b.finish();
+        let dense = g.complex_nodes()[0];
+        let layouts = LayoutAssignment::identity(&g);
+        let sched = LoopSchedule::identity(&[2, 2], &[3]);
+        let mut exe = NativeExecutable::compile(
+            "fastcheck",
+            &g,
+            dense,
+            &[dense + 1],
+            &layouts,
+            &sched,
+            16,
+            1,
+        )
+        .unwrap();
+        assert!(exe.has_fast_path(), "identity dense must get a fast plan");
+        assert_eq!(exe.exec_mode(), ExecMode::Fast);
+        let inputs = exe.seeded_inputs(3);
+        let (_, fast) = exe.run_with_output(&inputs).unwrap();
+        exe.set_exec_mode(ExecMode::Bytecode);
+        assert_eq!(exe.exec_mode(), ExecMode::Bytecode);
+        let (_, slow) = exe.run_with_output(&inputs).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&fast), bits(&slow), "fast path diverged from oracle");
     }
 
     #[test]

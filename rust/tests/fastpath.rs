@@ -1,0 +1,207 @@
+//! Fast-path ≡ interpreter golden suite: the compiled strided
+//! executors (address streams + gather-fused repack edges, PR 6) must
+//! be bit-identical to the retained bytecode interpreter — the
+//! pre-existing reference oracle kept behind [`ExecMode::Bytecode`] —
+//! on every §7.3.3 case-study variant and on both serving zoo models,
+//! at every thread count.
+//!
+//! Pinned properties:
+//! * every layout variant compiles a fast plan (the analyzer covers
+//!   split/reorder/unfold/pad access exprs via affine strides plus
+//!   index tables) and its output matches bytecode bit-for-bit,
+//! * whole-model runs (`resnet18_small`, `bert_tiny`) are bit-identical
+//!   across executor modes and across thread counts,
+//! * a Fig. 5a conversion edge fused into the consumer's read-side
+//!   address stream produces the same bits as the materialized copy,
+//!   and the fused/materialized repack split accounts for it,
+//! * the direct-write parallel plan (workers writing disjoint output
+//!   slices) is used whenever the write map proves injective.
+
+use std::collections::HashMap;
+
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::layout::{LayoutSeq, Primitive};
+use alt::propagate::ComplexDecision;
+use alt::runtime::variants::{case_executables, Scale};
+use alt::runtime::ExecMode;
+use alt::sim::HwProfile;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn session(name: &str, threads: usize) -> Session {
+    Session::for_model(name)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .with_profile(HwProfile::intel())
+        .with_options(TuneOptions {
+            budget: 60,
+            seed: 9,
+            shards: 0,
+            ..Default::default()
+        })
+        .with_exec_threads(threads)
+}
+
+#[test]
+fn case_variants_fast_matches_bytecode() {
+    let hw = HwProfile::intel();
+    for threads in [1usize, 2] {
+        let mut exes = case_executables(Scale::Small, &hw, threads).unwrap();
+        for exe in &mut exes {
+            assert!(
+                exe.has_fast_path(),
+                "{}: no fast plan at Small scale",
+                exe.name()
+            );
+            assert_eq!(exe.exec_mode(), ExecMode::Fast);
+            let inputs = exe.seeded_inputs(7);
+            let (_, fast) = exe.run_with_output(&inputs).unwrap();
+            exe.set_exec_mode(ExecMode::Bytecode);
+            let (_, interp) = exe.run_with_output(&inputs).unwrap();
+            assert_eq!(
+                bits(&fast),
+                bits(&interp),
+                "{} (threads={threads}): fast path diverged from bytecode",
+                exe.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_variant_uses_direct_write_parallelism() {
+    let hw = HwProfile::intel();
+    let exes = case_executables(Scale::Small, &hw, 2).unwrap();
+    let tiled = exes
+        .iter()
+        .find(|e| e.name() == "case_tiled")
+        .expect("case_tiled variant");
+    assert!(tiled.is_parallel(), "tiled schedule must carry parallel");
+    // the tiled write map is a bijection, so compile proves injectivity
+    // and workers write their output slices without the scatter pass
+    assert!(tiled.writes_direct(), "injective write map must go direct");
+}
+
+#[test]
+fn zoo_models_fast_matches_bytecode() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let s = session(name, 2);
+        let mut model = s.baseline().compile().unwrap();
+        assert_eq!(model.exec_mode(), ExecMode::Fast);
+        assert!(
+            model.all_fast_paths(),
+            "{name}: some nest fell back to bytecode"
+        );
+        let inputs = model.seeded_inputs(33);
+        let (_, fast) = model.run_with_output(&inputs).unwrap();
+        model.set_exec_mode(ExecMode::Bytecode);
+        let (_, interp) = model.run_with_output(&inputs).unwrap();
+        assert_eq!(
+            bits(&fast),
+            bits(&interp),
+            "{name}: executor modes diverged"
+        );
+    }
+}
+
+#[test]
+fn tuned_zoo_models_fast_matches_bytecode() {
+    // a real (small-budget) tuning run exercises non-identity layouts,
+    // conversions, and boundary edges through both executors
+    for name in ["resnet18_small", "bert_tiny"] {
+        let s = session(name, 0);
+        let mut model = s.tune().compile().unwrap();
+        let inputs = model.seeded_inputs(11);
+        let (_, fast) = model.run_with_output(&inputs).unwrap();
+        model.set_exec_mode(ExecMode::Bytecode);
+        let (_, interp) = model.run_with_output(&inputs).unwrap();
+        assert_eq!(
+            bits(&fast),
+            bits(&interp),
+            "{name} (tuned): executor modes diverged"
+        );
+    }
+}
+
+#[test]
+fn fast_path_bit_identical_across_threads() {
+    let mut outputs: Vec<Vec<u32>> = Vec::new();
+    let inputs = session("resnet18_small", 1)
+        .baseline()
+        .compile()
+        .unwrap()
+        .seeded_inputs(42);
+    for threads in [1usize, 2, 3] {
+        let model =
+            session("resnet18_small", threads).baseline().compile().unwrap();
+        assert_eq!(model.exec_mode(), ExecMode::Fast);
+        let (_, out) = model.run_with_output(&inputs).unwrap();
+        outputs.push(bits(&out));
+    }
+    assert_eq!(outputs[0], outputs[1], "threads=1 vs threads=2");
+    assert_eq!(outputs[0], outputs[2], "threads=1 vs threads=3");
+}
+
+#[test]
+fn fused_conversion_edge_bit_identical_and_counted() {
+    // conv1's input is the graph input (allocated identity), so a
+    // non-identity read layout puts a Fig. 5a conversion on that edge;
+    // Fast mode fuses it into the nest's read-side address stream.
+    let s = session("resnet18_small", 1);
+    let conv1 = s.graph().complex_nodes()[0];
+    let mut in_seq = LayoutSeq::new();
+    in_seq.push(Primitive::reorder(&[0, 3, 1, 2])); // NHWC -> NCHW read
+    let dec = ComplexDecision { node: conv1, in_seq, ..Default::default() };
+    let tuned = s.plan_with(vec![dec], HashMap::new()).unwrap();
+    let mut model = tuned.compile().unwrap();
+    assert!(model.conversions() >= 1, "plan must create a repack edge");
+    assert_eq!(
+        model.fused_repacks(),
+        model.conversions(),
+        "Fast mode must fuse every conversion edge"
+    );
+    assert_eq!(
+        model.repacks_per_run(),
+        model.fused_repacks() + model.materialized_repacks(),
+        "repack split must account for every edge"
+    );
+
+    let inputs = model.seeded_inputs(5);
+    let (_, fused) = model.run_with_output(&inputs).unwrap();
+    model.set_exec_mode(ExecMode::Bytecode);
+    assert_eq!(model.fused_repacks(), 0, "bytecode mode materializes");
+    assert_eq!(model.materialized_repacks(), model.repacks_per_run());
+    let (_, materialized) = model.run_with_output(&inputs).unwrap();
+    assert_eq!(
+        bits(&fused),
+        bits(&materialized),
+        "fused gather read diverged from the materialized repack"
+    );
+
+    // and the laid-out plan's output equals the baseline's: layouts
+    // (and their fused conversions) are pure storage transforms
+    let base = session("resnet18_small", 1).baseline().compile().unwrap();
+    let (_, want) = base.run_with_output(&inputs).unwrap();
+    assert_eq!(bits(&fused), bits(&want), "layout changed the math");
+}
+
+#[test]
+fn run_profiled_phases_cover_the_run() {
+    let model = session("resnet18_small", 1).baseline().compile().unwrap();
+    let inputs = model.seeded_inputs(3);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let (stats, phases, out) = model.run_profiled(&inputs).unwrap();
+    assert_eq!(bits(&out), bits(&want), "profiled run diverged");
+    assert!(stats.latency_ms > 0.0);
+    for (label, ms) in [
+        ("nest", phases.nest_ms),
+        ("repack", phases.repack_ms),
+        ("boundary", phases.boundary_ms),
+        ("simple", phases.simple_ms),
+    ] {
+        assert!(ms.is_finite() && ms >= 0.0, "{label}_ms = {ms}");
+    }
+    assert!(phases.nest_ms > 0.0, "complex nests must dominate > 0 ms");
+}

@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
 # Run the whole-model serving bench (Session tune -> compile -> run on
-# the native backend) and capture the report (end-to-end graph
-# inferences/sec, per-inference repack count, compile-time
-# weight-packing amortization, thread-count determinism, save/load
-# round trip) as BENCH_serve.json.
+# the native backend) and capture the report as BENCH_serve.json:
+# end-to-end graph inferences/sec, per-phase breakdown (nest_ms /
+# repack_ms / boundary_ms / simple_ms medians), the within-run
+# fast-path-vs-bytecode-interpreter ratio (fast_vs_interp, with
+# fastpath_identical as its bit-identity oracle), per-inference repack
+# counts split into fused vs materialized edges, a repack-fusion demo
+# on resnet18_small's stem conv (fusion_demo), compile-time
+# weight-packing amortization, thread-count determinism, and the
+# save/load round trip.
 #
 # Usage: scripts/bench_serve.sh [output.json]
 set -euo pipefail
