@@ -14,6 +14,10 @@
 //! re-tuning. A dedicated fusion demo forces a Fig. 5a conversion onto
 //! resnet18_small's stem conv and checks the fast path fuses it into
 //! the nest's read-side gather (repack copy eliminated) bit-exactly.
+//! A degradation demo forces one mid-model nest onto the bytecode
+//! interpreter (the per-nest fault ladder's fallback) and reports the
+//! within-run throughput ratio against all-fast, which CI gates ≥ 0.7
+//! alongside bit-identity of the degraded output.
 //!
 //! Results go to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`);
 //! `scripts/bench_serve.sh` wraps this and CI enforces the hard floors
@@ -29,7 +33,7 @@ use alt::api::Session;
 use alt::autotune::TuneOptions;
 use alt::layout::{LayoutSeq, Primitive};
 use alt::propagate::ComplexDecision;
-use alt::runtime::ExecMode;
+use alt::runtime::{DegradeReason, ExecMode};
 use alt::sim::HwProfile;
 
 const BUDGET: usize = 200;
@@ -84,6 +88,67 @@ fn fusion_demo() -> String {
     format!(
         "{{\"conversions\": {conversions}, \"fused\": {fused}, \
          \"materialized\": {materialized}, \"identical\": {identical}}}"
+    )
+}
+
+/// Degradation-ladder overhead: force one mid-model nest of
+/// resnet18_small onto the bytecode interpreter (public `degrade_nest`,
+/// exactly what the per-nest compile ladder does on a fast-path
+/// failure) and measure throughput against the all-fast and
+/// all-bytecode endpoints of the ladder. Within-run ratios, so the
+/// numbers are immune to runner speed; CI gates `degraded_vs_fast` and
+/// `identical` hard.
+fn degradation_overhead() -> String {
+    let tuned = session("resnet18_small", 0).baseline();
+    let mut model = tuned.compile().unwrap_or_else(|e| panic!("{e}"));
+    let inputs = model.seeded_inputs(29);
+
+    let (_, reference) = model.run_with_output(&inputs).unwrap(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..REQUESTS {
+        model.run(&inputs).unwrap();
+    }
+    let fast_inf_s = REQUESTS as f64 / t0.elapsed().as_secs_f64();
+
+    let nests = model.health().nests.len();
+    let victim = model.health().nests[nests / 2].node;
+    assert!(
+        model.degrade_nest(victim, DegradeReason::StreamAnalysis),
+        "victim nest not found"
+    );
+    let (_, degraded_out) = model.run_with_output(&inputs).unwrap(); // warmup
+    let identical = bits(&degraded_out) == bits(&reference);
+    if !identical {
+        eprintln!("degradation demo: degraded nest changed the output");
+    }
+    let t1 = Instant::now();
+    for _ in 0..REQUESTS {
+        model.run(&inputs).unwrap();
+    }
+    let degraded_inf_s = REQUESTS as f64 / t1.elapsed().as_secs_f64();
+
+    model.set_exec_mode(ExecMode::Bytecode);
+    model.run(&inputs).unwrap(); // warmup
+    let t2 = Instant::now();
+    for _ in 0..INTERP_REQUESTS {
+        model.run(&inputs).unwrap();
+    }
+    let bytecode_inf_s = INTERP_REQUESTS as f64 / t2.elapsed().as_secs_f64();
+
+    let ratio =
+        if fast_inf_s > 0.0 { degraded_inf_s / fast_inf_s } else { 0.0 };
+    println!(
+        "degradation overhead (resnet18_small, 1/{nests} nests bytecode): \
+         fast {fast_inf_s:.1} inf/s | degraded {degraded_inf_s:.1} inf/s \
+         ({ratio:.2}x) | all-bytecode {bytecode_inf_s:.1} inf/s | \
+         identical {identical}"
+    );
+    format!(
+        "{{\"nests\": {nests}, \"degraded_nests\": 1, \
+         \"fast_inf_per_sec\": {fast_inf_s:.3}, \
+         \"degraded_inf_per_sec\": {degraded_inf_s:.3}, \
+         \"bytecode_inf_per_sec\": {bytecode_inf_s:.3}, \
+         \"degraded_vs_fast\": {ratio:.3}, \"identical\": {identical}}}"
     )
 }
 
@@ -232,6 +297,7 @@ fn main() {
     }
 
     let fusion = fusion_demo();
+    let degradation = degradation_overhead();
 
     println!("thread determinism:   {deterministic}");
     println!("save/load roundtrip:  {roundtrip_ok}");
@@ -243,6 +309,7 @@ fn main() {
          \"requests\": {REQUESTS},\n  \
          \"interp_requests\": {INTERP_REQUESTS},\n  \"models\": [\n{}\n  ],\n  \
          \"fusion_demo\": {fusion},\n  \
+         \"degradation_overhead\": {degradation},\n  \
          \"deterministic\": {deterministic},\n  \
          \"roundtrip_ok\": {roundtrip_ok}\n}}\n",
         rows.join(",\n"),

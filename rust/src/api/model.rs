@@ -31,14 +31,14 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::error::{Error, ErrorKind, Result};
 use crate::graph::{EltKind, Graph, NodeId, OpKind, PoolKind};
 use crate::layout::{LayoutSeq, LayoutTransform};
 use crate::loops::LoopSchedule;
 use crate::propagate::propagate;
 use crate::runtime::{
-    random_input, seeded_inputs, ExecMode, ExecScratch, NativeExecutable,
-    OperandView, RunStats, TensorSpec,
+    random_input, seeded_inputs, DegradeReason, ExecMode, ExecScratch,
+    NativeExecutable, OperandView, RunStats, TensorSpec,
 };
 use crate::sim::HwProfile;
 use crate::tensor::{Role, TensorId};
@@ -105,6 +105,7 @@ fn apply_map(map: &[i64], src: &[f32], mut out: Vec<f32>) -> Vec<f32> {
 
 /// One lowered complex nest (+ fused tail).
 struct ComplexStep {
+    node: NodeId,
     exe: NativeExecutable,
     operands: Vec<Operand>,
     /// Tensor whose storage buffer the nest writes.
@@ -152,6 +153,10 @@ pub struct CompiledModel {
     /// Per conversion slot: composed gather map (consumer storage index
     /// → producer storage index, `-1` → `0.0`), built once at compile.
     conv_gathers: Vec<Vec<i64>>,
+    /// Per conversion slot: `true` when the composed gather map failed
+    /// validation and the edge must materialize even in Fast mode (the
+    /// consumer nest degraded with [`DegradeReason::GatherCompose`]).
+    conv_forced: Vec<bool>,
     input_ids: Vec<TensorId>,
     output_id: TensorId,
     output_unpack: Option<BoundaryMap>,
@@ -163,6 +168,9 @@ pub struct CompiledModel {
     complex_steps: usize,
     simple_steps: usize,
     conversions: usize,
+    /// Conversion edges pinned to materialization (invalid composed
+    /// gather map); excluded from Fast mode's fused-repack count.
+    forced_convs: usize,
     boundary_repacks: usize,
     weights_total: usize,
     weights_packed: usize,
@@ -179,6 +187,25 @@ pub fn weight_data(graph: &Graph, t: TensorId, weight_seed: u64) -> Vec<f32> {
         shape: ten.shape.iter().map(|&d| d as usize).collect(),
     };
     random_input(&spec, weight_seed.wrapping_add(t as u64))
+}
+
+/// Compile-time finiteness audit on a materialized constant: a NaN or
+/// infinity baked into the weights would silently poison every
+/// inference, so it is a typed [`ErrorKind::Compile`] refusal instead.
+fn audit_weight(data: &[f32], graph: &Graph, t: TensorId) -> Result<()> {
+    match data.iter().position(|v| !v.is_finite()) {
+        None => Ok(()),
+        Some(i) => Err(Error::with_kind(
+            ErrorKind::Compile,
+            format!(
+                "{}: weight {} has non-finite element {} ({})",
+                graph.name,
+                graph.tensor(t).name,
+                i,
+                data[i]
+            ),
+        )),
+    }
 }
 
 pub(crate) fn compile_model(
@@ -218,7 +245,9 @@ pub(crate) fn compile_model(
     let mut n_conv_slots = 0usize;
     let mut conv_tensor: Vec<TensorId> = Vec::new();
     let mut conv_gathers: Vec<Vec<i64>> = Vec::new();
+    let mut conv_forced: Vec<bool> = Vec::new();
     let (mut conversions, mut boundary_repacks) = (0usize, 0usize);
+    let mut forced_convs = 0usize;
     let (mut weights_total, mut weights_packed) = (0usize, 0usize);
     let mut packing_ms = 0.0f64;
 
@@ -262,7 +291,7 @@ pub(crate) fn compile_model(
                         crate::autotune::tuner::nest_dims(graph, node.id, &prop);
                     LoopSchedule::identity(&sp, &rd)
                 });
-                let exe = NativeExecutable::compile(
+                let mut exe = NativeExecutable::compile(
                     &node.name,
                     graph,
                     node.id,
@@ -289,10 +318,19 @@ pub(crate) fn compile_model(
                             Some(&s) => s,
                             None => {
                                 let tp = Instant::now();
-                                let packed = exe.pack_operand(
-                                    i,
-                                    &weight_data(graph, t, plan.weight_seed),
-                                )?;
+                                #[allow(unused_mut)]
+                                let mut data =
+                                    weight_data(graph, t, plan.weight_seed);
+                                #[cfg(feature = "fault-inject")]
+                                if crate::faults::fire(
+                                    crate::faults::FaultSite::NanWeight,
+                                ) {
+                                    if let Some(v) = data.first_mut() {
+                                        *v = f32::NAN;
+                                    }
+                                }
+                                let packed = exe.pack_operand(i, &data)?;
+                                audit_weight(&packed, graph, t)?;
                                 packing_ms += tp.elapsed().as_secs_f64() * 1e3;
                                 // both counters count unique constants,
                                 // so packed/total is a true ratio
@@ -342,6 +380,26 @@ pub(crate) fn compile_model(
                                         .collect()
                                 }
                             };
+                            // Validate the composition against the
+                            // producer's actual storage length. A
+                            // composed index past the source buffer
+                            // can't be fused (either executor would
+                            // read out of bounds through the map), so
+                            // the edge pins to materialization and the
+                            // consumer nest records the degrade.
+                            let src_len = match &from {
+                                None => ten.shape.iter().product::<i64>(),
+                                Some(f) => {
+                                    f.pack_map(&ten.shape).len() as i64
+                                }
+                            };
+                            let forced =
+                                gather.iter().any(|&g| g >= src_len);
+                            if forced {
+                                forced_convs += 1;
+                                exe.degrade(DegradeReason::GatherCompose);
+                            }
+                            conv_forced.push(forced);
                             conv_tensor.push(t);
                             conv_gathers.push(gather);
                             steps.push(Step::Convert(ConvertStep {
@@ -356,6 +414,7 @@ pub(crate) fn compile_model(
                     }
                 }
                 steps.push(Step::Complex(Box::new(ComplexStep {
+                    node: node.id,
                     exe,
                     operands,
                     out,
@@ -375,7 +434,19 @@ pub(crate) fn compile_model(
                             None => {
                                 // logical (identity-layout) constant
                                 weights_total += 1;
-                                consts.push(weight_data(graph, t, plan.weight_seed));
+                                #[allow(unused_mut)]
+                                let mut data =
+                                    weight_data(graph, t, plan.weight_seed);
+                                #[cfg(feature = "fault-inject")]
+                                if crate::faults::fire(
+                                    crate::faults::FaultSite::NanWeight,
+                                ) {
+                                    if let Some(v) = data.first_mut() {
+                                        *v = f32::NAN;
+                                    }
+                                }
+                                audit_weight(&data, graph, t)?;
+                                consts.push(data);
                                 const_key.insert(key, consts.len() - 1);
                                 consts.len() - 1
                             }
@@ -492,6 +563,7 @@ pub(crate) fn compile_model(
         n_conv_slots,
         conv_tensor,
         conv_gathers,
+        conv_forced,
         input_ids,
         output_id,
         output_unpack,
@@ -501,6 +573,7 @@ pub(crate) fn compile_model(
         complex_steps,
         simple_steps,
         conversions,
+        forced_convs,
         boundary_repacks,
         weights_total,
         weights_packed,
@@ -542,6 +615,41 @@ pub struct PhaseBreakdown {
     pub boundary_ms: f64,
     /// Simple-op compute (interpreted, logical row-major).
     pub simple_ms: f64,
+    /// Portion of `nest_ms` spent in nests running degraded (their
+    /// fast plan failed to compile or was revoked) — zero on a fully
+    /// healthy model.
+    pub degraded_ms: f64,
+}
+
+/// Health of one complex nest in a compiled model.
+#[derive(Clone, Debug)]
+pub struct NestHealth {
+    /// Graph node the nest lowers.
+    pub node: NodeId,
+    pub name: String,
+    /// Whether a strided fast plan is live for this nest.
+    pub fast: bool,
+    /// Whether parallel workers write the shared output directly
+    /// (write map proven injective) rather than staging scatters.
+    pub writes_direct: bool,
+    /// Whether the nest runs on more than one worker.
+    pub parallel: bool,
+    /// Why the fast plan is absent (`None` when `fast`).
+    pub degraded: Option<DegradeReason>,
+}
+
+/// Per-nest degradation report for a whole compiled model — the
+/// serving-side view of the degradation ladder. A model is fully
+/// healthy iff `degraded_nests == 0` and `forced_repacks == 0`.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    /// One entry per complex nest, plan order.
+    pub nests: Vec<NestHealth>,
+    /// Nests currently running on the bytecode interpreter.
+    pub degraded_nests: usize,
+    /// Conversion edges pinned to materialization because their
+    /// composed gather map failed validation.
+    pub forced_repacks: usize,
 }
 
 /// Row-major strides of a shape.
@@ -628,7 +736,10 @@ fn interp_simple(
             Ok(out)
         }
         OpKind::BiasAdd => {
-            let c = *out_shape.last().unwrap() as usize;
+            let Some(&last) = out_shape.last() else {
+                bail!("{}: bias-add on a scalar output", n.name);
+            };
+            let c = last as usize;
             let mut out = take(pool, out_len as usize);
             for (i, (o, &v)) in out.iter_mut().zip(ins[0]).enumerate() {
                 *o = v + ins[1][i % c];
@@ -722,7 +833,10 @@ fn interp_simple(
         OpKind::Reduce { keep_last } => {
             let in_shape = &graph.tensor(n.inputs[0]).shape;
             let batch = in_shape[0] as usize;
-            let c = *in_shape.last().unwrap() as usize;
+            let Some(&last) = in_shape.last() else {
+                bail!("{}: reduce on a scalar input", n.name);
+            };
+            let c = last as usize;
             let per_batch = ins[0].len() / batch;
             let mut out = take(pool, out_len as usize);
             if *keep_last {
@@ -849,24 +963,42 @@ impl CompiledModel {
     ) -> Result<(RunStats, PhaseBreakdown, Vec<f32>)> {
         let specs = self.input_specs();
         if inputs.len() != specs.len() {
-            bail!(
-                "{}: want {} inputs, got {}",
-                self.graph.name,
-                specs.len(),
-                inputs.len()
-            );
+            return Err(Error::with_kind(
+                ErrorKind::Input,
+                format!(
+                    "{}: want {} inputs, got {}",
+                    self.graph.name,
+                    specs.len(),
+                    inputs.len()
+                ),
+            ));
         }
         for ((data, spec), &t) in
             inputs.iter().zip(&specs).zip(&self.input_ids)
         {
             if data.len() != spec.elements() {
-                bail!(
-                    "{}: input {} has {} elements, want {}",
-                    self.graph.name,
-                    self.graph.tensor(t).name,
-                    data.len(),
-                    spec.elements()
-                );
+                return Err(Error::with_kind(
+                    ErrorKind::Input,
+                    format!(
+                        "{}: input {} has {} elements, want {}",
+                        self.graph.name,
+                        self.graph.tensor(t).name,
+                        data.len(),
+                        spec.elements()
+                    ),
+                ));
+            }
+            if let Some(i) = data.iter().position(|v| !v.is_finite()) {
+                return Err(Error::with_kind(
+                    ErrorKind::Input,
+                    format!(
+                        "{}: input {} has non-finite element {} ({})",
+                        self.graph.name,
+                        self.graph.tensor(t).name,
+                        i,
+                        data[i]
+                    ),
+                ));
             }
         }
         let fast = self.mode == ExecMode::Fast;
@@ -884,8 +1016,10 @@ impl CompiledModel {
                 Step::Convert(c) => {
                     // Fast mode fuses this edge: the consumer nest
                     // reads the source buffer through the precompiled
-                    // gather map, so nothing materializes here.
-                    if !fast {
+                    // gather map, so nothing materializes here —
+                    // unless the composed map failed validation, in
+                    // which case the edge stays materialized.
+                    if !fast || self.conv_forced[c.slot] {
                         let tp = Instant::now();
                         let src = bufs[c.tensor].as_deref().ok_or_else(
                             || err!("convert: t{} not live", c.tensor),
@@ -907,38 +1041,49 @@ impl CompiledModel {
                     let tp = Instant::now();
                     let mut out_buf = scratch.pool.pop().unwrap_or_default();
                     {
-                        // liveness is computed from these very steps, so a
-                        // missing buffer is a plan-construction bug
-                        let views: Vec<OperandView> = cs
-                            .operands
-                            .iter()
-                            .map(|o| match o {
+                        // liveness is computed from these very steps,
+                        // so a missing buffer is a plan-construction
+                        // bug — surfaced as a typed error, not a panic
+                        let dead = |what: &str, id: usize| {
+                            err!(
+                                "{}: nest {} read a dead {} buffer ({id})",
+                                self.graph.name,
+                                cs.exe.name(),
+                                what
+                            )
+                        };
+                        let mut views: Vec<OperandView> =
+                            Vec::with_capacity(cs.operands.len());
+                        for o in &cs.operands {
+                            views.push(match o {
                                 Operand::Tensor(t) => OperandView::direct(
                                     bufs[*t]
                                         .as_deref()
-                                        .expect("operand buffer live"),
+                                        .ok_or_else(|| dead("operand", *t))?,
                                 ),
                                 Operand::Converted(s) => {
-                                    if fast {
+                                    if fast && !self.conv_forced[*s] {
                                         OperandView {
                                             data: bufs[self.conv_tensor[*s]]
                                                 .as_deref()
-                                                .expect("conversion source live"),
+                                                .ok_or_else(|| {
+                                                    dead("conversion source", *s)
+                                                })?,
                                             gather: Some(&self.conv_gathers[*s]),
                                         }
                                     } else {
                                         OperandView::direct(
-                                            convs[*s]
-                                                .as_deref()
-                                                .expect("conversion buffer live"),
+                                            convs[*s].as_deref().ok_or_else(
+                                                || dead("conversion", *s),
+                                            )?,
                                         )
                                     }
                                 }
                                 Operand::Const(k) => OperandView::direct(
                                     self.consts[*k].as_slice(),
                                 ),
-                            })
-                            .collect();
+                            });
+                        }
                         cs.exe.run_storage_views_into(
                             &views,
                             &mut out_buf,
@@ -948,21 +1093,31 @@ impl CompiledModel {
                     if let Some(old) = bufs[cs.out].replace(out_buf) {
                         scratch.pool.push(old);
                     }
-                    phases.nest_ms += tp.elapsed().as_secs_f64() * 1e3;
+                    let dt = tp.elapsed().as_secs_f64() * 1e3;
+                    phases.nest_ms += dt;
+                    if cs.exe.degrade_reason().is_some() {
+                        phases.degraded_ms += dt;
+                    }
                 }
                 Step::Simple(ss) => {
                     let tb = Instant::now();
-                    let ins: Vec<Cow<[f32]>> = ss
-                        .srcs
-                        .iter()
-                        .map(|s| match s {
+                    let mut ins: Vec<Cow<[f32]>> =
+                        Vec::with_capacity(ss.srcs.len());
+                    for s in &ss.srcs {
+                        ins.push(match s {
                             SimpleSrc::Const(k) => {
                                 Cow::Borrowed(self.consts[*k].as_slice())
                             }
                             SimpleSrc::Tensor(t, tf) => {
-                                let buf = bufs[*t]
-                                    .as_deref()
-                                    .expect("input buffer live");
+                                let buf =
+                                    bufs[*t].as_deref().ok_or_else(|| {
+                                        err!(
+                                            "{}: simple op read a dead \
+                                             buffer (t{})",
+                                            self.graph.name,
+                                            t
+                                        )
+                                    })?;
                                 match tf {
                                     None => Cow::Borrowed(buf),
                                     Some(bm) => Cow::Owned(if fast {
@@ -982,8 +1137,8 @@ impl CompiledModel {
                                     }),
                                 }
                             }
-                        })
-                        .collect();
+                        });
+                    }
                     phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
                     let ti = Instant::now();
                     let logical = {
@@ -1091,6 +1246,62 @@ impl CompiledModel {
         })
     }
 
+    /// Per-nest degradation report: which nests hold a live fast plan,
+    /// which fell down the ladder and why. Outputs stay bit-identical
+    /// either way; this reports *throughput* health.
+    pub fn health(&self) -> HealthReport {
+        let mut report = HealthReport {
+            forced_repacks: self.forced_convs,
+            ..HealthReport::default()
+        };
+        for step in &self.steps {
+            if let Step::Complex(cs) = step {
+                let degraded = cs.exe.degrade_reason();
+                if degraded.is_some() {
+                    report.degraded_nests += 1;
+                }
+                report.nests.push(NestHealth {
+                    node: cs.node,
+                    name: cs.exe.name().to_string(),
+                    fast: cs.exe.has_fast_path(),
+                    writes_direct: cs.exe.writes_direct(),
+                    parallel: cs.exe.is_parallel(),
+                    degraded,
+                });
+            }
+        }
+        report
+    }
+
+    /// Nests currently running on the bytecode interpreter.
+    pub fn degraded_nests(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| {
+                matches!(s, Step::Complex(cs) if cs.exe.degrade_reason().is_some())
+            })
+            .count()
+    }
+
+    /// Force the nest lowering `node` down the ladder: its fast plan
+    /// is revoked and it runs on the bytecode interpreter from the
+    /// next request on, bit-identically. Returns `false` when `node`
+    /// is not a complex nest of this plan. This is the operational
+    /// "quarantine one operator" lever (and the degradation-overhead
+    /// bench's probe); compile-time failures take the same path
+    /// automatically.
+    pub fn degrade_nest(&mut self, node: NodeId, reason: DegradeReason) -> bool {
+        for step in self.steps.iter_mut() {
+            if let Step::Complex(cs) = step {
+                if cs.node == node {
+                    cs.exe.degrade(reason);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
     /// Median-of-`n` timed runs (first run excluded as warmup).
     pub fn bench(&self, inputs: &[Vec<f32>], n: usize) -> Result<f64> {
         let _ = self.run(inputs)?;
@@ -1134,7 +1345,7 @@ impl CompiledModel {
     /// complex consumer by construction, so Fast mode fuses them all).
     pub fn fused_repacks(&self) -> usize {
         if self.mode == ExecMode::Fast {
-            self.conversions
+            self.conversions - self.forced_convs
         } else {
             0
         }

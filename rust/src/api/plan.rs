@@ -9,16 +9,25 @@
 //! plans diff cleanly and survive hand edits.
 //!
 //! `save` writes the plan next to an *extended manifest*
-//! (`manifest.txt`, the same tab-separated `name \t file \t in_specs
-//! \t out_specs` format the PJRT artifact directory uses, parsed by
-//! [`crate::runtime::parse_manifest`]), so a plan directory is
-//! self-describing: the manifest row carries the model's logical input
-//! and output tensor specs and names the plan file as its artifact.
+//! (`manifest.txt`: a format-version line, per-artifact FNV-1a
+//! checksum lines, then the same tab-separated `name \t file \t
+//! in_specs \t out_specs` rows the PJRT artifact directory uses,
+//! parsed by [`crate::runtime::parse_manifest`]), so a plan directory
+//! is self-describing: the manifest row carries the model's logical
+//! input and output tensor specs and names the plan file as its
+//! artifact.
+//!
+//! Saving is *atomic*: the directory is built under a temp sibling
+//! name and renamed into place, so a crash mid-save leaves the old
+//! plan (or nothing), never a torn directory. Loading verifies the
+//! version line and every checksum before parsing anything, and every
+//! integrity failure is a typed [`PlanError`] — version skew,
+//! truncation, and corruption are refusals, not garbage or panics.
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::error::Result;
+use crate::error::{Error, ErrorKind, PlanError, Result};
 use crate::graph::{Graph, NodeId};
 use crate::layout::{LayoutSeq, Primitive};
 use crate::loops::LoopSchedule;
@@ -389,13 +398,17 @@ pub(crate) fn input_specs_of(graph: &Graph) -> Vec<TensorSpec> {
         .collect()
 }
 
-/// Logical output spec of a graph (its last node's output).
+/// Logical output spec of a graph (its last node's output; an empty
+/// graph — which can never compile — yields an empty-shape spec
+/// rather than panicking).
 pub(crate) fn output_spec_of(graph: &Graph) -> TensorSpec {
-    let out = graph.nodes.last().expect("empty graph").output;
-    TensorSpec {
-        dtype: "float32".into(),
-        shape: graph.tensor(out).shape.iter().map(|&d| d as usize).collect(),
-    }
+    let shape = match graph.nodes.last() {
+        Some(n) => {
+            graph.tensor(n.output).shape.iter().map(|&d| d as usize).collect()
+        }
+        None => Vec::new(),
+    };
+    TensorSpec { dtype: "float32".into(), shape }
 }
 
 fn fmt_specs(specs: &[TensorSpec]) -> String {
@@ -412,7 +425,21 @@ fn fmt_specs(specs: &[TensorSpec]) -> String {
 /// Name of the plan file inside a saved directory.
 pub const PLAN_FILE: &str = "plan.txt";
 
-/// Write `plan.txt` + the extended `manifest.txt` into `dir`.
+/// First line of a saved plan's manifest. Bumped when the directory
+/// format changes incompatibly; the loader refuses manifests that do
+/// not announce a version this build speaks.
+pub const MANIFEST_VERSION_LINE: &str = "# alt-plan-manifest v2";
+
+fn plan_err(kind: PlanError, msg: impl std::fmt::Display) -> Error {
+    Error::with_kind(ErrorKind::Plan(kind), msg)
+}
+
+/// Write `plan.txt` + the extended `manifest.txt` into `dir`,
+/// atomically: the directory is assembled under a temp sibling name
+/// and renamed into place, so a crash mid-save leaves the previous
+/// plan (or nothing) — never a half-written directory. The manifest
+/// records an FNV-1a checksum per artifact, so torn writes and later
+/// corruption are caught at load time.
 pub(crate) fn save_plan(dir: &Path, plan: &TunedPlan, graph: &Graph) -> Result<()> {
     // fail at save time, not at load time: a plan whose model the zoo
     // cannot rebuild would persist fine but never restore, silently
@@ -424,60 +451,205 @@ pub(crate) fn save_plan(dir: &Path, plan: &TunedPlan, graph: &Graph) -> Result<(
             plan.model
         );
     }
-    std::fs::create_dir_all(dir)
-        .map_err(|e| err!("creating {}: {e}", dir.display()))?;
-    let plan_path = dir.join(PLAN_FILE);
-    std::fs::write(&plan_path, plan.serialize())
-        .map_err(|e| err!("writing {}: {e}", plan_path.display()))?;
+    let plan_text = plan.serialize();
+    let checksum = crate::util::fnv1a64(plan_text.as_bytes());
     let manifest = format!(
-        "{}\t{}\t{}\t{}\n",
+        "{MANIFEST_VERSION_LINE}\n# checksum {PLAN_FILE} {checksum:016x}\n{}\t{}\t{}\t{}\n",
         plan.model,
         PLAN_FILE,
         fmt_specs(&input_specs_of(graph)),
         fmt_specs(&[output_spec_of(graph)]),
     );
-    let mpath = dir.join("manifest.txt");
-    std::fs::write(&mpath, manifest)
-        .map_err(|e| err!("writing {}: {e}", mpath.display()))?;
+    let tmp = dir.with_file_name(format!(
+        "{}.tmp.{}",
+        dir.file_name().and_then(|n| n.to_str()).unwrap_or("plan"),
+        std::process::id()
+    ));
+    let built = (|| -> Result<()> {
+        std::fs::create_dir_all(&tmp).map_err(|e| {
+            plan_err(PlanError::Io, format!("creating {}: {e}", tmp.display()))
+        })?;
+        let plan_path = tmp.join(PLAN_FILE);
+        #[allow(unused_mut)]
+        let mut plan_bytes = plan_text.into_bytes();
+        #[cfg(feature = "fault-inject")]
+        if crate::faults::fire(crate::faults::FaultSite::TornPlanWrite) {
+            // simulate a write torn mid-file: the checksum above was
+            // taken over the full serialization, so the loader must
+            // refuse this plan with `ChecksumMismatch`
+            plan_bytes.truncate(plan_bytes.len() / 2);
+        }
+        std::fs::write(&plan_path, &plan_bytes).map_err(|e| {
+            plan_err(
+                PlanError::Io,
+                format!("writing {}: {e}", plan_path.display()),
+            )
+        })?;
+        let mpath = tmp.join("manifest.txt");
+        std::fs::write(&mpath, &manifest).map_err(|e| {
+            plan_err(PlanError::Io, format!("writing {}: {e}", mpath.display()))
+        })?;
+        Ok(())
+    })();
+    if let Err(e) = built {
+        std::fs::remove_dir_all(&tmp).ok();
+        return Err(e);
+    }
+    if dir.exists() {
+        std::fs::remove_dir_all(dir).map_err(|e| {
+            plan_err(
+                PlanError::Io,
+                format!("replacing {}: {e}", dir.display()),
+            )
+        })?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, dir) {
+        std::fs::remove_dir_all(&tmp).ok();
+        return Err(plan_err(
+            PlanError::Io,
+            format!("publishing {}: {e}", dir.display()),
+        ));
+    }
     Ok(())
 }
 
-/// Read a plan directory back: manifest + plan file, spec-checked.
+/// Read a plan directory back: version-checked, checksum-verified
+/// manifest + plan file, spec-checked against the rebuilt graph.
+/// Integrity failures are typed [`PlanError`]s — see [`ErrorKind::Plan`].
 pub(crate) fn load_plan(dir: &Path) -> Result<(TunedPlan, Graph)> {
-    let entries = crate::runtime::read_manifest(dir)?;
-    let entry = entries
-        .first()
-        .ok_or_else(|| err!("{}: empty manifest", dir.display()))?;
-    let plan_path = dir.join(&entry.file);
-    let text = std::fs::read_to_string(&plan_path)
-        .map_err(|e| err!("reading {}: {e}", plan_path.display()))?;
-    let plan = TunedPlan::parse(&text)
-        .map_err(|e| e.context(format!("parsing {}", plan_path.display())))?;
-    if plan.model != entry.name {
-        bail!(
-            "manifest names '{}' but the plan was tuned for '{}'",
-            entry.name,
-            plan.model
-        );
+    let mpath = dir.join("manifest.txt");
+    let mtext = std::fs::read_to_string(&mpath).map_err(|e| {
+        plan_err(PlanError::Io, format!("reading {}: {e}", mpath.display()))
+    })?;
+    let mut lines = mtext.lines();
+    let head = lines.next().map(str::trim);
+    if head != Some(MANIFEST_VERSION_LINE) {
+        return Err(plan_err(
+            PlanError::VersionSkew,
+            format!(
+                "{}: expected '{MANIFEST_VERSION_LINE}', found '{}' — \
+                 re-save the plan with this build",
+                mpath.display(),
+                head.unwrap_or("<empty manifest>")
+            ),
+        ));
     }
-    let graph = crate::graph::models::by_name(&plan.model).ok_or_else(|| {
-        err!(
-            "plan model '{}' is not in the model zoo (graph::models::by_name)",
-            plan.model
+    // Split annotation lines (`# checksum file hex`; unknown `#` lines
+    // are ignored for forward compatibility) from artifact rows.
+    let mut checksums: Vec<(String, u64)> = Vec::new();
+    let mut rows = String::new();
+    for line in lines {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("# checksum ") {
+            let (file, hex) = rest.rsplit_once(' ').ok_or_else(|| {
+                plan_err(
+                    PlanError::Malformed,
+                    format!("{}: bad checksum line '{t}'", mpath.display()),
+                )
+            })?;
+            let sum = u64::from_str_radix(hex.trim(), 16).map_err(|e| {
+                plan_err(
+                    PlanError::Malformed,
+                    format!("{}: bad checksum '{hex}': {e}", mpath.display()),
+                )
+            })?;
+            checksums.push((file.trim().to_string(), sum));
+        } else if !t.starts_with('#') {
+            rows.push_str(line);
+            rows.push('\n');
+        }
+    }
+    // Verify every recorded artifact BEFORE parsing anything, so a
+    // truncated or corrupted plan is reported as what it is.
+    for (file, want) in &checksums {
+        let fpath = dir.join(file);
+        let bytes = std::fs::read(&fpath).map_err(|e| {
+            plan_err(PlanError::Io, format!("reading {}: {e}", fpath.display()))
+        })?;
+        let got = crate::util::fnv1a64(&bytes);
+        if got != *want {
+            return Err(plan_err(
+                PlanError::ChecksumMismatch,
+                format!(
+                    "{}: manifest records {want:016x} but the bytes hash \
+                     to {got:016x} (truncated or corrupted write)",
+                    fpath.display()
+                ),
+            ));
+        }
+    }
+    let malformed = |e: Error| {
+        e.into_kind(ErrorKind::Plan(PlanError::Malformed))
+            .context(format!("loading {}", dir.display()))
+    };
+    let entries = crate::runtime::parse_manifest(&rows).map_err(malformed)?;
+    let entry = entries.first().ok_or_else(|| {
+        plan_err(
+            PlanError::Malformed,
+            format!("{}: no artifact rows", mpath.display()),
         )
     })?;
-    plan.validate_against(&graph)?;
+    if !checksums.iter().any(|(f, _)| f == &entry.file) {
+        return Err(plan_err(
+            PlanError::Malformed,
+            format!(
+                "{}: artifact '{}' carries no checksum line",
+                mpath.display(),
+                entry.file
+            ),
+        ));
+    }
+    let plan_path = dir.join(&entry.file);
+    let text = std::fs::read_to_string(&plan_path).map_err(|e| {
+        plan_err(
+            PlanError::Io,
+            format!("reading {}: {e}", plan_path.display()),
+        )
+    })?;
+    let plan = TunedPlan::parse(&text).map_err(malformed)?;
+    if plan.model != entry.name {
+        return Err(plan_err(
+            PlanError::Malformed,
+            format!(
+                "manifest names '{}' but the plan was tuned for '{}'",
+                entry.name, plan.model
+            ),
+        ));
+    }
+    let graph = crate::graph::models::by_name(&plan.model).ok_or_else(|| {
+        plan_err(
+            PlanError::Malformed,
+            format!(
+                "plan model '{}' is not in the model zoo \
+                 (graph::models::by_name)",
+                plan.model
+            ),
+        )
+    })?;
+    plan.validate_against(&graph).map_err(malformed)?;
     // the manifest's specs must match the rebuilt graph (defends
     // against a zoo definition drifting under a saved plan)
     let want_in = fmt_specs(&input_specs_of(&graph));
     let got_in = fmt_specs(&entry.inputs);
     if want_in != got_in {
-        bail!("manifest input specs {got_in} do not match {} ({want_in})", plan.model);
+        return Err(plan_err(
+            PlanError::Malformed,
+            format!(
+                "manifest input specs {got_in} do not match {} ({want_in})",
+                plan.model
+            ),
+        ));
     }
     let want_out = fmt_specs(&[output_spec_of(&graph)]);
     let got_out = fmt_specs(&entry.outputs);
     if want_out != got_out {
-        bail!("manifest output specs {got_out} do not match {} ({want_out})", plan.model);
+        return Err(plan_err(
+            PlanError::Malformed,
+            format!(
+                "manifest output specs {got_out} do not match {} ({want_out})",
+                plan.model
+            ),
+        ));
     }
     Ok((plan, graph))
 }
@@ -599,6 +771,117 @@ mod tests {
         let (loaded, graph) = load_plan(&dir).unwrap();
         assert_eq!(loaded, plan);
         assert_eq!(graph.name, "case_study");
+        // no temp build directory is left behind by the atomic publish
+        let parent = dir.parent().unwrap();
+        let stem = format!("{}.tmp.", dir.file_name().unwrap().to_str().unwrap());
+        let leftover = std::fs::read_dir(parent).unwrap().any(|e| {
+            e.unwrap().file_name().to_str().is_some_and(|n| n.starts_with(&stem))
+        });
+        assert!(!leftover, "temp plan directory survived the rename");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_replace() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_replace_{}", std::process::id()));
+        let g = models::case_study();
+        let mut plan = sample_plan();
+        save_plan(&dir, &plan, &g).unwrap();
+        plan.weight_seed = 99;
+        save_plan(&dir, &plan, &g).unwrap();
+        let (loaded, _) = load_plan(&dir).unwrap();
+        assert_eq!(loaded.weight_seed, 99, "second save replaced the first");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_refuses_version_skew() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_skew_{}", std::process::id()));
+        let g = models::case_study();
+        save_plan(&dir, &sample_plan(), &g).unwrap();
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        // a v1-era manifest: no version line at all
+        let stripped: String = text
+            .lines()
+            .filter(|l| !l.starts_with('#'))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        std::fs::write(&mpath, stripped).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Plan(PlanError::VersionSkew), "{err}");
+        // ...and a future version this build does not speak
+        let future = text.replacen("v2", "v99", 1);
+        std::fs::write(&mpath, future).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Plan(PlanError::VersionSkew), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_refuses_truncated_plan_with_checksum_mismatch() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_torn_{}", std::process::id()));
+        let g = models::case_study();
+        save_plan(&dir, &sample_plan(), &g).unwrap();
+        let ppath = dir.join(PLAN_FILE);
+        let bytes = std::fs::read(&ppath).unwrap();
+        std::fs::write(&ppath, &bytes[..bytes.len() / 2]).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(
+            err.kind(),
+            ErrorKind::Plan(PlanError::ChecksumMismatch),
+            "{err}"
+        );
+        // single-bit corruption is caught too, not just truncation
+        let mut flipped = bytes.clone();
+        flipped[bytes.len() / 2] ^= 0x01;
+        std::fs::write(&ppath, &flipped).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(
+            err.kind(),
+            ErrorKind::Plan(PlanError::ChecksumMismatch),
+            "{err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_types_malformed_and_io_failures() {
+        let dir = std::env::temp_dir()
+            .join(format!("alt_plan_malformed_{}", std::process::id()));
+        // missing directory → Plan(Io)
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Plan(PlanError::Io), "{err}");
+        let g = models::case_study();
+        save_plan(&dir, &sample_plan(), &g).unwrap();
+        // garbage checksum hex → Plan(Malformed)
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let bad = text.replace("# checksum plan.txt ", "# checksum plan.txt zz");
+        std::fs::write(&mpath, bad).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Plan(PlanError::Malformed), "{err}");
+        // a plan file that no longer parses (checksum updated to match
+        // the corrupted bytes, so parsing is reached) → Plan(Malformed)
+        let garbage = b"model = \nnot a plan".to_vec();
+        std::fs::write(dir.join(PLAN_FILE), &garbage).unwrap();
+        let sum = crate::util::fnv1a64(&garbage);
+        let patched: String = text
+            .lines()
+            .map(|l| {
+                if l.starts_with("# checksum ") {
+                    format!("# checksum {PLAN_FILE} {sum:016x}\n")
+                } else {
+                    format!("{l}\n")
+                }
+            })
+            .collect();
+        std::fs::write(&mpath, patched).unwrap();
+        let err = load_plan(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Plan(PlanError::Malformed), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

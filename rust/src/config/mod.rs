@@ -3,12 +3,24 @@
 //! A tiny `key = value` format (INI-style, no external deps) drives the
 //! launcher: budgets, stage split, hardware profile, template levels,
 //! propagation mode, workload. CLI flags override file values.
+//!
+//! Malformed input is a typed [`ErrorKind::Config`] refusal, never a
+//! panic. The lenient `get_*` accessors keep their historical
+//! missing-or-malformed → default behavior for ad-hoc keys, but
+//! [`Config::tune_options`] is *strict*: a key that is present but
+//! does not parse is an error — a typo'd budget must not silently tune
+//! with the default.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::autotune::TuneOptions;
+use crate::error::{Error, ErrorKind, Result};
 use crate::propagate::PropMode;
+
+fn cfg_err(msg: impl fmt::Display) -> Error {
+    Error::with_kind(ErrorKind::Config, msg)
+}
 
 /// Parsed configuration (flat key/value map with typed accessors).
 #[derive(Clone, Debug, Default)]
@@ -17,24 +29,24 @@ pub struct Config {
 }
 
 impl Config {
-    pub fn parse(text: &str) -> Result<Self, String> {
+    pub fn parse(text: &str) -> Result<Self> {
         let mut map = BTreeMap::new();
         for (ln, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() || line.starts_with('[') {
                 continue;
             }
-            let (k, v) = line
-                .split_once('=')
-                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                cfg_err(format!("line {}: expected key = value", ln + 1))
+            })?;
             map.insert(k.trim().to_string(), v.trim().to_string());
         }
         Ok(Self { map })
     }
 
-    pub fn from_file(path: &str) -> Result<Self, String> {
+    pub fn from_file(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("read {path}: {e}"))?;
+            .map_err(|e| cfg_err(format!("read {path}: {e}")))?;
         Self::parse(&text)
     }
 
@@ -56,6 +68,35 @@ impl Config {
 
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Strict typed accessor: a missing key yields `default`, a
+    /// present-but-malformed value is a [`ErrorKind::Config`] error
+    /// naming the key and value.
+    fn strict<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                cfg_err(format!("config key '{key}': bad value '{v}': {e}"))
+            }),
+        }
+    }
+
+    /// Strict boolean: same spellings as [`Config::get_bool`], but an
+    /// unrecognized present value is an error instead of the default.
+    fn strict_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("yes") | Some("on") | Some("1") => Ok(true),
+            Some("false") | Some("no") | Some("off") | Some("0") => Ok(false),
+            Some(v) => Err(cfg_err(format!(
+                "config key '{key}': bad bool '{v}' \
+                 (want true/false, yes/no, on/off, 1/0)"
+            ))),
+        }
     }
 
     /// Boolean accessor: accepts `true/false`, `yes/no`, `on/off`,
@@ -84,30 +125,33 @@ impl Config {
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
     /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`, `shards`,
-    /// `budget_realloc`).
-    pub fn tune_options(&self) -> Result<TuneOptions, String> {
+    /// `budget_realloc`). Strict: present-but-malformed values are
+    /// typed [`ErrorKind::Config`] errors, missing keys keep their
+    /// defaults.
+    pub fn tune_options(&self) -> Result<TuneOptions> {
         let d = TuneOptions::default();
         let mode_str = self.get("mode").unwrap_or("alt");
         let mode = PropMode::from_name(mode_str)
-            .ok_or_else(|| format!("unknown mode '{mode_str}'"))?;
+            .ok_or_else(|| cfg_err(format!("unknown mode '{mode_str}'")))?;
         Ok(TuneOptions {
-            budget: self.get_usize("budget", d.budget),
-            joint_frac: self.get_f64("joint_frac", d.joint_frac),
-            batch: self.get_usize("batch", d.batch),
-            top_k: self.get_usize("top_k", d.top_k),
+            budget: self.strict("budget", d.budget)?,
+            joint_frac: self.strict("joint_frac", d.joint_frac)?,
+            batch: self.strict("batch", d.batch)?,
+            top_k: self.strict("top_k", d.top_k)?,
             rounds_per_layout: self
-                .get_usize("rounds_per_layout", d.rounds_per_layout),
-            levels: self.get_usize("levels", d.levels).clamp(1, 2),
-            seed: self.get_u64("seed", d.seed),
+                .strict("rounds_per_layout", d.rounds_per_layout)?,
+            levels: self.strict("levels", d.levels)?.clamp(1, 2),
+            seed: self.strict("seed", d.seed)?,
             mode,
-            threads: self.get_usize("threads", d.threads),
+            threads: self.strict("threads", d.threads)?,
             // 0 is accepted as "no speculation" (same as 1)
-            speculation: self.get_usize("speculation", d.speculation).max(1),
-            memo_cap: self.get_usize("memo_cap", d.memo_cap),
+            speculation: self.strict("speculation", d.speculation)?.max(1),
+            memo_cap: self.strict("memo_cap", d.memo_cap)?,
             // 1 = sequential legacy path (default), 0 = auto-shard,
             // N>1 = pack independence groups into N shards
-            shards: self.get_usize("shards", d.shards),
-            budget_realloc: self.get_bool("budget_realloc", d.budget_realloc),
+            shards: self.strict("shards", d.shards)?,
+            budget_realloc: self
+                .strict_bool("budget_realloc", d.budget_realloc)?,
         })
     }
 }
@@ -143,6 +187,37 @@ mod tests {
         assert!(Config::parse("not a kv line").is_err());
         let c = Config::parse("mode = bogus").unwrap();
         assert!(c.tune_options().is_err());
+    }
+
+    #[test]
+    fn config_errors_are_typed() {
+        let err = Config::parse("not a kv line").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Config);
+        let err = Config::from_file("/no/such/config/file.ini").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Config);
+    }
+
+    #[test]
+    fn tune_options_rejects_present_but_malformed_values() {
+        // one malformed spelling per value class: integer, float,
+        // unsigned seed, and bool — each present key must be a typed
+        // refusal naming the key, never a silent default
+        for bad in [
+            "budget = lots",
+            "joint_frac = half",
+            "seed = -3",
+            "threads = 1.5",
+            "budget_realloc = maybe",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            let err = c.tune_options().unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::Config, "{bad}: {err}");
+            let key = bad.split('=').next().unwrap().trim();
+            assert!(err.to_string().contains(key), "{bad}: {err}");
+        }
+        // ...while missing keys still default
+        let o = Config::parse("").unwrap().tune_options().unwrap();
+        assert_eq!(o.budget, TuneOptions::default().budget);
     }
 
     #[test]

@@ -109,7 +109,12 @@ impl EvalEntry {
     }
 
     fn lowered(&self) -> &Lowered {
-        self.lowered.get().expect("entry handed out before lowering")
+        // entries are lowered before any caller sees them (see
+        // `eval_tallied`); a bare OnceLock here is a construction bug
+        match self.lowered.get() {
+            Some(l) => l,
+            None => unreachable!("entry handed out before lowering"),
+        }
     }
 
     /// The lowered program (initialized before any caller sees the entry).
@@ -483,12 +488,20 @@ impl Engine {
 
     /// Memo-cache entry cap.
     pub fn memo_cap(&self) -> usize {
-        self.memo.lock().unwrap().cap
+        self.memo().cap
     }
 
     /// Number of memoized candidates.
     pub fn memo_len(&self) -> usize {
-        self.memo.lock().unwrap().map.len()
+        self.memo().map.len()
+    }
+
+    /// The memo cache, tolerant of lock poisoning: the cache holds
+    /// plain data (no invariants span the lock), so a worker that
+    /// panicked mid-insert leaves at worst a missing entry — safe to
+    /// keep serving from after the panic is isolated.
+    fn memo(&self) -> std::sync::MutexGuard<'_, MemoCache> {
+        self.memo.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Full-width handle (batch submission API).
@@ -538,16 +551,66 @@ impl Engine {
     /// [`Engine::run`] capped at `width` workers — the nested-batch
     /// primitive: an outer fan-out gives each job a slice of the pool
     /// for its own inner batches. Order-preserving like `run`.
+    ///
+    /// Panic isolation: every job runs under `catch_unwind`, so one
+    /// panicking job never tears down the pool mid-batch — the other
+    /// jobs complete and the engine (memo cache included) stays
+    /// usable. This `Vec<T>` entry point then re-raises the first
+    /// failure on the *caller's* thread with the typed message;
+    /// callers that want to keep the survivors use
+    /// [`Engine::try_run`] instead.
     pub fn run_with<T, F>(&self, width: usize, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.try_run_with(width, n, f)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|e| panic!("{e}")))
+            .collect()
+    }
+
+    /// [`Engine::run`] returning per-job results: a panicking job
+    /// yields a typed [`crate::error::ErrorKind::Panic`] error in its
+    /// slot while every other job's output survives.
+    pub fn try_run<T, F>(&self, n: usize, f: F) -> Vec<crate::error::Result<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.try_run_with(self.threads, n, f)
+    }
+
+    /// [`Engine::try_run`] capped at `width` workers.
+    pub fn try_run_with<T, F>(
+        &self,
+        width: usize,
+        n: usize,
+        f: F,
+    ) -> Vec<crate::error::Result<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // AssertUnwindSafe: a job whose panic we catch contributes no
+        // output (its slot holds the typed error instead), and the
+        // shared state jobs touch — the memo cache — is plain data
+        // behind a poison-tolerant lock.
+        let job = |i: usize| -> crate::error::Result<T> {
+            catch_unwind(AssertUnwindSafe(|| {
+                #[cfg(feature = "fault-inject")]
+                crate::faults::maybe_panic(crate::faults::FaultSite::EngineJob);
+                f(i)
+            }))
+            .map_err(|p| crate::error::panic_error(p, &format!("engine job {i}")))
+        };
         let workers = width.min(self.threads).min(n);
         if workers <= 1 {
-            return (0..n).map(f).collect();
+            return (0..n).map(job).collect();
         }
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let slots: Vec<Mutex<Option<crate::error::Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..workers {
@@ -556,14 +619,22 @@ impl Engine {
                     if i >= n {
                         break;
                     }
-                    let out = f(i);
-                    *slots[i].lock().unwrap() = Some(out);
+                    let out = job(i);
+                    *slots[i].lock().unwrap_or_else(|p| p.into_inner()) =
+                        Some(out);
                 });
             }
         });
         slots
             .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+            .map(|s| {
+                match s.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                    Some(r) => r,
+                    // every index below n is claimed exactly once and
+                    // written before the scope joins
+                    None => unreachable!("worker filled every slot"),
+                }
+            })
             .collect()
     }
 
@@ -587,8 +658,7 @@ impl Engine {
         tally: Option<&EngineTally>,
     ) -> Arc<EvalEntry> {
         let key = (ctx.key_base, sched.clone());
-        let (entry, created, evicted) =
-            self.memo.lock().unwrap().lookup_or_insert(key);
+        let (entry, created, evicted) = self.memo().lookup_or_insert(key);
         let bump = |c: &Counters| {
             if created {
                 c.misses.fetch_add(1, Ordering::Relaxed);
@@ -817,6 +887,32 @@ mod tests {
         let e = Engine::new(4);
         let out = e.run(100, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_run_isolates_a_panicking_job() {
+        for threads in [1, 4] {
+            let e = Engine::new(threads);
+            let out = e.try_run(10, |i| {
+                if i == 3 {
+                    panic!("job {i} blew up");
+                }
+                i * 2
+            });
+            assert_eq!(out.len(), 10);
+            for (i, r) in out.iter().enumerate() {
+                if i == 3 {
+                    let err = r.as_ref().unwrap_err();
+                    assert_eq!(err.kind(), crate::error::ErrorKind::Panic);
+                    assert!(err.to_string().contains("job 3 blew up"), "{err}");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 2);
+                }
+            }
+            // the pool (and its memo lock) survives for the next batch
+            let again = e.run(5, |i| i + 1);
+            assert_eq!(again, vec![1, 2, 3, 4, 5]);
+        }
     }
 
     #[test]

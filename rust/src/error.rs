@@ -1,28 +1,100 @@
-//! Minimal crate error type — a dependency-free `anyhow` stand-in.
+//! Minimal crate error type — a dependency-free `anyhow` stand-in
+//! with a coarse fault taxonomy for the serving layer.
 //!
 //! The crate must build in offline environments with no registry
 //! access, so instead of pulling `anyhow` we carry a single
-//! message-holding error. Construction goes through [`Error::msg`] or
-//! the [`crate::bail`] / [`crate::err`] macros; interop `From` impls
-//! cover the std error types the crate actually meets.
+//! message-holding error plus an [`ErrorKind`] tag. Construction goes
+//! through [`Error::msg`] or the [`crate::bail`] / [`crate::err`]
+//! macros; interop `From` impls cover the std error types the crate
+//! actually meets. The kind survives [`Error::context`] wrapping, so
+//! callers can still route on it after layers of annotation — the
+//! property the fault-injection suite leans on to distinguish "typed
+//! refusal" from "crash".
 
 use std::fmt;
 
-/// Crate-wide error: an explanatory message (optionally chained).
+/// Coarse classification of a crate error — what *layer* failed, so
+/// serving callers can route without string-matching messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Unclassified (the historical default).
+    Other,
+    /// Malformed configuration input (`config::Config` parse paths).
+    Config,
+    /// Durable-plan load/save integrity failure (see [`PlanError`]).
+    Plan(PlanError),
+    /// Caller-supplied inputs rejected by validation (count, length,
+    /// non-finite values).
+    Input,
+    /// Compilation of a nest or model failed structurally.
+    Compile,
+    /// A worker thread panicked; the panic was caught and isolated to
+    /// this request.
+    Panic,
+}
+
+/// What exactly went wrong with a durable plan on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// Filesystem-level failure reading or writing the plan directory.
+    Io,
+    /// The manifest or plan text failed to parse.
+    Malformed,
+    /// The manifest's format-version line is missing or names a
+    /// version this build does not speak.
+    VersionSkew,
+    /// An artifact's recorded checksum does not match its bytes —
+    /// truncation, torn write, or bit rot.
+    ChecksumMismatch,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PlanError::Io => "io",
+            PlanError::Malformed => "malformed",
+            PlanError::VersionSkew => "version skew",
+            PlanError::ChecksumMismatch => "checksum mismatch",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Crate-wide error: an explanatory message (optionally chained) plus
+/// a routing [`ErrorKind`].
 #[derive(Debug)]
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg(m: impl fmt::Display) -> Self {
-        Self { msg: m.to_string() }
+        Self { msg: m.to_string(), kind: ErrorKind::Other }
     }
 
-    /// Wrap with leading context, mirroring `anyhow::Context`.
+    /// Build an error with an explicit kind.
+    pub fn with_kind(kind: ErrorKind, m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string(), kind }
+    }
+
+    /// The error's classification (survives [`Error::context`]).
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Retag an error (e.g. a generic io error discovered inside the
+    /// plan loader becomes `Plan(Io)`).
+    pub fn into_kind(mut self, kind: ErrorKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Wrap with leading context, mirroring `anyhow::Context`. The
+    /// kind of the inner error is preserved.
     pub fn context(self, ctx: impl fmt::Display) -> Self {
-        Self { msg: format!("{ctx}: {}", self.msg) }
+        Self { msg: format!("{ctx}: {}", self.msg), kind: self.kind }
     }
 }
 
@@ -36,13 +108,13 @@ impl std::error::Error for Error {}
 
 impl From<String> for Error {
     fn from(s: String) -> Self {
-        Self { msg: s }
+        Self { msg: s, kind: ErrorKind::Other }
     }
 }
 
 impl From<&str> for Error {
     fn from(s: &str) -> Self {
-        Self { msg: s.to_string() }
+        Self { msg: s.to_string(), kind: ErrorKind::Other }
     }
 }
 
@@ -62,6 +134,21 @@ impl From<std::num::ParseFloatError> for Error {
     fn from(e: std::num::ParseFloatError) -> Self {
         Self::msg(e)
     }
+}
+
+/// Convert a caught panic payload (from `std::panic::catch_unwind`)
+/// into a typed [`ErrorKind::Panic`] error. Payloads are `&str` or
+/// `String` for every `panic!`/`assert!`/`unwrap` in practice;
+/// anything else gets a generic label.
+pub fn panic_error(payload: Box<dyn std::any::Any + Send>, site: &str) -> Error {
+    let what = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    Error::with_kind(ErrorKind::Panic, format!("worker panic in {site}: {what}"))
 }
 
 /// Crate-wide result alias.
@@ -106,5 +193,25 @@ mod tests {
     fn from_std_errors() {
         let r: Result<i32> = "x".parse::<i32>().map_err(Error::from);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn kind_survives_context_and_retag() {
+        let e = Error::with_kind(ErrorKind::Plan(PlanError::ChecksumMismatch), "bad sum")
+            .context("loading plans/x");
+        assert_eq!(e.kind(), ErrorKind::Plan(PlanError::ChecksumMismatch));
+        assert_eq!(e.to_string(), "loading plans/x: bad sum");
+        let retagged = Error::msg("eof").into_kind(ErrorKind::Plan(PlanError::Io));
+        assert_eq!(retagged.kind(), ErrorKind::Plan(PlanError::Io));
+        assert_eq!(Error::msg("plain").kind(), ErrorKind::Other);
+    }
+
+    #[test]
+    fn panic_payloads_become_typed_errors() {
+        let p = std::panic::catch_unwind(|| panic!("blown fuse")).unwrap_err();
+        let e = panic_error(p, "nest worker");
+        assert_eq!(e.kind(), ErrorKind::Panic);
+        assert!(e.to_string().contains("blown fuse"));
+        assert!(e.to_string().contains("nest worker"));
     }
 }

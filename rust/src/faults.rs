@@ -1,0 +1,153 @@
+//! Deterministic fault injection for the robustness suite.
+//!
+//! Compiled only under `--features fault-inject`; in default builds
+//! every hook site compiles to nothing. The registry is a process-wide
+//! table of *armed* sites: production code calls [`fire`] (or
+//! [`maybe_panic`]) at a named site, and the call reports whether the
+//! test harness asked for a fault there. Arming is explicit and
+//! counted — `arm` fires on every hit, `arm_nth` fires exactly once on
+//! the n-th hit (0-based), which is how a test targets "the third nest
+//! compiled" or "the second worker chunk" deterministically.
+//!
+//! Sites are *semantic*, not positional: each names one failure class
+//! the serving stack must contain (see the site docs). The suite in
+//! `rust/tests/faults.rs` drives every site under a seeded schedule
+//! and checks the single invariant that matters: a typed `Err` or an
+//! output bit-identical to the bytecode oracle — never a panic
+//! escaping the API, never a silently wrong answer, and the shared
+//! model stays re-runnable afterwards.
+//!
+//! Tests sharing the process must serialize around the registry (it is
+//! global state); the suite holds one `Mutex` for that.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Injection points wired into the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// An index table trips the 2^22 alloc cap during fast-plan
+    /// compilation → the nest degrades to bytecode.
+    AllocCap,
+    /// Stream analysis of an access expression fails → the nest
+    /// degrades to bytecode.
+    StreamAnalysis,
+    /// A parallel nest worker panics mid-request → typed
+    /// `ErrorKind::Panic`, model stays re-runnable.
+    WorkerPanic,
+    /// A packed weight is corrupted to NaN at compile time → typed
+    /// compile error (the finiteness audit catches it).
+    NanWeight,
+    /// `save_plan` tears the plan file (truncated write) → the
+    /// manifest checksum rejects the plan at load with a typed
+    /// `PlanError::ChecksumMismatch`.
+    TornPlanWrite,
+    /// An engine evaluation job panics → typed error from `try_run`,
+    /// engine stays usable.
+    EngineJob,
+}
+
+/// Every site, for exhaustive suite sweeps.
+pub const ALL_SITES: [FaultSite; 6] = [
+    FaultSite::AllocCap,
+    FaultSite::StreamAnalysis,
+    FaultSite::WorkerPanic,
+    FaultSite::NanWeight,
+    FaultSite::TornPlanWrite,
+    FaultSite::EngineJob,
+];
+
+#[derive(Default)]
+struct SiteState {
+    /// Times this site was reached since arming.
+    hits: u64,
+    /// Times the site actually injected.
+    fired: u64,
+    /// Fire on every hit.
+    always: bool,
+    /// Fire once, on this 0-based hit index.
+    fire_on: Option<u64>,
+}
+
+static REGISTRY: OnceLock<Mutex<HashMap<FaultSite, SiteState>>> = OnceLock::new();
+
+fn reg() -> MutexGuard<'static, HashMap<FaultSite, SiteState>> {
+    REGISTRY
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm `site` to inject on every hit until [`disarm_all`].
+pub fn arm(site: FaultSite) {
+    let mut r = reg();
+    let s = r.entry(site).or_default();
+    *s = SiteState { always: true, ..SiteState::default() };
+}
+
+/// Arm `site` to inject exactly once, on its `n`-th hit (0-based).
+pub fn arm_nth(site: FaultSite, n: u64) {
+    let mut r = reg();
+    let s = r.entry(site).or_default();
+    *s = SiteState { fire_on: Some(n), ..SiteState::default() };
+}
+
+/// Disarm every site and reset all counters.
+pub fn disarm_all() {
+    reg().clear();
+}
+
+/// Hook call: records a hit at `site` and reports whether to inject.
+pub fn fire(site: FaultSite) -> bool {
+    let mut r = reg();
+    let Some(s) = r.get_mut(&site) else { return false };
+    let hit = s.hits;
+    s.hits += 1;
+    let go = s.always || s.fire_on == Some(hit);
+    if go {
+        s.fired += 1;
+    }
+    go
+}
+
+/// Hook call for panic sites: panics (with a recognizable payload) if
+/// the site fires.
+pub fn maybe_panic(site: FaultSite) {
+    if fire(site) {
+        panic!("injected fault at {site:?}");
+    }
+}
+
+/// Times `site` was reached since arming (0 if never armed).
+pub fn hits(site: FaultSite) -> u64 {
+    reg().get(&site).map(|s| s.hits).unwrap_or(0)
+}
+
+/// Times `site` actually injected since arming.
+pub fn fired(site: FaultSite) -> u64 {
+    reg().get(&site).map(|s| s.fired).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Registry state is process-global; this in-crate test is the only
+    // unit test touching it (the integration suite serializes itself).
+    #[test]
+    fn arm_nth_fires_exactly_once_on_target_hit() {
+        disarm_all();
+        assert!(!fire(FaultSite::AllocCap), "unarmed site must not fire");
+        arm_nth(FaultSite::AllocCap, 2);
+        assert!(!fire(FaultSite::AllocCap));
+        assert!(!fire(FaultSite::AllocCap));
+        assert!(fire(FaultSite::AllocCap), "third hit is index 2");
+        assert!(!fire(FaultSite::AllocCap), "nth arming fires once");
+        assert_eq!(hits(FaultSite::AllocCap), 4);
+        assert_eq!(fired(FaultSite::AllocCap), 1);
+        arm(FaultSite::AllocCap);
+        assert!(fire(FaultSite::AllocCap) && fire(FaultSite::AllocCap));
+        disarm_all();
+        assert!(!fire(FaultSite::AllocCap));
+    }
+}

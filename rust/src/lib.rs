@@ -55,23 +55,37 @@
 //!   `CompiledModel::save(dir)` / `Session::load(dir)` make tuning
 //!   durable across processes.
 
+// The serving-critical modules (everything a request touches at run
+// time) ban `unwrap`/`expect` outside tests: a malformed input or a
+// poisoned lock must become a typed `error::Error`, never a process
+// abort. Tuner-internal modules keep the default lint set — their
+// invariant panics are caught at the engine/runtime isolation
+// boundaries instead.
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod api;
 pub mod autotune;
 pub mod baselines;
 pub mod bench;
 pub mod codegen;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod config;
 pub mod cost;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod engine;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod error;
 pub mod expr;
+#[cfg(feature = "fault-inject")]
+pub mod faults;
 pub mod graph;
 pub mod layout;
 pub mod loops;
 pub mod propagate;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod util;
 
 pub use api::Session;

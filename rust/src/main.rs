@@ -75,10 +75,17 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
+/// Print a launcher-level error and exit — user-facing input problems
+/// (bad flags, malformed config files) are refusals, not panics.
+fn fatal(msg: impl std::fmt::Display) -> ! {
+    eprintln!("alt: {msg}");
+    std::process::exit(2);
+}
+
 fn build_config(flags: &HashMap<String, String>) -> Config {
     let mut cfg = flags
         .get("config")
-        .map(|p| Config::from_file(p).unwrap_or_else(|e| panic!("{e}")))
+        .map(|p| Config::from_file(p).unwrap_or_else(|e| fatal(e)))
         .unwrap_or_default();
     for (k, v) in flags {
         if k != "config" && k != "set" {
@@ -101,12 +108,12 @@ fn main() {
     let flags = parse_flags(&args[1..]);
     let cfg = build_config(&flags);
     let hw = HwProfile::by_name(cfg.get("hw").unwrap_or("intel"))
-        .unwrap_or_else(|| panic!("unknown hw profile"));
+        .unwrap_or_else(|| fatal("unknown hw profile"));
 
     match cmd.as_str() {
         "tune" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
-            let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
+            let opts = cfg.tune_options().unwrap_or_else(|e| fatal(e));
             if wname.contains(',') && cfg.get("op").is_some() {
                 eprintln!("--op is not supported with a workload fleet");
                 std::process::exit(2);
@@ -146,8 +153,17 @@ fn main() {
             }
             let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
             if let Some(op) = cfg.get("op") {
-                let idx: usize = op.parse().expect("--op index");
-                let node = g.complex_nodes()[idx];
+                let idx: usize = op
+                    .parse()
+                    .unwrap_or_else(|e| fatal(format!("--op '{op}': {e}")));
+                let complex = g.complex_nodes();
+                let Some(&node) = complex.get(idx) else {
+                    fatal(format!(
+                        "--op {idx} out of range: {} has {} complex ops",
+                        g.name,
+                        complex.len()
+                    ))
+                };
                 let r = tune_op(&g, node, &hw, &opts);
                 println!(
                     "tuned {} op#{node}: {:.4} ms after {} measurements",
@@ -161,7 +177,9 @@ fn main() {
                     for (i, ms) in r.history.iter().enumerate() {
                         csv.push_str(&format!("{},{ms}\n", i + 1));
                     }
-                    std::fs::write(path, csv).expect("write curve");
+                    std::fs::write(path, csv).unwrap_or_else(|e| {
+                        fatal(format!("write curve {path}: {e}"))
+                    });
                     println!("tuning curve -> {path}");
                 }
             } else {
@@ -171,7 +189,9 @@ fn main() {
                     .with_options(opts)
                     .with_exec_threads(cfg.get_usize("exec_threads", 0));
                 let tuned = session.tune();
-                let r = tuned.result().expect("tune() carries its result");
+                let Some(r) = tuned.result() else {
+                    fatal("tune() returned no result")
+                };
                 println!(
                     "tuned {} on {}: {:.4} ms end-to-end ({} measurements)",
                     tuned.graph().name,
@@ -236,7 +256,7 @@ fn main() {
         "propagate" => {
             let wname = cfg.get("workload").unwrap_or("case_study");
             let g = models::by_name(wname).unwrap_or_else(|| panic!("unknown workload {wname}"));
-            let opts = cfg.tune_options().unwrap_or_else(|e| panic!("{e}"));
+            let opts = cfg.tune_options().unwrap_or_else(|e| fatal(e));
             let r = tune_graph(&g, &hw, &opts);
             let prop = propagate(&g, &r.decisions, opts.mode);
             println!(

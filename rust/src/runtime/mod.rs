@@ -349,7 +349,8 @@ mod pjrt {
 pub use pjrt::{Executable, Runtime};
 
 pub use native::{
-    ExecMode, ExecScratch, NativeExecutable, NativeRuntime, OperandView,
+    DegradeReason, ExecMode, ExecScratch, NativeExecutable, NativeRuntime,
+    OperandView,
 };
 
 #[cfg(test)]

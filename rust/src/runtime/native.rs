@@ -135,8 +135,11 @@ impl Code {
                 Step::Var(i) => stack.push(env[*i]),
                 Step::Const(c) => stack.push(*c),
                 op => {
-                    let b = stack.pop().expect("code underflow");
-                    let a = stack.pop().expect("code underflow");
+                    // compile() emits balanced postfix, so underflow is
+                    // structurally impossible for any Code it built
+                    let (Some(b), Some(a)) = (stack.pop(), stack.pop()) else {
+                        unreachable!("code underflow")
+                    };
                     stack.push(match op {
                         Step::Add => a + b,
                         Step::Sub => a - b,
@@ -149,7 +152,10 @@ impl Code {
                 }
             }
         }
-        stack.pop().expect("empty code")
+        match stack.pop() {
+            Some(v) => v,
+            None => unreachable!("empty code"),
+        }
     }
 }
 
@@ -164,6 +170,46 @@ pub enum ExecMode {
     /// path is golden-tested against, and the baseline the serving
     /// bench's within-run speedup ratio is measured over.
     Bytecode,
+}
+
+/// Why a nest sits below the top rung of the execution ladder —
+/// recorded at compile (or forced-degrade) time and surfaced through
+/// `CompiledModel::health()`. The ladder is: strided fast plan with
+/// direct parallel writes → fast plan with staged scatter →
+/// bytecode interpreter → typed compile error. Every rung computes
+/// bit-identical outputs; only throughput degrades.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeReason {
+    /// A non-affine index term's lookup table would exceed the 2^22
+    /// entry cap ([`TABLE_CAP`]); the nest runs on bytecode.
+    TableCap,
+    /// An access expression mentions a loop variable with no known
+    /// extent, so stream analysis cannot decompose it; bytecode.
+    StreamAnalysis,
+    /// The write map was not proven injective within the 2^22
+    /// enumeration cap; parallel workers use the staged-scatter pass
+    /// instead of direct shared-buffer writes (the nest stays fast).
+    UnprovenWrite,
+    /// A fused repack edge's composed gather map referenced source
+    /// storage out of range; the repack materializes instead of
+    /// fusing.
+    GatherCompose,
+    /// A fault-injection hook forced this degrade
+    /// (`--features fault-inject` builds only).
+    Injected,
+}
+
+impl std::fmt::Display for DegradeReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DegradeReason::TableCap => "index table over alloc cap",
+            DegradeReason::StreamAnalysis => "stream analysis failed",
+            DegradeReason::UnprovenWrite => "write map not proven injective",
+            DegradeReason::GatherCompose => "gather-map composition out of range",
+            DegradeReason::Injected => "injected fault",
+        };
+        f.write_str(s)
+    }
 }
 
 /// A read-only operand slot: raw storage, optionally redirected through
@@ -264,16 +310,23 @@ impl Stream {
     /// extents. `None` when a non-affine sub-term's table would exceed
     /// [`TABLE_CAP`] (or mentions a var without a known extent).
     fn analyze(e: &Expr, extents: &[i64]) -> Option<Self> {
+        Self::try_analyze(e, extents).ok()
+    }
+
+    /// [`Stream::analyze`] that reports *which* rung of the
+    /// degradation ladder the expression fell off — the per-nest
+    /// [`DegradeReason`] the health report surfaces.
+    fn try_analyze(
+        e: &Expr,
+        extents: &[i64],
+    ) -> std::result::Result<Self, DegradeReason> {
         let mut s = Self {
             c0: 0,
             coeff: vec![0i64; extents.len()],
             tables: Vec::new(),
         };
-        if decompose(e, 1, extents, &mut s) {
-            Some(s)
-        } else {
-            None
-        }
+        decompose(e, 1, extents, &mut s)?;
+        Ok(s)
     }
 
     /// Affine part only (tables excluded) — the cursor initialization.
@@ -300,21 +353,28 @@ impl Stream {
 /// Accumulate `k · e` into `out`. Affine structure (vars, constants,
 /// add/sub, multiplication by var-free factors) distributes exactly;
 /// anything else becomes a table over its mentioned variables.
-fn decompose(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
+fn decompose(
+    e: &Expr,
+    k: i64,
+    extents: &[i64],
+    out: &mut Stream,
+) -> std::result::Result<(), DegradeReason> {
     if e.vars().is_empty() {
         out.c0 += k * e.eval(&[]);
-        return true;
+        return Ok(());
     }
     match e {
         Expr::Var(i) => {
             out.coeff[*i] += k;
-            true
+            Ok(())
         }
         Expr::Add(a, b) => {
-            decompose(a, k, extents, out) && decompose(b, k, extents, out)
+            decompose(a, k, extents, out)?;
+            decompose(b, k, extents, out)
         }
         Expr::Sub(a, b) => {
-            decompose(a, k, extents, out) && decompose(b, -k, extents, out)
+            decompose(a, k, extents, out)?;
+            decompose(b, -k, extents, out)
         }
         Expr::Mul(a, b) => {
             if a.vars().is_empty() {
@@ -334,20 +394,25 @@ fn decompose(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
 }
 
 /// Lower `k · e` to a lookup table over the variables `e` mentions.
-fn tabulate(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
+fn tabulate(
+    e: &Expr,
+    k: i64,
+    extents: &[i64],
+    out: &mut Stream,
+) -> std::result::Result<(), DegradeReason> {
     let vars: Vec<usize> = e.vars().into_iter().collect();
     let mut exts = Vec::with_capacity(vars.len());
     let mut size = 1i64;
     for &v in &vars {
         let ext = match extents.get(v) {
             Some(&x) if x >= 1 => x,
-            _ => return false,
+            _ => return Err(DegradeReason::StreamAnalysis),
         };
         size = size.saturating_mul(ext);
         exts.push(ext);
     }
     if size > TABLE_CAP {
-        return false;
+        return Err(DegradeReason::TableCap);
     }
     let mut radix = vec![1i64; vars.len()];
     for j in (0..vars.len().saturating_sub(1)).rev() {
@@ -364,7 +429,7 @@ fn tabulate(e: &Expr, k: i64, extents: &[i64], out: &mut Stream) -> bool {
         *slot = k * e.eval(&env);
     }
     out.tables.push(StreamTable { vars, radix, values });
-    true
+    Ok(())
 }
 
 /// Row-major strides of a storage shape.
@@ -460,19 +525,28 @@ impl FastNest {
         rhs_red_e: &Expr,
         write_e: &Expr,
         tail_exprs: &[Vec<Option<Expr>>],
-    ) -> Option<Self> {
-        let lhs_base = Stream::analyze(lhs_base_e, extents)?;
-        let rhs_base = Stream::analyze(rhs_base_e, extents)?;
-        let lhs_red = Stream::analyze(lhs_red_e, extents)?;
-        let rhs_red = Stream::analyze(rhs_red_e, extents)?;
-        let write = Stream::analyze(write_e, extents)?;
+    ) -> std::result::Result<Self, DegradeReason> {
+        #[cfg(feature = "fault-inject")]
+        {
+            if crate::faults::fire(crate::faults::FaultSite::StreamAnalysis) {
+                return Err(DegradeReason::Injected);
+            }
+            if crate::faults::fire(crate::faults::FaultSite::AllocCap) {
+                return Err(DegradeReason::TableCap);
+            }
+        }
+        let lhs_base = Stream::try_analyze(lhs_base_e, extents)?;
+        let rhs_base = Stream::try_analyze(rhs_base_e, extents)?;
+        let lhs_red = Stream::try_analyze(lhs_red_e, extents)?;
+        let rhs_red = Stream::try_analyze(rhs_red_e, extents)?;
+        let write = Stream::try_analyze(write_e, extents)?;
         let mut tails = Vec::with_capacity(tail_exprs.len());
         for stage in tail_exprs {
             let mut ops = Vec::with_capacity(stage.len());
             for e in stage {
                 ops.push(match e {
                     None => None,
-                    Some(e) => Some(Stream::analyze(e, extents)?),
+                    Some(e) => Some(Stream::try_analyze(e, extents)?),
                 });
             }
             tails.push(ops);
@@ -563,7 +637,7 @@ impl FastNest {
             })
             .collect();
 
-        Some(Self {
+        Ok(Self {
             lhs_base,
             rhs_base,
             lhs_red,
@@ -791,6 +865,9 @@ pub struct NativeExecutable {
     /// Strided fast plan (`None` when some access resisted the
     /// affine-plus-tables decomposition — the nest stays on bytecode).
     fast: Option<FastNest>,
+    /// Why `fast` is `None` (set at compile, or by a forced
+    /// [`degrade`](Self::degrade)); `None` while the fast plan holds.
+    fast_degrade: Option<DegradeReason>,
     /// Which executor runs (Fast is only effective when `fast` is
     /// `Some`; Bytecode always forces the interpreter).
     mode: ExecMode,
@@ -1087,7 +1164,7 @@ impl NativeExecutable {
         let (lhs_base_e, lhs_red_e) = split_access(&accs[1], &red_vars);
         let (rhs_base_e, rhs_red_e) = split_access(&accs[2], &red_vars);
         let write_e = flat_expr(write_acc);
-        let fast = FastNest::build(
+        let (fast, fast_degrade) = match FastNest::build(
             &var_extents,
             &reduction,
             &lhs_base_e,
@@ -1096,7 +1173,12 @@ impl NativeExecutable {
             &rhs_red_e,
             &write_e,
             &tail_exprs,
-        );
+        ) {
+            Ok(f) => (Some(f), None),
+            // One rung down, not an error: the bytecode oracle computes
+            // the same bits, so the nest stays servable.
+            Err(reason) => (None, Some(reason)),
+        };
 
         // Write-map injectivity proof: when every spatial point writes
         // a distinct in-bounds address, parallel workers can write the
@@ -1144,6 +1226,7 @@ impl NativeExecutable {
             unpack,
             par_extent,
             fast,
+            fast_degrade,
             mode: ExecMode::Fast,
             write_direct,
             program,
@@ -1180,6 +1263,32 @@ impl NativeExecutable {
     /// access expression decomposed into an address stream).
     pub fn has_fast_path(&self) -> bool {
         self.fast.is_some()
+    }
+
+    /// Why this nest is off the strided fast plan (`None` while it
+    /// holds). Distinguishes a *degraded* nest from one whose model
+    /// was merely switched to [`ExecMode::Bytecode`] for oracle runs.
+    pub fn degrade_reason(&self) -> Option<DegradeReason> {
+        self.fast_degrade
+    }
+
+    /// Force this nest one rung down the ladder: drop the fast plan
+    /// and record why. Execution continues on the bytecode oracle with
+    /// bit-identical outputs; the rest of the model is unaffected.
+    pub fn degrade(&mut self, reason: DegradeReason) {
+        self.fast = None;
+        self.fast_degrade = Some(reason);
+    }
+
+    /// Ladder rung of the parallel write path: `Some(UnprovenWrite)`
+    /// when a parallel nest fell back to staged scatter because the
+    /// injectivity proof did not close within its enumeration cap.
+    pub fn write_degrade(&self) -> Option<DegradeReason> {
+        if self.is_parallel() && !self.write_direct {
+            Some(DegradeReason::UnprovenWrite)
+        } else {
+            None
+        }
     }
 
     /// Whether the compile-time injectivity proof enables direct
@@ -1310,8 +1419,7 @@ impl NativeExecutable {
                 );
             }
         }
-        self.execute_into(ops, out, scratch);
-        Ok(())
+        self.execute_into(ops, out, scratch)
     }
 
     /// Fold a storage buffer produced by
@@ -1332,7 +1440,7 @@ impl NativeExecutable {
         inputs: &[Vec<f32>],
     ) -> Result<(RunStats, Vec<f32>)> {
         let packed = self.pack_inputs(inputs)?;
-        Ok(self.run_packed(&packed))
+        self.run_packed(&packed)
     }
 
     /// Validate logical inputs and pack each into its operand's
@@ -1369,18 +1477,18 @@ impl NativeExecutable {
     }
 
     /// Timed execution over already-packed storage buffers.
-    fn run_packed(&self, packed: &[Vec<f32>]) -> (RunStats, Vec<f32>) {
+    fn run_packed(&self, packed: &[Vec<f32>]) -> Result<(RunStats, Vec<f32>)> {
         let views: Vec<OperandView> =
             packed.iter().map(|v| OperandView::direct(v)).collect();
         let mut scratch = ExecScratch::default();
         let t0 = Instant::now();
         let mut storage = Vec::new();
-        self.execute_into(&views, &mut storage, &mut scratch);
+        self.execute_into(&views, &mut storage, &mut scratch)?;
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let out = self.unpack(&storage);
         let sample = out.iter().take(8).copied().collect();
-        (RunStats { latency_ms, output_elems: out.len(), sample }, out)
+        Ok((RunStats { latency_ms, output_elems: out.len(), sample }, out))
     }
 
     /// Median-of-n timed runs (first run excluded as warmup). Inputs
@@ -1398,10 +1506,10 @@ impl NativeExecutable {
         n: usize,
     ) -> Result<(f64, Vec<f32>)> {
         let packed = self.pack_inputs(inputs)?;
-        let (_, out) = self.run_packed(&packed); // warmup + numerics
+        let (_, out) = self.run_packed(&packed)?; // warmup + numerics
         let mut times = Vec::with_capacity(n.max(1));
         for _ in 0..n.max(1) {
-            times.push(self.run_packed(&packed).0.latency_ms);
+            times.push(self.run_packed(&packed)?.0.latency_ms);
         }
         Ok((crate::util::stats::median(&mut times), out))
     }
@@ -1409,12 +1517,21 @@ impl NativeExecutable {
     /// Execute the program over packed operand views, producing the
     /// final tensor's storage buffer in `storage` (cleared + zeroed, so
     /// recycled buffers are safe).
+    ///
+    /// Panic isolation: every execution leg — serial and both parallel
+    /// paths — runs under `catch_unwind`, so a worker panic becomes a
+    /// typed [`ErrorKind::Panic`](crate::error::ErrorKind) error that
+    /// poisons only this request. The executable itself holds no
+    /// mutable state across runs (operand packing and weights are the
+    /// caller's), so it stays fully re-runnable after an `Err`; the
+    /// possibly-torn `storage` buffer is the caller's to discard.
     fn execute_into(
         &self,
         bufs: &[OperandView],
         storage: &mut Vec<f32>,
         scratch: &mut ExecScratch,
-    ) {
+    ) -> Result<()> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
         let total = self.spatial_total;
         // Honor the `parallel` annotation the way the simulator does:
         // the schedule grants at most `par_extent` parallel units, the
@@ -1426,8 +1543,10 @@ impl NativeExecutable {
         storage.clear();
         storage.resize(self.out_len, 0f32);
         if workers <= 1 {
-            self.exec_range(bufs, 0, total, scratch, |a, v| storage[a] = v);
-            return;
+            return catch_unwind(AssertUnwindSafe(|| {
+                self.exec_range(bufs, 0, total, scratch, |a, v| storage[a] = v);
+            }))
+            .map_err(|p| self.worker_panic(p));
         }
         let chunk = total.div_ceil(workers as u64);
         if self.write_direct {
@@ -1436,51 +1555,86 @@ impl NativeExecutable {
             // workers write the shared buffer in place — no staged
             // `(addr, value)` pairs, no serial scatter.
             let out = SharedOut(storage.as_mut_ptr());
-            std::thread::scope(|s| {
-                for w in 0..workers as u64 {
-                    let lo = (w * chunk).min(total);
-                    let hi = ((w + 1) * chunk).min(total);
-                    s.spawn(move || {
-                        let mut scratch = ExecScratch::default();
-                        self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
-                            // SAFETY: see SharedOut — addresses are
-                            // in-bounds and disjoint across workers.
-                            unsafe { *out.0.add(a) = v }
-                        });
-                    });
-                }
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers as u64)
+                    .map(|w| {
+                        let lo = (w * chunk).min(total);
+                        let hi = ((w + 1) * chunk).min(total);
+                        s.spawn(move || {
+                            catch_unwind(AssertUnwindSafe(|| {
+                                let mut scratch = ExecScratch::default();
+                                self.exec_range(
+                                    bufs,
+                                    lo,
+                                    hi,
+                                    &mut scratch,
+                                    |a, v| {
+                                        // SAFETY: see SharedOut —
+                                        // addresses are in-bounds and
+                                        // disjoint across workers.
+                                        unsafe { *out.0.add(a) = v }
+                                    },
+                                );
+                            }))
+                            .map_err(|p| self.worker_panic(p))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|p| Err(self.worker_panic(p))))
+                    .collect()
             });
-            return;
+            for r in results {
+                r?;
+            }
+            return Ok(());
         }
         // Fallback (write map not proved injective, e.g. beyond the
         // enumeration cap): workers emit (address, value) pairs merged
         // by one serial scatter — O(out_len) extra work, bounded by the
         // output size.
-        let parts: Vec<Vec<(usize, f32)>> = std::thread::scope(|s| {
+        let parts: Vec<Result<Vec<(usize, f32)>>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers as u64)
                 .map(|w| {
                     let lo = (w * chunk).min(total);
                     let hi = ((w + 1) * chunk).min(total);
                     s.spawn(move || {
-                        let mut scratch = ExecScratch::default();
-                        let mut part =
-                            Vec::with_capacity((hi - lo) as usize);
-                        self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
-                            part.push((a, v));
-                        });
-                        part
+                        catch_unwind(AssertUnwindSafe(|| {
+                            let mut scratch = ExecScratch::default();
+                            let mut part =
+                                Vec::with_capacity((hi - lo) as usize);
+                            self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
+                                part.push((a, v));
+                            });
+                            part
+                        }))
+                        .map_err(|p| self.worker_panic(p))
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|p| Err(self.worker_panic(p))))
+                .collect()
         });
         // Chunks own disjoint spatial coordinates, so each address is
         // written by exactly one worker; scatter in worker order.
         for part in parts {
-            for (a, v) in part {
+            for (a, v) in part? {
                 storage[a] = v;
             }
         }
+        Ok(())
+    }
+
+    /// Convert a caught worker-panic payload into the typed error that
+    /// poisons only the affected request.
+    fn worker_panic(
+        &self,
+        p: Box<dyn std::any::Any + Send>,
+    ) -> crate::error::Error {
+        crate::error::panic_error(p, &format!("{} nest worker", self.name))
     }
 
     /// Execute spatial iterations `[lo, hi)` of the flattened spatial
@@ -1494,6 +1648,8 @@ impl NativeExecutable {
         scratch: &mut ExecScratch,
         emit: F,
     ) {
+        #[cfg(feature = "fault-inject")]
+        crate::faults::maybe_panic(crate::faults::FaultSite::WorkerPanic);
         match (&self.fast, self.mode) {
             (Some(fast), ExecMode::Fast) => {
                 self.exec_range_fast(fast, bufs, lo, hi, scratch, emit)

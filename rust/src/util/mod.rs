@@ -46,6 +46,20 @@ pub fn stable_hash<T: std::hash::Hash + ?Sized>(v: &T) -> u64 {
     std::hash::Hasher::finish(&h)
 }
 
+/// Raw FNV-1a 64 over a byte slice — the durable-plan artifact
+/// checksum. Unlike [`stable_hash`] this feeds the bytes straight to
+/// the FNV state with no `Hash`-impl framing (no length prefix), so
+/// the value is the textbook FNV-1a digest of the file contents and
+/// stays comparable across compiler/std versions.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// All divisors of `n`, ascending. Tuning spaces for split factors are
 /// divisor sets (the paper rounds `R(D * a)` to a feasible factor).
 pub fn divisors(n: i64) -> Vec<i64> {
@@ -128,6 +142,14 @@ mod tests {
     fn geomean_basic() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

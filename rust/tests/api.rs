@@ -16,9 +16,12 @@ use std::collections::HashMap;
 
 use alt::api::Session;
 use alt::autotune::TuneOptions;
+use alt::error::ErrorKind;
 use alt::graph::{Graph, GraphBuilder};
 use alt::loops::LoopSchedule;
+use alt::runtime::{DegradeReason, ExecMode};
 use alt::sim::HwProfile;
+use alt::tensor::Role;
 
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
@@ -282,4 +285,114 @@ fn config_knobs_do_not_change_tuning() {
     assert_eq!(a.budget, b.budget);
     assert_eq!(a.seed, b.seed);
     assert_eq!(a.shards, b.shards);
+}
+
+#[test]
+fn run_rejects_invalid_inputs_with_typed_errors() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let model = Session::for_model(name)
+            .unwrap()
+            .with_profile(HwProfile::intel())
+            .baseline()
+            .compile()
+            .unwrap();
+        let inputs = model.seeded_inputs(3);
+        let first_input_name = model
+            .graph()
+            .tensors
+            .iter()
+            .find(|t| t.role == Role::Input)
+            .unwrap()
+            .name
+            .clone();
+
+        // wrong input count
+        let err = model.run(&[]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Input, "{name}: {err}");
+        assert!(err.to_string().contains("inputs"), "{name}: {err}");
+
+        // wrong length, naming the offending tensor
+        let mut short = inputs.clone();
+        short[0].pop();
+        let err = model.run(&short).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Input, "{name}: {err}");
+        assert!(
+            err.to_string().contains(&first_input_name),
+            "{name}: '{err}' does not name '{first_input_name}'"
+        );
+
+        // non-finite value, naming tensor and element index
+        let mut poisoned = inputs.clone();
+        poisoned[0][5] = f32::NAN;
+        let err = model.run(&poisoned).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Input, "{name}: {err}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains(&first_input_name) && msg.contains("non-finite"),
+            "{name}: '{msg}'"
+        );
+        assert!(msg.contains('5'), "{name}: index missing from '{msg}'");
+
+        // the model still serves valid requests after the rejections
+        model.run(&inputs).unwrap();
+    }
+}
+
+#[test]
+fn degraded_nest_stays_bit_identical_across_threads() {
+    // force one mid-model nest onto the bytecode interpreter via the
+    // public API (no fault-inject feature needed) and pin bit-identity
+    // against both the all-fast output and the full-bytecode oracle
+    for name in ["resnet18_small", "bert_tiny"] {
+        let clean = Session::for_model(name)
+            .unwrap()
+            .with_profile(HwProfile::intel())
+            .baseline()
+            .compile()
+            .unwrap();
+        let inputs = clean.seeded_inputs(13);
+        let (_, fast_out) = clean.run_with_output(&inputs).unwrap();
+        let victim = clean.health().nests[clean.health().nests.len() / 2].node;
+
+        for threads in [1usize, 2, 3] {
+            let mut model = Session::for_model(name)
+                .unwrap()
+                .with_profile(HwProfile::intel())
+                .with_exec_threads(threads)
+                .baseline()
+                .compile()
+                .unwrap();
+            assert!(model.all_fast_paths(), "{name}: baseline not all-fast");
+            assert!(
+                model.degrade_nest(victim, DegradeReason::StreamAnalysis),
+                "{name}: victim node {victim} not found"
+            );
+            let health = model.health();
+            assert_eq!(health.degraded_nests, 1, "{name}");
+            assert!(!model.all_fast_paths(), "{name}");
+            let hit =
+                health.nests.iter().find(|n| n.degraded.is_some()).unwrap();
+            assert_eq!(hit.node, victim, "{name}");
+            assert_eq!(
+                hit.degraded,
+                Some(DegradeReason::StreamAnalysis),
+                "{name}"
+            );
+
+            let (_, phases, out) = model.run_profiled(&inputs).unwrap();
+            assert_eq!(
+                bits(&fast_out),
+                bits(&out),
+                "{name}/t{threads}: degraded nest changed the output"
+            );
+            assert!(
+                phases.degraded_ms > 0.0,
+                "{name}/t{threads}: degraded time not attributed"
+            );
+
+            model.set_exec_mode(ExecMode::Bytecode);
+            let (_, oracle) = model.run_with_output(&inputs).unwrap();
+            assert_eq!(bits(&oracle), bits(&out), "{name}/t{threads}: oracle");
+        }
+    }
 }

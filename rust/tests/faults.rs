@@ -1,0 +1,282 @@
+//! Deterministic fault-injection suite (requires `--features fault-inject`).
+//!
+//! Every test drives the seeded fault registry in `alt::faults` against
+//! the real serving stack and checks the fault-tolerance invariant: for
+//! every injection site and every fault, the public API either returns a
+//! typed `Err` or produces output bit-identical to the bytecode oracle —
+//! it never panics across the API boundary, hangs, or silently corrupts
+//! a result.
+//!
+//! The registry is process-global, so every test serializes on `GATE`
+//! and resets the registry on entry. Seeded choices (which nest, which
+//! job) come from `FAULT_SEED` (default 1) so CI can sweep seeds.
+
+#![cfg(feature = "fault-inject")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard};
+
+use alt::api::{CompiledModel, Session};
+use alt::engine::Engine;
+use alt::error::{ErrorKind, PlanError};
+use alt::faults::{self, FaultSite, ALL_SITES};
+use alt::runtime::{DegradeReason, ExecMode};
+use alt::sim::HwProfile;
+use alt::util::Rng;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Serialize tests around the process-global fault registry.
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Seed for the suite's random choices; CI sweeps this.
+fn fault_seed() -> u64 {
+    std::env::var("FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Compile a zoo model without tuning (cheap; default schedules).
+fn baseline(name: &str, threads: usize) -> CompiledModel {
+    Session::for_model(name)
+        .unwrap()
+        .with_profile(HwProfile::intel())
+        .with_exec_threads(threads)
+        .baseline()
+        .compile()
+        .unwrap()
+}
+
+/// Injecting a fast-plan compile fault into one nest degrades that nest
+/// alone, and the degraded model's output stays bit-identical to the
+/// bytecode oracle.
+#[test]
+fn injected_nest_degradation_is_bit_identical() {
+    let _g = gate();
+    faults::disarm_all();
+    let mut rng = Rng::new(fault_seed());
+    let cases = [
+        (FaultSite::StreamAnalysis, DegradeReason::Injected),
+        (FaultSite::AllocCap, DegradeReason::TableCap),
+    ];
+    for model_name in ["resnet18_small", "bert_tiny"] {
+        let clean = baseline(model_name, 1);
+        let nests = clean.health().nests.len();
+        assert!(nests > 0, "{model_name}: no complex nests");
+        let inputs = clean.seeded_inputs(7);
+        let mut oracle = baseline(model_name, 1);
+        oracle.set_exec_mode(ExecMode::Bytecode);
+        let (_, want) = oracle.run_with_output(&inputs).unwrap();
+
+        for (site, reason) in cases {
+            for threads in [1usize, 2] {
+                let victim = rng.next_u64() % nests as u64;
+                faults::arm_nth(site, victim);
+                let model = {
+                    let tuned = Session::for_model(model_name)
+                        .unwrap()
+                        .with_profile(HwProfile::intel())
+                        .with_exec_threads(threads)
+                        .baseline();
+                    tuned.compile().unwrap()
+                };
+                faults::disarm_all();
+                let health = model.health();
+                assert_eq!(
+                    health.degraded_nests, 1,
+                    "{model_name}/{site:?}: exactly one nest should degrade"
+                );
+                assert!(!model.all_fast_paths());
+                let hit = health
+                    .nests
+                    .iter()
+                    .find(|n| n.degraded.is_some())
+                    .unwrap();
+                assert_eq!(hit.degraded, Some(reason), "{model_name}/{site:?}");
+                assert!(!hit.fast);
+                let (_, got) = model.run_with_output(&inputs).unwrap();
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "{model_name}/{site:?}/t{threads}: degraded output drifted"
+                );
+            }
+        }
+    }
+}
+
+/// A worker panic mid-request becomes a typed `ErrorKind::Panic` and
+/// poisons only that request: the same `CompiledModel` is re-runnable
+/// afterward, bit-identically.
+#[test]
+fn worker_panic_poisons_only_the_request() {
+    let _g = gate();
+    faults::disarm_all();
+    let model = baseline("resnet18_small", 2);
+    let inputs = model.seeded_inputs(7);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+
+    faults::arm_nth(FaultSite::WorkerPanic, 0);
+    let err = model.run_with_output(&inputs).unwrap_err();
+    faults::disarm_all();
+    assert_eq!(err.kind(), ErrorKind::Panic, "got: {err}");
+    assert!(
+        err.to_string().contains("injected fault"),
+        "panic payload lost: {err}"
+    );
+
+    let (_, got) = model.run_with_output(&inputs).unwrap();
+    assert_eq!(bits(&want), bits(&got), "model not re-runnable after panic");
+}
+
+/// A NaN smuggled into a packed weight is caught by the compile-time
+/// finiteness audit as a typed compile error, not at serve time.
+#[test]
+fn nan_weight_is_caught_at_compile() {
+    let _g = gate();
+    faults::disarm_all();
+    faults::arm(FaultSite::NanWeight);
+    let err = Session::for_model("resnet18_small")
+        .unwrap()
+        .with_profile(HwProfile::intel())
+        .baseline()
+        .compile()
+        .unwrap_err();
+    faults::disarm_all();
+    assert_eq!(err.kind(), ErrorKind::Compile, "got: {err}");
+    assert!(
+        err.to_string().contains("non-finite"),
+        "audit message missing: {err}"
+    );
+    // Clean compile works again once the fault is gone.
+    baseline("resnet18_small", 1);
+}
+
+/// A torn (truncated) plan write is caught at load by the manifest
+/// checksum, and a clean re-save over the same directory heals it.
+#[test]
+fn torn_plan_write_is_rejected_at_load() {
+    let _g = gate();
+    faults::disarm_all();
+    let dir = std::env::temp_dir()
+        .join(format!("alt-faults-torn-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let tuned = Session::for_model("resnet18_small")
+        .unwrap()
+        .with_profile(HwProfile::intel())
+        .baseline();
+    faults::arm_nth(FaultSite::TornPlanWrite, 0);
+    tuned.save(&dir).unwrap(); // the tear is silent at write time
+    assert_eq!(faults::fired(FaultSite::TornPlanWrite), 1, "tear injected");
+    faults::disarm_all();
+
+    let err = Session::load(&dir).unwrap_err();
+    assert_eq!(
+        err.kind(),
+        ErrorKind::Plan(PlanError::ChecksumMismatch),
+        "got: {err}"
+    );
+
+    // Atomic replace: a clean save over the torn directory recovers.
+    tuned.save(&dir).unwrap();
+    let restored = Session::load(&dir).unwrap();
+    let model = restored.compile().unwrap();
+    let inputs = model.seeded_inputs(7);
+    model.run_with_output(&inputs).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A panicking engine job surfaces as one typed `Err` slot from
+/// `try_run`; sibling jobs complete and the engine stays usable.
+#[test]
+fn engine_job_panic_is_isolated() {
+    let _g = gate();
+    faults::disarm_all();
+    let mut rng = Rng::new(fault_seed());
+    let k = rng.next_u64() % 10;
+    faults::arm_nth(FaultSite::EngineJob, k);
+    let e = Engine::new(2);
+    let results = e.try_run(10, |i| i * 3);
+    faults::disarm_all();
+    let mut errs = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(v) => assert_eq!(*v, i * 3),
+            Err(err) => {
+                errs += 1;
+                assert_eq!(err.kind(), ErrorKind::Panic, "got: {err}");
+                assert!(
+                    err.to_string().contains("injected fault"),
+                    "payload lost: {err}"
+                );
+            }
+        }
+    }
+    assert_eq!(errs, 1, "exactly one job should fail");
+    assert_eq!(e.run(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+}
+
+/// The full serve cycle (build → save → load → compile → run) under the
+/// whole fault-injection lifecycle.
+fn cycle(dir: &std::path::Path) -> alt::error::Result<Vec<f32>> {
+    let tuned = Session::for_model("resnet18_small")?
+        .with_profile(HwProfile::intel())
+        .with_exec_threads(2)
+        .baseline();
+    tuned.save(dir)?;
+    let model = Session::load(dir)?.compile()?;
+    let inputs = model.seeded_inputs(7);
+    let (_, out) = model.run_with_output(&inputs)?;
+    Ok(out)
+}
+
+/// The core invariant, swept over every site: each injected fault
+/// either surfaces as a typed `Err` or leaves the output bit-identical
+/// to the bytecode oracle. No panic ever escapes the serving API.
+#[test]
+fn all_sites_sweep_never_panics_or_corrupts() {
+    let _g = gate();
+    faults::disarm_all();
+    let mut rng = Rng::new(fault_seed());
+
+    let mut oracle = baseline("resnet18_small", 1);
+    oracle.set_exec_mode(ExecMode::Bytecode);
+    let inputs = oracle.seeded_inputs(7);
+    let (_, want) = oracle.run_with_output(&inputs).unwrap();
+
+    for site in ALL_SITES {
+        let nth = rng.next_u64() % 4;
+        let dir = std::env::temp_dir()
+            .join(format!("alt-faults-sweep-{}-{site:?}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        faults::arm_nth(site, nth);
+        let outcome = catch_unwind(AssertUnwindSafe(|| cycle(&dir)));
+        faults::disarm_all();
+        let _ = std::fs::remove_dir_all(&dir);
+        match outcome {
+            Err(_) => panic!("site {site:?}: panic escaped the serving API"),
+            Ok(Err(e)) => {
+                // Typed refusal: acceptable, but never the untyped
+                // catch-all kind.
+                assert_ne!(
+                    e.kind(),
+                    ErrorKind::Other,
+                    "site {site:?}: refusal not typed: {e}"
+                );
+            }
+            Ok(Ok(out)) => assert_eq!(
+                bits(&want),
+                bits(&out),
+                "site {site:?}: silent corruption"
+            ),
+        }
+    }
+}

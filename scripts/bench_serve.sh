@@ -6,9 +6,12 @@
 # fast-path-vs-bytecode-interpreter ratio (fast_vs_interp, with
 # fastpath_identical as its bit-identity oracle), per-inference repack
 # counts split into fused vs materialized edges, a repack-fusion demo
-# on resnet18_small's stem conv (fusion_demo), compile-time
-# weight-packing amortization, thread-count determinism, and the
-# save/load round trip.
+# on resnet18_small's stem conv (fusion_demo), a degradation-ladder
+# overhead demo with one mid-model nest on the bytecode interpreter
+# (degradation_overhead: fast/degraded/bytecode inf/s, the
+# degraded_vs_fast within-run ratio CI gates >= 0.7, and the degraded
+# output's bit-identity flag), compile-time weight-packing
+# amortization, thread-count determinism, and the save/load round trip.
 #
 # Usage: scripts/bench_serve.sh [output.json]
 set -euo pipefail
