@@ -19,22 +19,70 @@
 //! within-run throughput ratio against all-fast, which CI gates ≥ 0.7
 //! alongside bit-identity of the degraded output.
 //!
-//! Results go to `BENCH_serve.json` (override with `BENCH_SERVE_JSON`);
+//! A second, serving-layer report measures the high-throughput path:
+//! steady-state allocation of the reusable-scratch entry (counting
+//! global allocator), dynamic-batching and intra-request-pipelining
+//! bit-identity, deterministic typed backpressure, and a load
+//! generator — closed-loop req/s with p50/p99 at 1/8/64 clients plus
+//! an open-loop fixed-rate run with shed counting.
+//!
+//! Results go to `BENCH_serve.json` and `BENCH_throughput.json`
+//! (override with `BENCH_SERVE_JSON` / `BENCH_THROUGHPUT_JSON`);
 //! `scripts/bench_serve.sh` wraps this and CI enforces the hard floors
-//! (determinism, round trip, fast-vs-interpreter ratio, fusion) while
-//! absolute throughput only warns — shared runners are too noisy for a
-//! required absolute-timing gate, but the within-run ratio is immune to
-//! machine speed.
+//! (determinism, round trip, fast-vs-interpreter ratio, fusion,
+//! batching/pipelining identity, 8-client scaling on multi-core
+//! runners) while absolute throughput only warns — shared runners are
+//! too noisy for a required absolute-timing gate, but within-run
+//! ratios are immune to machine speed.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use alt::api::Session;
+use alt::api::{
+    BatchScratch, PipeScratch, RunScratch, ServeOptions, Server, Session,
+};
 use alt::autotune::TuneOptions;
+use alt::error::ErrorKind;
 use alt::layout::{LayoutSeq, Primitive};
 use alt::propagate::ComplexDecision;
 use alt::runtime::{DegradeReason, ExecMode};
 use alt::sim::HwProfile;
+
+/// Counting allocator wrapping the system one — the instrument behind
+/// the steady-state "reused scratch allocates (almost) nothing" block
+/// in the throughput report.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new as u64, Ordering::Relaxed);
+        System.realloc(p, l, new)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
 
 const BUDGET: usize = 200;
 const REQUESTS: usize = 8;
@@ -150,6 +198,302 @@ fn degradation_overhead() -> String {
          \"bytecode_inf_per_sec\": {bytecode_inf_s:.3}, \
          \"degraded_vs_fast\": {ratio:.3}, \"identical\": {identical}}}"
     )
+}
+
+fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| {
+        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    samples[((samples.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Closed-loop load: `clients` threads each issue `per_client`
+/// blocking requests back to back. Returns (req/s, p50 ms, p99 ms,
+/// all-bit-identical).
+fn closed_loop(
+    server: &Server,
+    clients: usize,
+    per_client: usize,
+    inputs: &[Vec<f32>],
+    want: &[u32],
+) -> (f64, f64, f64, bool) {
+    let mut lat: Vec<f64> = Vec::with_capacity(clients * per_client);
+    let mut identical = true;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let (srv, ins, w) = (server, inputs, want);
+                s.spawn(move || {
+                    let mut times = Vec::with_capacity(per_client);
+                    let mut ok = true;
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        let reply = srv.infer(ins.to_vec()).unwrap();
+                        times.push(t.elapsed().as_secs_f64() * 1e3);
+                        ok &= bits(&reply.output) == w;
+                    }
+                    (times, ok)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (times, ok) = h.join().unwrap();
+            lat.extend(times);
+            identical &= ok;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = lat.len() as f64 / wall;
+    (rps, percentile(&mut lat, 0.50), percentile(&mut lat, 0.99), identical)
+}
+
+/// The high-throughput serving report: steady-state allocation of the
+/// reusable-scratch entry, dynamic-batching and pipelining bit-identity
+/// (the CI hard gates), deterministic typed backpressure, and the load
+/// generator — closed-loop req/s + p50/p99 at 1/8/64 clients plus an
+/// open-loop fixed-rate run with shed counting. Scaling numbers are
+/// within-run ratios; absolute latencies only warn in CI.
+fn throughput_report(cores: usize) {
+    let model = Arc::new(
+        session("resnet18_small", 1)
+            .baseline()
+            .compile()
+            .unwrap_or_else(|e| panic!("throughput compile: {e}")),
+    );
+    let inputs = model.seeded_inputs(41);
+    let (_, reference) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&reference);
+
+    // -- steady-state allocation: persistent scratch vs fresh per run --
+    const ALLOC_RUNS: usize = 8;
+    let mut scratch = RunScratch::default();
+    for _ in 0..2 {
+        model.run_in(&mut scratch, &inputs).unwrap(); // warm the pools
+    }
+    let (c0, b0) = alloc_snapshot();
+    for _ in 0..ALLOC_RUNS {
+        model.run_in(&mut scratch, &inputs).unwrap();
+    }
+    let (c1, b1) = alloc_snapshot();
+    for _ in 0..ALLOC_RUNS {
+        model.run(&inputs).unwrap(); // fresh scratch every request
+    }
+    let (c2, b2) = alloc_snapshot();
+    let (reused_allocs, reused_bytes) = (c1 - c0, b1 - b0);
+    let (fresh_allocs, fresh_bytes) = (c2 - c1, b2 - b1);
+    let alloc_ratio = reused_bytes as f64 / fresh_bytes.max(1) as f64;
+
+    // -- dynamic batching: bit-identity vs sequential (CI hard gate) --
+    const LANES: usize = 5;
+    let reqs: Vec<Vec<Vec<f32>>> =
+        (0..LANES).map(|i| model.seeded_inputs(50 + i as u64)).collect();
+    let seq: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| bits(&model.run_with_output(r).unwrap().1))
+        .collect();
+    let mut bscratch = BatchScratch::default();
+    let lanes: Vec<&[Vec<f32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+    let batched_identical = model
+        .run_batch_in(&mut bscratch, &lanes)
+        .into_iter()
+        .enumerate()
+        .all(|(i, r)| match r {
+            Ok((_, _, out)) => bits(&out) == seq[i],
+            Err(e) => {
+                eprintln!("batched lane {i} failed: {e}");
+                false
+            }
+        });
+    if !batched_identical {
+        eprintln!("throughput: batched outputs diverged from sequential");
+    }
+
+    // -- intra-request pipelining: bit-identity + solo-latency ratio --
+    let (waves, widest) = model.wave_shape();
+    let mut pipe = PipeScratch::default();
+    let mut pipelined_identical = true;
+    for width in [2usize, 4] {
+        let (_, _, out) = model
+            .run_pipelined_in(&mut scratch, &mut pipe, width, &inputs)
+            .unwrap();
+        if bits(&out) != want {
+            pipelined_identical = false;
+            eprintln!("throughput: pipelined width {width} diverged");
+        }
+    }
+    let mut serial_ms = Vec::with_capacity(ALLOC_RUNS);
+    let mut piped_ms = Vec::with_capacity(ALLOC_RUNS);
+    for _ in 0..ALLOC_RUNS {
+        let t = Instant::now();
+        model.run_pipelined_in(&mut scratch, &mut pipe, 1, &inputs).unwrap();
+        serial_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let t = Instant::now();
+        model
+            .run_pipelined_in(&mut scratch, &mut pipe, cores.max(2), &inputs)
+            .unwrap();
+        piped_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let serial_solo_ms = alt::util::stats::median(&mut serial_ms);
+    let piped_solo_ms = alt::util::stats::median(&mut piped_ms);
+    let pipeline_speedup =
+        if piped_solo_ms > 0.0 { serial_solo_ms / piped_solo_ms } else { 0.0 };
+
+    // -- deterministic typed backpressure (CI hard gate) --
+    let overload_typed = {
+        let srv = Server::start(
+            Arc::clone(&model),
+            ServeOptions {
+                workers: 1,
+                max_batch: 1,
+                batch_window_us: 0,
+                queue_cap: 1,
+                pipeline_width: 1,
+            },
+        );
+        srv.pause();
+        let admitted = srv.submit(inputs.clone()).unwrap();
+        let typed = matches!(
+            srv.submit(inputs.clone()),
+            Err(e) if e.kind() == ErrorKind::Overload
+        );
+        srv.resume();
+        let drained = admitted.wait().is_ok();
+        srv.shutdown();
+        typed && drained
+    };
+
+    // -- closed-loop load generator --
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 0, // one per core
+            max_batch: 8,
+            batch_window_us: 200,
+            queue_cap: 256,
+            pipeline_width: 1,
+        },
+    );
+    for _ in 0..2 {
+        server.infer(inputs.clone()).unwrap(); // warmup
+    }
+    let mut closed_rows: Vec<String> = Vec::new();
+    let mut rps_at: HashMap<usize, f64> = HashMap::new();
+    let mut closed_identical = true;
+    for (clients, per_client) in [(1usize, 24usize), (8, 12), (64, 2)] {
+        let (rps, p50, p99, identical) =
+            closed_loop(&server, clients, per_client, &inputs, &want);
+        closed_identical &= identical;
+        rps_at.insert(clients, rps);
+        println!(
+            "closed loop {clients:>3} clients: {rps:>7.1} req/s | \
+             p50 {p50:.3} ms | p99 {p99:.3} ms | identical {identical}"
+        );
+        closed_rows.push(format!(
+            "    {{\"clients\": {clients}, \"requests\": {}, \
+             \"req_per_sec\": {rps:.3}, \"p50_ms\": {p50:.4}, \
+             \"p99_ms\": {p99:.4}, \"identical\": {identical}}}",
+            clients * per_client,
+        ));
+    }
+    let rps_1 = rps_at.get(&1).copied().unwrap_or(0.0);
+    let rps_8 = rps_at.get(&8).copied().unwrap_or(0.0);
+    let scaling_8c = if rps_1 > 0.0 { rps_8 / rps_1 } else { 0.0 };
+
+    // -- open-loop load generator: fixed submit rate, shed counting --
+    const OPEN_SUBMITS: usize = 48;
+    let target_rps = (2.0 * rps_1).max(1.0);
+    let interval = Duration::from_secs_f64(1.0 / target_rps);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(OPEN_SUBMITS);
+    let mut dropped = 0usize;
+    for i in 0..OPEN_SUBMITS {
+        match server.submit(inputs.clone()) {
+            Ok(p) => pending.push((Instant::now(), p)),
+            Err(e) => {
+                assert_eq!(e.kind(), ErrorKind::Overload, "{e}");
+                dropped += 1;
+            }
+        }
+        if i + 1 < OPEN_SUBMITS {
+            std::thread::sleep(interval);
+        }
+    }
+    let mut open_lat: Vec<f64> = Vec::with_capacity(pending.len());
+    let mut completed = 0usize;
+    for (submitted, p) in pending {
+        let reply = p.wait().unwrap();
+        open_lat.push(submitted.elapsed().as_secs_f64() * 1e3);
+        completed += 1;
+        assert!(reply.phases.queue_ms >= 0.0);
+    }
+    let open_wall = t0.elapsed().as_secs_f64();
+    let open_rps = completed as f64 / open_wall;
+    let open_p50 = percentile(&mut open_lat, 0.50);
+    let open_p99 = percentile(&mut open_lat, 0.99);
+    let final_stats = server.stats();
+    server.shutdown();
+
+    println!(
+        "steady-state alloc: reused {reused_bytes} B / fresh {fresh_bytes} B \
+         (ratio {alloc_ratio:.4}) over {ALLOC_RUNS} runs"
+    );
+    println!(
+        "pipelining: {waves} waves (widest {widest}), solo \
+         {serial_solo_ms:.3} -> {piped_solo_ms:.3} ms \
+         ({pipeline_speedup:.2}x), identical {pipelined_identical}"
+    );
+    println!(
+        "open loop: target {target_rps:.1} req/s -> {open_rps:.1} req/s, \
+         {completed}/{OPEN_SUBMITS} completed, {dropped} shed | \
+         p50 {open_p50:.3} ms | p99 {open_p99:.3} ms"
+    );
+    println!(
+        "scaling 8 clients vs 1: {scaling_8c:.2}x on {cores} cores | \
+         batched identical {batched_identical} | overload typed \
+         {overload_typed} | served {} batches {}",
+        final_stats.served, final_stats.batches,
+    );
+
+    let path = std::env::var("BENCH_THROUGHPUT_JSON")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    let json = format!(
+        "{{\n  \"cores\": {cores},\n  \"model\": \"resnet18_small\",\n  \
+         \"exec_threads\": 1,\n  \"workers\": {workers},\n  \
+         \"alloc_steady_state\": {{\"runs\": {ALLOC_RUNS}, \
+         \"reused_allocs\": {reused_allocs}, \
+         \"reused_bytes\": {reused_bytes}, \
+         \"fresh_allocs\": {fresh_allocs}, \
+         \"fresh_bytes\": {fresh_bytes}, \
+         \"ratio\": {alloc_ratio:.6}}},\n  \
+         \"batched_lanes\": {LANES},\n  \
+         \"batched_identical\": {batched_identical},\n  \
+         \"waves\": {waves},\n  \"widest_wave\": {widest},\n  \
+         \"pipelined_identical\": {pipelined_identical},\n  \
+         \"serial_solo_ms\": {serial_solo_ms:.4},\n  \
+         \"piped_solo_ms\": {piped_solo_ms:.4},\n  \
+         \"pipeline_speedup\": {pipeline_speedup:.3},\n  \
+         \"overload_typed\": {overload_typed},\n  \
+         \"closed_identical\": {closed_identical},\n  \
+         \"closed_loop\": [\n{closed}\n  ],\n  \
+         \"scaling_8c\": {scaling_8c:.3},\n  \
+         \"open_loop\": {{\"target_req_per_sec\": {target_rps:.3}, \
+         \"submitted\": {OPEN_SUBMITS}, \"completed\": {completed}, \
+         \"dropped\": {dropped}, \"req_per_sec\": {open_rps:.3}, \
+         \"p50_ms\": {open_p50:.4}, \"p99_ms\": {open_p99:.4}}},\n  \
+         \"served\": {served},\n  \"batches\": {batches}\n}}\n",
+        workers = ServeOptions::default().resolved_workers(),
+        closed = closed_rows.join(",\n"),
+        served = final_stats.served,
+        batches = final_stats.batches,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("throughput report -> {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -318,4 +662,7 @@ fn main() {
         Ok(()) => println!("serve report -> {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+
+    println!("== high-throughput serving (shared model, {cores} cores) ==");
+    throughput_report(cores);
 }

@@ -28,6 +28,7 @@
 
 pub mod model;
 pub mod plan;
+pub mod serve;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -41,8 +42,12 @@ use crate::sim::netsim::GraphReport;
 use crate::sim::HwProfile;
 use crate::{bail, err};
 
-pub use model::{CompiledModel, PhaseBreakdown};
+pub use model::{
+    BatchScratch, CompiledModel, PhaseBreakdown, PipeScratch, RunOutput,
+    RunScratch,
+};
 pub use plan::{OpPlan, TunedPlan};
+pub use serve::{Pending, ServeOptions, ServeReply, Server, ServerStats};
 
 /// Default seed the compiled model's constant weights are drawn from.
 pub const DEFAULT_WEIGHT_SEED: u64 = 1000;

@@ -28,10 +28,11 @@
 
 use std::borrow::Cow;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::time::Instant;
 
-use crate::error::{Error, ErrorKind, Result};
+use crate::error::{panic_error, Error, ErrorKind, Result};
 use crate::graph::{EltKind, Graph, NodeId, OpKind, PoolKind};
 use crate::layout::{LayoutSeq, LayoutTransform};
 use crate::loops::LoopSchedule;
@@ -165,6 +166,13 @@ pub struct CompiledModel {
     dies: Vec<Vec<TensorId>>,
     /// Conversion slots whose last use is step `i`.
     conv_dies: Vec<Vec<usize>>,
+    /// Dataflow wavefronts over plan steps (step indices grouped by
+    /// depth): steps in one wave read only buffers written by earlier
+    /// waves, so they are mutually data-independent — the step-level
+    /// projection of [`crate::graph::shard::exec_waves`], computed from
+    /// each step's *actual* operand reads so fused tails (a nest
+    /// reading a residual branch) are accounted for.
+    step_waves: Vec<Vec<usize>>,
     complex_steps: usize,
     simple_steps: usize,
     conversions: usize,
@@ -541,6 +549,68 @@ pub(crate) fn compile_model(
         d.sort_unstable();
     }
 
+    // ---- dataflow wavefronts over steps (intra-request pipelining) ----
+    // wave(step) = max over its reads of (writer's wave + 1); graph
+    // inputs and constants are ready at wave 0. A Complex step's reads
+    // include both a conversion slot and its source tensor, covering
+    // the fused (Fast) and materialized (Bytecode) read paths with one
+    // mode-independent structure.
+    let mut step_waves: Vec<Vec<usize>> = Vec::new();
+    {
+        let mut tensor_ready: HashMap<TensorId, usize> = HashMap::new();
+        let mut conv_ready: HashMap<usize, usize> = HashMap::new();
+        for (si, step) in steps.iter().enumerate() {
+            let mut w = 0usize;
+            {
+                let mut need_t = |t: TensorId, w: &mut usize| {
+                    *w = (*w).max(tensor_ready.get(&t).copied().unwrap_or(0));
+                };
+                match step {
+                    Step::Convert(c) => need_t(c.tensor, &mut w),
+                    Step::Complex(cs) => {
+                        for o in &cs.operands {
+                            match o {
+                                Operand::Tensor(t) => need_t(*t, &mut w),
+                                Operand::Converted(s) => {
+                                    w = w.max(
+                                        conv_ready
+                                            .get(s)
+                                            .copied()
+                                            .unwrap_or(0),
+                                    );
+                                    need_t(conv_tensor[*s], &mut w);
+                                }
+                                Operand::Const(_) => {}
+                            }
+                        }
+                    }
+                    Step::Simple(ss) => {
+                        for s in &ss.srcs {
+                            if let SimpleSrc::Tensor(t, _) = s {
+                                need_t(*t, &mut w);
+                            }
+                        }
+                    }
+                }
+            }
+            if step_waves.len() <= w {
+                step_waves.resize_with(w + 1, Vec::new);
+            }
+            step_waves[w].push(si);
+            match step {
+                Step::Convert(c) => {
+                    conv_ready.insert(c.slot, w + 1);
+                }
+                Step::Complex(cs) => {
+                    tensor_ready.insert(cs.out, w + 1);
+                }
+                Step::Simple(ss) => {
+                    tensor_ready.insert(ss.out, w + 1);
+                }
+            }
+        }
+    }
+
     let out_seq = prop.layouts.get(output_id);
     let output_unpack = (!out_seq.is_identity()).then(|| {
         let shape = graph.tensor(output_id).shape.clone();
@@ -570,6 +640,7 @@ pub(crate) fn compile_model(
         mode: ExecMode::Fast,
         dies,
         conv_dies,
+        step_waves,
         complex_steps,
         simple_steps,
         conversions,
@@ -590,17 +661,46 @@ fn take(pool: &mut Vec<Vec<f32>>, n: usize) -> Vec<f32> {
     b
 }
 
-/// Reusable per-run execution state: the buffer pool plus every scratch
-/// vector the step loop and the simple-op interpreter would otherwise
-/// allocate per call (nest env/stack, pooling coordinates, line-op
-/// line/result buffers).
+/// Worker-local compute scratch: every vector one step's *computation*
+/// would otherwise allocate per call (nest env/stack, pooling
+/// coordinates, line-op line/result buffers) plus the recycled-capacity
+/// buffer pool. Holds no per-tensor state, so pipelined execution can
+/// hand each core its own `WorkScratch` against one shared buffer set.
 #[derive(Default)]
-struct RunScratch {
+struct WorkScratch {
     exec: ExecScratch,
     pool: Vec<Vec<f32>>,
     idx: Vec<i64>,
     line: Vec<f32>,
     res: Vec<f32>,
+}
+
+/// Reusable per-run execution state: the live tensor/conversion buffer
+/// sets plus a [`WorkScratch`]. A fresh default works for any model;
+/// reusing one across runs (the [`CompiledModel::run_in`] family) keeps
+/// every `f32` buffer in the pool, so steady-state serving stops
+/// allocating. One scratch serves one request at a time — servers keep
+/// one per worker.
+#[derive(Default)]
+pub struct RunScratch {
+    work: WorkScratch,
+    bufs: Vec<Option<Vec<f32>>>,
+    convs: Vec<Option<Vec<f32>>>,
+}
+
+/// Per-request scratch set for [`CompiledModel::run_batch_in`]: one
+/// [`RunScratch`] per batch lane, grown on demand and reused across
+/// batches.
+#[derive(Default)]
+pub struct BatchScratch {
+    per: Vec<RunScratch>,
+}
+
+/// Worker-local scratches for [`CompiledModel::run_pipelined_in`]: one
+/// [`WorkScratch`] per pipeline core, grown on demand.
+#[derive(Default)]
+pub struct PipeScratch {
+    workers: Vec<WorkScratch>,
 }
 
 /// Per-phase wall-clock breakdown of one inference (milliseconds).
@@ -619,6 +719,33 @@ pub struct PhaseBreakdown {
     /// fast plan failed to compile or was revoked) — zero on a fully
     /// healthy model.
     pub degraded_ms: f64,
+    /// Time the request waited in a serving queue before a worker
+    /// picked it up (zero outside the [`crate::api::serve`] layer —
+    /// direct `run*` calls never queue).
+    pub queue_ms: f64,
+}
+
+impl PhaseBreakdown {
+    fn accum(&mut self, o: &PhaseBreakdown) {
+        self.nest_ms += o.nest_ms;
+        self.repack_ms += o.repack_ms;
+        self.boundary_ms += o.boundary_ms;
+        self.simple_ms += o.simple_ms;
+        self.degraded_ms += o.degraded_ms;
+        self.queue_ms += o.queue_ms;
+    }
+}
+
+/// One completed inference: run stats, per-phase breakdown, and the
+/// logical row-major output.
+pub type RunOutput = (RunStats, PhaseBreakdown, Vec<f32>);
+
+/// Where one computed step result lands when committed.
+enum StepTarget {
+    /// A tensor's storage buffer.
+    Tensor(TensorId),
+    /// A Fig. 5a conversion slot.
+    Conv(usize),
 }
 
 /// Health of one complex nest in a compiled model.
@@ -698,9 +825,9 @@ fn interp_simple(
     graph: &Graph,
     node: NodeId,
     ins: &[&[f32]],
-    sc: &mut RunScratch,
+    ws: &mut WorkScratch,
 ) -> Result<Vec<f32>> {
-    let RunScratch { pool, idx, line, res, .. } = sc;
+    let WorkScratch { pool, idx, line, res, .. } = ws;
     let n = graph.node(node);
     let out_shape = graph.tensor(n.output).shape.clone();
     let out_len: i64 = out_shape.iter().product();
@@ -961,6 +1088,25 @@ impl CompiledModel {
         &self,
         inputs: &[Vec<f32>],
     ) -> Result<(RunStats, PhaseBreakdown, Vec<f32>)> {
+        self.run_profiled_in(&mut RunScratch::default(), inputs)
+    }
+
+    /// [`run_with_output`](Self::run_with_output) against a caller-held
+    /// [`RunScratch`]: after warmup every intermediate buffer comes out
+    /// of the scratch's pool, so a serving worker that keeps its
+    /// scratch across requests runs the f32 hot path allocation-free.
+    /// One scratch serves one request at a time.
+    pub fn run_in(
+        &self,
+        scratch: &mut RunScratch,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, Vec<f32>)> {
+        self.run_profiled_in(scratch, inputs).map(|(s, _, o)| (s, o))
+    }
+
+    /// Validate request inputs against the graph's input specs — typed
+    /// [`ErrorKind::Input`] refusals for count, length, and finiteness.
+    fn validate_inputs(&self, inputs: &[Vec<f32>]) -> Result<()> {
         let specs = self.input_specs();
         if inputs.len() != specs.len() {
             return Err(Error::with_kind(
@@ -1001,200 +1147,248 @@ impl CompiledModel {
                 ));
             }
         }
-        let fast = self.mode == ExecMode::Fast;
-        let mut bufs: Vec<Option<Vec<f32>>> = vec![None; self.graph.tensors.len()];
-        for (&t, data) in self.input_ids.iter().zip(inputs) {
-            bufs[t] = Some(data.clone());
-        }
-        let mut convs: Vec<Option<Vec<f32>>> = vec![None; self.n_conv_slots];
-        let mut scratch = RunScratch::default();
-        let mut phases = PhaseBreakdown::default();
+        Ok(())
+    }
 
-        let t0 = Instant::now();
-        for (si, step) in self.steps.iter().enumerate() {
-            match step {
-                Step::Convert(c) => {
-                    // Fast mode fuses this edge: the consumer nest
-                    // reads the source buffer through the precompiled
-                    // gather map, so nothing materializes here —
-                    // unless the composed map failed validation, in
-                    // which case the edge stays materialized.
-                    if !fast || self.conv_forced[c.slot] {
-                        let tp = Instant::now();
-                        let src = bufs[c.tensor].as_deref().ok_or_else(
-                            || err!("convert: t{} not live", c.tensor),
-                        )?;
-                        let logical_owned;
-                        let logical: &[f32] = match &c.from {
-                            None => src,
-                            Some(tf) => {
-                                logical_owned = tf.unpack(src, &c.logical_shape);
-                                &logical_owned
-                            }
-                        };
-                        convs[c.slot] =
-                            Some(c.to.repack(logical, &c.logical_shape, 0.0));
-                        phases.repack_ms += tp.elapsed().as_secs_f64() * 1e3;
-                    }
-                }
-                Step::Complex(cs) => {
+    /// Reclaim whatever a previous (possibly failed) run left live in
+    /// `scratch` and seed the graph inputs from pooled buffers.
+    fn seed_scratch(&self, scratch: &mut RunScratch, inputs: &[Vec<f32>]) {
+        let RunScratch { work, bufs, convs } = scratch;
+        for b in bufs.iter_mut().chain(convs.iter_mut()) {
+            if let Some(v) = b.take() {
+                work.pool.push(v);
+            }
+        }
+        bufs.resize_with(self.graph.tensors.len(), || None);
+        convs.resize_with(self.n_conv_slots, || None);
+        for (&t, data) in self.input_ids.iter().zip(inputs) {
+            let mut b = work.pool.pop().unwrap_or_default();
+            b.clear();
+            b.extend_from_slice(data);
+            bufs[t] = Some(b);
+        }
+    }
+
+    /// Compute step `si` without touching shared state: read the live
+    /// buffer sets, return the produced buffer (if any) for the caller
+    /// to commit. Safe to call from several threads of one request as
+    /// long as the steps are data-independent (see `step_waves`).
+    fn compute_step(
+        &self,
+        si: usize,
+        fast: bool,
+        bufs: &[Option<Vec<f32>>],
+        convs: &[Option<Vec<f32>>],
+        ws: &mut WorkScratch,
+    ) -> Result<(Option<(StepTarget, Vec<f32>)>, PhaseBreakdown)> {
+        let mut phases = PhaseBreakdown::default();
+        let produced = match &self.steps[si] {
+            Step::Convert(c) => {
+                // Fast mode fuses this edge: the consumer nest reads
+                // the source buffer through the precompiled gather
+                // map, so nothing materializes here — unless the
+                // composed map failed validation, in which case the
+                // edge stays materialized.
+                if !fast || self.conv_forced[c.slot] {
                     let tp = Instant::now();
-                    let mut out_buf = scratch.pool.pop().unwrap_or_default();
-                    {
-                        // liveness is computed from these very steps,
-                        // so a missing buffer is a plan-construction
-                        // bug — surfaced as a typed error, not a panic
-                        let dead = |what: &str, id: usize| {
-                            err!(
-                                "{}: nest {} read a dead {} buffer ({id})",
-                                self.graph.name,
-                                cs.exe.name(),
-                                what
-                            )
-                        };
-                        let mut views: Vec<OperandView> =
-                            Vec::with_capacity(cs.operands.len());
-                        for o in &cs.operands {
-                            views.push(match o {
-                                Operand::Tensor(t) => OperandView::direct(
-                                    bufs[*t]
-                                        .as_deref()
-                                        .ok_or_else(|| dead("operand", *t))?,
-                                ),
-                                Operand::Converted(s) => {
-                                    if fast && !self.conv_forced[*s] {
-                                        OperandView {
-                                            data: bufs[self.conv_tensor[*s]]
-                                                .as_deref()
-                                                .ok_or_else(|| {
-                                                    dead("conversion source", *s)
-                                                })?,
-                                            gather: Some(&self.conv_gathers[*s]),
-                                        }
-                                    } else {
-                                        OperandView::direct(
-                                            convs[*s].as_deref().ok_or_else(
-                                                || dead("conversion", *s),
-                                            )?,
-                                        )
-                                    }
-                                }
-                                Operand::Const(k) => OperandView::direct(
-                                    self.consts[*k].as_slice(),
-                                ),
-                            });
+                    let src = bufs[c.tensor].as_deref().ok_or_else(
+                        || err!("convert: t{} not live", c.tensor),
+                    )?;
+                    let logical_owned;
+                    let logical: &[f32] = match &c.from {
+                        None => src,
+                        Some(tf) => {
+                            logical_owned = tf.unpack(src, &c.logical_shape);
+                            &logical_owned
                         }
-                        cs.exe.run_storage_views_into(
-                            &views,
-                            &mut out_buf,
-                            &mut scratch.exec,
-                        )?;
-                    }
-                    if let Some(old) = bufs[cs.out].replace(out_buf) {
-                        scratch.pool.push(old);
-                    }
-                    let dt = tp.elapsed().as_secs_f64() * 1e3;
-                    phases.nest_ms += dt;
-                    if cs.exe.degrade_reason().is_some() {
-                        phases.degraded_ms += dt;
-                    }
+                    };
+                    let buf = c.to.repack(logical, &c.logical_shape, 0.0);
+                    phases.repack_ms += tp.elapsed().as_secs_f64() * 1e3;
+                    Some((StepTarget::Conv(c.slot), buf))
+                } else {
+                    None
                 }
-                Step::Simple(ss) => {
-                    let tb = Instant::now();
-                    let mut ins: Vec<Cow<[f32]>> =
-                        Vec::with_capacity(ss.srcs.len());
-                    for s in &ss.srcs {
-                        ins.push(match s {
-                            SimpleSrc::Const(k) => {
-                                Cow::Borrowed(self.consts[*k].as_slice())
-                            }
-                            SimpleSrc::Tensor(t, tf) => {
-                                let buf =
-                                    bufs[*t].as_deref().ok_or_else(|| {
-                                        err!(
-                                            "{}: simple op read a dead \
-                                             buffer (t{})",
-                                            self.graph.name,
-                                            t
-                                        )
-                                    })?;
-                                match tf {
-                                    None => Cow::Borrowed(buf),
-                                    Some(bm) => Cow::Owned(if fast {
-                                        apply_map(
-                                            &bm.map,
-                                            buf,
-                                            scratch
-                                                .pool
-                                                .pop()
-                                                .unwrap_or_default(),
-                                        )
-                                    } else {
-                                        bm.tf.unpack(
-                                            buf,
-                                            &self.graph.tensor(*t).shape,
-                                        )
-                                    }),
+            }
+            Step::Complex(cs) => {
+                let tp = Instant::now();
+                let mut out_buf = ws.pool.pop().unwrap_or_default();
+                {
+                    // liveness is computed from these very steps,
+                    // so a missing buffer is a plan-construction
+                    // bug — surfaced as a typed error, not a panic
+                    let dead = |what: &str, id: usize| {
+                        err!(
+                            "{}: nest {} read a dead {} buffer ({id})",
+                            self.graph.name,
+                            cs.exe.name(),
+                            what
+                        )
+                    };
+                    let mut views: Vec<OperandView> =
+                        Vec::with_capacity(cs.operands.len());
+                    for o in &cs.operands {
+                        views.push(match o {
+                            Operand::Tensor(t) => OperandView::direct(
+                                bufs[*t]
+                                    .as_deref()
+                                    .ok_or_else(|| dead("operand", *t))?,
+                            ),
+                            Operand::Converted(s) => {
+                                if fast && !self.conv_forced[*s] {
+                                    OperandView {
+                                        data: bufs[self.conv_tensor[*s]]
+                                            .as_deref()
+                                            .ok_or_else(|| {
+                                                dead("conversion source", *s)
+                                            })?,
+                                        gather: Some(&self.conv_gathers[*s]),
+                                    }
+                                } else {
+                                    OperandView::direct(
+                                        convs[*s].as_deref().ok_or_else(
+                                            || dead("conversion", *s),
+                                        )?,
+                                    )
                                 }
                             }
+                            Operand::Const(k) => OperandView::direct(
+                                self.consts[*k].as_slice(),
+                            ),
                         });
                     }
-                    phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
-                    let ti = Instant::now();
-                    let logical = {
-                        let slices: Vec<&[f32]> =
-                            ins.iter().map(|c| c.as_ref()).collect();
-                        interp_simple(
-                            &self.graph,
-                            ss.node,
-                            &slices,
-                            &mut scratch,
-                        )?
-                    };
-                    phases.simple_ms += ti.elapsed().as_secs_f64() * 1e3;
-                    for c in ins {
-                        if let Cow::Owned(v) = c {
-                            scratch.pool.push(v);
-                        }
-                    }
-                    let tb = Instant::now();
-                    let stored = match &ss.pack {
-                        None => logical,
-                        Some(bm) => {
-                            let packed = if fast {
-                                apply_map(
-                                    &bm.map,
-                                    &logical,
-                                    scratch.pool.pop().unwrap_or_default(),
-                                )
-                            } else {
-                                bm.tf.repack(
-                                    &logical,
-                                    &self.graph.tensor(ss.out).shape,
-                                    0.0,
-                                )
-                            };
-                            scratch.pool.push(logical);
-                            packed
-                        }
-                    };
-                    phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
-                    if let Some(old) = bufs[ss.out].replace(stored) {
-                        scratch.pool.push(old);
-                    }
+                    cs.exe.run_storage_views_into(
+                        &views,
+                        &mut out_buf,
+                        &mut ws.exec,
+                    )?;
                 }
+                let dt = tp.elapsed().as_secs_f64() * 1e3;
+                phases.nest_ms += dt;
+                if cs.exe.degrade_reason().is_some() {
+                    phases.degraded_ms += dt;
+                }
+                Some((StepTarget::Tensor(cs.out), out_buf))
             }
-            for &d in &self.dies[si] {
-                if let Some(b) = bufs[d].take() {
-                    scratch.pool.push(b);
+            Step::Simple(ss) => {
+                let tb = Instant::now();
+                let mut ins: Vec<Cow<[f32]>> =
+                    Vec::with_capacity(ss.srcs.len());
+                for s in &ss.srcs {
+                    ins.push(match s {
+                        SimpleSrc::Const(k) => {
+                            Cow::Borrowed(self.consts[*k].as_slice())
+                        }
+                        SimpleSrc::Tensor(t, tf) => {
+                            let buf =
+                                bufs[*t].as_deref().ok_or_else(|| {
+                                    err!(
+                                        "{}: simple op read a dead \
+                                         buffer (t{})",
+                                        self.graph.name,
+                                        t
+                                    )
+                                })?;
+                            match tf {
+                                None => Cow::Borrowed(buf),
+                                Some(bm) => Cow::Owned(if fast {
+                                    apply_map(
+                                        &bm.map,
+                                        buf,
+                                        ws.pool.pop().unwrap_or_default(),
+                                    )
+                                } else {
+                                    bm.tf.unpack(
+                                        buf,
+                                        &self.graph.tensor(*t).shape,
+                                    )
+                                }),
+                            }
+                        }
+                    });
                 }
+                phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
+                let ti = Instant::now();
+                let logical = {
+                    let slices: Vec<&[f32]> =
+                        ins.iter().map(|c| c.as_ref()).collect();
+                    interp_simple(&self.graph, ss.node, &slices, ws)?
+                };
+                phases.simple_ms += ti.elapsed().as_secs_f64() * 1e3;
+                for c in ins {
+                    if let Cow::Owned(v) = c {
+                        ws.pool.push(v);
+                    }
+                }
+                let tb = Instant::now();
+                let stored = match &ss.pack {
+                    None => logical,
+                    Some(bm) => {
+                        let packed = if fast {
+                            apply_map(
+                                &bm.map,
+                                &logical,
+                                ws.pool.pop().unwrap_or_default(),
+                            )
+                        } else {
+                            bm.tf.repack(
+                                &logical,
+                                &self.graph.tensor(ss.out).shape,
+                                0.0,
+                            )
+                        };
+                        ws.pool.push(logical);
+                        packed
+                    }
+                };
+                phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
+                Some((StepTarget::Tensor(ss.out), stored))
             }
-            for &s in &self.conv_dies[si] {
-                if let Some(b) = convs[s].take() {
-                    scratch.pool.push(b);
-                }
+        };
+        Ok((produced, phases))
+    }
+
+    /// Commit one computed step: land the produced buffer in the shared
+    /// buffer sets and recycle everything whose last reader was this
+    /// step. Callers invoke commits strictly in plan order, which keeps
+    /// every execution mode bit-identical to the serial path.
+    fn commit_step(
+        &self,
+        si: usize,
+        produced: Option<(StepTarget, Vec<f32>)>,
+        bufs: &mut [Option<Vec<f32>>],
+        convs: &mut [Option<Vec<f32>>],
+        pool: &mut Vec<Vec<f32>>,
+    ) {
+        if let Some((target, buf)) = produced {
+            let old = match target {
+                StepTarget::Tensor(t) => bufs[t].replace(buf),
+                StepTarget::Conv(s) => convs[s].replace(buf),
+            };
+            if let Some(old) = old {
+                pool.push(old);
             }
         }
+        for &d in &self.dies[si] {
+            if let Some(b) = bufs[d].take() {
+                pool.push(b);
+            }
+        }
+        for &s in &self.conv_dies[si] {
+            if let Some(b) = convs[s].take() {
+                pool.push(b);
+            }
+        }
+    }
+
+    /// Take the finished output buffer out of the live set and unpack
+    /// it to logical row-major.
+    fn finish_output(
+        &self,
+        bufs: &mut [Option<Vec<f32>>],
+        pool: &mut Vec<Vec<f32>>,
+        fast: bool,
+        phases: &mut PhaseBreakdown,
+    ) -> Result<Vec<f32>> {
         let storage = bufs[self.output_id]
             .take()
             .ok_or_else(|| err!("{}: output never produced", self.graph.name))?;
@@ -1202,20 +1396,234 @@ impl CompiledModel {
         let out = match &self.output_unpack {
             None => storage,
             Some(bm) => {
-                if fast {
-                    apply_map(&bm.map, &storage, Vec::new())
+                let unpacked = if fast {
+                    apply_map(&bm.map, &storage, pool.pop().unwrap_or_default())
                 } else {
                     bm.tf.unpack(
                         &storage,
                         &self.graph.tensor(self.output_id).shape,
                     )
-                }
+                };
+                pool.push(storage);
+                unpacked
             }
         };
         phases.boundary_ms += tb.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    /// The reusable-scratch core: run the whole model against `scratch`.
+    pub fn run_profiled_in(
+        &self,
+        scratch: &mut RunScratch,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, PhaseBreakdown, Vec<f32>)> {
+        self.validate_inputs(inputs)?;
+        let fast = self.mode == ExecMode::Fast;
+        let t0 = Instant::now();
+        self.seed_scratch(scratch, inputs);
+        let mut phases = PhaseBreakdown::default();
+        let RunScratch { work, bufs, convs } = scratch;
+        for si in 0..self.steps.len() {
+            let (produced, ph) = self.compute_step(si, fast, bufs, convs, work)?;
+            phases.accum(&ph);
+            self.commit_step(si, produced, bufs, convs, &mut work.pool);
+        }
+        let out = self.finish_output(bufs, &mut work.pool, fast, &mut phases)?;
         let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
         let sample = out.iter().take(8).copied().collect();
         Ok((RunStats { latency_ms, output_elems: out.len(), sample }, phases, out))
+    }
+
+    /// Dynamic-batching core: run `requests` as one batch-dim-aware
+    /// execution. The plan's step sequence becomes the outer loop and
+    /// the batch lanes the inner one, so each step's strided address
+    /// streams, gather maps, and packed weights are read once per batch
+    /// while per-request activations stay in per-lane buffer sets —
+    /// outputs are bit-identical to running the requests sequentially.
+    /// A request that fails (validation, execution, or a caught panic)
+    /// gets its own typed `Err` and is skipped for the remaining steps;
+    /// the rest of the batch completes. Per-request `latency_ms` is the
+    /// whole batch's wall time (queue wait is reported separately via
+    /// [`PhaseBreakdown::queue_ms`]).
+    pub fn run_batch_in(
+        &self,
+        batch: &mut BatchScratch,
+        requests: &[&[Vec<f32>]],
+    ) -> Vec<Result<RunOutput>> {
+        if batch.per.len() < requests.len() {
+            batch.per.resize_with(requests.len(), RunScratch::default);
+        }
+        let fast = self.mode == ExecMode::Fast;
+        let t0 = Instant::now();
+        let mut state: Vec<Result<PhaseBreakdown>> =
+            Vec::with_capacity(requests.len());
+        for (r, req) in requests.iter().enumerate() {
+            state.push(self.validate_inputs(req).map(|()| {
+                self.seed_scratch(&mut batch.per[r], req);
+                PhaseBreakdown::default()
+            }));
+        }
+        for si in 0..self.steps.len() {
+            for r in 0..requests.len() {
+                if state[r].is_err() {
+                    continue;
+                }
+                let outcome = {
+                    let RunScratch { work, bufs, convs } = &mut batch.per[r];
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        self.compute_step(si, fast, bufs, convs, work)
+                    })) {
+                        Ok(Ok((produced, ph))) => {
+                            self.commit_step(
+                                si,
+                                produced,
+                                bufs,
+                                convs,
+                                &mut work.pool,
+                            );
+                            Ok(ph)
+                        }
+                        Ok(Err(e)) => Err(e),
+                        Err(p) => Err(panic_error(p, "batched model step")),
+                    }
+                };
+                match outcome {
+                    Ok(ph) => {
+                        if let Ok(phases) = &mut state[r] {
+                            phases.accum(&ph);
+                        }
+                    }
+                    Err(e) => {
+                        // a panicked lane's scratch may be mid-mutation:
+                        // discard it wholesale; the lane stays failed
+                        // while the rest of the batch keeps stepping
+                        batch.per[r] = RunScratch::default();
+                        state[r] = Err(e);
+                    }
+                }
+            }
+        }
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        state
+            .into_iter()
+            .enumerate()
+            .map(|(r, st)| {
+                let mut phases = st?;
+                let RunScratch { work, bufs, .. } = &mut batch.per[r];
+                let out =
+                    self.finish_output(bufs, &mut work.pool, fast, &mut phases)?;
+                let sample = out.iter().take(8).copied().collect();
+                Ok((
+                    RunStats { latency_ms, output_elems: out.len(), sample },
+                    phases,
+                    out,
+                ))
+            })
+            .collect()
+    }
+
+    /// Intra-request pipelining core: execute one request with the
+    /// data-independent plan steps of each dataflow wave fanned out
+    /// across up to `width` cores (the step-level projection of
+    /// [`crate::graph::shard::exec_waves`]). Workers only *compute*
+    /// against the shared buffer sets; results are committed in plan
+    /// order on the calling thread, so the output is bit-identical to
+    /// the serial path for every `width`. `width <= 1` (or a
+    /// single-step wave) runs serially with zero spawn overhead.
+    pub fn run_pipelined_in(
+        &self,
+        scratch: &mut RunScratch,
+        pipe: &mut PipeScratch,
+        width: usize,
+        inputs: &[Vec<f32>],
+    ) -> Result<(RunStats, PhaseBreakdown, Vec<f32>)> {
+        self.validate_inputs(inputs)?;
+        let fast = self.mode == ExecMode::Fast;
+        let t0 = Instant::now();
+        self.seed_scratch(scratch, inputs);
+        let mut phases = PhaseBreakdown::default();
+        let RunScratch { work, bufs, convs } = scratch;
+        for wave in &self.step_waves {
+            if width <= 1 || wave.len() <= 1 {
+                for &si in wave {
+                    let (produced, ph) =
+                        self.compute_step(si, fast, bufs, convs, work)?;
+                    phases.accum(&ph);
+                    self.commit_step(si, produced, bufs, convs, &mut work.pool);
+                }
+                continue;
+            }
+            let nw = width.min(wave.len());
+            if pipe.workers.len() < nw {
+                pipe.workers.resize_with(nw, WorkScratch::default);
+            }
+            // keep worker pools primed out of the main pool: committed
+            // buffers die back into the main pool, so without this the
+            // workers would allocate fresh capacity every wave
+            for wsc in pipe.workers.iter_mut().take(nw) {
+                while wsc.pool.len() < 4 {
+                    match work.pool.pop() {
+                        Some(b) => wsc.pool.push(b),
+                        None => break,
+                    }
+                }
+            }
+            let bufs_r: &[Option<Vec<f32>>] = bufs;
+            let convs_r: &[Option<Vec<f32>>] = convs;
+            type Computed = (Option<(StepTarget, Vec<f32>)>, PhaseBreakdown);
+            let mut results: Vec<(usize, Result<Computed>)> =
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(nw);
+                    for (k, wsc) in
+                        pipe.workers.iter_mut().take(nw).enumerate()
+                    {
+                        let mine: Vec<usize> =
+                            wave.iter().copied().skip(k).step_by(nw).collect();
+                        handles.push(s.spawn(move || {
+                            let mut done = Vec::with_capacity(mine.len());
+                            for si in mine {
+                                let r = catch_unwind(AssertUnwindSafe(|| {
+                                    self.compute_step(
+                                        si, fast, bufs_r, convs_r, wsc,
+                                    )
+                                }))
+                                .unwrap_or_else(|p| {
+                                    Err(panic_error(p, "pipelined model step"))
+                                });
+                                done.push((si, r));
+                            }
+                            done
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .flat_map(|h| h.join().unwrap_or_default())
+                        .collect()
+                });
+            // commit in plan order — bit-identical to serial execution
+            results.sort_unstable_by_key(|&(si, _)| si);
+            for (si, r) in results {
+                let (produced, ph) = r?;
+                phases.accum(&ph);
+                self.commit_step(si, produced, bufs, convs, &mut work.pool);
+            }
+        }
+        let out = self.finish_output(bufs, &mut work.pool, fast, &mut phases)?;
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sample = out.iter().take(8).copied().collect();
+        Ok((RunStats { latency_ms, output_elems: out.len(), sample }, phases, out))
+    }
+
+    /// Shape of the pipelining wavefronts: `(waves, widest)` — how many
+    /// dataflow waves the plan has and the step count of the widest one
+    /// (`widest > 1` means intra-request pipelining has work to fan
+    /// out).
+    pub fn wave_shape(&self) -> (usize, usize) {
+        (
+            self.step_waves.len(),
+            self.step_waves.iter().map(|w| w.len()).max().unwrap_or(0),
+        )
     }
 
     /// Select the executor for every step of the plan. `Fast` (the

@@ -1,0 +1,465 @@
+//! High-throughput serving over a shared [`CompiledModel`].
+//!
+//! ```text
+//!             submit()                   workers (N threads)
+//!   clients ──────────► bounded queue ──► pop + batch gather ──► run
+//!      ▲                (queue_cap,        │                      │
+//!      │  Overload       Condvar)          │ 1 job   → run_in /   │
+//!      │  when full                        │           run_pipelined_in
+//!      └───────────── ServeReply ◄─────────┤ ≤max_batch jobs      │
+//!                     (mpsc per req)       └─────────► run_batch_in
+//! ```
+//!
+//! One `Arc`'d model — packed weights, gather maps, strided plans —
+//! serves every worker; what is per-worker is only the mutable scratch
+//! ([`RunScratch`]/[`BatchScratch`]/[`PipeScratch`]), so steady-state
+//! serving allocates nothing on the f32 hot path. Three multiplicative
+//! throughput mechanisms:
+//!
+//! * **concurrent sessions** — `workers` threads drain the queue
+//!   independently; requests never block each other beyond the queue.
+//! * **dynamic batching** — a worker that pops a request keeps
+//!   gathering waiting requests (up to `max_batch`, within
+//!   `batch_window_us`) and folds them into one batch-dim-aware
+//!   execution whose outputs are bit-identical to sequential runs.
+//! * **intra-request pipelining** — when the queue is shallow and
+//!   `pipeline_width > 1`, a single request's data-independent plan
+//!   steps fan out across idle cores instead of waiting for a batch.
+//!
+//! Failure semantics ride PR 7's ladder: a panicking request yields a
+//! typed [`ErrorKind::Panic`] error for *that* request only (the
+//! worker discards its scratch and keeps serving), a full queue yields
+//! a typed [`ErrorKind::Overload`] refusal at `submit` time, and
+//! degraded nests keep serving bit-identically. [`Server::pause`] /
+//! [`Server::resume`] quiesce the workers — the deterministic lever
+//! the overload and fault-injection tests use.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{panic_error, Error, ErrorKind, Result};
+use crate::runtime::RunStats;
+
+use super::model::{
+    BatchScratch, CompiledModel, HealthReport, PhaseBreakdown, PipeScratch,
+    RunScratch,
+};
+
+/// Serving knobs (see [`crate::config::Config::serve_options`] for the
+/// text-config spelling).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Worker threads draining the queue (`0` = one per core).
+    pub workers: usize,
+    /// Most requests one worker folds into a single batched execution.
+    pub max_batch: usize,
+    /// How long a worker holding one request waits for more before
+    /// giving up on a bigger batch (µs; `0` = batch only what is
+    /// already queued).
+    pub batch_window_us: u64,
+    /// Bounded queue capacity; a submit beyond it is shed with a typed
+    /// [`ErrorKind::Overload`] error instead of queuing unboundedly.
+    pub queue_cap: usize,
+    /// Cores fanned over one request's independent plan steps when the
+    /// queue is shallow (`<= 1` disables intra-request pipelining).
+    pub pipeline_width: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            max_batch: 8,
+            batch_window_us: 100,
+            queue_cap: 256,
+            pipeline_width: 1,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The actual worker-thread count `workers = 0` resolves to.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+/// One served inference: output + stats, plus how it was executed.
+#[derive(Debug)]
+pub struct ServeReply {
+    pub stats: RunStats,
+    /// Per-phase breakdown; [`PhaseBreakdown::queue_ms`] is the time
+    /// this request waited in the queue before a worker picked it up.
+    pub phases: PhaseBreakdown,
+    /// Logical row-major model output.
+    pub output: Vec<f32>,
+    /// Size of the dynamic batch this request rode in (1 = solo).
+    pub batched: usize,
+}
+
+/// Monotonic serving counters (snapshot via [`Server::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Requests completed successfully.
+    pub served: u64,
+    /// Requests shed with [`ErrorKind::Overload`] (full queue at
+    /// submit, or an injected queue drop).
+    pub shed: u64,
+    /// Multi-request batched executions run.
+    pub batches: u64,
+}
+
+struct Job {
+    inputs: Vec<Vec<f32>>,
+    tx: mpsc::Sender<Result<ServeReply>>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    q: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Shared {
+    model: Arc<CompiledModel>,
+    opts: ServeOptions,
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    paused: AtomicBool,
+    served: AtomicU64,
+    shed: AtomicU64,
+    batches: AtomicU64,
+}
+
+fn lock(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// An in-flight request handle; [`Pending::wait`] blocks for the reply.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<ServeReply>>,
+}
+
+impl Pending {
+    /// Block until the request completes. Every failure is a typed
+    /// [`Error`]: `Overload` (shed/shutdown), `Panic` (isolated worker
+    /// panic), `Input` (validation), or whatever execution returned.
+    pub fn wait(self) -> Result<ServeReply> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::with_kind(
+                ErrorKind::Overload,
+                "server shut down before completing the request",
+            )),
+        }
+    }
+}
+
+/// A multi-worker inference server over one shared compiled model.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker pool over `model`. The model is shared
+    /// immutably (`CompiledModel` is `Send + Sync`); all mutable state
+    /// is per-worker scratch.
+    pub fn start(model: Arc<CompiledModel>, opts: ServeOptions) -> Self {
+        let n = opts.resolved_workers();
+        let shared = Arc::new(Shared {
+            model,
+            opts,
+            queue: Mutex::new(QueueState::default()),
+            not_empty: Condvar::new(),
+            paused: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let workers = (0..n)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Enqueue one request. Returns a typed [`ErrorKind::Overload`]
+    /// error immediately when the queue is at `queue_cap` (or the
+    /// server is shutting down) — the backpressure signal.
+    pub fn submit(&self, inputs: Vec<Vec<f32>>) -> Result<Pending> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut guard = lock(&self.shared.queue);
+            if guard.closed {
+                return Err(Error::with_kind(
+                    ErrorKind::Overload,
+                    "server is shutting down",
+                ));
+            }
+            if guard.q.len() >= self.shared.opts.queue_cap.max(1) {
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::with_kind(
+                    ErrorKind::Overload,
+                    format!(
+                        "queue full ({} requests) — shedding load",
+                        guard.q.len()
+                    ),
+                ));
+            }
+            guard.q.push_back(Job {
+                inputs,
+                tx,
+                enqueued: Instant::now(),
+            });
+        }
+        self.shared.not_empty.notify_one();
+        Ok(Pending { rx })
+    }
+
+    /// Submit + wait: the blocking closed-loop client call.
+    pub fn infer(&self, inputs: Vec<Vec<f32>>) -> Result<ServeReply> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Quiesce the workers: requests keep queuing (and shedding past
+    /// `queue_cap`) but nothing executes until [`Server::resume`]. The
+    /// deterministic lever for overload and fault tests.
+    pub fn pause(&self) {
+        self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Release a [`Server::pause`]; queued requests drain immediately.
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+        self.shared.not_empty.notify_all();
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.shared.queue).q.len()
+    }
+
+    /// Snapshot of the monotonic serving counters.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            served: self.shared.served.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The shared model (e.g. for [`CompiledModel::health`] under load).
+    pub fn model(&self) -> &CompiledModel {
+        &self.shared.model
+    }
+
+    /// Per-nest degradation report of the shared model.
+    pub fn health(&self) -> HealthReport {
+        self.shared.model.health()
+    }
+
+    /// The options this server was started with.
+    pub fn options(&self) -> &ServeOptions {
+        &self.shared.opts
+    }
+
+    /// Graceful shutdown: close the queue (new submits are refused with
+    /// `Overload`), drain everything already queued, join the workers.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut guard = lock(&self.shared.queue);
+            guard.closed = true;
+        }
+        // a paused server would never drain — release the brake
+        self.shared.paused.store(false, Ordering::SeqCst);
+        self.shared.not_empty.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// One worker: wait → pop → gather a batch → execute → reply, forever.
+/// All scratch is thread-local and reused, so after warmup the f32 hot
+/// path allocates nothing.
+fn worker_loop(shared: &Shared) {
+    let mut scratch = RunScratch::default();
+    let mut batch = BatchScratch::default();
+    let mut pipe = PipeScratch::default();
+    loop {
+        let (jobs, shallow) = {
+            let mut guard = lock(&shared.queue);
+            loop {
+                // pause quiesces execution (ignored once closing, so
+                // shutdown always drains)
+                let paused =
+                    shared.paused.load(Ordering::SeqCst) && !guard.closed;
+                if !paused && !guard.q.is_empty() {
+                    break;
+                }
+                if guard.closed && guard.q.is_empty() {
+                    return;
+                }
+                guard = shared
+                    .not_empty
+                    .wait(guard)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            let cap = shared.opts.max_batch.max(1);
+            let mut jobs = Vec::with_capacity(cap);
+            if let Some(j) = guard.q.pop_front() {
+                jobs.push(j);
+            }
+            // dynamic batch gather: anything already queued comes along
+            // for free; otherwise wait out the batch window for
+            // stragglers
+            let window = Duration::from_micros(shared.opts.batch_window_us);
+            let deadline = Instant::now() + window;
+            while jobs.len() < cap {
+                if let Some(j) = guard.q.pop_front() {
+                    jobs.push(j);
+                    continue;
+                }
+                if guard.closed || window.is_zero() {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, timeout) = shared
+                    .not_empty
+                    .wait_timeout(guard, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                guard = g;
+                if timeout.timed_out() && guard.q.is_empty() {
+                    break;
+                }
+            }
+            let shallow = guard.q.is_empty();
+            (jobs, shallow)
+        };
+        #[cfg(feature = "fault-inject")]
+        let jobs: Vec<Job> = jobs
+            .into_iter()
+            .filter_map(|job| {
+                if crate::faults::fire(crate::faults::FaultSite::QueueDrop) {
+                    shared.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.tx.send(Err(Error::with_kind(
+                        ErrorKind::Overload,
+                        "injected fault: worker dropped a queued request",
+                    )));
+                    None
+                } else {
+                    Some(job)
+                }
+            })
+            .collect();
+        let mut jobs = jobs;
+        if jobs.is_empty() {
+            continue;
+        }
+        let queued_ms: Vec<f64> = jobs
+            .iter()
+            .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
+            .collect();
+        if jobs.len() == 1 {
+            if let Some(job) = jobs.pop() {
+                // latency-critical solo request on a shallow queue:
+                // fan its independent plan steps over idle cores
+                let width = shared.opts.pipeline_width;
+                let pipelined = width > 1 && shallow;
+                let ran = catch_unwind(AssertUnwindSafe(|| {
+                    if pipelined {
+                        shared.model.run_pipelined_in(
+                            &mut scratch,
+                            &mut pipe,
+                            width,
+                            &job.inputs,
+                        )
+                    } else {
+                        shared.model.run_profiled_in(&mut scratch, &job.inputs)
+                    }
+                }));
+                let reply = match ran {
+                    Ok(Ok((stats, mut phases, output))) => {
+                        phases.queue_ms = queued_ms[0];
+                        shared.served.fetch_add(1, Ordering::Relaxed);
+                        Ok(ServeReply { stats, phases, output, batched: 1 })
+                    }
+                    Ok(Err(e)) => Err(e),
+                    Err(p) => {
+                        // the panicked request's scratch may be mid-
+                        // mutation — discard it; the fault stays
+                        // isolated to this request
+                        scratch = RunScratch::default();
+                        pipe = PipeScratch::default();
+                        Err(panic_error(p, "serve worker"))
+                    }
+                };
+                let _ = job.tx.send(reply);
+            }
+        } else {
+            shared.batches.fetch_add(1, Ordering::Relaxed);
+            let n = jobs.len();
+            let ran = {
+                let reqs: Vec<&[Vec<f32>]> =
+                    jobs.iter().map(|j| j.inputs.as_slice()).collect();
+                catch_unwind(AssertUnwindSafe(|| {
+                    shared.model.run_batch_in(&mut batch, &reqs)
+                }))
+            };
+            match ran {
+                Ok(results) => {
+                    for ((job, r), qm) in
+                        jobs.iter().zip(results).zip(queued_ms)
+                    {
+                        let reply = r.map(|(stats, mut phases, output)| {
+                            phases.queue_ms = qm;
+                            shared.served.fetch_add(1, Ordering::Relaxed);
+                            ServeReply { stats, phases, output, batched: n }
+                        });
+                        let _ = job.tx.send(reply);
+                    }
+                }
+                Err(p) => {
+                    // run_batch_in already isolates per-lane panics;
+                    // this catches the batch loop itself blowing up
+                    batch = BatchScratch::default();
+                    let msg = panic_error(p, "serve batch worker").to_string();
+                    for job in &jobs {
+                        let _ = job.tx.send(Err(Error::with_kind(
+                            ErrorKind::Panic,
+                            msg.clone(),
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}

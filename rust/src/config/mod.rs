@@ -14,6 +14,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::api::ServeOptions;
 use crate::autotune::TuneOptions;
 use crate::error::{Error, ErrorKind, Result};
 use crate::propagate::PropMode;
@@ -152,6 +153,26 @@ impl Config {
             shards: self.strict("shards", d.shards)?,
             budget_realloc: self
                 .strict_bool("budget_realloc", d.budget_realloc)?,
+        })
+    }
+
+    /// Build serving options from this config (keys: `workers`,
+    /// `max_batch`, `batch_window_us`, `queue_cap`, `pipeline_width`).
+    /// Strict like [`Config::tune_options`]: present-but-malformed
+    /// values are typed [`ErrorKind::Config`] errors, missing keys keep
+    /// the [`ServeOptions`] defaults (so an empty config serves exactly
+    /// like `ServeOptions::default()`).
+    pub fn serve_options(&self) -> Result<ServeOptions> {
+        let d = ServeOptions::default();
+        Ok(ServeOptions {
+            // 0 = one worker per core
+            workers: self.strict("workers", d.workers)?,
+            max_batch: self.strict("max_batch", d.max_batch)?.max(1),
+            batch_window_us: self
+                .strict("batch_window_us", d.batch_window_us)?,
+            queue_cap: self.strict("queue_cap", d.queue_cap)?.max(1),
+            // <= 1 disables intra-request pipelining
+            pipeline_width: self.strict("pipeline_width", d.pipeline_width)?,
         })
     }
 }
@@ -309,6 +330,67 @@ mod tests {
         assert_eq!(reparsed.backend(), "native");
         assert_eq!(reparsed.save_dir(), Some("out/plan"));
         assert_eq!(reparsed.tune_options().unwrap().budget, 64);
+    }
+
+    #[test]
+    fn serve_keys_parse_and_default() {
+        let c = Config::parse(
+            "workers = 4\nmax_batch = 16\nbatch_window_us = 250\n\
+             queue_cap = 32\npipeline_width = 2\n",
+        )
+        .unwrap();
+        let o = c.serve_options().unwrap();
+        assert_eq!(o.workers, 4);
+        assert_eq!(o.max_batch, 16);
+        assert_eq!(o.batch_window_us, 250);
+        assert_eq!(o.queue_cap, 32);
+        assert_eq!(o.pipeline_width, 2);
+        // an empty config serves exactly like ServeOptions::default()
+        let d = Config::parse("").unwrap().serve_options().unwrap();
+        assert_eq!(d, ServeOptions::default());
+        // degenerate sizes are clamped to a working server, not errors
+        let z = Config::parse("max_batch = 0\nqueue_cap = 0")
+            .unwrap()
+            .serve_options()
+            .unwrap();
+        assert_eq!(z.max_batch, 1);
+        assert_eq!(z.queue_cap, 1);
+    }
+
+    #[test]
+    fn serve_options_reject_present_but_malformed_values() {
+        for bad in [
+            "workers = many",
+            "max_batch = -2",
+            "batch_window_us = 0.5",
+            "queue_cap = big",
+            "pipeline_width = wide",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            let err = c.serve_options().unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::Config, "{bad}: {err}");
+            let key = bad.split('=').next().unwrap().trim();
+            assert!(err.to_string().contains(key), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips_serve_keys() {
+        let mut c = Config::default();
+        c.set("workers", "2");
+        c.set("max_batch", "4");
+        c.set("batch_window_us", "50");
+        c.set("queue_cap", "8");
+        c.set("pipeline_width", "3");
+        let reparsed = Config::parse(&format!("{c}")).unwrap();
+        let o = reparsed.serve_options().unwrap();
+        assert_eq!(o.workers, 2);
+        assert_eq!(o.max_batch, 4);
+        assert_eq!(o.batch_window_us, 50);
+        assert_eq!(o.queue_cap, 8);
+        assert_eq!(o.pipeline_width, 3);
+        // serving keys must not disturb tuning keys sharing the file
+        assert!(reparsed.tune_options().is_ok());
     }
 
     #[test]

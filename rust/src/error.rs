@@ -31,6 +31,9 @@ pub enum ErrorKind {
     /// A worker thread panicked; the panic was caught and isolated to
     /// this request.
     Panic,
+    /// The serving queue is full (or the server is shutting down) and
+    /// the request was shed instead of enqueued — retry later.
+    Overload,
 }
 
 /// What exactly went wrong with a durable plan on disk.

@@ -45,16 +45,21 @@ pub enum FaultSite {
     /// An engine evaluation job panics → typed error from `try_run`,
     /// engine stays usable.
     EngineJob,
+    /// A serving worker drops a request it popped from the queue →
+    /// only that request gets a typed `ErrorKind::Overload` error;
+    /// the server keeps draining the rest.
+    QueueDrop,
 }
 
 /// Every site, for exhaustive suite sweeps.
-pub const ALL_SITES: [FaultSite; 6] = [
+pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::AllocCap,
     FaultSite::StreamAnalysis,
     FaultSite::WorkerPanic,
     FaultSite::NanWeight,
     FaultSite::TornPlanWrite,
     FaultSite::EngineJob,
+    FaultSite::QueueDrop,
 ];
 
 #[derive(Default)]

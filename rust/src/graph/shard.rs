@@ -116,6 +116,37 @@ pub fn pack(plan: &ShardPlan, shards: usize) -> Vec<Vec<NodeId>> {
     out
 }
 
+/// Execution wavefronts: partition **all** nodes by dataflow depth.
+/// Wave `w` holds the nodes whose produced inputs all come from waves
+/// `< w`; nodes reading only graph inputs / weights are wave 0. Nodes
+/// inside one wave are mutually data-independent, so a runtime may
+/// execute them concurrently and still commit results in graph order.
+///
+/// This is deliberately *not* [`analyze`]: shard groups encode layout-
+/// propagation coupling for the tuner (a direct complex→complex edge
+/// is a group boundary yet strictly data-DEpendent), while waves encode
+/// run-time data independence for intra-request pipelining.
+pub fn exec_waves(graph: &Graph) -> Vec<Vec<NodeId>> {
+    // tensor -> wave of its producing node; absent = graph input/weight
+    let mut tensor_wave: HashMap<usize, usize> = HashMap::new();
+    let mut waves: Vec<Vec<NodeId>> = Vec::new();
+    for n in &graph.nodes {
+        let w = n
+            .inputs
+            .iter()
+            .filter_map(|t| tensor_wave.get(t))
+            .map(|&pw| pw + 1)
+            .max()
+            .unwrap_or(0);
+        if waves.len() <= w {
+            waves.resize_with(w + 1, Vec::new);
+        }
+        waves[w].push(n.id);
+        tensor_wave.insert(n.output, w);
+    }
+    waves
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +243,79 @@ mod tests {
         let q = by_name("l0.q");
         let gq = plan.groups.iter().position(|grp| grp.contains(&q)).unwrap();
         assert_eq!(gq, gs, "q couples to scores through its bias chain");
+    }
+
+    #[test]
+    fn exec_waves_cover_all_nodes_exactly_once() {
+        for g in [
+            models::case_study(),
+            models::resnet18(1),
+            models::bert_tiny(),
+        ] {
+            let waves = exec_waves(&g);
+            let mut all: Vec<NodeId> = waves.iter().flatten().copied().collect();
+            all.sort_unstable();
+            let mut ids: Vec<NodeId> = g.nodes.iter().map(|n| n.id).collect();
+            ids.sort_unstable();
+            assert_eq!(all, ids, "{}: waves must partition the nodes", g.name);
+        }
+    }
+    #[test]
+    fn exec_waves_respect_dataflow_order() {
+        // every produced input of a node must sit in a strictly earlier
+        // wave — the property pipelined execution relies on
+        for g in [models::resnet18(1), models::bert_tiny()] {
+            let waves = exec_waves(&g);
+            let mut wave_of: HashMap<NodeId, usize> = HashMap::new();
+            for (w, ns) in waves.iter().enumerate() {
+                for &n in ns {
+                    wave_of.insert(n, w);
+                }
+            }
+            let producer: HashMap<usize, NodeId> =
+                g.nodes.iter().map(|n| (n.output, n.id)).collect();
+            for n in &g.nodes {
+                for t in &n.inputs {
+                    if let Some(&p) = producer.get(t) {
+                        assert!(
+                            wave_of[&p] < wave_of[&n.id],
+                            "{}: {} reads {} from a later-or-equal wave",
+                            g.name,
+                            n.name,
+                            g.node(p).name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bert_qkv_projections_share_a_wave() {
+        // q/k/v all read the same embedded input — data-independent,
+        // so they pipeline onto different cores of one request
+        let g = models::bert_tiny();
+        let waves = exec_waves(&g);
+        let by_name = |name: &str| {
+            g.nodes.iter().find(|n| n.name == name).map(|n| n.id).unwrap()
+        };
+        let wave_of = |id: NodeId| {
+            waves.iter().position(|w| w.contains(&id)).unwrap()
+        };
+        let (q, k, v) = (by_name("l0.q"), by_name("l0.k"), by_name("l0.v"));
+        assert_eq!(wave_of(q), wave_of(k));
+        assert_eq!(wave_of(k), wave_of(v));
+        // while the scores matmul depends on q and k — strictly later
+        assert!(wave_of(by_name("l0.scores")) > wave_of(q));
+    }
+
+    #[test]
+    fn chain_nodes_land_in_successive_waves() {
+        // prop_subgraph is a straight pipe: every wave is a singleton
+        let g = models::prop_subgraph(7);
+        let waves = exec_waves(&g);
+        assert_eq!(waves.len(), g.nodes.len());
+        assert!(waves.iter().all(|w| w.len() == 1));
     }
 
     #[test]

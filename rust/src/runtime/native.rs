@@ -837,6 +837,15 @@ struct UnpackPlan {
 }
 
 /// A compiled tensor-program variant, ready to execute on the host.
+///
+/// Every field is immutable after compilation, so one executable can be
+/// shared across serving workers behind an `Arc`: all execution entry
+/// points take `&self` plus caller-owned output/[`ExecScratch`]
+/// buffers, and concurrent `run_storage_views_into` calls from
+/// different threads (each with its own scratch) are bit-identical to
+/// serial runs. The serving layer (`api::serve`) leans on this — give
+/// each worker its own scratch, never share one `ExecScratch` between
+/// threads.
 #[derive(Debug)]
 pub struct NativeExecutable {
     name: String,
@@ -1914,6 +1923,16 @@ impl Backend for NativeRuntime {
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
+
+    #[test]
+    fn native_executable_is_share_everything_thread_safe() {
+        // the serving layer Arc-shares one executable across workers;
+        // pin the auto-derived thread-safety so a future field (Rc,
+        // RefCell, raw pointer...) can't silently revoke it
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeExecutable>();
+        assert_send_sync::<ExecScratch>();
+    }
 
     #[test]
     fn tiny_dense_identity_matches_hand_matmul() {

@@ -14,9 +14,9 @@
 #![cfg(feature = "fault-inject")]
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
-use alt::api::{CompiledModel, Session};
+use alt::api::{CompiledModel, ServeOptions, Server, Session};
 use alt::engine::Engine;
 use alt::error::{ErrorKind, PlanError};
 use alt::faults::{self, FaultSite, ALL_SITES};
@@ -222,6 +222,120 @@ fn engine_job_panic_is_isolated() {
     }
     assert_eq!(errs, 1, "exactly one job should fail");
     assert_eq!(e.run(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+}
+
+/// An injected queue drop sheds exactly the targeted request with a
+/// typed `ErrorKind::Overload` reply; every other queued request is
+/// answered bit-identically and the server keeps draining.
+#[test]
+fn injected_queue_drop_sheds_one_request_and_server_keeps_draining() {
+    let _g = gate();
+    faults::disarm_all();
+    let model = Arc::new(baseline("case_study_small", 1));
+    let inputs = model.seeded_inputs(7);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 1,
+            max_batch: 4,
+            batch_window_us: 0,
+            queue_cap: 16,
+            pipeline_width: 1,
+        },
+    );
+    // quiesce, queue four requests, arm the drop for a seeded victim,
+    // release — the single worker pops FIFO, so the n-th hit is the
+    // n-th queued request
+    server.pause();
+    let pending: Vec<_> = (0..4)
+        .map(|_| server.submit(inputs.clone()).unwrap())
+        .collect();
+    let mut rng = Rng::new(fault_seed());
+    let victim = rng.next_u64() % 4;
+    faults::arm_nth(FaultSite::QueueDrop, victim);
+    server.resume();
+    let mut dropped = 0usize;
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.wait() {
+            Ok(reply) => assert_eq!(
+                bits(&reply.output),
+                want,
+                "request {i} corrupted by a drop elsewhere"
+            ),
+            Err(e) => {
+                dropped += 1;
+                assert_eq!(e.kind(), ErrorKind::Overload, "request {i}: {e}");
+                assert!(
+                    e.to_string().contains("injected"),
+                    "request {i}: drop reason lost: {e}"
+                );
+            }
+        }
+    }
+    faults::disarm_all();
+    assert_eq!(dropped, 1, "exactly the armed request is shed");
+    // the worker that dropped keeps serving
+    let reply = server.infer(inputs.clone()).unwrap();
+    assert_eq!(bits(&reply.output), want);
+    server.shutdown();
+}
+
+/// A nest-worker panic while the server is under load fails only the
+/// request being executed — typed `ErrorKind::Panic` for it, exact
+/// answers for everything queued behind it, and the worker's discarded
+/// scratch rebuilds transparently.
+#[test]
+fn injected_worker_panic_under_load_fails_only_that_request() {
+    let _g = gate();
+    faults::disarm_all();
+    let model = Arc::new(baseline("resnet18_small", 2));
+    let inputs = model.seeded_inputs(7);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 1,
+            max_batch: 1, // solo executions: the panic targets one request
+            batch_window_us: 0,
+            queue_cap: 16,
+            pipeline_width: 1,
+        },
+    );
+    server.pause();
+    let pending: Vec<_> = (0..3)
+        .map(|_| server.submit(inputs.clone()).unwrap())
+        .collect();
+    // first nest-worker chunk of the first request blows up
+    faults::arm_nth(FaultSite::WorkerPanic, 0);
+    server.resume();
+    let mut panicked = 0usize;
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.wait() {
+            Ok(reply) => assert_eq!(
+                bits(&reply.output),
+                want,
+                "request {i} corrupted by a sibling's panic"
+            ),
+            Err(e) => {
+                panicked += 1;
+                assert_eq!(e.kind(), ErrorKind::Panic, "request {i}: {e}");
+                assert!(
+                    e.to_string().contains("injected fault"),
+                    "request {i}: payload lost: {e}"
+                );
+            }
+        }
+    }
+    faults::disarm_all();
+    assert_eq!(panicked, 1, "exactly one request should fail");
+    assert_eq!(server.stats().served, 2);
+    // the server (and its rebuilt worker scratch) keeps serving
+    let reply = server.infer(inputs.clone()).unwrap();
+    assert_eq!(bits(&reply.output), want);
+    server.shutdown();
 }
 
 /// The full serve cycle (build → save → load → compile → run) under the

@@ -1,0 +1,453 @@
+//! Serving-layer integration: concurrent sessions, dynamic batching,
+//! intra-request pipelining, and the `Server` frontend over one shared
+//! `CompiledModel`.
+//!
+//! Pinned properties:
+//! * `CompiledModel` is `Send + Sync` — one `Arc`'d model serves many
+//!   threads, and 8 concurrent clients get outputs bit-identical to a
+//!   serial reference (both zoo models, Fast and Bytecode modes, and
+//!   with a degraded nest),
+//! * `run_in` with a reused `RunScratch` is bit-identical to fresh
+//!   `run` calls, run after run,
+//! * `run_batch_in` folds N requests into one batch-dim-aware
+//!   execution whose outputs are bit-identical to N sequential runs
+//!   (across exec thread counts), with per-lane typed failures,
+//! * `run_pipelined_in` is bit-identical to serial execution for every
+//!   pipeline width,
+//! * `Server` round-trips requests, batches queued work, sheds load
+//!   past `queue_cap` with typed `ErrorKind::Overload`, drains on
+//!   shutdown, and keeps serving after per-request failures.
+
+use std::sync::Arc;
+
+use alt::api::{
+    BatchScratch, PipeScratch, RunScratch, ServeOptions, Server, Session,
+};
+use alt::config::Config;
+use alt::error::ErrorKind;
+use alt::runtime::{DegradeReason, ExecMode};
+use alt::sim::HwProfile;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn compiled(name: &str) -> alt::api::CompiledModel {
+    Session::for_model(name)
+        .unwrap()
+        .with_profile(HwProfile::intel())
+        .baseline()
+        .compile()
+        .unwrap()
+}
+
+#[test]
+fn compiled_model_is_share_everything_thread_safe() {
+    // the whole serving design rests on this bound; pin it at compile
+    // time so a future field can't silently revoke it
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<alt::api::CompiledModel>();
+    assert_send_sync::<Server>();
+    assert_send_sync::<ServeOptions>();
+}
+
+#[test]
+fn eight_threads_sharing_one_model_match_serial_reference() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        for mode in [ExecMode::Fast, ExecMode::Bytecode] {
+            let mut model = compiled(name);
+            model.set_exec_mode(mode);
+            let model = Arc::new(model);
+            let inputs = model.seeded_inputs(31);
+            let (_, want) = model.run_with_output(&inputs).unwrap();
+            let want = bits(&want);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..8)
+                    .map(|_| {
+                        let m = Arc::clone(&model);
+                        let ins = inputs.clone();
+                        s.spawn(move || {
+                            let mut scratch = RunScratch::default();
+                            // two runs per thread: reuse exercises the
+                            // scratch recycling under concurrency too
+                            let (_, first) = m.run_in(&mut scratch, &ins).unwrap();
+                            let (_, second) = m.run_in(&mut scratch, &ins).unwrap();
+                            (bits(&first), bits(&second))
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let (first, second) = h.join().unwrap();
+                    assert_eq!(first, want, "{name}/{mode:?}");
+                    assert_eq!(second, want, "{name}/{mode:?}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn concurrent_serving_of_a_degraded_model_stays_bit_identical() {
+    // one nest on the bytecode ladder rung must not perturb concurrent
+    // fast-path serving of the others
+    let clean = compiled("resnet18_small");
+    let inputs = clean.seeded_inputs(17);
+    let (_, want) = clean.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+
+    let mut model = compiled("resnet18_small");
+    let victim = model.health().nests[model.health().nests.len() / 2].node;
+    assert!(model.degrade_nest(victim, DegradeReason::StreamAnalysis));
+    let model = Arc::new(model);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = Arc::clone(&model);
+                let ins = inputs.clone();
+                s.spawn(move || {
+                    let (_, out) = m.run_with_output(&ins).unwrap();
+                    bits(&out)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want, "degraded + concurrent");
+        }
+    });
+}
+
+#[test]
+fn reused_scratch_runs_are_bit_identical_to_fresh_runs() {
+    for name in ["case_study_small", "bert_tiny"] {
+        let model = compiled(name);
+        let inputs = model.seeded_inputs(5);
+        let (_, want) = model.run_with_output(&inputs).unwrap();
+        let want = bits(&want);
+        let mut scratch = RunScratch::default();
+        for round in 0..4 {
+            let (_, out) = model.run_in(&mut scratch, &inputs).unwrap();
+            assert_eq!(bits(&out), want, "{name} round {round}");
+        }
+        // scratch survives an input-validation refusal mid-stream
+        assert_eq!(
+            model.run_in(&mut scratch, &[]).unwrap_err().kind(),
+            ErrorKind::Input,
+            "{name}"
+        );
+        let (_, out) = model.run_in(&mut scratch, &inputs).unwrap();
+        assert_eq!(bits(&out), want, "{name} after refusal");
+    }
+}
+
+#[test]
+fn batched_execution_is_bit_identical_to_sequential_runs() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        for threads in [1usize, 2] {
+            let model = Session::for_model(name)
+                .unwrap()
+                .with_profile(HwProfile::intel())
+                .with_exec_threads(threads)
+                .baseline()
+                .compile()
+                .unwrap();
+            // five distinct requests (> the max_batch=4 CI floor)
+            let reqs: Vec<Vec<Vec<f32>>> =
+                (0..5).map(|i| model.seeded_inputs(40 + i)).collect();
+            let want: Vec<Vec<u32>> = reqs
+                .iter()
+                .map(|r| bits(&model.run_with_output(r).unwrap().1))
+                .collect();
+            let mut batch = BatchScratch::default();
+            let lanes: Vec<&[Vec<f32>]> =
+                reqs.iter().map(|r| r.as_slice()).collect();
+            let results = model.run_batch_in(&mut batch, &lanes);
+            assert_eq!(results.len(), 5, "{name}/t{threads}");
+            for (i, r) in results.into_iter().enumerate() {
+                let (stats, phases, out) = r.unwrap();
+                assert_eq!(
+                    bits(&out),
+                    want[i],
+                    "{name}/t{threads}: lane {i} diverged from sequential"
+                );
+                assert!(stats.latency_ms >= 0.0);
+                assert!(phases.queue_ms == 0.0, "{name}: queue_ms outside serve");
+            }
+            // batch scratch reuse: second batch, same answers
+            let again = model.run_batch_in(&mut batch, &lanes);
+            for (i, r) in again.into_iter().enumerate() {
+                assert_eq!(bits(&r.unwrap().2), want[i], "{name} round 2");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_lane_failures_are_isolated_and_typed() {
+    let model = compiled("case_study_small");
+    let good = model.seeded_inputs(7);
+    let (_, want) = model.run_with_output(&good).unwrap();
+    let want = bits(&want);
+    let mut short = good.clone();
+    short[0].pop();
+    let mut batch = BatchScratch::default();
+    let lanes: Vec<&[Vec<f32>]> =
+        vec![good.as_slice(), short.as_slice(), good.as_slice()];
+    let mut results = model.run_batch_in(&mut batch, &lanes);
+    assert_eq!(results.len(), 3);
+    let last = results.pop().unwrap().unwrap();
+    let bad = results.pop().unwrap().unwrap_err();
+    let first = results.pop().unwrap().unwrap();
+    assert_eq!(bad.kind(), ErrorKind::Input, "{bad}");
+    assert_eq!(bits(&first.2), want, "lane 0 poisoned by lane 1 failure");
+    assert_eq!(bits(&last.2), want, "lane 2 poisoned by lane 1 failure");
+}
+
+#[test]
+fn pipelined_execution_is_bit_identical_across_widths() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let model = compiled(name);
+        let (waves, widest) = model.wave_shape();
+        assert!(waves > 0, "{name}: no waves");
+        let inputs = model.seeded_inputs(23);
+        let (_, want) = model.run_with_output(&inputs).unwrap();
+        let want = bits(&want);
+        let mut scratch = RunScratch::default();
+        let mut pipe = PipeScratch::default();
+        for width in [1usize, 2, 3, 8] {
+            let (_, _, out) = model
+                .run_pipelined_in(&mut scratch, &mut pipe, width, &inputs)
+                .unwrap();
+            assert_eq!(
+                bits(&out),
+                want,
+                "{name} width {width} (widest wave {widest})"
+            );
+        }
+    }
+}
+
+#[test]
+fn bert_attention_heads_give_pipelining_real_width() {
+    // q/k/v projections are data-independent — the step-wave analysis
+    // must expose that as a wave wider than one step, or pipelining
+    // would never fan anything out
+    let model = compiled("bert_tiny");
+    let (_, widest) = model.wave_shape();
+    assert!(widest >= 2, "widest wave is {widest}, expected parallel width");
+}
+
+#[test]
+fn server_round_trips_requests_bit_identically() {
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(11);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions { workers: 2, ..Default::default() },
+    );
+    for _ in 0..6 {
+        let reply = server.infer(inputs.clone()).unwrap();
+        assert_eq!(bits(&reply.output), want);
+        assert!(reply.phases.queue_ms >= 0.0);
+        assert!(reply.batched >= 1);
+    }
+    assert_eq!(server.stats().served, 6);
+    assert_eq!(server.health().degraded_nests, 0);
+    server.shutdown();
+}
+
+#[test]
+fn server_batches_queued_requests_and_answers_each_correctly() {
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(13);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 1,
+            max_batch: 4,
+            batch_window_us: 0,
+            queue_cap: 64,
+            ..Default::default()
+        },
+    );
+    // quiesce, queue four requests, release: the lone worker must fold
+    // everything already queued into one batched execution
+    server.pause();
+    let pending: Vec<_> = (0..4)
+        .map(|_| server.submit(inputs.clone()).unwrap())
+        .collect();
+    assert_eq!(server.queue_depth(), 4);
+    server.resume();
+    let mut max_fold = 0usize;
+    for p in pending {
+        let reply = p.wait().unwrap();
+        assert_eq!(bits(&reply.output), want, "batched output diverged");
+        max_fold = max_fold.max(reply.batched);
+    }
+    assert!(max_fold > 1, "no request was ever batched (max fold {max_fold})");
+    assert!(server.stats().batches >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn server_sheds_load_with_typed_overload_and_recovers() {
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(3);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 1,
+            max_batch: 1,
+            batch_window_us: 0,
+            queue_cap: 2,
+            ..Default::default()
+        },
+    );
+    server.pause();
+    let p1 = server.submit(inputs.clone()).unwrap();
+    let p2 = server.submit(inputs.clone()).unwrap();
+    // queue is at cap: backpressure must be an immediate typed refusal
+    let err = server.submit(inputs.clone()).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::Overload, "{err}");
+    assert_eq!(server.stats().shed, 1);
+    // shedding lost nothing that was admitted
+    server.resume();
+    assert_eq!(bits(&p1.wait().unwrap().output), want);
+    assert_eq!(bits(&p2.wait().unwrap().output), want);
+    // and the server keeps serving after the overload episode
+    assert_eq!(bits(&server.infer(inputs.clone()).unwrap().output), want);
+    server.shutdown();
+}
+
+#[test]
+fn server_isolates_per_request_failures() {
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(9);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions { workers: 1, ..Default::default() },
+    );
+    // malformed request: typed Input refusal for it alone
+    let mut short = inputs.clone();
+    short[0].pop();
+    let err = server.infer(short).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::Input, "{err}");
+    // the worker that served it is unharmed
+    let reply = server.infer(inputs.clone()).unwrap();
+    assert_eq!(bits(&reply.output), want);
+    server.shutdown();
+}
+
+#[test]
+fn server_shutdown_drains_queued_work() {
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(19);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions { workers: 1, queue_cap: 16, ..Default::default() },
+    );
+    server.pause();
+    let pending: Vec<_> = (0..3)
+        .map(|_| server.submit(inputs.clone()).unwrap())
+        .collect();
+    // shutdown on another thread (it blocks until drained); queued
+    // requests must complete, not be dropped — even from paused state
+    let drained = std::thread::spawn(move || server.shutdown());
+    for p in pending {
+        let reply = p.wait().unwrap();
+        assert_eq!(bits(&reply.output), want, "request dropped by shutdown");
+    }
+    drained.join().unwrap();
+}
+
+#[test]
+fn server_pipelines_solo_requests_bit_identically() {
+    let model = Arc::new(compiled("bert_tiny"));
+    let inputs = model.seeded_inputs(29);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 1,
+            pipeline_width: 3,
+            batch_window_us: 0,
+            ..Default::default()
+        },
+    );
+    // solo requests on an otherwise-empty queue take the pipelined path
+    for _ in 0..3 {
+        let reply = server.infer(inputs.clone()).unwrap();
+        assert_eq!(bits(&reply.output), want, "pipelined serving diverged");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn config_built_serve_options_drive_a_working_server() {
+    let cfg = Config::parse(
+        "workers = 2\nmax_batch = 2\nbatch_window_us = 0\nqueue_cap = 8\n",
+    )
+    .unwrap();
+    let opts = cfg.serve_options().unwrap();
+    assert_eq!(opts.workers, 2);
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(2);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let server = Server::start(Arc::clone(&model), opts);
+    let reply = server.infer(inputs).unwrap();
+    assert_eq!(bits(&reply.output), bits(&want));
+    server.shutdown();
+}
+
+#[test]
+fn closed_loop_clients_hammering_one_server_all_get_exact_answers() {
+    // 8 client threads x 4 requests against 2 workers with batching on:
+    // every reply must be bit-identical to the reference, no deadlocks,
+    // no lost requests
+    let model = Arc::new(compiled("case_study_small"));
+    let inputs = model.seeded_inputs(37);
+    let (_, want) = model.run_with_output(&inputs).unwrap();
+    let want = bits(&want);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeOptions {
+            workers: 2,
+            max_batch: 4,
+            batch_window_us: 50,
+            queue_cap: 256,
+            ..Default::default()
+        },
+    );
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let srv = &server;
+                let ins = inputs.clone();
+                s.spawn(move || {
+                    let mut outs = Vec::new();
+                    for _ in 0..4 {
+                        outs.push(bits(&srv.infer(ins.clone()).unwrap().output));
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in handles {
+            for out in h.join().unwrap() {
+                assert_eq!(out, want, "concurrent client got a wrong answer");
+            }
+        }
+    });
+    assert_eq!(server.stats().served, 32);
+    server.shutdown();
+}

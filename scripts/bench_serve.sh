@@ -13,21 +13,37 @@
 # output's bit-identity flag), compile-time weight-packing
 # amortization, thread-count determinism, and the save/load round trip.
 #
-# Usage: scripts/bench_serve.sh [output.json]
+# The same bench binary also emits the high-throughput serving report
+# as BENCH_throughput.json: steady-state allocation of the
+# reusable-scratch entry, dynamic-batching / pipelining bit-identity,
+# typed backpressure, closed-loop req/s + p50/p99 at 1/8/64 clients,
+# 8-client-vs-1 scaling, and an open-loop fixed-rate run with shed
+# counting.
+#
+# Usage: scripts/bench_serve.sh [output.json] [throughput.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 out="${1:-BENCH_serve.json}"
+tp="${2:-BENCH_throughput.json}"
 
 # cargo runs bench binaries with cwd = package root (rust/), so hand
-# the bench an absolute output path (relative args anchor at the
+# the bench absolute output paths (relative args anchor at the
 # workspace root; absolute args pass through untouched)
 case "$out" in
   /*) abs="$out" ;;
   *) abs="$PWD/$out" ;;
 esac
-BENCH_SERVE_JSON="$abs" cargo bench --bench serve
+case "$tp" in
+  /*) abs_tp="$tp" ;;
+  *) abs_tp="$PWD/$tp" ;;
+esac
+BENCH_SERVE_JSON="$abs" BENCH_THROUGHPUT_JSON="$abs_tp" \
+  cargo bench --bench serve
 
 echo
 echo "== $abs =="
 cat "$abs"
+echo
+echo "== $abs_tp =="
+cat "$abs_tp"
