@@ -41,6 +41,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use alt::analysis::ProofKind;
 use alt::api::{
     BatchScratch, PipeScratch, RunScratch, ServeOptions, Server, Session,
 };
@@ -565,6 +566,20 @@ fn main() {
             0.0
         };
 
+        // static-analyzer coverage: how each nest's write map was
+        // certified and how many runtime checks the certificates elide
+        // — tracked release over release via the JSON report
+        let health = model.health();
+        let count = |k: ProofKind| {
+            health.nests.iter().filter(|n| n.write_proof == k).count()
+        };
+        let proof_symbolic = count(ProofKind::Symbolic);
+        let proof_enumerated = count(ProofKind::Enumerated);
+        let proof_unproven = count(ProofKind::Unproven);
+        let race_free = health.nests.iter().filter(|n| n.race_free).count();
+        let reads_bounded =
+            health.nests.iter().filter(|n| n.reads_bounded).count();
+
         // hard floor 1: thread-count determinism of whole-model runs
         for threads in [1usize, 2] {
             let m = session(name, threads)
@@ -603,6 +618,9 @@ fn main() {
              phases nest {nest_ms:.3} + repack {repack_ms:.3} + \
              boundary {boundary_ms:.3} + simple {simple_ms:.3} ms | \
              {} nests + {} simple | {} fused + {} materialized repacks/run | \
+             proofs {proof_symbolic} symbolic / {proof_enumerated} enumerated \
+             / {proof_unproven} unproven ({race_free} race-free, \
+             {reads_bounded} reads bounded) | \
              {}/{} weights packed in {:.1} ms (amortized in {amortize_runs:.0} runs)",
             model.complex_steps(),
             model.simple_steps(),
@@ -624,7 +642,13 @@ fn main() {
              \"boundary_ms\": {boundary_ms:.4}, \"simple_ms\": {simple_ms:.4}, \
              \"complex_steps\": {}, \"simple_steps\": {}, \
              \"repacks_per_run\": {}, \"repacks_fused\": {}, \
-             \"repacks_materialized\": {}, \"weights_packed\": {}, \
+             \"repacks_materialized\": {}, \
+             \"proof\": {{\"symbolic\": {proof_symbolic}, \
+             \"enumerated\": {proof_enumerated}, \
+             \"unproven\": {proof_unproven}, \
+             \"race_free\": {race_free}, \
+             \"reads_bounded\": {reads_bounded}}}, \
+             \"weights_packed\": {}, \
              \"weights_total\": {}, \"packing_ms\": {:.3}, \
              \"compile_ms\": {:.3}, \"amortize_runs\": {amortize_runs:.0}}}",
             model.all_fast_paths(),

@@ -1,0 +1,998 @@
+//! Static access analysis: abstract interpretation over the
+//! index-expression IR ([`crate::expr`]).
+//!
+//! The fast serving path (PR 6) proves the safety properties it relies
+//! on — write-map injectivity, stream bounds — by **exhaustive
+//! enumeration** capped at 2^22 points; nests above the cap silently
+//! degrade to staged-scatter writes. This module replaces brute force
+//! with a symbolic proof over an **interval × congruence** domain:
+//!
+//! * [`Range`] — each expression abstracts to `{lo, lo+stride, …, hi}`,
+//!   a classic interval refined with a stride (congruence) component.
+//!   [`range_of`] computes sound transfer functions for the whole IR
+//!   operator set (affine arithmetic plus floor-div, mod and min).
+//! * [`analyze_write`] — proves a write map injective and in-bounds
+//!   over its spatial iteration box by decomposing it into independent
+//!   *components* (affine terms plus div/mod/min groups over disjoint
+//!   variables) and checking a **gap/span separation** condition:
+//!   sorted by minimum gap, each component's gap must exceed the total
+//!   span of all smaller-gap components. Two distinct points differ in
+//!   some component; taking the differing component with the largest
+//!   gap, the address difference is at least that gap minus the spans
+//!   of everything below it — strictly positive, so addresses never
+//!   collide. Mixed-radix (row-major) writes — the shape codegen
+//!   produces for every nest output — always satisfy the condition.
+//! * Verdicts are three-valued ([`Verdict`]): `Disproven` is only
+//!   returned with a counterexample-by-construction (a duplicate in an
+//!   enumerated component, an uncovered variable, an attainable
+//!   out-of-bounds address), which is what lets the differential suite
+//!   test the analyzer in *both* directions against enumeration.
+//! * [`lint_nest`] — the expression-level half of the plan linter:
+//!   zero-trip loops and dead `min` pad clamps, diagnosed from the
+//!   same ranges. `CompiledModel::diagnostics()` adds the model-level
+//!   lints (never-firing gather slots, non-stride-1 innermost reads,
+//!   analyzer-dischargeable degradations) and `alt check` surfaces
+//!   both on saved plans.
+//!
+//! Everything here is compile-time only and pure: no allocation is
+//! shared with the runtime, and all arithmetic is checked (i64 inputs,
+//! i128 intermediates) — an overflow yields `Unknown`/`top`, never a
+//! wrong certificate.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::codegen::Program;
+use crate::expr::Expr;
+use crate::graph::NodeId;
+
+/// Per-component enumeration cap for the symbolic prover. Components
+/// are tiny in practice (one or two split/pad variables); the cap only
+/// guards against adversarial inputs. Distinct from the whole-box
+/// `INJECTIVITY_CAP` in the runtime: components multiply, so a nest
+/// far above 2^22 total points stays provable as long as each coupled
+/// variable group is small.
+pub const COMPONENT_CAP: i64 = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Interval × congruence domain
+// ---------------------------------------------------------------------------
+
+/// Abstract value: the set of concrete values is a subset of
+/// `{lo, lo + stride, lo + 2*stride, …, hi}`.
+///
+/// Invariants: `lo <= hi`; `stride == 0` iff `lo == hi` (a point);
+/// otherwise `stride >= 1` and `(hi - lo) % stride == 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Range {
+    pub lo: i64,
+    pub hi: i64,
+    /// Congruence step between representable values (0 for a point).
+    pub stride: i64,
+}
+
+impl Range {
+    /// Single concrete value.
+    pub fn point(c: i64) -> Self {
+        Range { lo: c, hi: c, stride: 0 }
+    }
+
+    /// The whole of `i64` — the "don't know" element.
+    pub fn top() -> Self {
+        Range { lo: i64::MIN, hi: i64::MAX, stride: 1 }
+    }
+
+    pub fn is_top(&self) -> bool {
+        self.lo == i64::MIN && self.hi == i64::MAX
+    }
+
+    /// Normalizing constructor over i128 intermediates: snaps `hi`
+    /// down onto the congruence lattice and widens to `top` on i64
+    /// overflow, so transfer functions can't manufacture precision.
+    fn mk(lo: i128, hi: i128, stride: i128) -> Range {
+        debug_assert!(lo <= hi, "inverted range {lo}..{hi}");
+        let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+        if lo == hi {
+            return match i64::try_from(lo) {
+                Ok(c) => Range::point(c),
+                Err(_) => Range::top(),
+            };
+        }
+        let s = if stride <= 0 { 1 } else { stride };
+        let hi = lo + ((hi - lo) / s) * s;
+        match (i64::try_from(lo), i64::try_from(hi), i64::try_from(s)) {
+            (Ok(lo), Ok(hi), Ok(s)) if lo != hi => Range { lo, hi, stride: s },
+            (Ok(c), Ok(h), _) if c == h => Range::point(c),
+            _ => Range::top(),
+        }
+    }
+
+    /// Is `v` a member of the abstract set?
+    pub fn contains(&self, v: i64) -> bool {
+        v >= self.lo
+            && v <= self.hi
+            && (self.stride == 0
+                || (i128::from(v) - i128::from(self.lo)) % i128::from(self.stride) == 0)
+    }
+
+    /// Is every representable value inside `[lo, hi_excl)`?
+    pub fn within(&self, lo: i64, hi_excl: i64) -> bool {
+        self.lo >= lo && self.hi < hi_excl
+    }
+}
+
+impl fmt::Display for Range {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_top() {
+            write!(f, "⊤")
+        } else if self.stride == 0 {
+            write!(f, "{{{}}}", self.lo)
+        } else {
+            write!(f, "[{}..{}]/{}", self.lo, self.hi, self.stride)
+        }
+    }
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Abstract range of `e` with `extents[v]` giving each loop variable's
+/// iteration extent (`v` ranges over `0..extents[v]`). A missing or
+/// non-positive extent means the variable is unconstrained (`top`).
+pub fn range_of(e: &Expr, extents: &[i64]) -> Range {
+    match e {
+        Expr::Var(v) => match extents.get(*v) {
+            Some(&ext) if ext >= 1 => Range::mk(0, i128::from(ext) - 1, 1),
+            _ => Range::top(),
+        },
+        Expr::Const(c) => Range::point(*c),
+        Expr::Add(a, b) => {
+            let (x, y) = (range_of(a, extents), range_of(b, extents));
+            Range::mk(
+                i128::from(x.lo) + i128::from(y.lo),
+                i128::from(x.hi) + i128::from(y.hi),
+                gcd(x.stride.into(), y.stride.into()),
+            )
+        }
+        Expr::Sub(a, b) => {
+            let (x, y) = (range_of(a, extents), range_of(b, extents));
+            Range::mk(
+                i128::from(x.lo) - i128::from(y.hi),
+                i128::from(x.hi) - i128::from(y.lo),
+                gcd(x.stride.into(), y.stride.into()),
+            )
+        }
+        Expr::Mul(a, b) => mul_range(range_of(a, extents), range_of(b, extents)),
+        Expr::Div(a, b) => div_range(range_of(a, extents), range_of(b, extents)),
+        Expr::Mod(a, b) => mod_range(range_of(a, extents), range_of(b, extents)),
+        Expr::Min(a, b) => {
+            let (x, y) = (range_of(a, extents), range_of(b, extents));
+            // either branch's values stay congruent modulo
+            // gcd(s_x, s_y, |lo_x - lo_y|): both anchors coincide there.
+            let g = gcd(
+                gcd(x.stride.into(), y.stride.into()),
+                i128::from(x.lo) - i128::from(y.lo),
+            );
+            Range::mk(
+                i128::from(x.lo.min(y.lo)),
+                i128::from(x.hi.min(y.hi)),
+                g,
+            )
+        }
+    }
+}
+
+/// Scale a range by a constant (swapping endpoints when negative).
+fn scale_range(r: Range, k: i64) -> Range {
+    if k == 0 {
+        return Range::point(0);
+    }
+    let k = i128::from(k);
+    let (a, b) = (i128::from(r.lo) * k, i128::from(r.hi) * k);
+    Range::mk(a.min(b), a.max(b), i128::from(r.stride) * k.abs())
+}
+
+fn mul_range(x: Range, y: Range) -> Range {
+    if x.stride == 0 {
+        return scale_range(y, x.lo);
+    }
+    if y.stride == 0 {
+        return scale_range(x, y.lo);
+    }
+    // var*var: interval from the four corner products; every product
+    // (lo_x + a·s_x)(lo_y + b·s_y) is congruent to lo_x·lo_y modulo
+    // gcd(lo_x·s_y, lo_y·s_x, s_x·s_y) — including the corners, so the
+    // min corner is a sound anchor.
+    let (xl, xh) = (i128::from(x.lo), i128::from(x.hi));
+    let (yl, yh) = (i128::from(y.lo), i128::from(y.hi));
+    let corners = [xl * yl, xl * yh, xh * yl, xh * yh];
+    let (mut mn, mut mx) = (corners[0], corners[0]);
+    for &c in &corners[1..] {
+        mn = mn.min(c);
+        mx = mx.max(c);
+    }
+    let g = gcd(
+        gcd(xl * i128::from(y.stride), yl * i128::from(x.stride)),
+        i128::from(x.stride) * i128::from(y.stride),
+    );
+    Range::mk(mn, mx, g)
+}
+
+fn div_range(x: Range, d: Range) -> Range {
+    if d.lo <= 0 && d.hi >= 0 {
+        // divisor set may contain 0 — undefined, give up
+        return Range::top();
+    }
+    let (xl, xh) = (i128::from(x.lo), i128::from(x.hi));
+    if d.stride == 0 {
+        let k = i128::from(d.lo);
+        if k > 0 && x.stride > 0 && i128::from(x.stride) % k == 0 {
+            // exact progression: (lo + j·s) ÷ k steps by s/k
+            return Range::mk(
+                xl.div_euclid(k),
+                xh.div_euclid(k),
+                i128::from(x.stride) / k,
+            );
+        }
+        let (a, b) = (xl.div_euclid(k), xh.div_euclid(k));
+        return Range::mk(a.min(b), a.max(b), 1);
+    }
+    // sign-definite divisor interval: div_euclid is monotone in each
+    // argument over such a box, so the extrema sit on the corners
+    let (dl, dh) = (i128::from(d.lo), i128::from(d.hi));
+    let corners = [
+        xl.div_euclid(dl),
+        xl.div_euclid(dh),
+        xh.div_euclid(dl),
+        xh.div_euclid(dh),
+    ];
+    let (mut mn, mut mx) = (corners[0], corners[0]);
+    for &c in &corners[1..] {
+        mn = mn.min(c);
+        mx = mx.max(c);
+    }
+    Range::mk(mn, mx, 1)
+}
+
+fn mod_range(x: Range, d: Range) -> Range {
+    if d.lo <= 0 && d.hi >= 0 {
+        return Range::top();
+    }
+    let (xl, xh) = (i128::from(x.lo), i128::from(x.hi));
+    if d.stride == 0 {
+        // rem_euclid depends only on |divisor|
+        let m = i128::from(d.lo).abs();
+        if x.stride == 0 {
+            return Range::mk(xl.rem_euclid(m), xl.rem_euclid(m), 0);
+        }
+        if xl.div_euclid(m) == xh.div_euclid(m) {
+            // whole range inside one block: mod is a pure shift
+            return Range::mk(
+                xl.rem_euclid(m),
+                xh.rem_euclid(m),
+                x.stride.into(),
+            );
+        }
+        // wraps: values stay congruent to lo modulo gcd(stride, m)
+        let g = gcd(x.stride.into(), m);
+        return Range::mk(xl.rem_euclid(g), m - 1, g);
+    }
+    let m = i128::from(d.lo).abs().max(i128::from(d.hi).abs());
+    Range::mk(0, m - 1, 1)
+}
+
+// ---------------------------------------------------------------------------
+// Write-map certificates
+// ---------------------------------------------------------------------------
+
+/// Three-valued proof outcome. `Disproven` always carries a genuine
+/// counterexample by construction — never "couldn't prove".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Proven,
+    Disproven,
+    Unknown,
+}
+
+/// How a nest's write map was (or wasn't) certified at compile time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProofKind {
+    /// Decided by the symbolic analyzer (either direction).
+    Symbolic,
+    /// Decided by exhaustive enumeration under the 2^22 cap.
+    Enumerated,
+    /// Neither method resolved it — the nest degrades to staged writes.
+    Unproven,
+}
+
+impl ProofKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProofKind::Symbolic => "symbolic",
+            ProofKind::Enumerated => "enumerated",
+            ProofKind::Unproven => "unproven",
+        }
+    }
+}
+
+impl fmt::Display for ProofKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Result of [`analyze_write`]: separate injectivity and bounds
+/// verdicts plus the exact address extremes when the decomposition was
+/// exhaustive (`None` when only interval information was available).
+#[derive(Clone, Copy, Debug)]
+pub struct WriteAnalysis {
+    pub injective: Verdict,
+    pub in_bounds: Verdict,
+    pub min_addr: Option<i64>,
+    pub max_addr: Option<i64>,
+}
+
+impl WriteAnalysis {
+    /// Combined verdict matching the runtime's direct-write criterion
+    /// (enumeration accepts iff every address is fresh *and* in range).
+    pub fn verdict(&self) -> Verdict {
+        match (self.injective, self.in_bounds) {
+            (Verdict::Disproven, _) | (_, Verdict::Disproven) => Verdict::Disproven,
+            (Verdict::Proven, Verdict::Proven) => Verdict::Proven,
+            _ => Verdict::Unknown,
+        }
+    }
+}
+
+/// Affine skeleton of an access expression:
+/// `c0 + Σ coeff[v]·v + Σ k_i·term_i(vars)`.
+struct Decomp {
+    c0: i64,
+    coeff: Vec<i64>,
+    terms: Vec<(i64, Expr)>,
+}
+
+/// Evaluate a variable-free expression, or `None` if it mentions a
+/// variable, divides by zero, or overflows i64.
+fn const_value(e: &Expr) -> Option<i64> {
+    match e {
+        Expr::Const(c) => Some(*c),
+        Expr::Var(_) => None,
+        Expr::Add(a, b) => const_value(a)?.checked_add(const_value(b)?),
+        Expr::Sub(a, b) => const_value(a)?.checked_sub(const_value(b)?),
+        Expr::Mul(a, b) => const_value(a)?.checked_mul(const_value(b)?),
+        Expr::Div(a, b) => const_value(a)?.checked_div_euclid(const_value(b)?),
+        Expr::Mod(a, b) => const_value(a)?.checked_rem_euclid(const_value(b)?),
+        Expr::Min(a, b) => Some(const_value(a)?.min(const_value(b)?)),
+    }
+}
+
+/// Distribute `k * e` into `d` exactly. Only constructions whose value
+/// the skeleton represents exactly are accepted; overflow fails.
+fn decompose(e: &Expr, k: i64, d: &mut Decomp) -> Option<()> {
+    match e {
+        Expr::Const(c) => d.c0 = d.c0.checked_add(k.checked_mul(*c)?)?,
+        Expr::Var(v) => d.coeff[*v] = d.coeff[*v].checked_add(k)?,
+        Expr::Add(a, b) => {
+            decompose(a, k, d)?;
+            decompose(b, k, d)?;
+        }
+        Expr::Sub(a, b) => {
+            decompose(a, k, d)?;
+            decompose(b, k.checked_neg()?, d)?;
+        }
+        Expr::Mul(a, b) => {
+            if let Some(c) = const_value(a) {
+                decompose(b, k.checked_mul(c)?, d)?;
+            } else if let Some(c) = const_value(b) {
+                decompose(a, k.checked_mul(c)?, d)?;
+            } else if k != 0 {
+                d.terms.push((k, e.clone()));
+            }
+        }
+        Expr::Div(_, _) | Expr::Mod(_, _) | Expr::Min(_, _) => {
+            if let Some(c) = const_value(e) {
+                d.c0 = d.c0.checked_add(k.checked_mul(c)?)?;
+            } else if k != 0 {
+                d.terms.push((k, e.clone()));
+            }
+        }
+    }
+    Some(())
+}
+
+/// Per-component image statistics (i128 so affine spans can't wrap):
+/// `gap` is the minimum distance between two distinct image values
+/// (`i128::MAX` for a single-value image), `span = max - min`, and
+/// `min`/`max` are attained by some assignment of the component's vars.
+struct CompStats {
+    gap: i128,
+    span: i128,
+    min: i128,
+    max: i128,
+}
+
+#[derive(Default)]
+struct Comp {
+    vars: Vec<(usize, i64)>,
+    terms: Vec<usize>,
+}
+
+fn find(parent: &mut [usize], mut v: usize) -> usize {
+    while parent[v] != v {
+        parent[v] = parent[parent[v]];
+        v = parent[v];
+    }
+    v
+}
+
+/// Enumerate one coupled component's image over its (small) box.
+/// Returns `(duplicate_found, stats)`, or `None` past the cap or on
+/// overflow. `env` must be zeroed outside the component's vars and is
+/// restored to zero on return.
+fn enum_comp(comp: &Comp, d: &Decomp, env: &mut [i64]) -> Option<(bool, CompStats)> {
+    let mut size: i128 = 1;
+    for &(_, e) in &comp.vars {
+        size = size.checked_mul(i128::from(e))?;
+        if size > i128::from(COMPONENT_CAP) {
+            return None;
+        }
+    }
+    let n = usize::try_from(size).ok()?;
+    for &(v, _) in &comp.vars {
+        env[v] = 0;
+    }
+    let mut vals: Vec<i64> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut acc: i64 = 0;
+        for &(v, _) in &comp.vars {
+            acc = acc.checked_add(d.coeff[v].checked_mul(env[v])?)?;
+        }
+        for &ti in &comp.terms {
+            let (k, t) = &d.terms[ti];
+            acc = acc.checked_add(k.checked_mul(t.eval(env))?)?;
+        }
+        vals.push(acc);
+        for &(v, e) in comp.vars.iter().rev() {
+            env[v] += 1;
+            if env[v] < e {
+                break;
+            }
+            env[v] = 0;
+        }
+    }
+    for &(v, _) in &comp.vars {
+        env[v] = 0;
+    }
+    vals.sort_unstable();
+    let mut dup = false;
+    let mut gap = i128::MAX;
+    for w in vals.windows(2) {
+        let diff = i128::from(w[1]) - i128::from(w[0]);
+        if diff == 0 {
+            dup = true;
+        } else {
+            gap = gap.min(diff);
+        }
+    }
+    let (mn, mx) = (i128::from(vals[0]), i128::from(vals[vals.len() - 1]));
+    Some((dup, CompStats { gap, span: mx - mn, min: mn, max: mx }))
+}
+
+/// Interval-only fallback when the exact decomposition is unavailable:
+/// containment of the over-approximating range still *proves* bounds,
+/// but nothing can be disproven and injectivity stays unknown.
+fn interval_only(write: &Expr, extents: &[i64], out_len: i64) -> WriteAnalysis {
+    let r = range_of(write, extents);
+    let in_bounds = if r.within(0, out_len) {
+        Verdict::Proven
+    } else {
+        Verdict::Unknown
+    };
+    WriteAnalysis {
+        injective: Verdict::Unknown,
+        in_bounds,
+        min_addr: None,
+        max_addr: None,
+    }
+}
+
+/// Prove (or refute) that `write` is injective and in `[0, out_len)`
+/// over the iteration box `spatial` (`(var, extent)` pairs, extents as
+/// the runtime's write-proof enumeration iterates them: each var in
+/// `0..extent`, all other variables held at 0).
+///
+/// Contract, relied on by the differential suite and the runtime:
+/// `Proven` implies exhaustive enumeration of the box would accept the
+/// write (all addresses fresh and in range); `Disproven` implies it
+/// would reject; `Unknown` implies nothing.
+pub fn analyze_write(write: &Expr, spatial: &[(usize, i64)], out_len: i64) -> WriteAnalysis {
+    if spatial.iter().any(|&(_, e)| e <= 0) {
+        // empty iteration box: vacuously injective and in-bounds
+        return WriteAnalysis {
+            injective: Verdict::Proven,
+            in_bounds: Verdict::Proven,
+            min_addr: None,
+            max_addr: None,
+        };
+    }
+    let wvars = write.vars();
+    let nvars = spatial
+        .iter()
+        .map(|&(v, _)| v + 1)
+        .chain(wvars.iter().map(|&v| v + 1))
+        .max()
+        .unwrap_or(0);
+    let mut extents = vec![0i64; nvars];
+    let mut is_spatial = vec![false; nvars];
+    for &(v, e) in spatial {
+        extents[v] = e;
+        is_spatial[v] = true;
+    }
+    if wvars.iter().any(|&v| !is_spatial[v]) {
+        // mentions a variable outside the box — not a write map we
+        // understand; interval reasoning only (unknown vars are top)
+        return interval_only(write, &extents, out_len);
+    }
+
+    let mut d = Decomp { c0: 0, coeff: vec![0; nvars], terms: Vec::new() };
+    if decompose(write, 1, &mut d).is_none() {
+        return interval_only(write, &extents, out_len);
+    }
+
+    // group variables coupled through non-affine terms into components
+    let mut parent: Vec<usize> = (0..nvars).collect();
+    let mut term_vars: Vec<Vec<usize>> = Vec::with_capacity(d.terms.len());
+    for (_, t) in &d.terms {
+        let vs: Vec<usize> = t.vars().into_iter().collect();
+        for w in vs.windows(2) {
+            let (a, b) = (find(&mut parent, w[0]), find(&mut parent, w[1]));
+            if a != b {
+                parent[a] = b;
+            }
+        }
+        term_vars.push(vs);
+    }
+    let mut comps: Vec<Comp> = Vec::new();
+    let mut comp_of_root = std::collections::BTreeMap::new();
+    for &(v, e) in spatial {
+        let r = find(&mut parent, v);
+        let id = *comp_of_root.entry(r).or_insert_with(|| {
+            comps.push(Comp::default());
+            comps.len() - 1
+        });
+        comps[id].vars.push((v, e));
+    }
+    for (ti, vs) in term_vars.iter().enumerate() {
+        // non-empty (a var-free term folds into c0) and all spatial
+        let r = find(&mut parent, vs[0]);
+        comps[comp_of_root[&r]].terms.push(ti);
+    }
+
+    let mut injective = Verdict::Proven;
+    let mut exact = true; // do we have every component's min/max?
+    let mut stats: Vec<CompStats> = Vec::new();
+    let mut env = vec![0i64; nvars];
+    for comp in &comps {
+        if comp.terms.is_empty() && comp.vars.len() == 1 {
+            // pure affine variable: image is {0, c, …, c·(e-1)}
+            let (v, e) = comp.vars[0];
+            let c = d.coeff[v];
+            if e <= 1 {
+                stats.push(CompStats { gap: i128::MAX, span: 0, min: 0, max: 0 });
+            } else if c == 0 {
+                // the write ignores a variable with 2+ iterations:
+                // two distinct points share an address — refuted
+                injective = Verdict::Disproven;
+                stats.push(CompStats { gap: 0, span: 0, min: 0, max: 0 });
+            } else {
+                let ce = i128::from(c) * i128::from(e - 1);
+                stats.push(CompStats {
+                    gap: i128::from(c).abs(),
+                    span: ce.abs(),
+                    min: ce.min(0),
+                    max: ce.max(0),
+                });
+            }
+        } else {
+            match enum_comp(comp, &d, &mut env) {
+                Some((dup, s)) => {
+                    if dup {
+                        // distinct assignments of this component's vars
+                        // collide (others fixed) — a real counterexample
+                        injective = Verdict::Disproven;
+                    }
+                    stats.push(s);
+                }
+                None => {
+                    exact = false;
+                    if injective == Verdict::Proven {
+                        injective = Verdict::Unknown;
+                    }
+                }
+            }
+        }
+    }
+
+    // separation: ascending by gap, each component must out-gap the
+    // accumulated span of everything below it
+    if injective == Verdict::Proven {
+        let mut order: Vec<&CompStats> = stats.iter().collect();
+        order.sort_by_key(|s| s.gap);
+        let mut span_below: i128 = 0;
+        for s in &order {
+            if s.gap <= span_below {
+                injective = Verdict::Unknown;
+                break;
+            }
+            span_below = span_below.saturating_add(s.span);
+        }
+    }
+
+    if !exact {
+        let iv = interval_only(write, &extents, out_len);
+        return WriteAnalysis { injective, ..iv };
+    }
+
+    // components partition the variables, so the global extremes are
+    // the sums of the per-component extremes — exact and attained
+    let mn: i128 = i128::from(d.c0) + stats.iter().map(|s| s.min).sum::<i128>();
+    let mx: i128 = i128::from(d.c0) + stats.iter().map(|s| s.max).sum::<i128>();
+    let in_bounds = if mn >= 0 && mx < i128::from(out_len) {
+        Verdict::Proven
+    } else {
+        Verdict::Disproven
+    };
+    WriteAnalysis {
+        injective,
+        in_bounds,
+        min_addr: i64::try_from(mn).ok(),
+        max_addr: i64::try_from(mx).ok(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan linter
+// ---------------------------------------------------------------------------
+
+/// Finding severity. `Error` findings mean the plan cannot run
+/// correctly; `Warning` means wasted or degraded execution; `Perf` is
+/// advisory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Perf,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Perf => "perf",
+        })
+    }
+}
+
+/// One linter finding, attributable to a nest when `nest` is set.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Graph node of the offending nest, if nest-scoped.
+    pub nest: Option<NodeId>,
+    /// Stable machine-readable finding code.
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn nest_scoped(
+        severity: Severity,
+        nest: NodeId,
+        code: &'static str,
+        message: String,
+    ) -> Self {
+        Diagnostic { severity, nest: Some(nest), code, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.nest {
+            Some(n) => write!(f, "[{}] nest {}: {}: {}", self.severity, n, self.code, self.message),
+            None => write!(f, "[{}] {}: {}", self.severity, self.code, self.message),
+        }
+    }
+}
+
+/// Expression-level lints for one generated tensor program: zero-trip
+/// loops and `min` clamps the ranges prove can never (or always) fire.
+/// Model-level lints (gather slots, innermost strides, dischargeable
+/// degradations) live in `CompiledModel::diagnostics()`.
+pub fn lint_nest(p: &Program) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let nvars = p.loops.iter().map(|l| l.var + 1).max().unwrap_or(0);
+    let mut extents = vec![0i64; nvars];
+    for l in &p.loops {
+        if l.extent <= 0 {
+            out.push(Diagnostic::nest_scoped(
+                Severity::Warning,
+                p.node,
+                "zero-trip-loop",
+                format!(
+                    "loop {} (v{}) has extent {}; the nest body never runs",
+                    l.name, l.var, l.extent
+                ),
+            ));
+        }
+        extents[l.var] = l.extent;
+    }
+    let mut seen = BTreeSet::new();
+    for a in &p.accesses {
+        for e in &a.idx {
+            scan_clamps(e, &extents, p.node, &mut seen, &mut out);
+        }
+    }
+    out
+}
+
+fn scan_clamps(
+    e: &Expr,
+    extents: &[i64],
+    node: NodeId,
+    seen: &mut BTreeSet<String>,
+    out: &mut Vec<Diagnostic>,
+) {
+    if let Expr::Min(a, b) = e {
+        let (ra, rb) = (range_of(a, extents), range_of(b, extents));
+        let msg = if ra.hi <= rb.lo {
+            Some(format!(
+                "clamp min({a},{b}) never fires: {a} ∈ {ra} stays ≤ {}",
+                rb.lo
+            ))
+        } else if rb.hi <= ra.lo {
+            Some(format!(
+                "clamp min({a},{b}) always fires: {b} ∈ {rb} stays ≤ {}",
+                ra.lo
+            ))
+        } else {
+            None
+        };
+        if let Some(m) = msg {
+            // hash-consing shares subtrees; report each shape once
+            if seen.insert(m.clone()) {
+                out.push(Diagnostic::nest_scoped(
+                    Severity::Perf,
+                    node,
+                    "dead-pad-clamp",
+                    m,
+                ));
+            }
+        }
+    }
+    match e {
+        Expr::Add(a, b)
+        | Expr::Sub(a, b)
+        | Expr::Mul(a, b)
+        | Expr::Div(a, b)
+        | Expr::Mod(a, b)
+        | Expr::Min(a, b) => {
+            scan_clamps(a, extents, node, seen, out);
+            scan_clamps(b, extents, node, seen, out);
+        }
+        Expr::Var(_) | Expr::Const(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::{Const, Var};
+
+    fn v(i: usize) -> Expr {
+        Var(i)
+    }
+
+    #[test]
+    fn range_affine_combines_interval_and_stride() {
+        // 4*v0 over v0 in 0..5 -> {0,4,8,12,16}
+        let e = Expr::mul(Const(4), v(0));
+        assert_eq!(range_of(&e, &[5]), Range { lo: 0, hi: 16, stride: 4 });
+        // 4*v0 + v1 (v1 in 0..2) -> stride gcd(4,1)=1
+        let e = Expr::add(e, v(1));
+        assert_eq!(range_of(&e, &[5, 2]), Range { lo: 0, hi: 17, stride: 1 });
+    }
+
+    #[test]
+    fn range_negative_scale_swaps_endpoints() {
+        let e = Expr::mul(Const(-3), v(0));
+        assert_eq!(range_of(&e, &[4]), Range { lo: -9, hi: 0, stride: 3 });
+        let e = Expr::sub(Const(10), v(0));
+        assert_eq!(range_of(&e, &[4]), Range { lo: 7, hi: 10, stride: 1 });
+    }
+
+    #[test]
+    fn range_div_preserves_exact_progressions() {
+        // (6*v0)/3 -> {0,2,4,6}
+        let e = Expr::div(Expr::mul(Const(6), v(0)), Const(3));
+        assert_eq!(range_of(&e, &[4]), Range { lo: 0, hi: 6, stride: 2 });
+        // v0/3 over 0..7 -> {0,1,2}
+        let e = Expr::div(v(0), Const(3));
+        assert_eq!(range_of(&e, &[7]), Range { lo: 0, hi: 2, stride: 1 });
+    }
+
+    #[test]
+    fn range_mod_keeps_congruence() {
+        // (4*v0) % 8 over v0 in 0..8 -> {0,4}
+        let e = Expr::rem(Expr::mul(Const(4), v(0)), Const(8));
+        assert_eq!(range_of(&e, &[8]), Range { lo: 0, hi: 4, stride: 4 });
+        // v0 % 8 with v0 in 0..5 stays in one block: exact shift
+        let e = Expr::rem(v(0), Const(8));
+        assert_eq!(range_of(&e, &[5]), Range { lo: 0, hi: 4, stride: 1 });
+    }
+
+    #[test]
+    fn range_min_clamp() {
+        let e = Expr::min(v(0), Const(3));
+        let r = range_of(&e, &[6]);
+        assert_eq!((r.lo, r.hi), (0, 3));
+        // soundness on the clamped tail: every concrete value included
+        for x in 0..6 {
+            assert!(r.contains(e.eval(&[x])));
+        }
+    }
+
+    #[test]
+    fn range_unknown_var_is_top() {
+        assert!(range_of(&v(3), &[2]).is_top());
+        assert!(range_of(&v(0), &[0]).is_top());
+    }
+
+    #[test]
+    fn range_sound_on_composed_idioms() {
+        // unfold-style: (v0 + v1) with pad clamp and split-remainder
+        let idx = Expr::add(Expr::mul(v(0), Const(2)), v(1));
+        let e = Expr::add(
+            Expr::mul(Expr::div(idx.clone(), Const(3)), Const(16)),
+            Expr::rem(idx, Const(3)),
+        );
+        let extents = [4, 2];
+        let r = range_of(&e, &extents);
+        for a in 0..extents[0] {
+            for b in 0..extents[1] {
+                assert!(r.contains(e.eval(&[a, b])), "{e} at ({a},{b}) escapes {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_row_major_proves_symbolically() {
+        // v0*8 + v1 over [4, 8] into 32 slots: the codegen shape
+        let w = Expr::flatten(&[v(0), v(1)], &[4, 8]);
+        let a = analyze_write(&w, &[(0, 4), (1, 8)], 32);
+        assert_eq!(a.verdict(), Verdict::Proven);
+        assert_eq!((a.min_addr, a.max_addr), (Some(0), Some(31)));
+    }
+
+    #[test]
+    fn write_above_enumeration_cap_proves_symbolically() {
+        // 2052*2048 > 2^22 spatial points: enumeration gives up, the
+        // separation argument doesn't care
+        let w = Expr::flatten(&[v(0), v(1)], &[2052, 2048]);
+        let a = analyze_write(&w, &[(0, 2052), (1, 2048)], 2052 * 2048);
+        assert_eq!(a.verdict(), Verdict::Proven);
+    }
+
+    #[test]
+    fn write_ignoring_a_var_is_disproven() {
+        // v0*8 broadcast over v1: collides for every v1 pair
+        let w = Expr::mul(v(0), Const(8));
+        let a = analyze_write(&w, &[(0, 4), (1, 8)], 32);
+        assert_eq!(a.injective, Verdict::Disproven);
+    }
+
+    #[test]
+    fn write_out_of_bounds_is_disproven_exactly() {
+        let w = Expr::add(v(0), Const(1));
+        let a = analyze_write(&w, &[(0, 4)], 4);
+        assert_eq!(a.injective, Verdict::Proven);
+        assert_eq!(a.in_bounds, Verdict::Disproven);
+        assert_eq!(a.max_addr, Some(4));
+    }
+
+    #[test]
+    fn write_overlapping_strides_stay_unknown() {
+        // 3*v0 + 2*v1 over [2, 3] is injective, but separation can't
+        // see it (gap 2 ≤ span 3): documented incompleteness — falls
+        // back to enumeration, never a wrong verdict
+        let w = Expr::add(
+            Expr::mul(v(0), Const(3)),
+            Expr::mul(v(1), Const(2)),
+        );
+        let a = analyze_write(&w, &[(0, 2), (1, 3)], 8);
+        assert_eq!(a.injective, Verdict::Unknown);
+    }
+
+    #[test]
+    fn write_div_mod_recombination_proves_by_component() {
+        // (v0/4)*4 + v0%4 == v0: one coupled component, enumerated
+        let w = Expr::add(
+            Expr::mul(Expr::div(v(0), Const(4)), Const(4)),
+            Expr::rem(v(0), Const(4)),
+        );
+        let a = analyze_write(&w, &[(0, 12)], 12);
+        assert_eq!(a.verdict(), Verdict::Proven);
+        assert_eq!((a.min_addr, a.max_addr), (Some(0), Some(11)));
+    }
+
+    #[test]
+    fn write_empty_box_is_vacuously_proven() {
+        let w = Expr::mul(v(0), Const(1 << 40));
+        let a = analyze_write(&w, &[(0, 0)], 1);
+        assert_eq!(a.verdict(), Verdict::Proven);
+    }
+
+    #[test]
+    fn write_mixed_component_and_affine_separation() {
+        // split-remainder pair (coupled through v0) times a clean
+        // outer stride: (v0%3) + (v0/3)*3 + v1*16 over v0 in 0..12
+        let inner = Expr::add(
+            Expr::rem(v(0), Const(3)),
+            Expr::mul(Expr::div(v(0), Const(3)), Const(3)),
+        );
+        let w = Expr::add(inner, Expr::mul(v(1), Const(16)));
+        let a = analyze_write(&w, &[(0, 12), (1, 4)], 64);
+        assert_eq!(a.verdict(), Verdict::Proven);
+    }
+
+    #[test]
+    fn lint_flags_zero_trip_and_dead_clamp() {
+        use crate::loops::{Annotation, Loop, LoopKind};
+        let mk_loop = |var: usize, extent: i64| Loop {
+            var,
+            name: format!("l{var}"),
+            extent,
+            kind: LoopKind::Spatial,
+            ann: Annotation::None,
+        };
+        let p = Program {
+            node: 7,
+            loops: vec![mk_loop(0, 4), mk_loop(1, 0)],
+            accesses: vec![crate::codegen::TensorAccess {
+                tensor: 0,
+                storage_shape: vec![8],
+                idx: vec![Expr::min(v(0), Const(5))],
+                is_write: false,
+                elem_bytes: 4,
+            }],
+            flops_per_iter: 1.0,
+            fused: vec![],
+        };
+        let diags = lint_nest(&p);
+        assert!(diags.iter().any(|d| d.code == "zero-trip-loop"
+            && d.severity == Severity::Warning));
+        assert!(diags.iter().any(|d| d.code == "dead-pad-clamp"
+            && d.severity == Severity::Perf));
+        // a clamp that can fire is not flagged
+        let p2 = Program {
+            loops: vec![mk_loop(0, 9)],
+            accesses: vec![crate::codegen::TensorAccess {
+                tensor: 0,
+                storage_shape: vec![8],
+                idx: vec![Expr::min(v(0), Const(5))],
+                is_write: false,
+                elem_bytes: 4,
+            }],
+            ..p
+        };
+        assert!(lint_nest(&p2).iter().all(|d| d.code != "dead-pad-clamp"));
+    }
+}

@@ -26,12 +26,19 @@
 //! operator (pooling, softmax, layer-norm, padding, reductions,
 //! element-wise) is evaluated in a fixed serial order.
 
+// Same audit as runtime/native.rs: address arithmetic mixes i64
+// expression values with usize indexing (the PR 6 u32-truncation bug
+// class), so every narrowing cast is either checked or locally
+// allowed with a justification.
+#![warn(clippy::cast_possible_truncation)]
+
 use std::borrow::Cow;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::time::Instant;
 
+use crate::analysis::{self, Diagnostic, ProofKind, Severity};
 use crate::error::{panic_error, Error, ErrorKind, Result};
 use crate::graph::{EltKind, Graph, NodeId, OpKind, PoolKind};
 use crate::layout::{LayoutSeq, LayoutTransform};
@@ -96,6 +103,9 @@ impl BoundaryMap {
 }
 
 /// Indexed copy through a boundary map into a pooled buffer.
+// Map entries are validated against the source length when the map is
+// composed at compile time, so the per-element narrowing is safe.
+#[allow(clippy::cast_possible_truncation)]
 fn apply_map(map: &[i64], src: &[f32], mut out: Vec<f32>) -> Vec<f32> {
     out.clear();
     out.extend(
@@ -188,6 +198,8 @@ pub struct CompiledModel {
 
 /// Deterministic logical weight data for tensor `t` (shared convention
 /// with the runtime's seeded inputs: one stream per tensor id).
+// Dims are validated ≥ 1 at graph construction; they fit usize.
+#[allow(clippy::cast_possible_truncation)]
 pub fn weight_data(graph: &Graph, t: TensorId, weight_seed: u64) -> Vec<f32> {
     let ten = graph.tensor(t);
     let spec = TensorSpec {
@@ -377,13 +389,13 @@ pub(crate) fn compile_model(
                                 None => pm,
                                 Some(f) => {
                                     let um = f.unpack_map(&ten.shape);
+                                    // -1 (pad fill) passes through; any
+                                    // in-range index is re-looked-up in
+                                    // the producer's unpack map
                                     pm.iter()
                                         .map(|&l| {
-                                            if l < 0 {
-                                                -1
-                                            } else {
-                                                um[l as usize]
-                                            }
+                                            usize::try_from(l)
+                                                .map_or(-1, |i| um[i])
                                         })
                                         .collect()
                                 }
@@ -759,6 +771,17 @@ pub struct NestHealth {
     /// Whether parallel workers write the shared output directly
     /// (write map proven injective) rather than staging scatters.
     pub writes_direct: bool,
+    /// How the write-map certificate was obtained: symbolically by the
+    /// analyzer, by fallback enumeration under the 2^22 cap, or not at
+    /// all.
+    pub write_proof: ProofKind,
+    /// Data-race-freedom certificate: the nest either runs on one
+    /// worker or its parallel workers write disjoint output slices
+    /// (write map proven injective + in-bounds at compile time).
+    pub race_free: bool,
+    /// Every read stream proven in-bounds over the full iteration box
+    /// (the runtime checks guarding them are dead weight).
+    pub reads_bounded: bool,
     /// Whether the nest runs on more than one worker.
     pub parallel: bool,
     /// Why the fast plan is absent (`None` when `fast`).
@@ -821,6 +844,9 @@ fn elt_unary(kind: EltKind, x: f32) -> f32 {
 }
 
 /// Evaluate one simple operator on logical row-major inputs.
+// Per-element offsets are products of validated positive dims bounded
+// by the (usize-sized) output/input buffer lengths by construction.
+#[allow(clippy::cast_possible_truncation)]
 fn interp_simple(
     graph: &Graph,
     node: NodeId,
@@ -996,6 +1022,8 @@ fn interp_simple(
 /// Apply `f` to every 1-d line along `axis` of a row-major tensor.
 /// `line`/`res` are caller-provided scratch (resized here) so repeated
 /// runs allocate nothing per call.
+// Line bases/strides are bounded by `x.len()` by construction.
+#[allow(clippy::cast_possible_truncation)]
 fn line_op(
     x: &[f32],
     shape: &[i64],
@@ -1673,12 +1701,101 @@ impl CompiledModel {
                     name: cs.exe.name().to_string(),
                     fast: cs.exe.has_fast_path(),
                     writes_direct: cs.exe.writes_direct(),
+                    write_proof: cs.exe.write_proof(),
+                    race_free: !cs.exe.is_parallel()
+                        || cs.exe.writes_direct(),
+                    reads_bounded: cs.exe.reads_bounded(),
                     parallel: cs.exe.is_parallel(),
                     degraded,
                 });
             }
         }
         report
+    }
+
+    /// Static plan lints: everything the analyzer can say about this
+    /// compiled model without running it. Returns per-nest access-level
+    /// findings (zero-trip loops, dead pad clamps) plus model-level
+    /// ones (never-firing `-1` gather slots, non-stride-1 innermost
+    /// reads, degraded nests with their proof status). Severity
+    /// [`Severity::Error`]/[`Severity::Warning`] findings fail
+    /// `alt check`; [`Severity::Perf`] ones are advisory.
+    pub fn diagnostics(&self) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for step in &self.steps {
+            let Step::Complex(cs) = step else { continue };
+            out.extend(analysis::lint_nest(cs.exe.program()));
+            if let Some((sl, sr)) = cs.exe.innermost_strides() {
+                if sl != 1 || sr != 1 {
+                    out.push(Diagnostic::nest_scoped(
+                        Severity::Perf,
+                        cs.node,
+                        "non-unit-innermost-read",
+                        format!(
+                            "{}: innermost MAC strides ({sl}, {sr}) — no \
+                             contiguous run for the unrolled dot kernel",
+                            cs.exe.name()
+                        ),
+                    ));
+                }
+            }
+            if let Some(reason) = cs.exe.degrade_reason() {
+                out.push(Diagnostic::nest_scoped(
+                    Severity::Warning,
+                    cs.node,
+                    "degraded-nest",
+                    format!(
+                        "{}: off the fast plan ({reason}); write proof: {}",
+                        cs.exe.name(),
+                        cs.exe.write_proof()
+                    ),
+                ));
+            }
+            if let Some(reason) = cs.exe.write_degrade() {
+                out.push(Diagnostic::nest_scoped(
+                    Severity::Warning,
+                    cs.node,
+                    "staged-scatter-write",
+                    format!(
+                        "{}: parallel nest stages scatter writes \
+                         ({reason}); write proof: {}",
+                        cs.exe.name(),
+                        cs.exe.write_proof()
+                    ),
+                ));
+            }
+            if !cs.exe.reads_bounded() {
+                out.push(Diagnostic::nest_scoped(
+                    Severity::Perf,
+                    cs.node,
+                    "unproven-read-bounds",
+                    format!(
+                        "{}: a read stream's bounds were not proven \
+                         symbolically; runtime checks stay live",
+                        cs.exe.name()
+                    ),
+                ));
+            }
+        }
+        for (slot, gather) in self.conv_gathers.iter().enumerate() {
+            if self.conv_forced[slot] {
+                continue; // already surfaced via the consumer's degrade
+            }
+            if !gather.iter().any(|&g| g < 0) {
+                out.push(Diagnostic {
+                    severity: Severity::Perf,
+                    nest: None,
+                    code: "dead-gather-fill",
+                    message: format!(
+                        "conversion slot {slot} (t{}): gather map has no \
+                         -1 entries; the zero-fill branch never fires",
+                        self.conv_tensor[slot]
+                    ),
+                });
+            }
+        }
+        out.sort_by_key(|d| d.severity);
+        out
     }
 
     /// Nests currently running on the bytecode interpreter.

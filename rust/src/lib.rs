@@ -9,6 +9,12 @@
 //!
 //! * [`expr`] — index-expression IR (affine + floor-div/mod) used by the
 //!   layout rewrite rules of Table 1 and Eq. (1).
+//! * [`analysis`] — static access analysis over that IR: an interval ×
+//!   congruence (range + stride) abstract domain that proves write-map
+//!   injectivity, stream bounds and worker race-freedom symbolically at
+//!   compile time (enumeration survives as fallback and differential
+//!   oracle), plus the plan linter behind `CompiledModel::diagnostics()`
+//!   and the `alt check` CLI verb.
 //! * [`tensor`] — tensor descriptors and concrete layouts.
 //! * [`layout`] — the six layout primitives (`split`, `reorder`, `fuse`,
 //!   `unfold`, `pad`, `store_at`) plus inverses; shape and
@@ -61,6 +67,8 @@
 // abort. Tuner-internal modules keep the default lint set — their
 // invariant panics are caught at the engine/runtime isolation
 // boundaries instead.
+#[warn(clippy::unwrap_used, clippy::expect_used)]
+pub mod analysis;
 #[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod api;
 pub mod autotune;

@@ -12,6 +12,10 @@
 //!              otherwise a compiled layout variant (the native
 //!              interpreter by default, or the PJRT CPU runtime over
 //!              AOT HLO artifacts with `--backend pjrt`)
+//!   check    — static verification of a saved plan: load + compile,
+//!              print per-nest proof certificates (injectivity, bounds,
+//!              race-freedom) and lint findings; exit non-zero on
+//!              error/warning findings
 //!   figures  — regenerate a paper table/figure (also: `figures` binary)
 //!
 //! Configuration: `--config file.conf` (key = value, see
@@ -32,7 +36,7 @@ use alt::sim::HwProfile;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: alt <tune|graph|sim|propagate|run|figures> [args]
+        "usage: alt <tune|graph|sim|propagate|run|check|figures> [args]
   alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
            [--threads N] [--speculation K] [--memo_cap N]
            [--shards N(1=sequential,0=auto)] [--budget_realloc true|false]
@@ -49,6 +53,10 @@ fn usage() -> ! {
           [--scale full|small] [--threads N] [--seed S]
           (--backend pjrt additionally takes --dir artifacts and needs
            the `pjrt` feature; native is the default and needs nothing)
+  alt check DIR (or --load DIR)
+          (static verification of a saved tuned plan: per-nest
+           injectivity/bounds/race-freedom certificates + plan lints;
+           exit 0 clean, 1 on error/warning findings, 2 on load errors)
   alt figures <fig1|fig9|fig10|fig11|fig12|table2|table3|motivating|observations|all> [--full]"
     );
     std::process::exit(2);
@@ -368,6 +376,77 @@ fn main() {
                     std::process::exit(2);
                 }
             }
+        }
+        "check" => {
+            use alt::analysis::Severity;
+            // plan dir: first positional arg, or --load like `run`
+            let dir = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .map(String::as_str)
+                .or_else(|| cfg.get("load"))
+                .unwrap_or_else(|| {
+                    fatal("check: pass a plan directory (`alt check DIR`)")
+                });
+            // load/compile failures are exit 2 (input problem), lint
+            // findings are exit 1 — CI distinguishes "plan is broken"
+            // from "plan compiled but the analyzer objects".
+            let tuned =
+                Session::load(dir).unwrap_or_else(|e| fatal(format!("load {dir}: {e}")));
+            let model = tuned
+                .compile()
+                .unwrap_or_else(|e| fatal(format!("compile {dir}: {e}")));
+            let health = model.health();
+            println!(
+                "{}: {} complex nests, {} degraded, {} forced repacks",
+                model.graph().name,
+                health.nests.len(),
+                health.degraded_nests,
+                health.forced_repacks
+            );
+            let mut t = Table::new(
+                "nest certificates",
+                &[
+                    "node", "name", "fast", "parallel", "direct",
+                    "proof", "race-free", "reads-bounded",
+                ],
+            );
+            for n in &health.nests {
+                t.row(&[
+                    n.node.to_string(),
+                    n.name.clone(),
+                    n.fast.to_string(),
+                    n.parallel.to_string(),
+                    n.writes_direct.to_string(),
+                    n.write_proof.to_string(),
+                    n.race_free.to_string(),
+                    n.reads_bounded.to_string(),
+                ]);
+            }
+            t.print();
+            let findings = model.diagnostics();
+            for d in &findings {
+                println!("{d}");
+            }
+            // Severity orders Error < Warning < Perf: anything at
+            // Warning or stronger fails the check; Perf is advisory.
+            let failing = findings
+                .iter()
+                .filter(|d| d.severity <= Severity::Warning)
+                .count();
+            if failing > 0 {
+                eprintln!(
+                    "check: {failing} error/warning finding(s) \
+                     ({} total incl. perf advisories)",
+                    findings.len()
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "check: OK — all certificates hold \
+                 ({} perf advisories)",
+                findings.len()
+            );
         }
         "figures" => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");

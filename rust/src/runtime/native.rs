@@ -48,12 +48,28 @@
 //! job of conversion operators and is charged separately by the cost
 //! model (see `conversion_terms` in the tuner).
 //!
+//! Safety certificates come from [`crate::analysis`]: the write map's
+//! injectivity and bounds are proven *symbolically* (interval ×
+//! congruence abstract interpretation) with no size cap, so direct
+//! parallel writes apply to nests far above the old 2^22 enumeration
+//! wall; enumeration survives as the fallback for verdicts the
+//! analyzer can't reach and, in debug builds, as the differential
+//! oracle cross-checking the ones it can. Read streams carry the same
+//! in-bounds certificates (surfaced through `HealthReport`).
+//!
 //! Unsupported (returns an error at compile): transposed convolutions
 //! (zero-expanded inputs) and `store_at`-packed operands.
+
+// Address arithmetic here mixes i64 expression values with usize
+// indexing — the PR 6 u32-truncation bug class. Every narrowing cast
+// must either go through a checked conversion or be locally allowed
+// with a certificate-backed justification.
+#![warn(clippy::cast_possible_truncation)]
 
 use std::collections::BTreeSet;
 use std::time::Instant;
 
+use crate::analysis::{self, ProofKind, Verdict};
 use crate::codegen::{lower_complex, LayoutAssignment, Program, TensorAccess};
 use crate::error::Result;
 use crate::expr::{Const, Expr};
@@ -186,9 +202,10 @@ pub enum DegradeReason {
     /// An access expression mentions a loop variable with no known
     /// extent, so stream analysis cannot decompose it; bytecode.
     StreamAnalysis,
-    /// The write map was not proven injective within the 2^22
-    /// enumeration cap; parallel workers use the staged-scatter pass
-    /// instead of direct shared-buffer writes (the nest stays fast).
+    /// Neither the symbolic analyzer nor fallback enumeration (capped
+    /// at 2^22) proved the write map injective + in-bounds; parallel
+    /// workers use the staged-scatter pass instead of direct
+    /// shared-buffer writes (the nest stays fast).
     UnprovenWrite,
     /// A fused repack edge's composed gather map referenced source
     /// storage out of range; the repack materializes instead of
@@ -235,6 +252,9 @@ impl<'a> OperandView<'a> {
         }
     }
 
+    // Gather entries are validated (or symbolically proven) in
+    // `0..data.len()` at compile time, so the narrowing is safe here.
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     fn ld(&self, i: usize) -> f32 {
         match self.gather {
@@ -265,9 +285,11 @@ pub struct ExecScratch {
 /// stays a compile-time artifact, never a memory hazard).
 const TABLE_CAP: i64 = 1 << 22;
 
-/// Largest spatial space the compile-time write-injectivity proof will
-/// enumerate; beyond it the parallel path keeps the staged-scatter
-/// fallback rather than spending unbounded compile time.
+/// Largest spatial space the *fallback* write-injectivity enumeration
+/// will walk. The symbolic analyzer ([`crate::analysis`]) has no such
+/// cap and decides most nests first; enumeration only runs when its
+/// verdict is `Unknown` (and, in debug builds, as the cross-check
+/// oracle for verdicts it reached).
 const INJECTIVITY_CAP: u64 = 1 << 22;
 
 /// A non-affine sub-term lowered to a lookup table over exactly the
@@ -340,6 +362,9 @@ impl Stream {
     }
 
     /// Full value, tables included.
+    // Table indices are mixed-radix over loop extents whose product is
+    // bounded by `TABLE_CAP` (< 2^22), so they always fit usize.
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     fn eval(&self, env: &[i64]) -> i64 {
         let mut v = self.affine_eval(env);
@@ -414,12 +439,15 @@ fn tabulate(
     if size > TABLE_CAP {
         return Err(DegradeReason::TableCap);
     }
+    let Ok(size_us) = usize::try_from(size) else {
+        return Err(DegradeReason::TableCap);
+    };
     let mut radix = vec![1i64; vars.len()];
     for j in (0..vars.len().saturating_sub(1)).rev() {
         radix[j] = radix[j + 1] * exts[j + 1];
     }
     let mut env = vec![0i64; extents.len()];
-    let mut values = vec![0i64; size as usize];
+    let mut values = vec![0i64; size_us];
     for (flat, slot) in values.iter_mut().enumerate() {
         let mut rem = flat as i64;
         for j in (0..vars.len()).rev() {
@@ -661,7 +689,10 @@ impl FastNest {
 /// accumulation order of the interpreter (element by element, in nest
 /// order), so results stay bit-identical; the win is dropping per-MAC
 /// bytecode dispatch, not reassociation.
-#[allow(clippy::too_many_arguments)]
+// Run addresses are certificate-backed: the stream analyzer bounds
+// every base, and run lengths stay under the loop extents, so the
+// i64→usize narrowing never truncates.
+#[allow(clippy::too_many_arguments, clippy::cast_possible_truncation)]
 #[inline]
 fn dot(
     lhs: OperandView,
@@ -767,6 +798,9 @@ impl TailStage {
         }
     }
 
+    // Tail addresses are nest accesses validated in-bounds (or proven
+    // by the analyzer) at compile time; they fit usize.
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     fn apply(
         &self,
@@ -786,6 +820,9 @@ impl TailStage {
     /// Fast-path variant: operand addresses come from precompiled
     /// streams (index-aligned with `operands`; `None` for the chain
     /// value flowing through in registers).
+    // Same certificate as `apply`: stream values are in-bounds
+    // storage addresses.
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     fn apply_streams(
         &self,
@@ -885,6 +922,12 @@ pub struct NativeExecutable {
     /// parallel path (workers share the output buffer instead of
     /// staging `(addr, value)` pairs for a serial scatter).
     write_direct: bool,
+    /// How the write-map proof was obtained (symbolic analyzer,
+    /// fallback enumeration, or not at all).
+    write_proof: ProofKind,
+    /// Every read stream symbolically proven in-bounds over the full
+    /// iteration box.
+    reads_bounded: bool,
 }
 
 /// Shared output pointer for the injective direct-write parallel path.
@@ -1010,12 +1053,19 @@ impl NativeExecutable {
                     acc.storage_shape
                 );
             }
+            let elements = usize::try_from(ten.elements()).map_err(|_| {
+                err!("{name}: {} element count overflows usize", ten.name)
+            })?;
+            let packed: i64 = tf.final_shape().iter().product();
+            let packed_len = usize::try_from(packed).map_err(|_| {
+                err!("{name}: {} packed length overflows usize", ten.name)
+            })?;
             inputs.push(InputBuf {
                 tensor: t,
                 name: ten.name.clone(),
                 shape: ten.shape.clone(),
-                elements: ten.elements() as usize,
-                packed_len: tf.final_shape().iter().product::<i64>() as usize,
+                elements,
+                packed_len,
                 identity: seq.is_identity(),
                 transform: tf,
             });
@@ -1124,7 +1174,9 @@ impl NativeExecutable {
         let storage_strides = strides_of(&write_acc.storage_shape);
         // Precompute the logical→storage gather map once; fast-mode
         // unpacking is then a straight indexed copy.
-        let logical_len = fin_t.elements() as usize;
+        let Ok(logical_len) = usize::try_from(fin_t.elements()) else {
+            bail!("{name}: output element count overflows usize");
+        };
         let rank = fin_t.rank();
         let mut map = vec![0i64; logical_len];
         {
@@ -1189,23 +1241,31 @@ impl NativeExecutable {
             Err(reason) => (None, Some(reason)),
         };
 
-        // Write-map injectivity proof: when every spatial point writes
-        // a distinct in-bounds address, parallel workers can write the
-        // shared output buffer directly (no staged scatter).
+        // Write-map certificates: injectivity + bounds together mean
+        // every spatial point writes a distinct in-bounds address, so
+        // parallel workers can write the shared output buffer directly
+        // (no staged scatter) — worker output slices are disjoint by
+        // construction. The symbolic analyzer decides most nests
+        // outright with no size cap; enumeration survives as the
+        // fallback for verdicts it cannot reach and, in debug builds,
+        // as the differential oracle cross-checking the ones it can.
         let write = Code::compile(&write_e);
-        let mut write_direct = false;
-        if spatial_total <= INJECTIVITY_CAP {
+        let Ok(out_len_us) = usize::try_from(out_len) else {
+            bail!("{name}: output length {out_len} overflows usize");
+        };
+        let enumerate_write = || -> bool {
+            if spatial_total > INJECTIVITY_CAP {
+                return false;
+            }
             let mut env = vec![0i64; env_len];
             let mut stack: Vec<i64> = Vec::with_capacity(16);
-            let mut seen = vec![false; out_len as usize];
-            let mut ok = true;
+            let mut seen = vec![false; out_len_us];
             for _ in 0..spatial_total {
                 let a = write.eval(&env, &mut stack);
-                if a < 0 || a >= out_len || seen[a as usize] {
-                    ok = false;
-                    break;
+                match usize::try_from(a).ok().filter(|&i| i < seen.len()) {
+                    Some(i) if !seen[i] => seen[i] = true,
+                    _ => return false,
                 }
-                seen[a as usize] = true;
                 for &(v, e) in spatial.iter().rev() {
                     env[v] += 1;
                     if env[v] < e {
@@ -1214,8 +1274,41 @@ impl NativeExecutable {
                     env[v] = 0;
                 }
             }
-            write_direct = ok;
-        }
+            true
+        };
+        let wa = analysis::analyze_write(&write_e, &spatial, out_len);
+        let (write_direct, write_proof) = match wa.verdict() {
+            Verdict::Proven => {
+                debug_assert!(
+                    spatial_total > INJECTIVITY_CAP || enumerate_write(),
+                    "{name}: symbolic injectivity proof contradicts enumeration"
+                );
+                (true, ProofKind::Symbolic)
+            }
+            Verdict::Disproven => {
+                debug_assert!(
+                    spatial_total > INJECTIVITY_CAP || !enumerate_write(),
+                    "{name}: symbolic refutation contradicts enumeration"
+                );
+                (false, ProofKind::Symbolic)
+            }
+            Verdict::Unknown if spatial_total <= INJECTIVITY_CAP => {
+                (enumerate_write(), ProofKind::Enumerated)
+            }
+            Verdict::Unknown => (false, ProofKind::Unproven),
+        };
+
+        // In-bounds certificates for the read streams: when every read
+        // address provably stays inside its operand's packed storage,
+        // the runtime checks guarding those streams are dead weight
+        // (surfaced in `HealthReport` and the serve-bench `proof`
+        // counters; the linter flags the opposite).
+        let reads_bounded = accs[1..tail_end].iter().all(|acc| {
+            acc.is_write || {
+                let len: i64 = acc.storage_shape.iter().product();
+                analysis::range_of(&flat_expr(acc), &var_extents).within(0, len)
+            }
+        });
 
         Ok(Self {
             name: name.to_string(),
@@ -1230,7 +1323,7 @@ impl NativeExecutable {
             rhs,
             tail,
             write,
-            out_len: out_len as usize,
+            out_len: out_len_us,
             written: fin,
             unpack,
             par_extent,
@@ -1238,6 +1331,8 @@ impl NativeExecutable {
             fast_degrade,
             mode: ExecMode::Fast,
             write_direct,
+            write_proof,
+            reads_bounded,
             program,
         })
     }
@@ -1290,8 +1385,9 @@ impl NativeExecutable {
     }
 
     /// Ladder rung of the parallel write path: `Some(UnprovenWrite)`
-    /// when a parallel nest fell back to staged scatter because the
-    /// injectivity proof did not close within its enumeration cap.
+    /// when a parallel nest fell back to staged scatter because
+    /// neither the symbolic analyzer nor fallback enumeration closed
+    /// the injectivity + bounds proof.
     pub fn write_degrade(&self) -> Option<DegradeReason> {
         if self.is_parallel() && !self.write_direct {
             Some(DegradeReason::UnprovenWrite)
@@ -1306,6 +1402,32 @@ impl NativeExecutable {
         self.write_direct
     }
 
+    /// How the write-map certificate was obtained: `Symbolic` when the
+    /// analyzer decided it (either way), `Enumerated` when exhaustive
+    /// enumeration under the 2^22 cap had to settle it, `Unproven`
+    /// when neither closed. A `Symbolic`/`Enumerated` proof combined
+    /// with [`writes_direct`](Self::writes_direct) is the data-race-
+    /// freedom certificate for parallel workers: distinct spatial
+    /// points write distinct addresses, so worker output slices are
+    /// disjoint.
+    pub fn write_proof(&self) -> ProofKind {
+        self.write_proof
+    }
+
+    /// Whether every read stream of this nest is symbolically proven
+    /// in-bounds over the full iteration box (interval × congruence
+    /// range of each flat address vs its operand's packed length).
+    pub fn reads_bounded(&self) -> bool {
+        self.reads_bounded
+    }
+
+    /// Innermost-run address strides of the fast plan's MAC operands,
+    /// `None` off the fast path. The perf linter flags non-unit
+    /// innermost reads (no contiguous unrolled run to vectorize).
+    pub fn innermost_strides(&self) -> Option<(i64, i64)> {
+        self.fast.as_ref().map(|f| (f.lhs_stride, f.rhs_stride))
+    }
+
     /// Whether this program carries a live `parallel` annotation (and
     /// therefore actually fans out across threads).
     pub fn is_parallel(&self) -> bool {
@@ -1313,6 +1435,8 @@ impl NativeExecutable {
     }
 
     /// Logical input specs, in the order [`run`](Self::run) expects.
+    // Dims are validated ≥ 1 at graph construction; they fit usize.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn input_specs(&self) -> Vec<TensorSpec> {
         self.inputs
             .iter()
@@ -1545,10 +1669,12 @@ impl NativeExecutable {
         // Honor the `parallel` annotation the way the simulator does:
         // the schedule grants at most `par_extent` parallel units, the
         // host at most `threads`.
-        let workers = (self.threads as u64)
-            .min(self.par_extent)
-            .min(total)
-            .max(1) as usize;
+        // Capped by `self.threads` (already a usize), so the narrowing
+        // conversion can't fail; 1 is the degenerate fallback.
+        let workers = usize::try_from(
+            (self.threads as u64).min(self.par_extent).min(total).max(1),
+        )
+        .unwrap_or(1);
         storage.clear();
         storage.resize(self.out_len, 0f32);
         if workers <= 1 {
@@ -1611,8 +1737,9 @@ impl NativeExecutable {
                     s.spawn(move || {
                         catch_unwind(AssertUnwindSafe(|| {
                             let mut scratch = ExecScratch::default();
-                            let mut part =
-                                Vec::with_capacity((hi - lo) as usize);
+                            let mut part = Vec::with_capacity(
+                                usize::try_from(hi - lo).unwrap_or(0),
+                            );
                             self.exec_range(bufs, lo, hi, &mut scratch, |a, v| {
                                 part.push((a, v));
                             });
@@ -1671,6 +1798,10 @@ impl NativeExecutable {
     /// address codes per MAC. Kept as the reference oracle
     /// ([`ExecMode::Bytecode`]) and the fallback when no fast plan
     /// compiled.
+    // Hot path: odometer residues are < loop extents and nest
+    // addresses carry compile-time bounds certificates, so the
+    // narrowing casts cannot truncate.
+    #[allow(clippy::cast_possible_truncation)]
     fn exec_range_bytecode<F: FnMut(usize, f32)>(
         &self,
         bufs: &[OperandView],
@@ -1742,6 +1873,10 @@ impl NativeExecutable {
     /// dot-product. Accumulation order is identical to the bytecode
     /// interpreter (nest order, one accumulator), so outputs are
     /// bit-identical.
+    // Hot path: table cursors stay under TABLE_CAP and stream
+    // addresses carry compile-time bounds certificates, so the
+    // narrowing casts cannot truncate.
+    #[allow(clippy::cast_possible_truncation)]
     fn exec_range_fast<F: FnMut(usize, f32)>(
         &self,
         fast: &FastNest,
@@ -1843,6 +1978,9 @@ impl NativeExecutable {
     }
 
     /// Fold the executed storage buffer back to logical row-major.
+    // Gather-map entries and rewritten storage addresses are validated
+    // against `storage.len()` when the map is built at compile time.
+    #[allow(clippy::cast_possible_truncation)]
     fn unpack(&self, storage: &[f32]) -> Vec<f32> {
         let u = &self.unpack;
         if self.mode == ExecMode::Fast {

@@ -1,0 +1,293 @@
+//! Symbolic access-analyzer suite: the abstract interpreter over the
+//! access-expression IR must agree with exhaustive enumeration wherever
+//! enumeration closes, and its certificates must flow through compile.
+//!
+//! Pinned properties:
+//! * differential: over ~1k seeded random access expressions, a
+//!   `Proven` verdict never contradicts the enumeration oracle and a
+//!   `Disproven` verdict always carries a genuine counterexample
+//!   (soundness in both directions; `Unknown` is always allowed),
+//! * `range_of` is a sound over-approximation: every concrete value an
+//!   expression takes over its iteration box is a member of the
+//!   abstract range,
+//! * golden layout edges: split writes (affine bijections),
+//!   split-remainder div/mod recombination, unfold window overlap, and
+//!   pad clamps that do / don't bind resolve the way the layout algebra
+//!   says they must,
+//! * a synthetic nest above the 2^22 enumeration cap — which used to
+//!   degrade to staged scatter writes with `UnprovenWrite` — now takes
+//!   the direct-write parallel path on a symbolic certificate,
+//!   bit-identically to the bytecode oracle,
+//! * on both serving zoo models every nest write map is proven
+//!   injective *symbolically* (enumeration demoted to cross-check) and
+//!   `CompiledModel::diagnostics()` reports nothing at error/warning
+//!   severity — the `alt check` pass condition.
+
+use alt::analysis::{analyze_write, range_of, ProofKind, Severity, Verdict};
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::codegen::LayoutAssignment;
+use alt::expr::Expr;
+use alt::graph::GraphBuilder;
+use alt::loops::LoopSchedule;
+use alt::runtime::{ExecMode, NativeExecutable};
+use alt::sim::HwProfile;
+use alt::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Visit every point of the iteration box in row-major order.
+fn for_each_env(extents: &[i64], mut f: impl FnMut(&[i64])) {
+    let total: i64 = extents.iter().product();
+    let mut env = vec![0i64; extents.len()];
+    for _ in 0..total {
+        f(&env);
+        for d in (0..extents.len()).rev() {
+            env[d] += 1;
+            if env[d] < extents[d] {
+                break;
+            }
+            env[d] = 0;
+        }
+    }
+}
+
+/// Ground-truth oracle mirroring the runtime's direct-write criterion:
+/// every address lands fresh inside `[0, out_len)`.
+fn enumerate_ok(e: &Expr, extents: &[i64], out_len: i64) -> bool {
+    let mut seen = vec![false; usize::try_from(out_len).unwrap()];
+    let mut ok = true;
+    for_each_env(extents, |env| {
+        let a = e.eval(env);
+        match usize::try_from(a).ok().filter(|&i| i < seen.len()) {
+            Some(i) if !seen[i] => seen[i] = true,
+            _ => ok = false,
+        }
+    });
+    ok
+}
+
+/// Depth-bounded random access expression over `nvars` loop variables.
+/// Divisors are non-zero constants (codegen never emits variable or
+/// zero divisors), everything else is unconstrained.
+fn rand_expr(rng: &mut Rng, depth: usize, nvars: usize) -> Expr {
+    if depth == 0 || rng.below(4) == 0 {
+        return if rng.below(2) == 0 {
+            Expr::Var(rng.below(nvars))
+        } else {
+            Expr::Const(rng.below(7) as i64 - 3)
+        };
+    }
+    let a = rand_expr(rng, depth - 1, nvars);
+    match rng.below(6) {
+        0 => Expr::add(a, rand_expr(rng, depth - 1, nvars)),
+        1 => Expr::sub(a, rand_expr(rng, depth - 1, nvars)),
+        2 => Expr::mul(a, rand_expr(rng, depth - 1, nvars)),
+        3 => Expr::div(a, Expr::Const(1 + rng.below(7) as i64)),
+        4 => Expr::rem(a, Expr::Const(1 + rng.below(7) as i64)),
+        _ => Expr::min(a, rand_expr(rng, depth - 1, nvars)),
+    }
+}
+
+#[test]
+fn differential_verdicts_agree_with_enumeration() {
+    let mut rng = Rng::new(0xA17);
+    let (mut proven, mut disproven, mut unknown) = (0usize, 0usize, 0usize);
+    for i in 0..1000 {
+        let nvars = 1 + i % 3;
+        let extents: Vec<i64> =
+            (0..nvars).map(|_| 1 + rng.below(5) as i64).collect();
+        let e = rand_expr(&mut rng, 3, nvars);
+        let mut max_a = i64::MIN;
+        for_each_env(&extents, |env| max_a = max_a.max(e.eval(env)));
+        // two out of three get a fitting output; every third is one
+        // short so in-bounds disproofs are exercised too
+        let out_len = if i % 3 == 0 { max_a.max(1) } else { (max_a + 1).max(1) };
+        let spatial: Vec<(usize, i64)> =
+            extents.iter().enumerate().map(|(v, &x)| (v, x)).collect();
+        let wa = analyze_write(&e, &spatial, out_len);
+        let truth = enumerate_ok(&e, &extents, out_len);
+        match wa.verdict() {
+            Verdict::Proven => {
+                proven += 1;
+                assert!(truth, "#{i}: claimed proven, enumeration rejects: {e:?} over {extents:?}, out_len {out_len}");
+            }
+            Verdict::Disproven => {
+                disproven += 1;
+                assert!(!truth, "#{i}: claimed disproven, enumeration accepts: {e:?} over {extents:?}, out_len {out_len}");
+            }
+            Verdict::Unknown => unknown += 1,
+        }
+    }
+    // the suite must keep exercising both decided directions — if the
+    // analyzer degenerates to all-Unknown this fails loudly
+    assert!(proven >= 50, "only {proven}/1000 proven (unknown {unknown})");
+    assert!(disproven >= 100, "only {disproven}/1000 disproven (unknown {unknown})");
+}
+
+#[test]
+fn range_of_is_a_sound_over_approximation() {
+    let mut rng = Rng::new(0x5EED);
+    for i in 0..300 {
+        let nvars = 1 + i % 3;
+        let extents: Vec<i64> =
+            (0..nvars).map(|_| 1 + rng.below(5) as i64).collect();
+        let e = rand_expr(&mut rng, 3, nvars);
+        let r = range_of(&e, &extents);
+        for_each_env(&extents, |env| {
+            let v = e.eval(env);
+            assert!(
+                r.contains(v),
+                "#{i}: {e:?} = {v} at {env:?} escapes {r} over {extents:?}"
+            );
+        });
+    }
+}
+
+#[test]
+fn golden_split_write_is_a_proven_bijection() {
+    // split [12, 5] by tile 3: addr = (v0*3 + v1)*5 + v2 — pure affine,
+    // strides (15, 5, 1) separate exactly; proven without enumeration
+    let e = Expr::add(
+        Expr::mul(
+            Expr::add(Expr::mul(Expr::Var(0), Expr::Const(3)), Expr::Var(1)),
+            Expr::Const(5),
+        ),
+        Expr::Var(2),
+    );
+    let wa = analyze_write(&e, &[(0, 4), (1, 3), (2, 5)], 60);
+    assert_eq!(wa.verdict(), Verdict::Proven);
+    assert_eq!((wa.min_addr, wa.max_addr), (Some(0), Some(59)));
+}
+
+#[test]
+fn golden_split_remainder_recombination_is_proven() {
+    // the inverse edge: storing y[v] at [v/3][v%3] with row width 3
+    // recombines to the identity — (v/3)*3 + v%3 == v
+    let e = Expr::add(
+        Expr::mul(Expr::div(Expr::Var(0), Expr::Const(3)), Expr::Const(3)),
+        Expr::rem(Expr::Var(0), Expr::Const(3)),
+    );
+    let wa = analyze_write(&e, &[(0, 12)], 12);
+    assert_eq!(wa.verdict(), Verdict::Proven);
+    assert_eq!((wa.min_addr, wa.max_addr), (Some(0), Some(11)));
+    // with a non-dividing width the remainder leaves holes but stays
+    // injective; one address short must flip to disproven
+    let wa = analyze_write(&e, &[(0, 11)], 11);
+    assert_eq!(wa.verdict(), Verdict::Proven);
+    let short = analyze_write(&e, &[(0, 12)], 11);
+    assert_eq!(short.in_bounds, Verdict::Disproven);
+}
+
+#[test]
+fn golden_unfold_window_overlap_never_proven() {
+    // unfold reads window w at offset o: addr = v0 + v1 — adjacent
+    // windows overlap (0+1 == 1+0). The two variables live in separate
+    // affine components, so the separation argument can't refute, only
+    // refuse: the pinned verdict is Unknown (soundness: never Proven),
+    // and the runtime falls back to enumeration, which rejects.
+    let e = Expr::add(Expr::Var(0), Expr::Var(1));
+    let wa = analyze_write(&e, &[(0, 4), (1, 3)], 6);
+    assert_eq!(wa.injective, Verdict::Unknown);
+    assert!(!enumerate_ok(&e, &[4, 3], 6));
+    // clamped into one coupled component the collision is concrete:
+    // the analyzer enumerates the component's image and refutes
+    let coupled = Expr::min(Expr::add(Expr::Var(0), Expr::Var(1)), Expr::Const(100));
+    let wa = analyze_write(&coupled, &[(0, 4), (1, 3)], 6);
+    assert_eq!(wa.injective, Verdict::Disproven);
+    // the unfolded-but-disjoint form (stride == width) is fine again
+    let disjoint = Expr::add(Expr::mul(Expr::Var(0), Expr::Const(3)), Expr::Var(1));
+    let wa = analyze_write(&disjoint, &[(0, 4), (1, 3)], 12);
+    assert_eq!(wa.verdict(), Verdict::Proven);
+}
+
+#[test]
+fn golden_pad_clamp_binding_is_disproven_interior_proven() {
+    // pad clamp min(v0, 5) with extent 7: rows 5 and 6 collide
+    let clamped = |ext: i64| {
+        let e = Expr::add(
+            Expr::mul(Expr::min(Expr::Var(0), Expr::Const(5)), Expr::Const(4)),
+            Expr::Var(1),
+        );
+        analyze_write(&e, &[(0, ext), (1, 4)], 24)
+    };
+    assert_eq!(clamped(7).injective, Verdict::Disproven);
+    // extent 6 keeps the clamp dead (v0 <= 5 already): bijective again
+    assert_eq!(clamped(6).verdict(), Verdict::Proven);
+}
+
+#[test]
+fn above_cap_nest_takes_direct_write_path_on_symbolic_proof() {
+    // 2052 × 2048 = 4,202,496 output addresses — just above the 2^22
+    // enumeration cap. Before the analyzer this nest degraded to staged
+    // scatter writes (`UnprovenWrite`); the symbolic certificate now
+    // sends the parallel workers straight at the shared output.
+    let mut b = GraphBuilder::new("bigdense");
+    let x = b.input("x", &["M", "K"], &[2052, 2]);
+    b.dense("fc", x, 2048);
+    let g = b.finish();
+    let dense = g.complex_nodes()[0];
+    let layouts = LayoutAssignment::identity(&g);
+    let mut sched = LoopSchedule::identity(&[2052, 2048], &[2]);
+    sched.spatial_tiles = vec![513, 2048]; // outer loops: 4 × 1
+    sched.parallel = 1;
+    let mut exe = NativeExecutable::compile(
+        "bigdense", &g, dense, &[dense + 1], &layouts, &sched, 16, 2,
+    )
+    .unwrap();
+    assert!(exe.is_parallel(), "tiled+parallel schedule must parallelize");
+    assert_eq!(exe.write_proof(), ProofKind::Symbolic);
+    assert!(
+        exe.writes_direct(),
+        "symbolically proven write map must skip the scatter stage"
+    );
+    assert!(exe.write_degrade().is_none());
+    let inputs = exe.seeded_inputs(13);
+    let (_, fast) = exe.run_with_output(&inputs).unwrap();
+    exe.set_exec_mode(ExecMode::Bytecode);
+    let (_, slow) = exe.run_with_output(&inputs).unwrap();
+    assert_eq!(
+        bits(&fast),
+        bits(&slow),
+        "direct-write path above the cap diverged from bytecode"
+    );
+}
+
+#[test]
+fn zoo_write_maps_proven_symbolically_and_check_clean() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let model = Session::for_model(name)
+            .unwrap_or_else(|e| panic!("{e}"))
+            .with_profile(HwProfile::intel())
+            .with_options(TuneOptions {
+                budget: 60,
+                seed: 9,
+                shards: 0,
+                ..Default::default()
+            })
+            .with_exec_threads(2)
+            .baseline()
+            .compile()
+            .unwrap();
+        let health = model.health();
+        assert!(!health.nests.is_empty(), "{name}: no complex nests");
+        for n in &health.nests {
+            assert_eq!(
+                n.write_proof,
+                ProofKind::Symbolic,
+                "{name}/{}: write map not proven symbolically",
+                n.name
+            );
+            assert!(n.race_free, "{name}/{}: no race-freedom certificate", n.name);
+        }
+        // `alt check` pass condition: nothing at error/warning severity
+        let findings = model.diagnostics();
+        let failing: Vec<_> = findings
+            .iter()
+            .filter(|d| d.severity <= Severity::Warning)
+            .collect();
+        assert!(failing.is_empty(), "{name}: check would fail: {failing:?}");
+    }
+}
