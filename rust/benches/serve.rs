@@ -17,7 +17,12 @@
 //! A degradation demo forces one mid-model nest onto the bytecode
 //! interpreter (the per-nest fault ladder's fallback) and reports the
 //! within-run throughput ratio against all-fast, which CI gates ≥ 0.7
-//! alongside bit-identity of the degraded output.
+//! alongside bit-identity of the degraded output. A graph-rewrite
+//! comparison compiles each zoo model twice from the same layout
+//! decisions — rewrite stage on vs off — and reports plan-step counts
+//! (ops_before/ops_after), bit-identity, and the within-run inf/s
+//! ratio; CI gates strictly-fewer steps and bit-identity hard, the
+//! speedup only warns.
 //!
 //! A second, serving-layer report measures the high-throughput path:
 //! steady-state allocation of the reusable-scratch entry (counting
@@ -49,6 +54,7 @@ use alt::autotune::TuneOptions;
 use alt::error::ErrorKind;
 use alt::layout::{LayoutSeq, Primitive};
 use alt::propagate::ComplexDecision;
+use alt::rewrite::RewriteMode;
 use alt::runtime::{DegradeReason, ExecMode};
 use alt::sim::HwProfile;
 
@@ -199,6 +205,85 @@ fn degradation_overhead() -> String {
          \"bytecode_inf_per_sec\": {bytecode_inf_s:.3}, \
          \"degraded_vs_fast\": {ratio:.3}, \"identical\": {identical}}}"
     )
+}
+
+/// Graph-rewrite payoff, measured within one run: the same layout
+/// decisions and schedules compiled twice — once with the rewrite
+/// stage on (pad folds, constant folds, epilogue fusion annotated into
+/// the plan) and once with it off. Every rewrite the zoo models admit
+/// is bit-exact, so CI gates strictly-fewer plan steps AND bit-equal
+/// outputs hard on both models; the rewritten-vs-unrewritten inf/s
+/// ratio is reported but only warns (runner noise).
+fn rewrite_comparison() -> String {
+    let mut rows: Vec<String> = Vec::new();
+    for name in ["resnet18_small", "bert_tiny"] {
+        let rw_session = |mode: RewriteMode| {
+            Session::for_model(name)
+                .unwrap_or_else(|e| panic!("{e}"))
+                .with_profile(HwProfile::intel())
+                .with_options(TuneOptions {
+                    budget: BUDGET,
+                    seed: 17,
+                    shards: 0,
+                    rewrite: mode,
+                    ..Default::default()
+                })
+                .with_exec_threads(1)
+        };
+        let on_tuned = rw_session(RewriteMode::On).baseline();
+        let on_model = on_tuned
+            .compile()
+            .unwrap_or_else(|e| panic!("{name} rewrite-on compile: {e}"));
+        // Same layouts/schedules, rewrite stage disabled: the
+        // unrewritten twin for a within-run comparison.
+        let off_model = rw_session(RewriteMode::Off)
+            .plan_with(on_tuned.plan().decisions(), on_tuned.plan().scheds())
+            .unwrap_or_else(|e| panic!("{name} rewrite-off plan: {e}"))
+            .compile()
+            .unwrap_or_else(|e| panic!("{name} rewrite-off compile: {e}"));
+        let ops_after = on_model.complex_steps() + on_model.simple_steps();
+        let ops_before = off_model.complex_steps() + off_model.simple_steps();
+        let applied = on_model.rewrites_applied();
+        let available = on_model.rewrites_available();
+
+        let inputs = on_model.seeded_inputs(61);
+        let (_, a) = on_model.run_with_output(&inputs).unwrap(); // warmup
+        let (_, b) = off_model.run_with_output(&inputs).unwrap(); // warmup
+        let identical = bits(&a) == bits(&b);
+        if !identical {
+            eprintln!("{name}: rewritten output diverged from unrewritten");
+        }
+        let t0 = Instant::now();
+        for _ in 0..REQUESTS {
+            on_model.run(&inputs).unwrap();
+        }
+        let on_inf_s = REQUESTS as f64 / t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        for _ in 0..REQUESTS {
+            off_model.run(&inputs).unwrap();
+        }
+        let off_inf_s = REQUESTS as f64 / t1.elapsed().as_secs_f64();
+        let speedup =
+            if off_inf_s > 0.0 { on_inf_s / off_inf_s } else { 0.0 };
+
+        println!(
+            "rewrite {name:>15}: {applied}/{available} applied | \
+             {ops_before} -> {ops_after} plan steps | \
+             {on_inf_s:.1} vs {off_inf_s:.1} inf/s ({speedup:.2}x) | \
+             identical {identical}"
+        );
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"ops_before\": {ops_before}, \
+             \"ops_after\": {ops_after}, \
+             \"rewrites_applied\": {applied}, \
+             \"rewrites_available\": {available}, \
+             \"rewritten_inf_per_sec\": {on_inf_s:.3}, \
+             \"unrewritten_inf_per_sec\": {off_inf_s:.3}, \
+             \"rewrite_speedup\": {speedup:.3}, \
+             \"rewrite_identical\": {identical}}}"
+        ));
+    }
+    rows.join(",\n")
 }
 
 fn percentile(samples: &mut [f64], p: f64) -> f64 {
@@ -666,6 +751,7 @@ fn main() {
 
     let fusion = fusion_demo();
     let degradation = degradation_overhead();
+    let rewrite = rewrite_comparison();
 
     println!("thread determinism:   {deterministic}");
     println!("save/load roundtrip:  {roundtrip_ok}");
@@ -678,6 +764,7 @@ fn main() {
          \"interp_requests\": {INTERP_REQUESTS},\n  \"models\": [\n{}\n  ],\n  \
          \"fusion_demo\": {fusion},\n  \
          \"degradation_overhead\": {degradation},\n  \
+         \"rewrite\": [\n{rewrite}\n  ],\n  \
          \"deterministic\": {deterministic},\n  \
          \"roundtrip_ok\": {roundtrip_ok}\n}}\n",
         rows.join(",\n"),

@@ -38,6 +38,7 @@ use crate::error::Result;
 use crate::graph::{models, Graph, NodeId};
 use crate::loops::LoopSchedule;
 use crate::propagate::ComplexDecision;
+use crate::rewrite::{self, RewriteMode};
 use crate::sim::netsim::GraphReport;
 use crate::sim::HwProfile;
 use crate::{bail, err};
@@ -113,6 +114,22 @@ impl Session {
     }
 
     fn plan_from(&self, ops: Vec<OpPlan>) -> TunedPlan {
+        // Rewrite selection is re-derived from the final decisions, so
+        // every path into a plan (tune / baseline / plan_with) agrees
+        // with what the joint stage actually settled on. `Off` skips
+        // the analysis entirely — zero added work on today's path.
+        let rewrites = if self.opts.rewrite == RewriteMode::Off {
+            Vec::new()
+        } else {
+            let decisions: Vec<ComplexDecision> =
+                ops.iter().map(|o| o.decision.clone()).collect();
+            rewrite::select(
+                &rewrite::analyze(&self.graph),
+                self.opts.rewrite,
+                self.opts.mode,
+                &decisions,
+            )
+        };
         TunedPlan {
             model: self.graph.name.clone(),
             hw: self.hw.name.to_string(),
@@ -120,6 +137,7 @@ impl Session {
             seed: self.opts.seed,
             weight_seed: self.weight_seed,
             threads: self.exec_threads,
+            rewrites,
             ops,
         }
     }

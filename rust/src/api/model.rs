@@ -33,7 +33,7 @@
 #![warn(clippy::cast_possible_truncation)]
 
 use std::borrow::Cow;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::time::Instant;
@@ -44,6 +44,7 @@ use crate::graph::{EltKind, Graph, NodeId, OpKind, PoolKind};
 use crate::layout::{LayoutSeq, LayoutTransform};
 use crate::loops::LoopSchedule;
 use crate::propagate::propagate;
+use crate::rewrite::{self, RewriteKind};
 use crate::runtime::{
     random_input, seeded_inputs, DegradeReason, ExecMode, ExecScratch,
     NativeExecutable, OperandView, RunStats, TensorSpec,
@@ -77,6 +78,12 @@ struct ConvertStep {
     /// `None` when the source buffer is already logical row-major.
     from: Option<LayoutTransform>,
     to: LayoutTransform,
+    /// Set on a folded-pad edge ([`RewriteKind::FoldPad`]): the source
+    /// is the *pre-pad* tensor, and this is the logical embed map
+    /// (`map[padded logical] = source logical`, `-1` = pad fill) plus
+    /// the source's logical shape. `from` then unpacks the source
+    /// shape, and the map slots between unpack and `to`.
+    embed: Option<(Vec<i64>, Vec<i64>)>,
 }
 
 /// A boundary unpack/pack edge at a simple operator: the
@@ -114,12 +121,34 @@ fn apply_map(map: &[i64], src: &[f32], mut out: Vec<f32>) -> Vec<f32> {
     out
 }
 
+/// A fused-in rewrite epilogue applied to a nest's finished output
+/// buffer ([`RewriteKind::FuseEpilogue`] / [`RewriteKind::FoldBatchNorm`]).
+/// Anchored rewrites require the identity output layout, so the buffer
+/// is logical row-major and the line math applies in place of the
+/// folded node's own interpreted step — same scalar code, same order.
+enum EpiKind {
+    Softmax { axis: usize },
+    LayerNorm { axis: usize },
+    /// The BN residual: `out[i] += consts[slot][i % channels]` (the
+    /// multiplicative part folded into the packed weights).
+    ChannelShift { slot: usize },
+}
+
+struct EpilogueStep {
+    /// The folded graph node (for reporting; its simple step is gone).
+    node: NodeId,
+    kind: EpiKind,
+}
+
 /// One lowered complex nest (+ fused tail).
 struct ComplexStep {
     node: NodeId,
     exe: NativeExecutable,
     operands: Vec<Operand>,
-    /// Tensor whose storage buffer the nest writes.
+    /// Rewrite epilogue applied to the output buffer before commit.
+    epilogue: Option<EpilogueStep>,
+    /// Tensor whose storage buffer the nest writes (the folded
+    /// epilogue node's output when one is fused).
     out: TensorId,
 }
 
@@ -194,6 +223,11 @@ pub struct CompiledModel {
     weights_packed: usize,
     packing_ms: f64,
     compile_ms: f64,
+    /// Graph rewrites baked into this plan (== `plan.rewrites.len()`).
+    rewrites_applied: usize,
+    /// Matched-but-unapplied rewrite candidates (dead opportunities the
+    /// linter surfaces).
+    dead_rewrites: Vec<rewrite::Candidate>,
 }
 
 /// Deterministic logical weight data for tensor `t` (shared convention
@@ -236,6 +270,11 @@ pub(crate) fn compile_model(
     let t0 = Instant::now();
     plan.validate_against(graph)?;
     let decisions = plan.decisions();
+    // Every rewrite in the plan must match a candidate a fresh analysis
+    // of this graph produces (typed Compile refusal otherwise), so a
+    // loaded plan re-derives exactly the rewritten execution plan the
+    // tuner chose — rewrites are plan annotations, never graph edits.
+    let analysis = rewrite::validate(graph, &plan.rewrites, &decisions)?;
     let scheds = plan.scheds();
     let prop = propagate(graph, &decisions, plan.mode);
 
@@ -289,9 +328,71 @@ pub(crate) fn compile_model(
         }
     }
 
+    // ---- partition the plan's rewrites by execution mechanism ----
+    // skip: nodes whose own step disappears (computed elsewhere);
+    // pad_fold_src: padded tensor → folded PadOp node (the consumer
+    // nest's operand edge becomes an embedding conversion);
+    // epi_of: anchor nest → folded epilogue/BN node.
+    let mut skip: HashSet<NodeId> = HashSet::new();
+    let mut const_fold_nodes: Vec<NodeId> = Vec::new();
+    let mut pad_fold_src: HashMap<TensorId, NodeId> = HashMap::new();
+    let mut epi_of: HashMap<NodeId, NodeId> = HashMap::new();
+    for r in &plan.rewrites {
+        skip.insert(r.node);
+        match r.kind {
+            RewriteKind::FoldConstant => const_fold_nodes.push(r.node),
+            RewriteKind::FoldPad => {
+                pad_fold_src.insert(graph.node(r.node).output, r.node);
+            }
+            RewriteKind::FoldBatchNorm | RewriteKind::FuseEpilogue => {
+                if epi_of.insert(r.anchor, r.node).is_some() {
+                    bail!(
+                        "{}: two rewrites fuse into anchor node {}",
+                        graph.name,
+                        r.anchor
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- constant folding: evaluate folded nodes at compile time ----
+    // Topological (node-id) order lets folds cascade; results land in
+    // the const table exactly like weights, so consumers read them as
+    // compile-time constants and the folded steps never execute.
+    let mut folded_const: HashMap<TensorId, usize> = HashMap::new();
+    const_fold_nodes.sort_unstable();
+    {
+        let mut ws = WorkScratch::default();
+        for &nid in &const_fold_nodes {
+            let node = graph.node(nid);
+            let mut owned: Vec<Vec<f32>> = Vec::with_capacity(node.inputs.len());
+            for &t in &node.inputs {
+                owned.push(match folded_const.get(&t) {
+                    Some(&slot) => consts[slot].clone(),
+                    None => weight_data(graph, t, plan.weight_seed),
+                });
+            }
+            let slices: Vec<&[f32]> = owned.iter().map(|v| v.as_slice()).collect();
+            let data = interp_simple(graph, nid, &slices, &mut ws)
+                .map_err(|e| {
+                    e.context(format!(
+                        "constant-folding node {} ({}) of {}",
+                        nid, node.name, graph.name
+                    ))
+                })?;
+            audit_weight(&data, graph, node.output)?;
+            consts.push(data);
+            folded_const.insert(node.output, consts.len() - 1);
+        }
+    }
+
     for node in &graph.nodes {
         if prop.fused_nodes.contains(&node.id) {
             continue; // computed inside the owning complex nest
+        }
+        if skip.contains(&node.id) {
+            continue; // folded or fused away by a plan rewrite
         }
         match &node.kind {
             OpKind::Conv { .. } | OpKind::Matmul | OpKind::Dense => {
@@ -328,11 +429,97 @@ pub(crate) fn compile_model(
                     ))
                 })?;
                 let out = exe.written_tensor();
+                // A fused epilogue / folded BN on this anchor: resolve
+                // it before the operand loop, because BN folding scales
+                // the weight operand as it is packed.
+                let mut epilogue: Option<EpilogueStep> = None;
+                let mut bn_scale: Option<Vec<f32>> = None;
+                if let Some(&en) = epi_of.get(&node.id) {
+                    let enode = graph.node(en);
+                    if enode.inputs[0] != out {
+                        bail!(
+                            "{}: rewrite fuses node {} into {}, which \
+                             writes t{} not t{}",
+                            graph.name,
+                            en,
+                            node.name,
+                            out,
+                            enode.inputs[0]
+                        );
+                    }
+                    let kind = match &enode.kind {
+                        OpKind::Softmax { axis } => {
+                            EpiKind::Softmax { axis: *axis }
+                        }
+                        OpKind::LayerNorm { axis } => {
+                            EpiKind::LayerNorm { axis: *axis }
+                        }
+                        OpKind::BatchNorm => {
+                            // scale = gamma / sqrt(var + eps) folds into
+                            // the packed weights; shift = beta - mean *
+                            // scale survives as a per-channel epilogue
+                            let s = plan.weight_seed;
+                            let gamma =
+                                weight_data(graph, enode.inputs[1], s);
+                            let beta =
+                                weight_data(graph, enode.inputs[2], s);
+                            let mean =
+                                weight_data(graph, enode.inputs[3], s);
+                            let var = weight_data(graph, enode.inputs[4], s);
+                            let scale: Vec<f32> = gamma
+                                .iter()
+                                .zip(&var)
+                                .map(|(g, v)| g / (v + 1e-5).sqrt())
+                                .collect();
+                            let shift: Vec<f32> = beta
+                                .iter()
+                                .zip(&mean)
+                                .zip(&scale)
+                                .map(|((b, m), sc)| b - m * sc)
+                                .collect();
+                            audit_weight(&scale, graph, enode.inputs[1])?;
+                            audit_weight(&shift, graph, enode.inputs[2])?;
+                            consts.push(shift);
+                            bn_scale = Some(scale);
+                            EpiKind::ChannelShift { slot: consts.len() - 1 }
+                        }
+                        other => bail!(
+                            "{}: node {} ({other:?}) cannot fuse as an \
+                             epilogue",
+                            graph.name,
+                            en
+                        ),
+                    };
+                    epilogue = Some(EpilogueStep { node: en, kind });
+                }
                 let mut operands = Vec::new();
                 for (i, &t) in exe.operand_tensors().iter().enumerate() {
                     let ten = graph.tensor(t);
                     let read = prop.layouts.get_for(node.id, t);
                     if ten.role == Role::Weight {
+                        if let (Some(scale), true) =
+                            (&bn_scale, t == node.inputs[1])
+                        {
+                            // BN-scaled weight: unique to this anchor,
+                            // so it bypasses the shared const cache
+                            let tp = Instant::now();
+                            let mut data =
+                                weight_data(graph, t, plan.weight_seed);
+                            let o = scale.len();
+                            for (j, v) in data.iter_mut().enumerate() {
+                                *v *= scale[j % o];
+                            }
+                            let packed = exe.pack_operand(i, &data)?;
+                            audit_weight(&packed, graph, t)?;
+                            packing_ms += tp.elapsed().as_secs_f64() * 1e3;
+                            weights_total += 1;
+                            if !read.is_identity() {
+                                weights_packed += 1;
+                            }
+                            consts.push(packed);
+                            operands.push(Operand::Const(consts.len() - 1));
+                            continue;
+                        }
                         let key = (t, read.clone());
                         let slot = match const_key.get(&key) {
                             Some(&s) => s,
@@ -364,6 +551,106 @@ pub(crate) fn compile_model(
                             }
                         };
                         operands.push(Operand::Const(slot));
+                    } else if let Some(&ls) = folded_const.get(&t) {
+                        // constant-folded producer: the nest reads a
+                        // packed compile-time constant instead of a
+                        // live buffer
+                        let key = (t, read.clone());
+                        let slot = match const_key.get(&key) {
+                            Some(&s) => s,
+                            None => {
+                                let data = consts[ls].clone();
+                                let packed = exe.pack_operand(i, &data)?;
+                                consts.push(packed);
+                                const_key.insert(key, consts.len() - 1);
+                                consts.len() - 1
+                            }
+                        };
+                        operands.push(Operand::Const(slot));
+                    } else if let Some(&pad_id) = pad_fold_src.get(&t) {
+                        // folded pad (FoldPad): the PadOp step is gone;
+                        // this edge reads the *pre-pad* tensor through
+                        // an embedding conversion whose `-1` slots fill
+                        // 0.0 — bit-for-bit the zeros the PadOp would
+                        // have written, in the same nest read order.
+                        let pad = graph.node(pad_id);
+                        let OpKind::PadOp { before, .. } = &pad.kind else {
+                            bail!(
+                                "{}: fold_pad names non-pad node {}",
+                                graph.name,
+                                pad_id
+                            );
+                        };
+                        let t_src = pad.inputs[0];
+                        let src_shape = graph.tensor(t_src).shape.clone();
+                        let src_alloc = prop.layouts.get(t_src);
+                        let slot = n_conv_slots;
+                        n_conv_slots += 1;
+                        conversions += 1;
+                        let from = (!src_alloc.is_identity()).then(|| {
+                            LayoutTransform::new(src_shape.clone(), &src_alloc)
+                        });
+                        let to = LayoutTransform::new(ten.shape.clone(), &read);
+                        // logical embed map: padded idx → source idx|-1
+                        let sstr = strides_of(&src_shape);
+                        let padded_len: i64 = ten.shape.iter().product();
+                        let mut embed_map = Vec::with_capacity(
+                            usize::try_from(padded_len).unwrap_or(0),
+                        );
+                        for_each_index(&ten.shape, |idx| {
+                            let mut off = 0i64;
+                            let mut inside = true;
+                            for (d, &iv) in idx.iter().enumerate() {
+                                let s = iv - before[d];
+                                if s < 0 || s >= src_shape[d] {
+                                    inside = false;
+                                    break;
+                                }
+                                off += s * sstr[d];
+                            }
+                            embed_map.push(if inside { off } else { -1 });
+                        });
+                        // compose consumer pack ∘ embed ∘ source unpack
+                        let pm = to.pack_map(&ten.shape);
+                        let um =
+                            from.as_ref().map(|f| f.unpack_map(&src_shape));
+                        let gather: Vec<i64> = pm
+                            .iter()
+                            .map(|&l| match usize::try_from(l) {
+                                Err(_) => -1,
+                                Ok(lp) => {
+                                    match usize::try_from(embed_map[lp]) {
+                                        Err(_) => -1,
+                                        Ok(lsrc) => um
+                                            .as_ref()
+                                            .map_or(embed_map[lp], |m| {
+                                                m[lsrc]
+                                            }),
+                                    }
+                                }
+                            })
+                            .collect();
+                        let src_len = match &from {
+                            None => src_shape.iter().product::<i64>(),
+                            Some(f) => f.pack_map(&src_shape).len() as i64,
+                        };
+                        let forced = gather.iter().any(|&g| g >= src_len);
+                        if forced {
+                            forced_convs += 1;
+                            exe.degrade(DegradeReason::GatherCompose);
+                        }
+                        conv_forced.push(forced);
+                        conv_tensor.push(t_src);
+                        conv_gathers.push(gather);
+                        steps.push(Step::Convert(ConvertStep {
+                            tensor: t_src,
+                            slot,
+                            logical_shape: ten.shape.clone(),
+                            from,
+                            to,
+                            embed: Some((embed_map, src_shape)),
+                        }));
+                        operands.push(Operand::Converted(slot));
                     } else {
                         let alloc = prop.layouts.get(t);
                         if read == alloc {
@@ -428,16 +715,20 @@ pub(crate) fn compile_model(
                                 logical_shape: ten.shape.clone(),
                                 from,
                                 to,
+                                embed: None,
                             }));
                             operands.push(Operand::Converted(slot));
                         }
                     }
                 }
+                let step_out =
+                    epilogue.as_ref().map_or(out, |e| graph.node(e.node).output);
                 steps.push(Step::Complex(Box::new(ComplexStep {
                     node: node.id,
                     exe,
                     operands,
-                    out,
+                    epilogue,
+                    out: step_out,
                 })));
             }
             OpKind::LayoutConvert => {
@@ -447,6 +738,11 @@ pub(crate) fn compile_model(
                 let mut srcs = Vec::new();
                 for &t in &node.inputs {
                     let ten = graph.tensor(t);
+                    if let Some(&slot) = folded_const.get(&t) {
+                        // constant-folded producer, held logical
+                        srcs.push(SimpleSrc::Const(slot));
+                        continue;
+                    }
                     if ten.role == Role::Weight {
                         let key = (t, LayoutSeq::new());
                         let slot = match const_key.get(&key) {
@@ -637,6 +933,15 @@ pub(crate) fn compile_model(
     let simple_steps =
         steps.iter().filter(|s| matches!(s, Step::Simple(_))).count();
 
+    // candidates the plan left on the table — the `alt check` linter's
+    // dead-rewrite-opportunity findings
+    let dead_rewrites: Vec<rewrite::Candidate> = analysis
+        .candidates
+        .iter()
+        .filter(|c| !plan.rewrites.iter().any(|r| *r == c.decision()))
+        .copied()
+        .collect();
+
     Ok(CompiledModel {
         graph: graph.clone(),
         plan: plan.clone(),
@@ -662,6 +967,8 @@ pub(crate) fn compile_model(
         weights_packed,
         packing_ms,
         compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        rewrites_applied: plan.rewrites.len(),
+        dead_rewrites,
     })
 }
 
@@ -800,6 +1107,11 @@ pub struct HealthReport {
     /// Conversion edges pinned to materialization because their
     /// composed gather map failed validation.
     pub forced_repacks: usize,
+    /// Graph rewrites baked into the compiled plan.
+    pub rewrites_applied: usize,
+    /// Rewrite candidates the matcher found on this graph (applied +
+    /// dead opportunities).
+    pub rewrites_available: usize,
 }
 
 /// Row-major strides of a shape.
@@ -840,6 +1152,36 @@ fn elt_unary(kind: EltKind, x: f32) -> f32 {
         EltKind::Tanh => x.tanh(),
         EltKind::Identity => x,
         EltKind::Add | EltKind::Mul => x,
+    }
+}
+
+/// Softmax over one line — shared by the interpreted `Softmax` step and
+/// the fused-epilogue path, so fused and unfused outputs are
+/// bit-identical.
+fn softmax_line(line: &[f32], out: &mut [f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in line.iter() {
+        m = m.max(v);
+    }
+    let mut sum = 0.0f32;
+    for (o, &v) in out.iter_mut().zip(line.iter()) {
+        *o = (v - m).exp();
+        sum += *o;
+    }
+    for o in out.iter_mut() {
+        *o /= sum;
+    }
+}
+
+/// LayerNorm over one line — shared between the interpreted step and
+/// the fused-epilogue path (same scalar order, bit-identical).
+fn layernorm_line(line: &[f32], out: &mut [f32]) {
+    let m = line.len() as f32;
+    let mean = line.iter().sum::<f32>() / m;
+    let var = line.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / m;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for (o, &v) in out.iter_mut().zip(line.iter()) {
+        *o = (v - mean) * inv;
     }
 }
 
@@ -956,32 +1298,30 @@ fn interp_simple(
             Ok(out)
         }
         OpKind::Softmax { axis } => {
-            line_op(ins[0], &out_shape, *axis, pool, line, res, |line, out| {
-                let mut m = f32::NEG_INFINITY;
-                for &v in line.iter() {
-                    m = m.max(v);
-                }
-                let mut sum = 0.0f32;
-                for (o, &v) in out.iter_mut().zip(line.iter()) {
-                    *o = (v - m).exp();
-                    sum += *o;
-                }
-                for o in out.iter_mut() {
-                    *o /= sum;
-                }
-            })
+            line_op(ins[0], &out_shape, *axis, pool, line, res, softmax_line)
         }
         OpKind::LayerNorm { axis } => {
-            line_op(ins[0], &out_shape, *axis, pool, line, res, |line, out| {
-                let m = line.len() as f32;
-                let mean = line.iter().sum::<f32>() / m;
-                let var =
-                    line.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / m;
-                let inv = 1.0 / (var + 1e-5).sqrt();
-                for (o, &v) in out.iter_mut().zip(line.iter()) {
-                    *o = (v - mean) * inv;
-                }
-            })
+            line_op(ins[0], &out_shape, *axis, pool, line, res, layernorm_line)
+        }
+        OpKind::BatchNorm => {
+            // inference-mode BN: out = x * scale[c] + shift[c] with
+            // scale = gamma / sqrt(var + eps), shift = beta - mean *
+            // scale — the same per-channel scalars the FoldBatchNorm
+            // rewrite bakes into packed weights + a channel shift, in
+            // the same arithmetic form (fold differs only by applying
+            // the scale per-MAC instead of post-sum: reassociation).
+            let Some(&last) = out_shape.last() else {
+                bail!("{}: batchnorm on a scalar output", n.name);
+            };
+            let c = last as usize;
+            let (gamma, beta, mean, var) = (ins[1], ins[2], ins[3], ins[4]);
+            let mut out = take(pool, out_len as usize);
+            for (i, (o, &x)) in out.iter_mut().zip(ins[0]).enumerate() {
+                let ch = i % c;
+                let scale = gamma[ch] / (var[ch] + 1e-5).sqrt();
+                *o = x * scale + (beta[ch] - mean[ch] * scale);
+            }
+            Ok(out)
         }
         OpKind::Reduce { keep_last } => {
             let in_shape = &graph.tensor(n.inputs[0]).shape;
@@ -1222,12 +1562,28 @@ impl CompiledModel {
                     let src = bufs[c.tensor].as_deref().ok_or_else(
                         || err!("convert: t{} not live", c.tensor),
                     )?;
+                    // on a folded-pad edge the source's own logical
+                    // shape differs from the (padded) edge shape
+                    let src_shape: &[i64] = c
+                        .embed
+                        .as_ref()
+                        .map_or(&c.logical_shape, |(_, s)| s);
                     let logical_owned;
                     let logical: &[f32] = match &c.from {
                         None => src,
                         Some(tf) => {
-                            logical_owned = tf.unpack(src, &c.logical_shape);
+                            logical_owned = tf.unpack(src, src_shape);
                             &logical_owned
+                        }
+                    };
+                    let embedded_owned;
+                    let logical: &[f32] = match &c.embed {
+                        None => logical,
+                        Some((map, _)) => {
+                            // materialize the pad: -1 slots fill 0.0
+                            embedded_owned =
+                                apply_map(map, logical, Vec::new());
+                            &embedded_owned
                         }
                     };
                     let buf = c.to.repack(logical, &c.logical_shape, 0.0);
@@ -1289,6 +1645,50 @@ impl CompiledModel {
                         &mut out_buf,
                         &mut ws.exec,
                     )?;
+                }
+                if let Some(epi) = &cs.epilogue {
+                    // anchored rewrites require the identity output
+                    // layout, so the buffer is logical row-major and
+                    // the folded node's line math applies in place —
+                    // the same scalar routines the interpreted step
+                    // would run (bit-identical to unfused execution)
+                    let WorkScratch { pool, line, res, .. } = &mut *ws;
+                    let shape = &self.graph.tensor(cs.out).shape;
+                    match &epi.kind {
+                        EpiKind::Softmax { axis } => {
+                            let prev = out_buf;
+                            out_buf = line_op(
+                                &prev,
+                                shape,
+                                *axis,
+                                pool,
+                                line,
+                                res,
+                                softmax_line,
+                            )?;
+                            pool.push(prev);
+                        }
+                        EpiKind::LayerNorm { axis } => {
+                            let prev = out_buf;
+                            out_buf = line_op(
+                                &prev,
+                                shape,
+                                *axis,
+                                pool,
+                                line,
+                                res,
+                                layernorm_line,
+                            )?;
+                            pool.push(prev);
+                        }
+                        EpiKind::ChannelShift { slot } => {
+                            let shift = &self.consts[*slot];
+                            let c = shift.len();
+                            for (i, o) in out_buf.iter_mut().enumerate() {
+                                *o += shift[i % c];
+                            }
+                        }
+                    }
                 }
                 let dt = tp.elapsed().as_secs_f64() * 1e3;
                 phases.nest_ms += dt;
@@ -1688,6 +2088,8 @@ impl CompiledModel {
     pub fn health(&self) -> HealthReport {
         let mut report = HealthReport {
             forced_repacks: self.forced_convs,
+            rewrites_applied: self.rewrites_applied,
+            rewrites_available: self.rewrites_available(),
             ..HealthReport::default()
         };
         for step in &self.steps {
@@ -1776,6 +2178,20 @@ impl CompiledModel {
                     ),
                 ));
             }
+        }
+        for c in &self.dead_rewrites {
+            out.push(Diagnostic {
+                severity: Severity::Perf,
+                nest: None,
+                code: "dead-rewrite-opportunity",
+                message: format!(
+                    "{} matched node {} (anchor {}) but the plan leaves \
+                     it unapplied — tune with rewrite=on or rewrite=joint",
+                    c.kind.name(),
+                    c.node,
+                    c.anchor
+                ),
+            });
         }
         for (slot, gather) in self.conv_gathers.iter().enumerate() {
             if self.conv_forced[slot] {
@@ -1890,6 +2306,17 @@ impl CompiledModel {
 
     pub fn weights_packed(&self) -> usize {
         self.weights_packed
+    }
+
+    /// Graph rewrites baked into this compiled plan.
+    pub fn rewrites_applied(&self) -> usize {
+        self.rewrites_applied
+    }
+
+    /// Rewrite candidates the matcher found on this graph (applied
+    /// plus dead opportunities).
+    pub fn rewrites_available(&self) -> usize {
+        self.rewrites_applied + self.dead_rewrites.len()
     }
 
     /// Wall-clock spent packing weights at compile time.

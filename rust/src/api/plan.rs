@@ -32,6 +32,7 @@ use crate::graph::{Graph, NodeId};
 use crate::layout::{LayoutSeq, Primitive};
 use crate::loops::LoopSchedule;
 use crate::propagate::{ComplexDecision, PropMode};
+use crate::rewrite::RewriteDecision;
 use crate::runtime::TensorSpec;
 use crate::tensor::Role;
 use crate::{bail, err};
@@ -61,6 +62,11 @@ pub struct TunedPlan {
     /// Native execution threads (0 = all cores; a pure throughput
     /// knob — outputs are bit-identical at any value).
     pub threads: usize,
+    /// Graph-rewrite decisions baked into this plan (empty = the graph
+    /// executes exactly as the zoo emits it; the `rewrite =` line is
+    /// omitted entirely so rewrite-free plans are byte-identical to
+    /// pre-rewrite builds).
+    pub rewrites: Vec<RewriteDecision>,
     pub ops: Vec<OpPlan>,
 }
 
@@ -227,6 +233,11 @@ impl TunedPlan {
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("weight_seed = {}\n", self.weight_seed));
         out.push_str(&format!("threads = {}\n", self.threads));
+        if !self.rewrites.is_empty() {
+            let rs: Vec<String> =
+                self.rewrites.iter().map(RewriteDecision::fmt).collect();
+            out.push_str(&format!("rewrite = {}\n", rs.join(",")));
+        }
         for op in &self.ops {
             out.push_str(&format!("\n[op {}]\n", op.node));
             out.push_str(&format!("out_seq = {}\n", fmt_seq(&op.decision.out_seq)));
@@ -259,6 +270,7 @@ impl TunedPlan {
             seed: 0,
             weight_seed: 0,
             threads: 0,
+            rewrites: Vec::new(),
             ops: Vec::new(),
         };
         let mut cur: Option<OpPlan> = None;
@@ -308,6 +320,20 @@ impl TunedPlan {
                 (None, "threads") => {
                     plan.threads =
                         v.parse().map_err(|e| err!("plan line {}: threads: {e}", ln + 1))?
+                }
+                (None, "rewrite") => {
+                    plan.rewrites = v
+                        .split(',')
+                        .map(|r| {
+                            RewriteDecision::parse(r.trim()).ok_or_else(|| {
+                                err!(
+                                    "plan line {}: bad rewrite '{}'",
+                                    ln + 1,
+                                    r.trim()
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?
                 }
                 (Some(op), "out_seq") => op.decision.out_seq = parse_seq(v).map_err(loc)?,
                 (Some(op), "in_seq") => op.decision.in_seq = parse_seq(v).map_err(loc)?,
@@ -673,6 +699,7 @@ mod tests {
             seed: 42,
             weight_seed: 7,
             threads: 0,
+            rewrites: Vec::new(),
             ops: vec![OpPlan {
                 node: 1,
                 decision: ComplexDecision {
@@ -702,6 +729,36 @@ mod tests {
         assert_eq!(parsed, plan);
         // serialize(parse(serialize(p))) is byte-identical
         assert_eq!(parsed.serialize(), text);
+        // a rewrite-free plan carries no `rewrite =` line at all, so
+        // plans from pre-rewrite builds parse and re-serialize bytewise
+        assert!(!text.contains("rewrite"));
+    }
+
+    #[test]
+    fn rewrite_line_roundtrips_exactly() {
+        use crate::rewrite::{RewriteDecision, RewriteKind};
+        let mut plan = sample_plan();
+        plan.rewrites = vec![
+            RewriteDecision { kind: RewriteKind::FoldPad, node: 0, anchor: 1 },
+            RewriteDecision {
+                kind: RewriteKind::FuseEpilogue,
+                node: 5,
+                anchor: 3,
+            },
+        ];
+        let text = plan.serialize();
+        assert!(
+            text.contains("rewrite = fold_pad:0:1,fuse_epilogue:5:3"),
+            "{text}"
+        );
+        let parsed = TunedPlan::parse(&text).unwrap();
+        assert_eq!(parsed, plan);
+        assert_eq!(parsed.serialize(), text);
+        // malformed rewrite entries are refusals, not silent drops
+        let bad = text.replace("fold_pad:0:1", "fold_pad:0");
+        assert!(TunedPlan::parse(&bad).is_err());
+        let bad = text.replace("fold_pad", "fold_nonsense");
+        assert!(TunedPlan::parse(&bad).is_err());
     }
 
     #[test]

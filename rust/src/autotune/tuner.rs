@@ -65,8 +65,10 @@ use crate::autotune::space::LoopSpace;
 use crate::autotune::template;
 use crate::engine::{Engine, EngineHandle, EngineStats, EngineTally, EvalContext};
 use crate::graph::{Graph, NodeId};
+use crate::layout::LayoutSeq;
 use crate::loops::LoopSchedule;
 use crate::propagate::{propagate, ComplexDecision, PropMode, PropagationResult};
+use crate::rewrite::{self, RewriteMode};
 use crate::sim::HwProfile;
 use crate::util::Rng;
 
@@ -135,6 +137,13 @@ pub struct TuneOptions {
     /// `budget / n_ops` split (sharded runs then reproduce the
     /// sequential results bit-for-bit). Ignored when `shards == 1`.
     pub budget_realloc: bool,
+    /// Graph-rewrite coupling (see [`crate::rewrite`]). `Off` (the
+    /// default) reproduces the rewrite-free trajectory bit for bit;
+    /// `On` clamps rewrite-anchor ops to the identity output layout so
+    /// every anchored fold applies; `Joint` samples the clamp as a
+    /// discrete fuse-or-not decision alongside each layout proposal,
+    /// letting cross-exploration price fusion against layout freedom.
+    pub rewrite: RewriteMode,
 }
 
 impl Default for TuneOptions {
@@ -153,6 +162,7 @@ impl Default for TuneOptions {
             memo_cap: 0,
             shards: 1,
             budget_realloc: true,
+            rewrite: RewriteMode::Off,
         }
     }
 }
@@ -458,6 +468,70 @@ struct SpecResult {
     logp: f64,
 }
 
+/// Fraction of the identity-track best latency credited to a layout
+/// that keeps an anchored rewrite viable (see [`RewriteBias`]). The
+/// simulator never sees the fused epilogue, so the joint stage models
+/// its saving as a fixed share of the nest: small enough that a free
+/// layout must be nearly tied before the credit flips the comparison,
+/// large enough to break genuine ties toward the fusable side.
+const FOLD_CREDIT_FRAC: f64 = 0.05;
+
+/// Joint-search coupling between layout choice and graph rewriting for
+/// one op. Anchored rewrites (BatchNorm folds, epilogue fusion) only
+/// apply when the anchor keeps its identity output layout, so under
+/// `rewrite = on` the tuner clamps every layout proposal for an anchor
+/// back to identity, and under `rewrite = joint` the clamp becomes a
+/// sampled discrete decision — proposals split between free layouts
+/// and the fused-identity side, and track comparisons credit the
+/// identity side with the epilogue saving the simulator cannot see.
+/// Everything is inert at `rewrite = off`: no anchor, zero credit, and
+/// the clamp coin is a dedicated RNG stream, so the historical
+/// trajectory is reproduced bit for bit.
+#[derive(Clone, Copy)]
+struct RewriteBias {
+    mode: RewriteMode,
+    /// This node anchors at least one anchored rewrite candidate.
+    anchor: bool,
+}
+
+impl RewriteBias {
+    fn none() -> Self {
+        Self { mode: RewriteMode::Off, anchor: false }
+    }
+
+    /// Should this layout proposal's output sequence be clamped to
+    /// identity? Draws from the dedicated clamp stream only when the
+    /// fuse-or-not choice is genuinely open (`joint` mode, anchor op).
+    fn clamp(&self, coin: &mut Rng) -> bool {
+        self.anchor
+            && match self.mode {
+                RewriteMode::Off => false,
+                RewriteMode::On => true,
+                RewriteMode::Joint => coin.below(2) == 0,
+            }
+    }
+
+    /// Latency credit an identity-output track earns for enabling the
+    /// anchored rewrite (0 whenever the rewrite cannot apply).
+    fn credit(&self, id_best: f64) -> f64 {
+        if self.anchor && self.mode != RewriteMode::Off && id_best.is_finite() {
+            id_best * FOLD_CREDIT_FRAC
+        } else {
+            0.0
+        }
+    }
+
+    /// Comparison latency for a track: measured ms minus the fold
+    /// credit when the track's output layout keeps the rewrite viable.
+    fn effective(&self, ms: f64, out_seq: &LayoutSeq, id_best: f64) -> f64 {
+        if out_seq.is_identity() {
+            ms - self.credit(id_best)
+        } else {
+            ms
+        }
+    }
+}
+
 /// Cost-model measurement slots per round — the single source of truth
 /// shared by the round's selection logic and the speculative fan-out
 /// estimate below.
@@ -499,6 +573,7 @@ fn fold_proposal(
     critic: &mut Critic,
     alt_lt: &mut Option<AltTrack>,
     id_best: f64,
+    bias: RewriteBias,
     lt: LoopTuning,
     dec: ComplexDecision,
     prop: PropagationResult,
@@ -512,16 +587,24 @@ fn fold_proposal(
         .unwrap_or(f64::INFINITY)
         .min(id_best);
     let u = best_known.max(lt.best_ms) * 1.2;
+    // rewrite-aware comparison latency: identity-out tracks on anchor
+    // ops are credited for the fold they enable, so both the layout
+    // actor's reward and the track adoption price fusion in (credit is
+    // exactly 0 with rewriting off — the historical arithmetic)
+    let eff = bias.effective(lt.best_ms, &dec.out_seq, id_best);
     episode.push(Transition {
         state: st.to_vec(),
         action: raw,
         action_idx: 0,
         logp,
-        reward: u - lt.best_ms,
+        reward: u - eff,
         value: critic.value(st),
     });
-    let alt_best = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
-    if lt.best_ms < alt_best {
+    let alt_eff = alt_lt
+        .as_ref()
+        .map(|t| bias.effective(t.lt.best_ms, &t.dec.out_seq, id_best))
+        .unwrap_or(f64::INFINITY);
+    if eff < alt_eff {
         *alt_lt = Some(AltTrack { lt, dec, prop });
     }
     if episode.len() >= 4 {
@@ -546,6 +629,8 @@ fn joint_stage(
     layout_actor: &mut GaussianActor,
     critic: &mut Critic,
     rng: &mut Rng,
+    coin: &mut Rng,
+    bias: RewriteBias,
     trace: &mut Trace,
     alt_lt: &mut Option<AltTrack>,
     episode: &mut Vec<Transition>,
@@ -564,7 +649,13 @@ fn joint_stage(
         if spec == 1 {
             // ---- serial walk (the historical trajectory, bit for bit)
             let (raw, params, logp) = layout_actor.sample(&st, rng);
-            let dec = template::instantiate(ctx.graph, ctx.node, &params, opts.levels);
+            let mut dec =
+                template::instantiate(ctx.graph, ctx.node, &params, opts.levels);
+            if bias.clamp(coin) {
+                // fuse side of the discrete rewrite decision: pin the
+                // anchor's output to identity so the fold stays legal
+                dec.out_seq = LayoutSeq::new();
+            }
             let prop = propagate(ctx.graph, std::slice::from_ref(&dec), opts.mode);
             let (sp, rd) = nest_dims(ctx.graph, ctx.node, &prop);
             // reconstruct the loop space for this layout (at least one
@@ -577,8 +668,8 @@ fn joint_stage(
                 lt.round(ctx, &prop, critic, rng, trace);
             }
             fold_proposal(
-                episode, layout_actor, critic, alt_lt, id_best, lt, dec,
-                prop, raw, logp, &st,
+                episode, layout_actor, critic, alt_lt, id_best, bias, lt,
+                dec, prop, raw, logp, &st,
             );
         } else {
             // ---- speculative batch: K proposals off one policy state
@@ -589,12 +680,20 @@ fn joint_stage(
             // shared forward pass), then one stream seed per proposal
             let proposals = layout_actor.sample_n(&st, k, rng);
             let seeds: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
-            let decisions = template::instantiate_batch(
+            let mut decisions = template::instantiate_batch(
                 ctx.graph,
                 ctx.node,
                 proposals.iter().map(|(_, params, _)| params.as_slice()),
                 opts.levels,
             );
+            // clamp coins are drawn here in sampling order — part of
+            // the serial prologue, so the speculative trajectory stays
+            // bit-identical at any thread count
+            for dec in &mut decisions {
+                if bias.clamp(coin) {
+                    dec.out_seq = LayoutSeq::new();
+                }
+            }
             let snapshot = critic.clone();
             // the fan-out budget is this handle's width — under the
             // shard orchestrator that is the shard's fair share, so
@@ -647,8 +746,8 @@ fn joint_stage(
                 trace.rounds += r.trace.rounds;
                 trace.history.extend_from_slice(&r.trace.history);
                 fold_proposal(
-                    episode, layout_actor, critic, alt_lt, id_best, r.lt,
-                    r.dec, r.prop, r.raw, r.logp, &st,
+                    episode, layout_actor, critic, alt_lt, id_best, bias,
+                    r.lt, r.dec, r.prop, r.raw, r.logp, &st,
                 );
             }
         }
@@ -720,6 +819,11 @@ pub struct OpTuner<'a> {
     flip: bool,
     target: usize,
     tally: EngineTally,
+    bias: RewriteBias,
+    /// Dedicated RNG stream for joint-mode fuse-or-not coin flips —
+    /// never the master `rng`, so `rewrite = off` runs draw the exact
+    /// historical sequence.
+    coin: Rng,
 }
 
 impl<'a> OpTuner<'a> {
@@ -733,6 +837,15 @@ impl<'a> OpTuner<'a> {
         opts: &TuneOptions,
     ) -> Self {
         let mut rng = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0x9E37));
+        let bias = if opts.rewrite == RewriteMode::Off {
+            RewriteBias::none()
+        } else {
+            RewriteBias {
+                mode: opts.rewrite,
+                anchor: rewrite::analyze(graph).anchors().contains(&node),
+            }
+        };
+        let coin = Rng::new(opts.seed ^ (node as u64).wrapping_mul(0xC0117));
         let critic = Critic::new(STATE_DIM, &mut rng);
         let np = template::n_params(graph, node, opts.levels);
         let layout_actor = GaussianActor::new(STATE_DIM, np.max(1), &mut rng);
@@ -780,6 +893,8 @@ impl<'a> OpTuner<'a> {
             flip: true,
             target,
             tally: EngineTally::new(),
+            bias,
+            coin,
         }
     }
 
@@ -866,6 +981,8 @@ impl<'a> OpTuner<'a> {
             started,
             flip,
             tally,
+            bias,
+            coin,
             ..
         } = self;
         let engine = engine.with_tally(&*tally);
@@ -885,6 +1002,8 @@ impl<'a> OpTuner<'a> {
                 layout_actor,
                 critic,
                 rng,
+                coin,
+                *bias,
                 trace,
                 alt_lt,
                 episode,
@@ -924,13 +1043,21 @@ impl<'a> OpTuner<'a> {
     /// Close the run: monotonize the trace, pick the winning track,
     /// report this op's engine tally.
     pub fn finish(self) -> OpTuneResult {
-        let Self { node, id_dec, id_lt, alt_lt, mut trace, tally, .. } = self;
+        let Self { node, id_dec, id_lt, alt_lt, mut trace, tally, bias, .. } =
+            self;
         monotonize(&mut trace.history);
-        // final winner: best of identity vs joint layout
+        // final winner: best of identity vs joint layout, compared on
+        // rewrite-credited latency (raw latency with rewriting off —
+        // the credit is 0 — so the historical pick is unchanged)
         let id_ms = id_lt.best_ms;
         let alt_ms = alt_lt.as_ref().map(|t| t.lt.best_ms).unwrap_or(f64::INFINITY);
         let (win_lt, win_dec) = match alt_lt {
-            Some(t) if t.lt.best_ms < id_lt.best_ms => (t.lt, t.dec),
+            Some(t)
+                if bias.effective(t.lt.best_ms, &t.dec.out_seq, id_ms)
+                    < bias.effective(id_ms, &id_dec.out_seq, id_ms) =>
+            {
+                (t.lt, t.dec)
+            }
             _ => (id_lt, id_dec),
         };
         OpTuneResult {
@@ -1070,6 +1197,39 @@ mod tests {
         // the incumbent is re-measured every round: the shared memo
         // cache must see repeats
         assert!(r.engine.hits > 0, "memo never hit: {:?}", r.engine);
+    }
+
+    #[test]
+    fn rewrite_on_pins_anchor_output_layout_to_identity() {
+        let g = models::bert_tiny();
+        let anchors = crate::rewrite::analyze(&g).anchors();
+        let node = *anchors.iter().min().expect("bert_tiny has anchors");
+        let mut o = small_opts(120);
+        o.rewrite = RewriteMode::On;
+        let r = tune_op(&g, node, &HwProfile::intel(), &o);
+        // every proposal was clamped and the identity baseline is
+        // identity by construction: the winner must keep the epilogue
+        // rewrite viable
+        assert!(
+            r.decision.out_seq.is_identity(),
+            "anchor {node} escaped the rewrite clamp: {:?}",
+            r.decision.out_seq
+        );
+    }
+
+    #[test]
+    fn rewrite_joint_mode_is_deterministic() {
+        let g = models::bert_tiny();
+        let anchors = crate::rewrite::analyze(&g).anchors();
+        let node = *anchors.iter().min().expect("bert_tiny has anchors");
+        let mut o = small_opts(120);
+        o.rewrite = RewriteMode::Joint;
+        let a = tune_op(&g, node, &HwProfile::intel(), &o);
+        let b = tune_op(&g, node, &HwProfile::intel(), &o);
+        // the fuse-or-not coin is a seeded dedicated stream: two runs
+        // walk the same trajectory
+        assert_eq!(a.decision, b.decision);
+        assert_eq!(a.history, b.history);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::api::ServeOptions;
 use crate::autotune::TuneOptions;
 use crate::error::{Error, ErrorKind, Result};
 use crate::propagate::PropMode;
+use crate::rewrite::RewriteMode;
 
 fn cfg_err(msg: impl fmt::Display) -> Error {
     Error::with_kind(ErrorKind::Config, msg)
@@ -126,14 +127,21 @@ impl Config {
     /// Build tuner options from this config (keys: `budget`,
     /// `joint_frac`, `batch`, `top_k`, `rounds_per_layout`, `levels`,
     /// `seed`, `mode`, `threads`, `speculation`, `memo_cap`, `shards`,
-    /// `budget_realloc`). Strict: present-but-malformed values are
-    /// typed [`ErrorKind::Config`] errors, missing keys keep their
-    /// defaults.
+    /// `budget_realloc`, `rewrite`). Strict: present-but-malformed
+    /// values are typed [`ErrorKind::Config`] errors, missing keys keep
+    /// their defaults.
     pub fn tune_options(&self) -> Result<TuneOptions> {
         let d = TuneOptions::default();
         let mode_str = self.get("mode").unwrap_or("alt");
         let mode = PropMode::from_name(mode_str)
             .ok_or_else(|| cfg_err(format!("unknown mode '{mode_str}'")))?;
+        // `off` (the default) is bit-for-bit the rewrite-free tuner
+        let rw_str = self.get("rewrite").unwrap_or("off");
+        let rewrite = RewriteMode::from_name(rw_str).ok_or_else(|| {
+            cfg_err(format!(
+                "config key 'rewrite': bad value '{rw_str}' (want off/on/joint)"
+            ))
+        })?;
         Ok(TuneOptions {
             budget: self.strict("budget", d.budget)?,
             joint_frac: self.strict("joint_frac", d.joint_frac)?,
@@ -153,6 +161,7 @@ impl Config {
             shards: self.strict("shards", d.shards)?,
             budget_realloc: self
                 .strict_bool("budget_realloc", d.budget_realloc)?,
+            rewrite,
         })
     }
 
@@ -305,6 +314,31 @@ mod tests {
         assert_eq!(o.shards, 3);
         assert!(!o.budget_realloc);
         assert_eq!(o.budget, 640);
+    }
+
+    #[test]
+    fn rewrite_key_parses_defaults_and_round_trips() {
+        for (s, v) in [
+            ("off", RewriteMode::Off),
+            ("on", RewriteMode::On),
+            ("joint", RewriteMode::Joint),
+        ] {
+            let mut c = Config::default();
+            c.set("rewrite", s);
+            assert_eq!(c.tune_options().unwrap().rewrite, v, "{s}");
+            // Display round-trip: re-parsing the rendered config keeps
+            // the mode byte-exact
+            let reparsed = Config::parse(&format!("{c}")).unwrap();
+            assert_eq!(reparsed.tune_options().unwrap().rewrite, v, "{s}");
+        }
+        // missing key = off (today's behavior); a present-but-unknown
+        // spelling is a typed refusal naming the key
+        let d = Config::parse("").unwrap().tune_options().unwrap();
+        assert_eq!(d.rewrite, RewriteMode::Off);
+        let err =
+            Config::parse("rewrite = always").unwrap().tune_options().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Config);
+        assert!(err.to_string().contains("rewrite"), "{err}");
     }
 
     #[test]

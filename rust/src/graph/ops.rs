@@ -60,6 +60,13 @@ pub enum OpKind {
     Softmax { axis: usize },
     /// LayerNorm along the last dim.
     LayerNorm { axis: usize },
+    /// Inference-mode batch normalization along the last (channel) dim:
+    /// `(x - mean) / sqrt(var + eps) * gamma + beta` with per-channel
+    /// `gamma, beta, mean, var` operands and eps fixed at `1e-5`
+    /// (mirroring LayerNorm). Exists so the rewrite pass has a real
+    /// BN-into-Conv folding target; inference graphs that keep it
+    /// unfused execute it as a plain simple op.
+    BatchNorm,
     /// Reduce spatial dims to 1 (global average pool).
     Reduce { keep_last: bool },
     /// Pure metadata reshape.
@@ -172,6 +179,20 @@ pub fn infer_shape(
             }
             shape.push(*x.last().unwrap());
             Ok((names_spatial(sp), shape))
+        }
+        OpKind::BatchNorm => {
+            if ins.len() != 5 {
+                return Err("batchnorm wants x, gamma, beta, mean, var".into());
+            }
+            let c = *ins[0].last().unwrap();
+            for p in &ins[1..5] {
+                if p.len() != 1 || p[0] != c {
+                    return Err(format!(
+                        "batchnorm param shape {p:?} != channel dim {c}"
+                    ));
+                }
+            }
+            Ok((default_names(ins[0].len()), ins[0].clone()))
         }
         OpKind::Softmax { axis } | OpKind::LayerNorm { axis } => {
             if *axis >= ins[0].len() {

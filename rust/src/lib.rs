@@ -23,6 +23,12 @@
 //!   workloads (ResNet-18, MobileNet-V2, BERT, ResNet3D-18, micro graphs).
 //! * [`propagate`] — the layout-propagation pass (§4.2, §6) with its
 //!   three constraints and conversion-operator insertion.
+//! * [`rewrite`] — the graph-rewrite subsystem between graph
+//!   construction and tuning: constant folding, pad-into-conv and
+//!   BatchNorm-into-Conv folding, and pattern-based epilogue fusion
+//!   (softmax/layernorm tails, the IPEX production patterns). Rewrite
+//!   choices that interact with layout are discrete decisions the
+//!   joint stage samples alongside layout proposals.
 //! * [`loops`] — loop-nest IR + TVM-style loop primitives.
 //! * [`codegen`] — program generation: graph + layout assignment + loop
 //!   schedule → tensor program (loop nests with rewritten accesses).
@@ -89,6 +95,8 @@ pub mod graph;
 pub mod layout;
 pub mod loops;
 pub mod propagate;
+#[warn(clippy::unwrap_used, clippy::expect_used)]
+pub mod rewrite;
 #[warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod runtime;
 pub mod sim;

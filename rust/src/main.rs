@@ -40,6 +40,7 @@ fn usage() -> ! {
   alt tune --workload r18 [--hw intel|gpu|arm] [--budget N] [--mode alt|wp|ol]
            [--threads N] [--speculation K] [--memo_cap N]
            [--shards N(1=sequential,0=auto)] [--budget_realloc true|false]
+           [--rewrite off|on|joint] [--no-rewrite]
            [--save DIR] [--config f.conf] [--set k=v,...] [--op N]
            (--workload a,b,c tunes a whole fleet via the sharded
             multi-workload scheduler; --save compiles the tuned model
@@ -106,6 +107,11 @@ fn build_config(flags: &HashMap<String, String>) -> Config {
                 cfg.set(k.trim(), v.trim());
             }
         }
+    }
+    // `--no-rewrite` is the escape hatch: it beats a `rewrite =` value
+    // from the config file, a `--rewrite` flag and `--set rewrite=...`
+    if flags.contains_key("no-rewrite") {
+        cfg.set("rewrite", "off");
     }
     cfg
 }
@@ -224,10 +230,13 @@ fn main() {
                         .save(dir)
                         .unwrap_or_else(|e| panic!("save {dir}: {e}"));
                     println!(
-                        "compiled ({} nests, {} weights packed, {:.1} ms) \
+                        "compiled ({} nests, {} weights packed, {}/{} \
+                         rewrites applied, {:.1} ms) \
                          and saved tuned plan + manifest -> {dir}",
                         model.complex_steps(),
                         model.weights_packed(),
+                        model.rewrites_applied(),
+                        model.rewrites_available(),
                         model.compile_ms()
                     );
                 }
@@ -398,11 +407,14 @@ fn main() {
                 .unwrap_or_else(|e| fatal(format!("compile {dir}: {e}")));
             let health = model.health();
             println!(
-                "{}: {} complex nests, {} degraded, {} forced repacks",
+                "{}: {} complex nests, {} degraded, {} forced repacks, \
+                 {}/{} rewrites applied",
                 model.graph().name,
                 health.nests.len(),
                 health.degraded_nests,
-                health.forced_repacks
+                health.forced_repacks,
+                health.rewrites_applied,
+                health.rewrites_available
             );
             let mut t = Table::new(
                 "nest certificates",

@@ -1,0 +1,611 @@
+//! Graph-rewrite subsystem — the pipeline stage between graph
+//! construction and tuning.
+//!
+//! ALT breaks the graph/operator wall for *layouts*; this module breaks
+//! it for *graph rewrites* too. Three pieces:
+//!
+//! 1. **Folding rules** over [`crate::graph::ops`]: constant folding
+//!    (simple ops whose inputs are all weights collapse to compile-time
+//!    constants), pad-into-conv folding (a single-consumer `PadOp`
+//!    feeding a convolution disappears into the consumer's read gather —
+//!    the `-1 → 0.0` fill the Fig. 5a fused-conversion machinery already
+//!    speaks), and BatchNorm-into-Conv folding (the `torch.jit.freeze`
+//!    recipe: scale folds into the packed weights, the residual shift
+//!    becomes a per-channel epilogue).
+//! 2. **Pattern matcher + rule registry**: the executable rules above
+//!    plus epilogue fusion of `Softmax`/`LayerNorm` tails into their
+//!    producing complex nest, covering the IPEX production patterns
+//!    that map onto the zoo (Conv+Add+ReLU residual joins in
+//!    `resnet18_small` — already absorbed by elementwise-tail fusion,
+//!    reported by the matcher; Div/Add+Softmax and Add+LayerNorm in
+//!    `bert_tiny` — captured by [`RewriteKind::FuseEpilogue`]).
+//! 3. **Joint-search integration**: an *anchored* rewrite (epilogue or
+//!    BN fold) applies only when its anchor nest's output layout is the
+//!    identity — fusing the tail constrains the producer's layout. In
+//!    [`RewriteMode::On`] the tuner clamps anchor output layouts so
+//!    every anchored rewrite applies; in [`RewriteMode::Joint`] the
+//!    clamp is a discrete decision sampled alongside layout proposals,
+//!    with a fusion credit in the comparison, so the fuse-or-layout
+//!    trade falls out of the joint search instead of a fixed pre-pass.
+//!
+//! Rewrites are **plan annotations, not graph mutations**: node and
+//! tensor ids stay stable, `rewrite = off` is bit-for-bit today's
+//! behavior, and a saved plan's `rewrite =` line re-derives the
+//! rewritten execution plan exactly on load.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::{Error, ErrorKind, Result};
+use crate::graph::{EltKind, Graph, NodeId, OpKind};
+use crate::propagate::{propagate, ComplexDecision, PropMode};
+use crate::tensor::{Role, TensorId};
+
+/// When (and how) the rewrite stage participates in tuning.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RewriteMode {
+    /// No rewriting — today's behavior, bit-for-bit.
+    #[default]
+    Off,
+    /// Apply every applicable rewrite; the tuner clamps anchor output
+    /// layouts to the identity so anchored rewrites always fire.
+    On,
+    /// Anchored rewrites are discrete decisions the joint stage samples
+    /// alongside layout proposals (with a fusion credit); unanchored
+    /// folds always apply.
+    Joint,
+}
+
+impl RewriteMode {
+    /// Canonical spelling — what config files and CLI flags write.
+    pub fn name(self) -> &'static str {
+        match self {
+            RewriteMode::Off => "off",
+            RewriteMode::On => "on",
+            RewriteMode::Joint => "joint",
+        }
+    }
+
+    /// Parse the canonical spelling.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "off" => Some(RewriteMode::Off),
+            "on" => Some(RewriteMode::On),
+            "joint" => Some(RewriteMode::Joint),
+            _ => None,
+        }
+    }
+}
+
+/// Executable rewrite rules — each one changes what the compiled plan
+/// executes (and is therefore serialized into `plan.txt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RewriteKind {
+    /// A simple op whose inputs are all compile-time constants is
+    /// evaluated at compile time.
+    FoldConstant,
+    /// A single-consumer `PadOp` feeding a complex nest folds into the
+    /// consumer's read gather (`-1` slots read `0.0`).
+    FoldPad,
+    /// `BatchNorm` directly after a convolution folds into the packed
+    /// weights (scale) plus a per-channel epilogue shift.
+    FoldBatchNorm,
+    /// A sole-consumer `Softmax`/`LayerNorm` of a complex nest's
+    /// (tail-)output fuses as an in-buffer epilogue of that nest.
+    FuseEpilogue,
+}
+
+impl RewriteKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RewriteKind::FoldConstant => "fold_const",
+            RewriteKind::FoldPad => "fold_pad",
+            RewriteKind::FoldBatchNorm => "fold_bn",
+            RewriteKind::FuseEpilogue => "fuse_epilogue",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "fold_const" => Some(RewriteKind::FoldConstant),
+            "fold_pad" => Some(RewriteKind::FoldPad),
+            "fold_bn" => Some(RewriteKind::FoldBatchNorm),
+            "fuse_epilogue" => Some(RewriteKind::FuseEpilogue),
+            _ => None,
+        }
+    }
+
+    /// Anchored rules only apply when the anchor's output layout is the
+    /// identity (the rewrite↔layout interaction the joint stage tunes).
+    pub fn anchored(self) -> bool {
+        matches!(self, RewriteKind::FoldBatchNorm | RewriteKind::FuseEpilogue)
+    }
+}
+
+/// One chosen rewrite, serialized into plans as `kind:node:anchor`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RewriteDecision {
+    pub kind: RewriteKind,
+    /// The folded / absorbed node.
+    pub node: NodeId,
+    /// The complex node absorbing it (== `node` for unanchored folds
+    /// with no complex consumer, i.e. `FoldConstant`).
+    pub anchor: NodeId,
+}
+
+impl RewriteDecision {
+    /// Plan-file spelling.
+    pub fn fmt(&self) -> String {
+        format!("{}:{}:{}", self.kind.name(), self.node, self.anchor)
+    }
+
+    /// Parse the plan-file spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut it = s.split(':');
+        let kind = RewriteKind::from_name(it.next()?)?;
+        let node = it.next()?.parse().ok()?;
+        let anchor = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(Self { kind, node, anchor })
+    }
+}
+
+/// A rewrite the registry matched on this graph. Whether it is *chosen*
+/// depends on the mode and (for anchored rules) on the anchor's tuned
+/// output layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub kind: RewriteKind,
+    pub node: NodeId,
+    pub anchor: NodeId,
+}
+
+impl Candidate {
+    pub fn decision(&self) -> RewriteDecision {
+        RewriteDecision { kind: self.kind, node: self.node, anchor: self.anchor }
+    }
+}
+
+/// A report-only pattern match — production fusion patterns the stack
+/// already covers through elementwise-tail fusion (or a named rule),
+/// surfaced for diagnostics.
+#[derive(Clone, Debug)]
+pub struct PatternMatch {
+    pub pattern: &'static str,
+    pub node: NodeId,
+}
+
+/// Everything the matcher found on one graph.
+#[derive(Clone, Debug, Default)]
+pub struct Analysis {
+    /// Executable rewrite candidates, ascending by folded node id.
+    pub candidates: Vec<Candidate>,
+    /// Report-only pattern matches (IPEX production list).
+    pub patterns: Vec<PatternMatch>,
+}
+
+impl Analysis {
+    /// Complex nodes that anchor at least one anchored candidate — the
+    /// nodes whose output-layout choice the joint stage couples with a
+    /// fuse-or-not decision.
+    pub fn anchors(&self) -> HashSet<NodeId> {
+        self.candidates
+            .iter()
+            .filter(|c| c.kind.anchored())
+            .map(|c| c.anchor)
+            .collect()
+    }
+
+    /// The candidate folding `node`, if any.
+    pub fn candidate_for(&self, node: NodeId) -> Option<&Candidate> {
+        self.candidates.iter().find(|c| c.node == node)
+    }
+}
+
+/// Trace `t` upstream through single-input elementwise producers to the
+/// nearest complex producer (for the report-only pattern matcher).
+fn complex_source(graph: &Graph, mut t: TensorId) -> Option<NodeId> {
+    loop {
+        let p = graph.producer(t)?;
+        let node = graph.node(p);
+        if node.is_complex() {
+            return Some(p);
+        }
+        if !node.is_elementwise() {
+            return None;
+        }
+        t = node.inputs[0];
+    }
+}
+
+/// The effective written tensor of each complex node under structural
+/// (empty-decision) propagation, after the same last-claimant tail
+/// dedup the model compiler applies: chains that merge at residual
+/// joins are owned by the LAST topological claimant, earlier claimants
+/// truncate before the shared suffix.
+fn effective_outputs(graph: &Graph) -> HashMap<NodeId, TensorId> {
+    let prop = propagate(graph, &[], PropMode::Alt);
+    let mut tail_owner: HashMap<NodeId, NodeId> = HashMap::new();
+    for node in &graph.nodes {
+        if let Some(tail) = prop.fused_tails.get(&node.id) {
+            for &t in tail {
+                tail_owner.insert(t, node.id);
+            }
+        }
+    }
+    let mut out = HashMap::new();
+    for node in &graph.nodes {
+        if !node.is_complex() {
+            continue;
+        }
+        let mut tail =
+            prop.fused_tails.get(&node.id).cloned().unwrap_or_default();
+        if let Some(cut) =
+            tail.iter().position(|t| tail_owner.get(t) != Some(&node.id))
+        {
+            tail.truncate(cut);
+        }
+        let written = tail
+            .last()
+            .map(|&t| graph.node(t).output)
+            .unwrap_or(node.output);
+        out.insert(node.id, written);
+    }
+    out
+}
+
+/// Run the rewrite rule registry over `graph`. Deterministic, layout-
+/// independent: the same candidates come out at tune time, at plan
+/// validation, and after `save`/`load`.
+pub fn analyze(graph: &Graph) -> Analysis {
+    let mut analysis = Analysis::default();
+    let output_id = match graph.nodes.last() {
+        Some(n) => n.output,
+        None => return analysis,
+    };
+
+    // ---- constant folding (cascades in topological order) ----
+    let mut folded: HashSet<TensorId> = HashSet::new();
+    for node in &graph.nodes {
+        if node.is_complex() || matches!(node.kind, OpKind::LayoutConvert) {
+            continue;
+        }
+        let all_const = !node.inputs.is_empty()
+            && node.inputs.iter().all(|&t| {
+                graph.tensor(t).role == Role::Weight || folded.contains(&t)
+            });
+        if all_const && node.output != output_id {
+            folded.insert(node.output);
+            analysis.candidates.push(Candidate {
+                kind: RewriteKind::FoldConstant,
+                node: node.id,
+                anchor: node.id,
+            });
+        }
+    }
+
+    // ---- pad-into-conv folding ----
+    for node in &graph.nodes {
+        let OpKind::PadOp { .. } = node.kind else { continue };
+        if folded.contains(&node.output)
+            || graph.tensor(node.inputs[0]).role == Role::Weight
+        {
+            continue;
+        }
+        let consumers = graph.consumers(node.output);
+        let [c] = consumers.as_slice() else { continue };
+        let consumer = graph.node(*c);
+        if consumer.is_complex() && consumer.inputs[0] == node.output {
+            analysis.candidates.push(Candidate {
+                kind: RewriteKind::FoldPad,
+                node: node.id,
+                anchor: *c,
+            });
+        }
+    }
+
+    // ---- BN-into-Conv folding + epilogue fusion (anchored) ----
+    let written = effective_outputs(graph);
+    let anchor_of: HashMap<TensorId, NodeId> =
+        written.iter().map(|(&n, &t)| (t, n)).collect();
+    for node in &graph.nodes {
+        let fusable = match node.kind {
+            // BN folds only through a convolution's linear output —
+            // never through a fused nonlinear tail.
+            OpKind::BatchNorm => {
+                matches!(
+                    graph.producer(node.inputs[0]).map(|p| &graph.node(p).kind),
+                    Some(OpKind::Conv { .. })
+                ) && node.inputs[1..]
+                    .iter()
+                    .all(|&t| graph.tensor(t).role == Role::Weight)
+            }
+            OpKind::Softmax { .. } | OpKind::LayerNorm { .. } => true,
+            _ => false,
+        };
+        if !fusable {
+            continue;
+        }
+        let t = node.inputs[0];
+        let Some(&anchor) = anchor_of.get(&t) else { continue };
+        if graph.consumers(t).len() != 1 {
+            continue;
+        }
+        // BN additionally requires the *direct* conv output (no tail).
+        let kind = match node.kind {
+            OpKind::BatchNorm => {
+                if t != graph.node(anchor).output {
+                    continue;
+                }
+                RewriteKind::FoldBatchNorm
+            }
+            _ => RewriteKind::FuseEpilogue,
+        };
+        analysis.candidates.push(Candidate { kind, node: node.id, anchor });
+    }
+    analysis.candidates.sort_by_key(|c| (c.node, c.anchor, c.kind));
+
+    // ---- report-only IPEX pattern matches ----
+    for node in &graph.nodes {
+        match &node.kind {
+            OpKind::Eltwise { kind: EltKind::Add, arity: 2 } => {
+                let joins_conv = node
+                    .inputs
+                    .iter()
+                    .any(|&t| complex_source(graph, t).is_some());
+                let relu_next = graph
+                    .consumers(node.output)
+                    .iter()
+                    .any(|&c| {
+                        matches!(
+                            graph.node(c).kind,
+                            OpKind::Eltwise { kind: EltKind::Relu, .. }
+                        )
+                    });
+                if joins_conv && relu_next {
+                    analysis.patterns.push(PatternMatch {
+                        pattern: "conv_add_relu",
+                        node: node.id,
+                    });
+                }
+            }
+            OpKind::Eltwise { kind: EltKind::Gelu, .. } => {
+                if matches!(
+                    complex_source(graph, node.inputs[0])
+                        .map(|p| &graph.node(p).kind),
+                    Some(OpKind::Dense | OpKind::Matmul)
+                ) {
+                    analysis.patterns.push(PatternMatch {
+                        pattern: "linear_gelu",
+                        node: node.id,
+                    });
+                }
+            }
+            OpKind::LayerNorm { .. } => {
+                if matches!(
+                    graph.producer(node.inputs[0]).map(|p| &graph.node(p).kind),
+                    Some(OpKind::Eltwise { kind: EltKind::Add, .. })
+                ) {
+                    analysis.patterns.push(PatternMatch {
+                        pattern: "add_layernorm",
+                        node: node.id,
+                    });
+                }
+            }
+            OpKind::Softmax { .. } => {
+                if complex_source(graph, node.inputs[0]).is_some() {
+                    analysis.patterns.push(PatternMatch {
+                        pattern: "div_add_softmax",
+                        node: node.id,
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    analysis
+}
+
+/// Whether `decisions` leaves `anchor`'s output layout at the identity
+/// (complex nodes absent from the decision list default to identity).
+fn identity_out(decisions: &[ComplexDecision], anchor: NodeId) -> bool {
+    decisions
+        .iter()
+        .find(|d| d.node == anchor)
+        .map_or(true, |d| d.out_seq.is_identity())
+}
+
+/// Select the rewrites that apply for one set of layout decisions:
+/// unanchored folds always apply (when rewriting is enabled at all);
+/// anchored ones only when the anchor's chosen output layout is the
+/// identity — and only under full ALT propagation, since the ablation
+/// modes rewrite decisions behind the tuner's back.
+pub fn select(
+    analysis: &Analysis,
+    mode: RewriteMode,
+    prop_mode: PropMode,
+    decisions: &[ComplexDecision],
+) -> Vec<RewriteDecision> {
+    if mode == RewriteMode::Off {
+        return Vec::new();
+    }
+    analysis
+        .candidates
+        .iter()
+        .filter(|c| {
+            !c.kind.anchored()
+                || (prop_mode == PropMode::Alt
+                    && identity_out(decisions, c.anchor))
+        })
+        .map(Candidate::decision)
+        .collect()
+}
+
+/// Validate a plan's rewrite list against a fresh analysis of `graph`
+/// (hand-edited or corrupt plans get a typed `Compile` refusal), and
+/// return the analysis for the compiler to key off.
+pub fn validate(
+    graph: &Graph,
+    rewrites: &[RewriteDecision],
+    decisions: &[ComplexDecision],
+) -> Result<Analysis> {
+    let analysis = analyze(graph);
+    let mut seen: HashSet<NodeId> = HashSet::new();
+    for r in rewrites {
+        if !seen.insert(r.node) {
+            return Err(Error::with_kind(
+                ErrorKind::Compile,
+                format!("{}: node {} rewritten twice", graph.name, r.node),
+            ));
+        }
+        let ok = analysis
+            .candidates
+            .iter()
+            .any(|c| c.decision() == *r);
+        if !ok {
+            return Err(Error::with_kind(
+                ErrorKind::Compile,
+                format!(
+                    "{}: rewrite {} does not match any candidate on this \
+                     graph",
+                    graph.name,
+                    r.fmt()
+                ),
+            ));
+        }
+        if r.kind.anchored() && !identity_out(decisions, r.anchor) {
+            return Err(Error::with_kind(
+                ErrorKind::Compile,
+                format!(
+                    "{}: anchored rewrite {} requires the identity output \
+                     layout on node {}",
+                    graph.name,
+                    r.fmt(),
+                    r.anchor
+                ),
+            ));
+        }
+    }
+    Ok(analysis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::layout::{LayoutSeq, Primitive};
+
+    #[test]
+    fn mode_and_kind_names_round_trip() {
+        for m in [RewriteMode::Off, RewriteMode::On, RewriteMode::Joint] {
+            assert_eq!(RewriteMode::from_name(m.name()), Some(m));
+        }
+        for k in [
+            RewriteKind::FoldConstant,
+            RewriteKind::FoldPad,
+            RewriteKind::FoldBatchNorm,
+            RewriteKind::FuseEpilogue,
+        ] {
+            assert_eq!(RewriteKind::from_name(k.name()), Some(k));
+        }
+        assert!(RewriteMode::from_name("maybe").is_none());
+        let d = RewriteDecision {
+            kind: RewriteKind::FoldPad,
+            node: 3,
+            anchor: 4,
+        };
+        assert_eq!(RewriteDecision::parse(&d.fmt()), Some(d));
+        assert!(RewriteDecision::parse("fold_pad:3").is_none());
+        assert!(RewriteDecision::parse("fold_pad:3:4:5").is_none());
+    }
+
+    #[test]
+    fn resnet18_small_folds_every_conv_pad() {
+        let g = models::resnet18_small();
+        let a = analyze(&g);
+        let pads: Vec<_> = a
+            .candidates
+            .iter()
+            .filter(|c| c.kind == RewriteKind::FoldPad)
+            .collect();
+        // conv1 + 8 blocks x (c1, c2) pads; the pool pad must NOT fold
+        assert_eq!(pads.len(), 17, "{pads:?}");
+        let pool_pad = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "pool1.pad")
+            .map(|n| n.id)
+            .unwrap();
+        assert!(pads.iter().all(|c| c.node != pool_pad));
+        // the residual joins match the production pattern list
+        let joins = a
+            .patterns
+            .iter()
+            .filter(|p| p.pattern == "conv_add_relu")
+            .count();
+        assert_eq!(joins, 8);
+    }
+
+    #[test]
+    fn bert_tiny_fuses_softmax_and_layernorm_epilogues() {
+        let g = models::bert_tiny();
+        let a = analyze(&g);
+        let epis: Vec<_> = a
+            .candidates
+            .iter()
+            .filter(|c| c.kind == RewriteKind::FuseEpilogue)
+            .collect();
+        // per layer: softmax (anchored at scores), ln1 (at o-proj's
+        // res1 tail), ln2 (at ffn2's res2 tail)
+        assert_eq!(epis.len(), 6, "{epis:?}");
+        for c in &epis {
+            assert!(g.node(c.anchor).is_complex());
+        }
+        assert!(a.patterns.iter().any(|p| p.pattern == "linear_gelu"));
+        assert!(a.patterns.iter().any(|p| p.pattern == "add_layernorm"));
+        assert!(a.patterns.iter().any(|p| p.pattern == "div_add_softmax"));
+    }
+
+    #[test]
+    fn anchored_rewrites_require_identity_output_layout() {
+        let g = models::bert_tiny();
+        let a = analyze(&g);
+        let epi = a
+            .candidates
+            .iter()
+            .find(|c| c.kind == RewriteKind::FuseEpilogue)
+            .copied()
+            .unwrap();
+        let all = select(&a, RewriteMode::On, PropMode::Alt, &[]);
+        assert!(all.contains(&epi.decision()));
+        // a non-identity output layout on the anchor blocks it
+        let mut seq = LayoutSeq::new();
+        seq.push(Primitive::reorder(&[1, 0]));
+        let dec = ComplexDecision {
+            node: epi.anchor,
+            out_seq: seq,
+            ..Default::default()
+        };
+        let constrained =
+            select(&a, RewriteMode::On, PropMode::Alt, &[dec.clone()]);
+        assert!(!constrained.contains(&epi.decision()));
+        // and validate() refuses the inconsistent pairing
+        assert!(validate(&g, &[epi.decision()], &[dec]).is_err());
+        // off mode selects nothing at all
+        assert!(select(&a, RewriteMode::Off, PropMode::Alt, &[]).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_foreign_rewrites() {
+        let g = models::case_study_small(); // pad-free: no candidates
+        let a = analyze(&g);
+        assert!(a.candidates.is_empty());
+        let bogus = RewriteDecision {
+            kind: RewriteKind::FoldPad,
+            node: 0,
+            anchor: 1,
+        };
+        assert!(validate(&g, &[bogus], &[]).is_err());
+    }
+}

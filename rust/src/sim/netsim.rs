@@ -147,6 +147,7 @@ pub fn simulate_graph_with(
             OpKind::Pool { .. }
             | OpKind::Softmax { .. }
             | OpKind::LayerNorm { .. }
+            | OpKind::BatchNorm
             | OpKind::Reduce { .. }
             | OpKind::LayoutConvert => {
                 let read: f64 =

@@ -1,0 +1,363 @@
+//! Graph-rewrite subsystem integration: rewritten plans must execute
+//! strictly fewer steps while reproducing the unrewritten outputs.
+//!
+//! Pinned properties:
+//! * zoo models (`resnet18_small`, `bert_tiny`) and the §7.3.3 case
+//!   variants run bit-identically with rewriting on vs off — pad
+//!   folds, constant folds and fused epilogues change *where* work
+//!   happens, never the arithmetic — and strictly fewer plan steps
+//!   (complex + simple) execute with rewriting on,
+//! * the same holds across thread counts and after a save/load round
+//!   trip (the `rewrite =` plan line re-derives the rewritten plan),
+//! * one golden test per folding rule on a handwritten graph:
+//!   `fold_const`, `fold_pad`, `fuse_epilogue` bit-exact, `fold_bn`
+//!   within reassociation tolerance (scale folds into the per-MAC
+//!   weights; the reference scales after the summation),
+//! * `rewrite = off` plans carry no rewrite line and compile to
+//!   models that report the missed opportunities as perf advisories.
+
+use alt::analysis::Severity;
+use alt::api::model::weight_data;
+use alt::api::Session;
+use alt::autotune::TuneOptions;
+use alt::graph::{Graph, GraphBuilder, OpKind};
+use alt::rewrite::{RewriteKind, RewriteMode};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn close(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+            "elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+fn rewrite_opts(mode: RewriteMode) -> TuneOptions {
+    TuneOptions { rewrite: mode, ..Default::default() }
+}
+
+/// Total executed plan steps — the "fewer ops per inference" metric
+/// the CI gate also uses.
+fn steps(model: &alt::api::CompiledModel) -> usize {
+    model.complex_steps() + model.simple_steps()
+}
+
+#[test]
+fn zoo_models_bit_match_with_strictly_fewer_steps() {
+    for name in ["resnet18_small", "bert_tiny", "case_study"] {
+        let off = Session::for_model(name)
+            .unwrap()
+            .with_exec_threads(2)
+            .baseline()
+            .compile()
+            .unwrap_or_else(|e| panic!("{name} off: {e}"));
+        let on = Session::for_model(name)
+            .unwrap()
+            .with_options(rewrite_opts(RewriteMode::On))
+            .with_exec_threads(2)
+            .baseline()
+            .compile()
+            .unwrap_or_else(|e| panic!("{name} on: {e}"));
+        assert!(on.rewrites_applied() > 0, "{name}: nothing rewritten");
+        assert_eq!(
+            on.rewrites_applied(),
+            on.rewrites_available(),
+            "{name}: identity layouts must leave no dead opportunity"
+        );
+        assert!(
+            steps(&on) < steps(&off),
+            "{name}: rewriting must execute strictly fewer steps \
+             ({} vs {})",
+            steps(&on),
+            steps(&off)
+        );
+        let inputs = off.seeded_inputs(7);
+        let (_, want) = off.run_with_output(&inputs).unwrap();
+        let (_, got) = on.run_with_output(&inputs).unwrap();
+        assert_eq!(
+            bits(&want),
+            bits(&got),
+            "{name}: rewriting changed the arithmetic"
+        );
+    }
+}
+
+#[test]
+fn rewritten_execution_is_bit_identical_across_thread_counts() {
+    for name in ["resnet18_small", "bert_tiny"] {
+        let mut outs: Vec<Vec<u32>> = Vec::new();
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        for threads in [1usize, 2, 3] {
+            let model = Session::for_model(name)
+                .unwrap()
+                .with_options(rewrite_opts(RewriteMode::On))
+                .with_exec_threads(threads)
+                .baseline()
+                .compile()
+                .unwrap();
+            assert!(model.rewrites_applied() > 0, "{name}");
+            if inputs.is_empty() {
+                inputs = model.seeded_inputs(19);
+            }
+            let (_, out) = model.run_with_output(&inputs).unwrap();
+            outs.push(bits(&out));
+        }
+        assert_eq!(outs[0], outs[1], "{name}: threads=1 vs threads=2");
+        assert_eq!(outs[0], outs[2], "{name}: threads=1 vs threads=3");
+    }
+}
+
+#[test]
+fn rewritten_plan_survives_save_load_byte_and_bit_exactly() {
+    let session = Session::for_model("resnet18_small")
+        .unwrap()
+        .with_options(rewrite_opts(RewriteMode::On))
+        .with_exec_threads(2);
+    let tuned = session.baseline();
+    assert!(!tuned.plan().rewrites.is_empty());
+    let model = tuned.compile().unwrap();
+    let inputs = model.seeded_inputs(23);
+    let (_, original) = model.run_with_output(&inputs).unwrap();
+
+    let dir = std::env::temp_dir()
+        .join(format!("alt_rewrite_roundtrip_{}", std::process::id()));
+    model.save(&dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("plan.txt")).unwrap();
+    assert!(
+        text.contains("rewrite = "),
+        "rewrite decisions missing from plan.txt"
+    );
+
+    let reloaded = Session::load(&dir).unwrap();
+    assert_eq!(reloaded.plan(), tuned.plan(), "plan survives the disk trip");
+    let again = reloaded.compile().unwrap();
+    assert_eq!(model.rewrites_applied(), again.rewrites_applied());
+    let (_, out) = again.run_with_output(&inputs).unwrap();
+    assert_eq!(bits(&original), bits(&out), "outputs must be bit-identical");
+
+    // the re-saved plan file is byte-identical, rewrite line included
+    let dir2 = std::env::temp_dir()
+        .join(format!("alt_rewrite_roundtrip2_{}", std::process::id()));
+    again.save(&dir2).unwrap();
+    let second = std::fs::read_to_string(dir2.join("plan.txt")).unwrap();
+    assert_eq!(text, second);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn off_mode_plans_carry_no_rewrite_line_and_lint_dead_opportunities() {
+    // `rewrite = off` must reproduce today's artifacts byte-for-byte:
+    // no rewrite line at all, not an empty one
+    let tuned = Session::for_model("case_study").unwrap().baseline();
+    assert!(tuned.plan().rewrites.is_empty());
+    assert!(!tuned.plan().serialize().contains("rewrite"));
+    // ...and the compiled model reports what rewriting would have done
+    let model = tuned.compile().unwrap();
+    assert_eq!(model.rewrites_applied(), 0);
+    assert!(model.rewrites_available() > 0, "case_study folds one pad");
+    let dead: Vec<_> = model
+        .diagnostics()
+        .into_iter()
+        .filter(|d| d.code == "dead-rewrite-opportunity")
+        .collect();
+    assert_eq!(dead.len(), model.rewrites_available());
+    // advisory only: a clean un-rewritten plan must keep passing
+    // `alt check`
+    assert!(dead.iter().all(|d| d.severity == Severity::Perf));
+
+    // a rewrite-free graph stays rewrite-free even with rewriting on
+    let none = Session::for_model("case_study_small")
+        .unwrap()
+        .with_options(rewrite_opts(RewriteMode::On))
+        .baseline();
+    assert!(none.plan().rewrites.is_empty());
+    assert!(!none.plan().serialize().contains("rewrite"));
+}
+
+#[test]
+fn tuned_case_study_rewrite_matches_unrewritten_same_plan() {
+    // tune once with rewriting, then re-execute the *same* layouts and
+    // schedules without the rewrites: outputs must agree bit-for-bit
+    // (the case-study rewrite is an unanchored pad fold)
+    let opts = TuneOptions {
+        budget: 150,
+        seed: 11,
+        rewrite: RewriteMode::Joint,
+        ..Default::default()
+    };
+    let on_session = Session::for_model("case_study")
+        .unwrap()
+        .with_options(opts.clone())
+        .with_exec_threads(2);
+    let tuned = on_session.tune();
+    assert!(
+        tuned
+            .plan()
+            .rewrites
+            .iter()
+            .any(|r| r.kind == RewriteKind::FoldPad),
+        "joint tuning dropped the pad fold"
+    );
+    let decisions = tuned.plan().decisions();
+    let scheds = tuned.plan().scheds();
+    let off_session = Session::for_model("case_study")
+        .unwrap()
+        .with_options(TuneOptions { rewrite: RewriteMode::Off, ..opts })
+        .with_exec_threads(2);
+    let off = off_session
+        .plan_with(decisions, scheds)
+        .unwrap()
+        .compile()
+        .unwrap();
+    assert!(off.plan().rewrites.is_empty());
+    let on = tuned.compile().unwrap();
+    assert!(steps(&on) < steps(&off));
+    let inputs = on.seeded_inputs(3);
+    let (_, a) = on.run_with_output(&inputs).unwrap();
+    let (_, b) = off.run_with_output(&inputs).unwrap();
+    assert_eq!(bits(&a), bits(&b));
+}
+
+// ---- golden tests: one handwritten graph per folding rule ----
+
+/// conv(pad 1) — `conv2d` emits the explicit `c.pad` op the fold
+/// absorbs into the conv's read gather.
+fn pad_gold() -> Graph {
+    let mut b = GraphBuilder::new("pad_gold");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 6, 6, 2]);
+    b.conv2d("c", x, 3, 3, 1, 1);
+    b.finish()
+}
+
+#[test]
+fn golden_fold_pad_is_bit_exact() {
+    let off = Session::new(pad_gold()).baseline().compile().unwrap();
+    let on = Session::new(pad_gold())
+        .with_options(rewrite_opts(RewriteMode::On))
+        .baseline()
+        .compile()
+        .unwrap();
+    assert_eq!(on.rewrites_applied(), 1);
+    assert_eq!(steps(&off) - steps(&on), 1, "the pad step disappears");
+    let inputs = off.seeded_inputs(5);
+    let (_, want) = off.run_with_output(&inputs).unwrap();
+    let (_, got) = on.run_with_output(&inputs).unwrap();
+    // the folded gather reads 0.0 exactly where the pad wrote 0.0
+    assert_eq!(bits(&want), bits(&got));
+}
+
+/// An all-weight elementwise op (w1 + w2) feeding the live dataflow —
+/// evaluated at compile time under rewriting.
+fn const_gold() -> Graph {
+    let mut b = GraphBuilder::new("const_gold");
+    let x = b.input("x", &["N", "K"], &[1, 8]);
+    let w1 = b.weight("w1", &["N", "K"], &[1, 8]);
+    let w2 = b.weight("w2", &["N", "K"], &[1, 8]);
+    let s = b.add("wsum", w1, w2);
+    let y = b.add("mix", x, s);
+    b.relu("act", y);
+    b.finish()
+}
+
+#[test]
+fn golden_fold_const_is_bit_exact() {
+    let off = Session::new(const_gold()).baseline().compile().unwrap();
+    let on = Session::new(const_gold())
+        .with_options(rewrite_opts(RewriteMode::On))
+        .baseline()
+        .compile()
+        .unwrap();
+    assert_eq!(on.rewrites_applied(), 1);
+    assert_eq!(steps(&off) - steps(&on), 1, "wsum runs at compile time");
+    let inputs = off.seeded_inputs(9);
+    let (_, want) = off.run_with_output(&inputs).unwrap();
+    let (_, got) = on.run_with_output(&inputs).unwrap();
+    // compile-time folding runs the same interpreter on the same data
+    assert_eq!(bits(&want), bits(&got));
+}
+
+/// dense + bias with a sole-consumer softmax tail — the epilogue fuses
+/// into the dense nest's output buffer.
+fn epilogue_gold() -> Graph {
+    let mut b = GraphBuilder::new("epi_gold");
+    let x = b.input("x", &["M", "K"], &[4, 8]);
+    let d = b.dense("fc", x, 5);
+    b.op("sm", OpKind::Softmax { axis: 1 }, &[d]);
+    b.finish()
+}
+
+#[test]
+fn golden_fuse_epilogue_is_bit_exact() {
+    let off = Session::new(epilogue_gold()).baseline().compile().unwrap();
+    let on = Session::new(epilogue_gold())
+        .with_options(rewrite_opts(RewriteMode::On))
+        .baseline()
+        .compile()
+        .unwrap();
+    assert_eq!(on.rewrites_applied(), 1);
+    assert_eq!(steps(&off) - steps(&on), 1, "the softmax step disappears");
+    let inputs = off.seeded_inputs(13);
+    let (_, want) = off.run_with_output(&inputs).unwrap();
+    let (_, got) = on.run_with_output(&inputs).unwrap();
+    // the fused epilogue runs the same softmax line kernel in place
+    assert_eq!(bits(&want), bits(&got));
+}
+
+/// conv (pre-padded, linear output) + BatchNorm over all-weight
+/// per-channel params — scale folds into the packed weights, the shift
+/// becomes a per-channel epilogue.
+fn bn_gold() -> Graph {
+    let mut b = GraphBuilder::new("bn_gold");
+    let x = b.input("x", &["N", "H", "W", "I"], &[1, 8, 8, 2]);
+    let c = b.conv2d("c", x, 4, 3, 1, 0);
+    let g = b.weight("bn.g", &["O"], &[4]);
+    let be = b.weight("bn.b", &["O"], &[4]);
+    let m = b.weight("bn.m", &["O"], &[4]);
+    let v = b.weight("bn.v", &["O"], &[4]);
+    b.op("bn", OpKind::BatchNorm, &[c, g, be, m, v]);
+    b.finish()
+}
+
+#[test]
+fn golden_fold_bn_within_reassociation_tolerance() {
+    let g = bn_gold();
+    // seeded weights are uniform in [-0.1, 0.1]; pick a weight seed
+    // whose drawn variances are safely positive (inference-mode BN
+    // semantics) so 1/sqrt(var + eps) is well-defined on both paths
+    let var_t = g.tensors.iter().find(|t| t.name == "bn.v").unwrap().id;
+    let seed = (0..1000u64)
+        .find(|s| weight_data(&g, var_t, *s).iter().all(|x| *x > 1e-3))
+        .expect("some seed draws all-positive variances");
+
+    let off = Session::new(bn_gold())
+        .with_weight_seed(seed)
+        .baseline()
+        .compile()
+        .unwrap();
+    let on = Session::new(bn_gold())
+        .with_weight_seed(seed)
+        .with_options(rewrite_opts(RewriteMode::On))
+        .baseline()
+        .compile()
+        .unwrap();
+    assert_eq!(on.rewrites_applied(), 1);
+    assert!(on
+        .plan()
+        .rewrites
+        .iter()
+        .any(|r| r.kind == RewriteKind::FoldBatchNorm));
+    assert_eq!(steps(&off) - steps(&on), 1, "the BN step disappears");
+    let inputs = off.seeded_inputs(17);
+    let (_, want) = off.run_with_output(&inputs).unwrap();
+    let (_, got) = on.run_with_output(&inputs).unwrap();
+    // folded: (Σ x·(w·s)) + shift; reference: (Σ x·w)·s + shift —
+    // same math, different f32 association, hence tolerance not bits
+    close(&got, &want);
+    assert!(got.iter().all(|x| x.is_finite()));
+}
